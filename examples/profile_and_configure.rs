@@ -1,0 +1,46 @@
+//! Run the KVmix profiler end-to-end *in Rust*: execute the AOT-lowered
+//! loss/gradient graph over sampled prompts through PJRT, rank the layers,
+//! print the Fig.-6-style plan at several high-bit fractions, and compare
+//! against the python profiler's plan shipped in importance.json.
+//!
+//!     cargo run --release --example profile_and_configure [-- --prompts 16]
+
+use anyhow::Result;
+use kvmix::config::QuantPlan;
+use kvmix::profiler;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::cli::Args;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]);
+    let n = args.usize_or("prompts", 16)?;
+
+    let dir = default_artifacts_dir();
+    let rt = Runtime::load(&dir)?; // includes the profiler executable
+    let t0 = std::time::Instant::now();
+    let imp = profiler::profile(&rt, n, 42)?;
+    println!("profiled {} prompts in {:.2}s (mean loss {:.4})",
+             imp.n_prompts, t0.elapsed().as_secs_f64(), imp.mean_loss);
+
+    for frac in [0.25, 0.375, 0.5] {
+        let plan = profiler::allocate(&imp, frac);
+        println!("\n--- high-bit fraction {frac} ---");
+        print!("{}", profiler::plan_report(&imp, &plan));
+    }
+
+    // cross-check against the python (build-time) profiler
+    match QuantPlan::from_importance_file(&dir.join("importance.json")) {
+        Ok(py_plan) => {
+            let rust_plan = profiler::allocate(&imp, 0.25);
+            let same_k = rust_plan.k_bits.iter().zip(&py_plan.k_bits)
+                .filter(|(a, b)| a == b).count();
+            let same_v = rust_plan.v_bits.iter().zip(&py_plan.v_bits)
+                .filter(|(a, b)| a == b).count();
+            println!("\nagreement with python profiler: K {}/{} layers, V {}/{}",
+                     same_k, rust_plan.k_bits.len(), same_v, rust_plan.v_bits.len());
+        }
+        Err(e) => println!("(no python plan to compare: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT build: checkpoint -> artifacts/ (HLO text + weights + goldens).
+
+Python runs ONCE here (``make artifacts``); the Rust binary is
+self-contained afterwards.  Interchange is HLO *text* — xla_extension
+0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (see DESIGN.md §2):
+  pre_t{N}.hlo.txt     RMSNorm+QKV+RoPE (Pallas) — decode rows or prefill
+  post_t{N}.hlo.txt    out-proj + MLP
+  logits_t{N}.hlo.txt  final norm + LM head
+  profiler_grads.hlo.txt  loss + per-layer grad norms of W_k / W_v
+  weights.bin + manifest.json   trained checkpoint, canonical order
+  importance.json      profiler scores + default k/v bit plan
+  goldens/*.json       parity vectors for the Rust tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, profiler
+from .kernels import ref
+from .model import (ModelConfig, flat_weights, forward_jnp, logits_graph,
+                    post_graph, pre_graph, profiler_graph, unflatten)
+
+BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+PROFILE_T = 160
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_executables(cfg: ModelConfig, out_dir: str) -> dict:
+    d, qd, kd, ff, v = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff, cfg.vocab
+    index: dict = {"pre": {}, "post": {}, "logits": {}}
+    pre, post, logits = pre_graph(cfg), post_graph(cfg), logits_graph(cfg)
+    for t in BUCKETS:
+        lo = jax.jit(pre).lower(sds((t, d)), sds((t,), jnp.int32), sds((d,)),
+                                sds((d, qd)), sds((d, kd)), sds((d, kd)))
+        name = f"pre_t{t}.hlo.txt"
+        open(os.path.join(out_dir, name), "w").write(to_hlo_text(lo))
+        index["pre"][str(t)] = name
+
+        lo = jax.jit(post).lower(sds((t, qd)), sds((t, d)), sds((qd, d)),
+                                 sds((d,)), sds((d, ff)), sds((d, ff)),
+                                 sds((ff, d)))
+        name = f"post_t{t}.hlo.txt"
+        open(os.path.join(out_dir, name), "w").write(to_hlo_text(lo))
+        index["post"][str(t)] = name
+
+        lo = jax.jit(logits).lower(sds((t, d)), sds((d,)), sds((d, v)))
+        name = f"logits_t{t}.hlo.txt"
+        open(os.path.join(out_dir, name), "w").write(to_hlo_text(lo))
+        index["logits"][str(t)] = name
+        print(f"  lowered bucket t={t}", flush=True)
+
+    flat_shapes = [sds(a.shape) for _, a in flat_weights(cfg, init_like(cfg))]
+    lo = jax.jit(profiler_graph(cfg)).lower(
+        sds((1, PROFILE_T), jnp.int32), sds((1, PROFILE_T)), *flat_shapes)
+    open(os.path.join(out_dir, "profiler_grads.hlo.txt"), "w").write(to_hlo_text(lo))
+    index["profiler"] = {"file": "profiler_grads.hlo.txt", "seq_len": PROFILE_T}
+    return index
+
+
+def init_like(cfg: ModelConfig):
+    from .model import init_params
+    return init_params(cfg, 0)
+
+
+def export_weights(cfg: ModelConfig, params, out_dir: str) -> list[dict]:
+    entries = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, arr in flat_weights(cfg, params):
+            a = np.ascontiguousarray(arr, dtype=np.float32)
+            f.write(a.tobytes())
+            entries.append({"name": name, "shape": list(a.shape),
+                            "offset": offset, "numel": int(a.size)})
+            offset += a.nbytes
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Goldens for rust parity tests
+# ---------------------------------------------------------------------------
+def write_goldens(cfg: ModelConfig, params, out_dir: str) -> None:
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.RandomState(42)
+
+    # 1. group quantization + packing vectors
+    t, hkv, hd = 64, cfg.n_kv_heads, cfg.head_dim
+    k = rng.randn(t, hkv, hd).astype(np.float32)
+    v = rng.randn(t, hkv, hd).astype(np.float32)
+    gq = {"t": t, "hkv": hkv, "hd": hd, "group": cfg.group,
+          "k": k.ravel().tolist(), "v": v.ravel().tolist()}
+    for bits in (1, 2, 3, 4):
+        gq[f"k_fq_{bits}"] = np.asarray(
+            ref.fake_quant_key_per_channel(jnp.asarray(k), bits, cfg.group)).ravel().tolist()
+        gq[f"v_fq_{bits}"] = np.asarray(
+            ref.fake_quant_value_per_token(jnp.asarray(v), bits, cfg.group)).ravel().tolist()
+    qvals = rng.randint(0, 8, size=176)
+    qvals[10::11] &= 0x3
+    gq["pack3_q"] = qvals.tolist()
+    gq["pack3_words"] = ref.pack3(qvals).astype(np.int64).tolist()
+    x33 = rng.randn(4, 33).astype(np.float32)
+    gq["fq3_block_in"] = x33.ravel().tolist()
+    gq["fq3_block_out"] = np.asarray(
+        ref.fake_quant_3bit_blockwise(jnp.asarray(x33))).ravel().tolist()
+    json.dump(gq, open(os.path.join(gdir, "quant.json"), "w"))
+
+    # 2. mixed attention vector
+    h = cfg.n_heads
+    q1 = rng.randn(h, hd).astype(np.float32)
+    out = ref.attn_mixed_ref(jnp.asarray(q1), jnp.asarray(k), jnp.asarray(v),
+                             boundary=32, k_bits=2, v_bits=2, group=cfg.group)
+    json.dump({"h": h, "hd": hd, "t": t, "hkv": hkv, "boundary": 32,
+               "k_bits": 2, "v_bits": 2,
+               "q": q1.ravel().tolist(), "k": k.ravel().tolist(),
+               "v": v.ravel().tolist(),
+               "out": np.asarray(out).ravel().tolist()},
+              open(os.path.join(gdir, "attn.json"), "w"))
+
+    # 3. model forward goldens: logits for a fixed prompt (fp path)
+    rng2 = np.random.RandomState(7)
+    toks, _ = corpus.batch(rng2, 1, 32, task="lm")
+    logits = np.asarray(forward_jnp(jax.tree_util.tree_map(jnp.asarray, params),
+                                    jnp.asarray(toks), cfg))[0]
+    greedy = np.argmax(logits, axis=-1)
+    json.dump({"tokens": toks[0].tolist(),
+               "logits_last": logits[-1].tolist(),
+               "greedy": greedy.tolist()},
+              open(os.path.join(gdir, "model.json"), "w"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=700)
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = ModelConfig()
+
+    ckpt = os.path.join(out_dir, "checkpoint.npz")
+    if args.retrain or not os.path.exists(ckpt):
+        from .train import train
+        print("training checkpoint ...", flush=True)
+        params, _ = train(cfg, steps=args.train_steps, batch_size=16,
+                          seq_len=160,
+                          log_path=os.path.join(out_dir, "train_log.json"))
+        np.savez(ckpt, **dict(flat_weights(cfg, params)))
+    data = np.load(ckpt)
+    names = [n for n, _ in flat_weights(cfg, init_like(cfg))]
+    params = unflatten(cfg, [np.asarray(data[n]) for n in names])
+
+    print("exporting weights ...", flush=True)
+    weight_entries = export_weights(cfg, params, out_dir)
+
+    print("profiling importance ...", flush=True)
+    t0 = time.time()
+    jparams = jax.tree_util.tree_map(jnp.asarray, params)
+    plan = profiler.profile(cfg, jparams, n_prompts=24, seq_len=PROFILE_T)
+    profiler.save_importance(os.path.join(out_dir, "importance.json"), cfg,
+                             plan, extra={"profile_seconds": time.time() - t0})
+    print(f"  plan: {plan.name}  k_bits={plan.k_bits} v_bits={plan.v_bits}")
+
+    print("lowering executables ...", flush=True)
+    index = lower_executables(cfg, out_dir)
+
+    print("writing goldens ...", flush=True)
+    write_goldens(cfg, params, out_dir)
+
+    manifest = {"model": cfg.to_dict(), "weights": weight_entries,
+                "executables": index, "buckets": BUCKETS,
+                "profile_seq_len": PROFILE_T}
+    json.dump(manifest, open(os.path.join(out_dir, "manifest.json"), "w"),
+              indent=1)
+    open(os.path.join(out_dir, ".stamp"), "w").write(str(time.time()))
+    print("artifacts complete:", out_dir)
+
+
+if __name__ == "__main__":
+    main()

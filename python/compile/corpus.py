@@ -1,0 +1,194 @@
+"""Synthetic structured corpus for the KVmix reproduction.
+
+The paper evaluates on LongBench (long-context retrieval-ish tasks), GSM8K
+(multi-step reasoning) and Wikitext-2 (language modelling).  We cannot ship
+those datasets nor a 7B model, so we train a tiny decoder on three synthetic
+tasks that stress the same properties of the KV cache (see DESIGN.md §3):
+
+  * ``lm``     — a learnable pseudo-language (per-sequence hidden offset,
+                 first-order deterministic dynamics + noise floor).
+                 Wikitext-2 analog: held-out perplexity.
+  * ``recall`` — key/value pairs scattered in the context, queried at the
+                 end.  LongBench analog: accuracy of retrieving *old*
+                 (hence quantized) KV entries.
+  * ``chain``  — running modular sums emitted at checkpoints; every token
+                 contributes to the answer.  GSM8K analog: multi-step exact
+                 state tracking.
+
+All generators are deterministic in their seed so the Rust harness can
+re-generate identical workloads (mirrored in ``rust/src/harness/workload.rs``;
+parity is covered by golden tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Token space (vocab = 512) — keep in sync with rust/src/harness/workload.rs
+# ---------------------------------------------------------------------------
+VOCAB = 512
+PAD, BOS, EOS, SEP, QRY, ANS, EQL = 0, 1, 2, 3, 4, 5, 6
+
+NUM_BASE, NUM_COUNT = 10, 16          # chain-task "numbers"   [10, 26)
+KEY_BASE, KEY_COUNT = 100, 48         # recall keys            [100, 148)
+VAL_BASE, VAL_COUNT = 200, 48         # recall values          [200, 248)
+LM_BASE, LM_COUNT = 300, 212          # lm alphabet            [300, 512)
+ANSWER_WEIGHT = 4.0                   # loss upweight on task answers
+
+LM_NOISE = 0.05                       # unpredictable-token floor for lm task
+LM_MULT = 3                           # lm dynamics: x' = (3x + o) mod LM_COUNT
+
+
+@dataclasses.dataclass
+class Sample:
+    """One training/eval sequence.
+
+    ``tokens``   int32 [T]  (PAD-padded)
+    ``loss_mask`` f32  [T]  weight of the *prediction at* position t
+                           (i.e. the loss on predicting tokens[t+1..]).
+    """
+
+    tokens: np.ndarray
+    loss_mask: np.ndarray
+
+    def __post_init__(self) -> None:
+        assert self.tokens.shape == self.loss_mask.shape
+
+
+def _pad(tokens: list[int], mask: list[float], seq_len: int) -> Sample:
+    t = np.full(seq_len, PAD, dtype=np.int32)
+    m = np.zeros(seq_len, dtype=np.float32)
+    n = min(len(tokens), seq_len)
+    t[:n] = tokens[:n]
+    m[:n] = mask[:n]
+    return Sample(t, m)
+
+
+# ---------------------------------------------------------------------------
+# Task generators
+# ---------------------------------------------------------------------------
+def gen_lm(rng: np.random.RandomState, seq_len: int) -> Sample:
+    """Pseudo-language: x_{t+1} = LM_MULT*x_t + o (mod LM_COUNT), rare noise.
+
+    The hidden offset ``o`` is recoverable from the first transition, so a
+    trained model reaches low (but, because of the noise floor, not zero)
+    perplexity.  Loss applies to every emitted lm token after the second.
+    """
+    o = int(rng.randint(1, 16))
+    x = int(rng.randint(LM_COUNT))
+    toks: list[int] = [BOS, LM_BASE + x]
+    mask: list[float] = [0.0, 0.0]
+    for _ in range(seq_len - 3):
+        if rng.rand() < LM_NOISE:
+            x = int(rng.randint(LM_COUNT))
+        else:
+            x = (LM_MULT * x + o) % LM_COUNT
+        toks.append(LM_BASE + x)
+        # the *previous* position predicts this token
+        mask[-1] = 1.0
+        mask.append(0.0)
+    toks.append(EOS)
+    mask[-1] = 1.0
+    mask.append(0.0)
+    return _pad(toks, mask, seq_len)
+
+
+N_DISTINCT_PAIRS = 16                 # distinct (key, value) bindings per doc
+
+
+def gen_recall(rng: np.random.RandomState, seq_len: int,
+               query_offset: int | None = None, n_queries: int = 8) -> Sample:
+    """In-context associative recall (induction-head format).
+
+    A document binds ``N_DISTINCT_PAIRS`` distinct keys to values and
+    repeats the bindings (shuffled) to fill the context; queries at the end
+    are ``QRY k`` with the loss at the *key* position predicting the bound
+    value — the classic [k][v]…[k][?]→v induction pattern.
+
+    ``query_offset`` (0 = key whose *last* binding is most recent, larger =
+    older) lets the eval harness stress retrieval distance — old bindings
+    live in the quantized region of the cache.
+    """
+    n_distinct = min(N_DISTINCT_PAIRS, KEY_COUNT)
+    keys = rng.choice(KEY_COUNT, size=n_distinct, replace=False)
+    vals = rng.randint(VAL_COUNT, size=n_distinct)
+    budget = seq_len - 2 - 3 * n_queries - 1
+    toks: list[int] = [BOS]
+    mask: list[float] = [0.0]
+    order: list[int] = []
+    while len(toks) + 2 <= budget:
+        if not order:
+            order = list(rng.permutation(n_distinct))
+        i = order.pop()
+        toks += [KEY_BASE + int(keys[i]), VAL_BASE + int(vals[i])]
+        mask += [0.0, 0.0]
+    toks.append(SEP)
+    mask.append(0.0)
+    # last-occurrence recency order for query_offset targeting
+    last_pos = {}
+    for t, tok in enumerate(toks):
+        if KEY_BASE <= tok < KEY_BASE + KEY_COUNT:
+            last_pos[tok] = t
+    by_recency = sorted(last_pos, key=lambda k: -last_pos[k])
+    for qn in range(n_queries):
+        if len(toks) + 3 > seq_len:
+            break
+        if qn == 0 and query_offset is not None:
+            key_tok = by_recency[query_offset % len(by_recency)]
+            qi = int(np.nonzero(keys == key_tok - KEY_BASE)[0][0])
+        else:
+            qi = int(rng.randint(n_distinct))
+        toks += [QRY, KEY_BASE + int(keys[qi]), VAL_BASE + int(vals[qi])]
+        # the key position predicts the bound value
+        mask += [0.0, ANSWER_WEIGHT, 0.0]
+    toks.append(EOS)
+    mask.append(0.0)
+    return _pad(toks, mask, seq_len)
+
+
+def gen_chain(rng: np.random.RandomState, seq_len: int) -> Sample:
+    """Exact-state selection: `n1 n2 n3 EQL m` groups where
+    m = max(n1, n2, n3) — every answer requires the *exact* values of the
+    three preceding number tokens (GSM8K analog: step-local computation
+    whose answer is corrupted by any KV error on the operands)."""
+    toks: list[int] = [BOS]
+    mask: list[float] = [0.0]
+    while len(toks) + 6 < seq_len:
+        ns = [int(rng.randint(NUM_COUNT)) for _ in range(3)]
+        for n in ns:
+            toks.append(NUM_BASE + n)
+            mask.append(0.0)
+        toks.append(EQL)
+        mask.append(ANSWER_WEIGHT)    # EQL position predicts the max token
+        toks.append(NUM_BASE + max(ns))
+        mask.append(0.0)
+    toks.append(EOS)
+    mask.append(0.0)
+    return _pad(toks, mask, seq_len)
+
+
+TASKS = {"lm": gen_lm, "recall": gen_recall, "chain": gen_chain}
+TRAIN_MIX = (("lm", 0.2), ("recall", 0.4), ("chain", 0.4))
+
+
+def batch(rng: np.random.RandomState, batch_size: int, seq_len: int,
+          task: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """A [B, T] token batch and its [B, T] loss-mask, drawn from TRAIN_MIX
+    (or a single ``task``)."""
+    toks = np.zeros((batch_size, seq_len), dtype=np.int32)
+    mask = np.zeros((batch_size, seq_len), dtype=np.float32)
+    names = [n for n, _ in TRAIN_MIX]
+    probs = np.array([p for _, p in TRAIN_MIX])
+    for b in range(batch_size):
+        name = task or names[int(rng.choice(len(names), p=probs))]
+        s = TASKS[name](rng, seq_len)
+        toks[b], mask[b] = s.tokens, s.loss_mask
+    return toks, mask
+
+
+def eval_set(task: str, n: int, seq_len: int, seed: int = 1234) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.RandomState(seed + hash(task) % 1000)
+    return batch(rng, n, seq_len, task=task)

@@ -1,0 +1,122 @@
+"""Fused mixed-precision decode attention as a Pallas kernel.
+
+The paper's hot-spot: one query token attends over a cache whose *old*
+region is quantized (per-channel K / per-token V) and whose recent region
+(the RPC window) is full precision, with dequantization fused into the
+score / weighted-value products instead of materializing a dequantized
+cache (paper §CUDA Implementation ②).
+
+TPU re-think of their CUDA kernel (DESIGN.md §Hardware-Adaptation): the
+sequence axis is tiled into ``group``-token blocks streamed HBM->VMEM by
+BlockSpec; each grid step fake-quantizes its K/V tile on the fly iff the
+tile lies left of the runtime ``boundary`` scalar, then runs an online-
+softmax update (flash-decoding) with the score/value contractions on the
+MXU.  Scratch refs hold the running (max, denom, accumulator) so nothing
+but the [H, hd] output ever leaves VMEM.
+
+Runs interpret=True; the same python callable is used by the L2 eval
+graphs and is pytest-checked against ref.attn_mixed_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EPS = 1e-6
+NEG_INF = -1e30
+
+
+def _fq(x: jnp.ndarray, qmax: float, axis: int) -> jnp.ndarray:
+    mn = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    s = (mx - mn) / qmax
+    s = jnp.where(s < EPS, 1.0, s)
+    q = jnp.clip(jnp.floor((x - mn) / s + 0.5), 0.0, qmax)
+    return q * s + mn
+
+
+def _kernel(b_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, kq: float, vq: float, group: int, rep: int, scale: float,
+            n_blocks: int):
+    i = pl.program_id(0)
+    q = q_ref[...]                                    # [H, hd]
+    k = k_ref[...]                                    # [group, Hkv*hd]
+    v = v_ref[...]
+    h, hd = q.shape
+    hkv = k.shape[1] // hd
+
+    # Mixed-precision view of this tile: quantized iff fully left of boundary.
+    boundary = b_ref[0]
+    is_hist = (i + 1) * group <= boundary
+    k_mix = jnp.where(is_hist, _fq(k, kq, axis=0), k)          # per-channel
+    vg = v.reshape(group, hkv * hd // group, group)
+    v_mix = jnp.where(is_hist, _fq(vg, vq, axis=2).reshape(group, hkv * hd), v)
+
+    km = jnp.repeat(k_mix.reshape(group, hkv, hd), rep, axis=1)  # [g, H, hd]
+    vm = jnp.repeat(v_mix.reshape(group, hkv, hd), rep, axis=1)
+
+    s = jnp.einsum("hd,ghd->hg", q, km) * scale                # [H, group]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])                            # [H, group]
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_prev * alpha[:, None] + jnp.einsum("hg,ghd->hd", p, vm)
+    m_ref[...] = m_cur
+
+    @pl.when(i == n_blocks - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...] / l_ref[...][:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_bits", "v_bits", "group"))
+def attn_mixed(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               boundary: jnp.ndarray, *, k_bits: int, v_bits: int,
+               group: int = 32) -> jnp.ndarray:
+    """q: [H, hd]; k, v: [T, Hkv, hd] (T % group == 0); boundary: i32 scalar
+    array — tokens < boundary are treated as quantized history.
+
+    Returns the attention output [H, hd].
+    """
+    t, hkv, hd = k.shape
+    h = q.shape[0]
+    assert t % group == 0 and h % hkv == 0 and (hkv * hd) % group == 0
+    rep = h // hkv
+    n_blocks = t // group
+    kq = float((1 << k_bits) - 1)
+    vq = float((1 << v_bits) - 1)
+    b = jnp.asarray(boundary, dtype=jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, kq=kq, vq=vq, group=group, rep=rep,
+                          scale=1.0 / float(np.sqrt(hd)), n_blocks=n_blocks),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((h, hd), lambda i: (0, 0)),
+            pl.BlockSpec((group, hkv * hd), lambda i: (i, 0)),
+            pl.BlockSpec((group, hkv * hd), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, hd), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+        interpret=True,
+    )(b, q, k.reshape(t, hkv * hd), v.reshape(t, hkv * hd))
+    return out

@@ -1,0 +1,76 @@
+"""Pallas kernels for the paper's 3-bit packing (Eq. 12).
+
+11 quantized elements per 32-bit word: elements 0..9 use 3 bits
+(q_max = 7), element 10 uses the remaining 2 bits (q_max = 3) — a 10%
+density win over naive 10-per-word 3-bit packing.
+
+The production pack/unpack lives in Rust (`rust/src/quant/pack.rs`); these
+kernels demonstrate the same bit schedule as a vectorized TPU kernel and
+pin the layout both implementations are tested against (ref.pack3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 11  # elements per packed word
+
+
+def _pack_kernel(q_ref, o_ref):
+    q = q_ref[...].astype(jnp.uint32)           # [W, 11]
+    w = jnp.zeros(q.shape[0], dtype=jnp.uint32)
+    for i in range(10):
+        w = w | ((q[:, i] & 0x7) << (3 * i))
+    w = w | ((q[:, 10] & 0x3) << 30)
+    o_ref[...] = w
+
+
+def _unpack_kernel(w_ref, o_ref):
+    w = w_ref[...].astype(jnp.uint32)           # [W]
+    cols = [((w >> (3 * i)) & 0x7).astype(jnp.int32) for i in range(10)]
+    cols.append(((w >> 30) & 0x3).astype(jnp.int32))
+    o_ref[...] = jnp.stack(cols, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def pack3(q: jnp.ndarray, block_w: int = 128) -> jnp.ndarray:
+    """q: int32 [N] with N % 11 == 0, values pre-clipped per Eq. 12.
+    Returns uint32 [N / 11]."""
+    n = q.shape[0]
+    assert n % BLOCK == 0
+    words = n // BLOCK
+    bw = min(block_w, words)
+    # pad word count to a multiple of the tile
+    pad = (-words) % bw
+    q2 = jnp.pad(q.reshape(words, BLOCK), ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=((words + pad) // bw,),
+        in_specs=[pl.BlockSpec((bw, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((words + pad,), jnp.uint32),
+        interpret=True,
+    )(q2)
+    return out[:words]
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def unpack3(w: jnp.ndarray, block_w: int = 128) -> jnp.ndarray:
+    """w: uint32 [W] -> int32 [W * 11]."""
+    words = w.shape[0]
+    bw = min(block_w, words)
+    pad = (-words) % bw
+    w2 = jnp.pad(w, (0, pad))
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=((words + pad) // bw,),
+        in_specs=[pl.BlockSpec((bw,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bw, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((words + pad, BLOCK), jnp.int32),
+        interpret=True,
+    )(w2)
+    return out[:words].reshape(-1)

@@ -1,0 +1,97 @@
+"""Fused RMSNorm + QKV projection + RoPE as a Pallas kernel.
+
+This is the L1 kernel that lowers into the AOT artifacts: the L2 model's
+``decode_pre`` / ``prefill_pre`` graphs call :func:`qkv_proj` so the Pallas
+lowering (interpret=True -> plain HLO) ends up inside the executables the
+Rust runtime loads.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the token axis is the grid,
+each program instance holds one token tile of the hidden states plus the
+full projection weights in VMEM (for the reproduction model D=256 this is
+~0.9 MB, far under the 16 MB VMEM budget; the analytic scaling table lives
+in EXPERIMENTS.md §Perf).  The three projections ride the MXU back-to-back
+from the same normalized activation tile, which is the fusion the paper
+implements with a CUDA kernel over shared memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROPE_BASE = 10000.0
+EPS = 1e-6
+
+
+def _rope_block(x: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """x: [BT, H, hd], pos: [BT] -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (ROPE_BASE ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _kernel(x_ref, pos_ref, lnw_ref, wq_ref, wk_ref, wv_ref,
+            q_ref, k_ref, v_ref, *, n_heads: int, n_kv_heads: int, head_dim: int):
+    x = x_ref[...].astype(jnp.float32)                       # [BT, D]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * (1.0 / jnp.sqrt(ms + EPS)) * lnw_ref[...]
+    pos = pos_ref[...]
+    bt = x.shape[0]
+    q = (xn @ wq_ref[...]).reshape(bt, n_heads, head_dim)
+    k = (xn @ wk_ref[...]).reshape(bt, n_kv_heads, head_dim)
+    v = xn @ wv_ref[...]
+    q_ref[...] = _rope_block(q, pos).reshape(bt, n_heads * head_dim)
+    k_ref[...] = _rope_block(k, pos).reshape(bt, n_kv_heads * head_dim)
+    v_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "n_kv_heads", "head_dim", "block_t"))
+def qkv_proj(x: jnp.ndarray, pos: jnp.ndarray, lnw: jnp.ndarray,
+             wq: jnp.ndarray, wk: jnp.ndarray, wv: jnp.ndarray,
+             *, n_heads: int, n_kv_heads: int, head_dim: int,
+             block_t: int = 32) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [T, D], pos: [T] int32; w*: [D, heads*hd].
+
+    Returns (q[T,H,hd], k[T,Hkv,hd], v[T,Hkv,hd]) with RoPE applied to q, k.
+    T must be divisible by ``block_t`` (callers pad to the bucket size).
+    """
+    t, d = x.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, (t, bt)
+    grid = (t // bt,)
+    qd, kd = n_heads * head_dim, n_kv_heads * head_dim
+    out_shapes = (
+        jax.ShapeDtypeStruct((t, qd), jnp.float32),
+        jax.ShapeDtypeStruct((t, kd), jnp.float32),
+        jax.ShapeDtypeStruct((t, kd), jnp.float32),
+    )
+    q, k, v = pl.pallas_call(
+        functools.partial(_kernel, n_heads=n_heads, n_kv_heads=n_kv_heads,
+                          head_dim=head_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, qd), lambda i: (0, 0)),
+            pl.BlockSpec((d, kd), lambda i: (0, 0)),
+            pl.BlockSpec((d, kd), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, qd), lambda i: (i, 0)),
+            pl.BlockSpec((bt, kd), lambda i: (i, 0)),
+            pl.BlockSpec((bt, kd), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(x, pos, lnw, wq, wk, wv)
+    return (q.reshape(t, n_heads, head_dim),
+            k.reshape(t, n_kv_heads, head_dim),
+            v.reshape(t, n_kv_heads, head_dim))

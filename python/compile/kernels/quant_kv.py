@@ -1,0 +1,84 @@
+"""Pallas kernels for the paper's asymmetric group-wise KV quantization.
+
+Two fake-quant (quantize -> dequantize) kernels matching ref.py's oracles:
+
+  * Key   — per-channel groups: ``group`` consecutive tokens of one channel
+            share (scale, min).  Grid over token-groups.
+  * Value — per-token groups: ``group`` consecutive channels of one token
+            share (scale, min).  Grid over token tiles.
+
+The real packed-int storage lives on the Rust side (`rust/src/quant`); these
+kernels are used by the L2 eval/ablation graphs and are the numerics
+contract both sides are tested against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _fq(x: jnp.ndarray, qmax: float, axis: int) -> jnp.ndarray:
+    mn = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    s = (mx - mn) / qmax
+    s = jnp.where(s < EPS, 1.0, s)
+    q = jnp.clip(jnp.floor((x - mn) / s + 0.5), 0.0, qmax)
+    return q * s + mn
+
+
+def _key_kernel(k_ref, o_ref, *, qmax: float):
+    # block: [group, C] — one token-group across all channels; stats over axis 0
+    o_ref[...] = _fq(k_ref[...], qmax, axis=0)
+
+
+def _value_kernel(v_ref, o_ref, *, qmax: float, group: int):
+    # block: [BT, C] with C % group == 0; stats over channel groups
+    v = v_ref[...]
+    bt, c = v.shape
+    vg = v.reshape(bt, c // group, group)
+    o_ref[...] = _fq(vg, qmax, axis=2).reshape(bt, c)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def fq_key_per_channel(k: jnp.ndarray, *, bits: int, group: int = 32) -> jnp.ndarray:
+    """k: [T, Hkv, hd], T % group == 0.  Returns fake-quantized k."""
+    t, h, d = k.shape
+    assert t % group == 0
+    qmax = float((1 << bits) - 1)
+    k2 = k.reshape(t, h * d)
+    out = pl.pallas_call(
+        functools.partial(_key_kernel, qmax=qmax),
+        grid=(t // group,),
+        in_specs=[pl.BlockSpec((group, h * d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((group, h * d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h * d), jnp.float32),
+        interpret=True,
+    )(k2)
+    return out.reshape(t, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_t"))
+def fq_value_per_token(v: jnp.ndarray, *, bits: int, group: int = 32,
+                       block_t: int = 32) -> jnp.ndarray:
+    """v: [T, Hkv, hd], hd % group == 0.  Returns fake-quantized v."""
+    t, h, d = v.shape
+    assert d % group == 0
+    qmax = float((1 << bits) - 1)
+    bt = min(block_t, t)
+    assert t % bt == 0
+    v2 = v.reshape(t, h * d)
+    out = pl.pallas_call(
+        functools.partial(_value_kernel, qmax=qmax, group=group),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, h * d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, h * d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h * d), jnp.float32),
+        interpret=True,
+    )(v2)
+    return out.reshape(t, h, d)

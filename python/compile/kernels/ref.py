@@ -1,0 +1,187 @@
+"""Pure-jnp oracles for every Pallas kernel and for the Rust hot path.
+
+These definitions are the single source of truth for the numerics.  The
+Pallas kernels (qkv_proj / quant_kv / fused_attn / pack3) are pytest-checked
+against them, and ``aot.py`` exports golden vectors from them that the Rust
+implementation (`rust/src/quant`, `rust/src/attention`) must match.
+
+Quantization follows the paper exactly (Methodology, "Group-Wise Low-Bit
+Quantization"):
+
+    s = (max - min) / q_max
+    q = clip(round((x - min) / s), 0, q_max)        # round = floor(u + 0.5)
+    x~ = q * s + min
+
+Rounding is floor(u + 0.5) — *not* banker's rounding — so that the Rust
+side (`(u + 0.5).floor()`) is bit-identical.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Basic model ops
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm over the last dim."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * (1.0 / jnp.sqrt(ms + EPS)) * w).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: [..., T, H, hd] (hd even), pos: [T] (or [...,T])."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[..., :, None, None] * freqs  # [...,T,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+# ---------------------------------------------------------------------------
+# Group-wise asymmetric quantization (paper §Asymmetric Low-Bit Quantization)
+# ---------------------------------------------------------------------------
+def _round_half_up(u: jnp.ndarray) -> jnp.ndarray:
+    return jnp.floor(u + 0.5)
+
+
+def quant_params(x: jnp.ndarray, qmax: int, axis: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(scale, min) per group; ``x`` already reshaped so ``axis`` is the group."""
+    mn = jnp.min(x, axis=axis, keepdims=True)
+    mx = jnp.max(x, axis=axis, keepdims=True)
+    s = (mx - mn) / float(qmax)
+    s = jnp.where(s < EPS, 1.0, s)
+    return s, mn
+
+
+def quantize(x: jnp.ndarray, s: jnp.ndarray, mn: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    q = _round_half_up((x - mn) / s)
+    return jnp.clip(q, 0.0, float(qmax)).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, s: jnp.ndarray, mn: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * s + mn
+
+
+def fake_quant(x: jnp.ndarray, bits: int, axis: int) -> jnp.ndarray:
+    """quantize -> dequantize along ``axis`` groups (whole axis = one group)."""
+    qmax = (1 << bits) - 1
+    s, mn = quant_params(x, qmax, axis)
+    return dequantize(quantize(x, s, mn, qmax), s, mn)
+
+
+def fake_quant_key_per_channel(k: jnp.ndarray, bits: int, group: int = 32) -> jnp.ndarray:
+    """Key cache quantization: groups of ``group`` consecutive *tokens* per
+    channel.  k: [T, Hkv, hd], T divisible by ``group``."""
+    t, h, d = k.shape
+    assert t % group == 0, (t, group)
+    kg = k.reshape(t // group, group, h, d)
+    return fake_quant(kg, bits, axis=1).reshape(t, h, d)
+
+
+def fake_quant_value_per_token(v: jnp.ndarray, bits: int, group: int = 32) -> jnp.ndarray:
+    """Value cache quantization: groups of ``group`` consecutive *channels*
+    per token.  v: [T, Hkv, hd], hd divisible by ``group``."""
+    t, h, d = v.shape
+    assert d % group == 0, (d, group)
+    vg = v.reshape(t, h, d // group, group)
+    return fake_quant(vg, bits, axis=3).reshape(t, h, d)
+
+
+# ---------------------------------------------------------------------------
+# 3-bit packing: 11 elements per u32 (10 x 3-bit + 1 x 2-bit), paper Eq. 12
+# ---------------------------------------------------------------------------
+PACK3_BLOCK = 11
+
+
+def pack3(q: np.ndarray) -> np.ndarray:
+    """q: int array, len divisible by 11, values already clipped per Eq. 12
+    (q[i] <= 7 for i%11 < 10, q[i] <= 3 for i%11 == 10). Returns uint32."""
+    q = np.asarray(q, dtype=np.uint32).reshape(-1, PACK3_BLOCK)
+    out = np.zeros(q.shape[0], dtype=np.uint32)
+    for i in range(10):
+        out |= (q[:, i] & 0x7) << np.uint32(3 * i)
+    out |= (q[:, 10] & 0x3) << np.uint32(30)
+    return out
+
+
+def unpack3(w: np.ndarray) -> np.ndarray:
+    w = np.asarray(w, dtype=np.uint32)
+    out = np.zeros((w.shape[0], PACK3_BLOCK), dtype=np.int32)
+    for i in range(10):
+        out[:, i] = (w >> np.uint32(3 * i)) & 0x7
+    out[:, 10] = (w >> np.uint32(30)) & 0x3
+    return out.reshape(-1)
+
+
+def pack_uniform(q: np.ndarray, bits: int) -> np.ndarray:
+    """Uniform packing for 1/2/4(/8)-bit: 32/bits elements per u32."""
+    per = 32 // bits
+    q = np.asarray(q, dtype=np.uint32).reshape(-1, per)
+    out = np.zeros(q.shape[0], dtype=np.uint32)
+    mask = np.uint32((1 << bits) - 1)
+    for i in range(per):
+        out |= (q[:, i] & mask) << np.uint32(bits * i)
+    return out
+
+
+def unpack_uniform(w: np.ndarray, bits: int) -> np.ndarray:
+    per = 32 // bits
+    w = np.asarray(w, dtype=np.uint32)
+    mask = np.uint32((1 << bits) - 1)
+    out = np.zeros((w.shape[0], per), dtype=np.int32)
+    for i in range(per):
+        out[:, i] = (w >> np.uint32(bits * i)) & mask
+    return out.reshape(-1)
+
+
+def fake_quant_3bit_blockwise(x: jnp.ndarray) -> jnp.ndarray:
+    """Eq.12 fidelity oracle: within each 11-element block (along the group
+    axis) element 10 only gets 2 bits.  x: [..., G] with G % 11 == 0; the
+    group statistics are still over the whole last axis."""
+    g = x.shape[-1]
+    assert g % PACK3_BLOCK == 0
+    s, mn = quant_params(x, 7, axis=-1)
+    idx = jnp.arange(g) % PACK3_BLOCK
+    qmax = jnp.where(idx == 10, 3.0, 7.0)
+    q = jnp.clip(_round_half_up((x - mn) / s), 0.0, qmax)
+    return q * s + mn
+
+
+# ---------------------------------------------------------------------------
+# Reference attention over a mixed cache (RPC window + quantized history)
+# ---------------------------------------------------------------------------
+def attn_mixed_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   boundary: int, k_bits: int, v_bits: int,
+                   group: int = 32) -> jnp.ndarray:
+    """Decode-step attention for one query over a cache of T tokens whose
+    first ``boundary`` tokens are fake-quantized (per-channel K / per-token
+    V) and the remainder (the RPC window) is full precision.
+
+    q: [H, hd], k/v: [T, Hkv, hd] with H % Hkv == 0. Returns [H, hd].
+    ``boundary`` must be a multiple of ``group``.
+    """
+    t, hkv, hd = k.shape
+    h = q.shape[0]
+    rep = h // hkv
+    if boundary > 0:
+        kq = fake_quant_key_per_channel(k[:boundary], k_bits, group)
+        vq = fake_quant_value_per_token(v[:boundary], v_bits, group)
+        k = jnp.concatenate([kq, k[boundary:]], axis=0)
+        v = jnp.concatenate([vq, v[boundary:]], axis=0)
+    kk = jnp.repeat(k, rep, axis=1)            # [T, H, hd]
+    vv = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("hd,thd->ht", q, kk) / np.sqrt(hd)
+    p = jnp.exp(scores - jnp.max(scores, axis=1, keepdims=True))
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    return jnp.einsum("ht,thd->hd", p, vv)

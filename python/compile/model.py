@@ -1,0 +1,218 @@
+"""L2: the reproduction model — a Llama-style decoder in JAX.
+
+Two forward paths share one parameter set:
+
+  * ``forward_jnp``  — pure-jnp, differentiable; used for training, the
+    KVmix profiler (gradient norms of W_k / W_v), and golden logits.
+  * artifact graphs — ``decode_pre`` / ``decode_post`` / ``logits_head`` /
+    ``profiler_grads``; the *pre* graph calls the L1 Pallas kernel
+    (kernels.qkv_proj) so its lowering lands inside the HLO the Rust
+    runtime executes.  All weights are runtime *parameters* of the
+    executables (never baked constants) so one executable serves every
+    layer; Rust feeds per-layer weight buffers (canonical order below).
+
+Canonical weight order (manifest.json / weights.bin / executable params):
+
+    embed,
+    [per layer: ln1, wq, wk, wv, wo, ln2, wg, wu, wd]  x n_layers,
+    lnf, lm_head
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.qkv_proj import qkv_proj
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 8
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 256
+    group: int = 32          # KV quant group size (= paper's 32)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def to_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+LAYER_KEYS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, Any]:
+    rng = np.random.RandomState(seed)
+
+    def mat(n_in, n_out):
+        return (rng.randn(n_in, n_out) * (1.0 / np.sqrt(n_in))).astype(np.float32)
+
+    params: dict[str, Any] = {
+        "embed": (rng.randn(cfg.vocab, cfg.d_model) * 0.02).astype(np.float32),
+        "layers": [],
+        "lnf": np.ones(cfg.d_model, dtype=np.float32),
+        "lm_head": mat(cfg.d_model, cfg.vocab),
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1": np.ones(cfg.d_model, dtype=np.float32),
+            "wq": mat(cfg.d_model, cfg.q_dim),
+            "wk": mat(cfg.d_model, cfg.kv_dim),
+            "wv": mat(cfg.d_model, cfg.kv_dim),
+            "wo": mat(cfg.q_dim, cfg.d_model),
+            "ln2": np.ones(cfg.d_model, dtype=np.float32),
+            "wg": mat(cfg.d_model, cfg.d_ff),
+            "wu": mat(cfg.d_model, cfg.d_ff),
+            "wd": mat(cfg.d_ff, cfg.d_model),
+        })
+    return params
+
+
+def flat_weights(cfg: ModelConfig, params: dict[str, Any]) -> list[tuple[str, np.ndarray]]:
+    """Canonical (name, array) list — the manifest/weights.bin order."""
+    out = [("embed", np.asarray(params["embed"]))]
+    for i, lyr in enumerate(params["layers"]):
+        for k in LAYER_KEYS:
+            out.append((f"layers.{i}.{k}", np.asarray(lyr[k])))
+    out.append(("lnf", np.asarray(params["lnf"])))
+    out.append(("lm_head", np.asarray(params["lm_head"])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Differentiable full-sequence forward (training / profiler / goldens)
+# ---------------------------------------------------------------------------
+def _attention(q, k, v, cfg: ModelConfig):
+    """q: [B,T,H,hd], k/v: [B,T,Hkv,hd] — causal GQA attention."""
+    b, t, h, hd = q.shape
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    return out.reshape(b, t, h * hd)
+
+
+def forward_jnp(params: dict[str, Any], tokens: jnp.ndarray,
+                cfg: ModelConfig) -> jnp.ndarray:
+    """tokens: [B, T] int32 -> logits [B, T, vocab]."""
+    b, t = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    for lyr in params["layers"]:
+        hn = ref.rmsnorm(h, lyr["ln1"])
+        q = (hn @ lyr["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (hn @ lyr["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        v = (hn @ lyr["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        q = ref.rope(q, pos)
+        k = ref.rope(k, pos)
+        h = h + _attention(q, k, v, cfg) @ lyr["wo"]
+        hn2 = ref.rmsnorm(h, lyr["ln2"])
+        h = h + (ref.silu(hn2 @ lyr["wg"]) * (hn2 @ lyr["wu"])) @ lyr["wd"]
+    return ref.rmsnorm(h, params["lnf"]) @ params["lm_head"]
+
+
+def loss_fn(params: dict[str, Any], tokens: jnp.ndarray, mask: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """Masked next-token cross-entropy.  mask[b, t] weights the prediction
+    made *at* position t (of tokens[b, t+1])."""
+    logits = forward_jnp(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    w = mask[:, :-1]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Artifact graphs (AOT-lowered; weights are runtime parameters)
+# ---------------------------------------------------------------------------
+def pre_graph(cfg: ModelConfig):
+    """(hidden[T,D], pos[T] i32, ln1, wq, wk, wv) -> q[T,H,hd], k[T,Hkv,hd],
+    v[T,Hkv,hd] — RMSNorm + QKV proj + RoPE via the Pallas kernel.  Used
+    for both decode (T = batch rows, per-row positions) and prefill."""
+
+    def f(hidden, pos, ln1, wq, wk, wv):
+        return qkv_proj(hidden, pos, ln1, wq, wk, wv,
+                        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.head_dim,
+                        block_t=min(32, hidden.shape[0]))
+
+    return f
+
+def post_graph(cfg: ModelConfig):
+    """(attn[T,H*hd], resid[T,D], wo, ln2, wg, wu, wd) -> hidden'[T,D]."""
+
+    def f(attn, resid, wo, ln2, wg, wu, wd):
+        h = resid + attn @ wo
+        hn = ref.rmsnorm(h, ln2)
+        return h + (ref.silu(hn @ wg) * (hn @ wu)) @ wd
+
+    return f
+
+
+def logits_graph(cfg: ModelConfig):
+    """(hidden[T,D], lnf, lm_head) -> logits[T, vocab]."""
+
+    def f(hidden, lnf, lm_head):
+        return ref.rmsnorm(hidden, lnf) @ lm_head
+
+    return f
+
+
+def profiler_graph(cfg: ModelConfig):
+    """(tokens[B,T], mask[B,T], *flat weights) -> (loss, k_norms[L], v_norms[L]).
+
+    The KVmix profiler's gradient computation (paper Eq. 10) as a single
+    lowered graph so the *Rust* profiler can run importance analysis through
+    PJRT with no python on the path.
+    """
+
+    def f(tokens, mask, *flat):
+        params = unflatten(cfg, list(flat))
+
+        def loss_of_kv(kvs):
+            p2 = {**params, "layers": [
+                {**lyr, "wk": kvs[i][0], "wv": kvs[i][1]}
+                for i, lyr in enumerate(params["layers"])]}
+            return loss_fn(p2, tokens, mask, cfg)
+
+        kvs = [(l["wk"], l["wv"]) for l in params["layers"]]
+        loss, grads = jax.value_and_grad(loss_of_kv)(kvs)
+        k_norms = jnp.stack([jnp.linalg.norm(g[0]) for g in grads])
+        v_norms = jnp.stack([jnp.linalg.norm(g[1]) for g in grads])
+        return loss, k_norms, v_norms
+
+    return f
+
+
+def unflatten(cfg: ModelConfig, flat: list[jnp.ndarray]) -> dict[str, Any]:
+    """Inverse of flat_weights (same canonical order)."""
+    it = iter(flat)
+    params: dict[str, Any] = {"embed": next(it), "layers": []}
+    for _ in range(cfg.n_layers):
+        params["layers"].append({k: next(it) for k in LAYER_KEYS})
+    params["lnf"] = next(it)
+    params["lm_head"] = next(it)
+    rest = list(it)
+    assert not rest, f"{len(rest)} extra weights"
+    return params

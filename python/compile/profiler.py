@@ -1,0 +1,119 @@
+"""KVmix profiler (paper §KV Importance Analysis, Algorithm 1).
+
+Computes the L2 norms of the loss gradients w.r.t. each layer's Key/Value
+projection weights over a set of prompts, averages them (Eq. 11), ranks
+layers, and emits the mixed-precision allocation: the top ``high_frac`` of
+Key layers get ``k_high_bits`` (3), of Value layers ``v_high_bits`` (4),
+everyone else ``low_bits`` (2); RPC ratios follow the paper's defaults
+(20% for high-bit layers, 10% for low-bit).
+
+This python implementation is the build-time reference; the same graph is
+AOT-lowered (model.profiler_graph) so the Rust profiler
+(rust/src/profiler) can reproduce the analysis through PJRT, and both are
+cross-checked against ``importance.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, loss_fn
+
+
+@dataclasses.dataclass
+class QuantPlan:
+    """Per-layer bit allocation + RPC ratios (the model's quant config)."""
+
+    k_bits: list[int]
+    v_bits: list[int]
+    k_rpc: list[float]
+    v_rpc: list[float]
+    k_scores: list[float]
+    v_scores: list[float]
+
+    @property
+    def avg_k_bits(self) -> float:
+        return float(np.mean(self.k_bits))
+
+    @property
+    def avg_v_bits(self) -> float:
+        return float(np.mean(self.v_bits))
+
+    @property
+    def name(self) -> str:
+        return f"kvmix-k{self.avg_k_bits:.2f}v{self.avg_v_bits:.2f}"
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["avg_k_bits"] = self.avg_k_bits
+        d["avg_v_bits"] = self.avg_v_bits
+        d["name"] = self.name
+        return d
+
+
+def grad_norms(cfg: ModelConfig, params, prompts: np.ndarray,
+               masks: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Average per-layer L2 gradient norms over P prompts (Eq. 10–11).
+
+    prompts: [P, T] int32, masks: [P, T] f32. Returns (k_norms[L], v_norms[L]).
+    """
+
+    def loss_of_kv(kvs, tokens, mask):
+        p2 = {**params, "layers": [
+            {**lyr, "wk": kvs[i][0], "wv": kvs[i][1]}
+            for i, lyr in enumerate(params["layers"])]}
+        return loss_fn(p2, tokens, mask, cfg)
+
+    kvs = [(lyr["wk"], lyr["wv"]) for lyr in params["layers"]]
+    gfn = jax.jit(jax.grad(loss_of_kv))
+    k_acc = np.zeros(cfg.n_layers)
+    v_acc = np.zeros(cfg.n_layers)
+    for p in range(prompts.shape[0]):
+        g = gfn(kvs, jnp.asarray(prompts[p:p + 1]), jnp.asarray(masks[p:p + 1]))
+        for i in range(cfg.n_layers):
+            k_acc[i] += float(jnp.linalg.norm(g[i][0]))
+            v_acc[i] += float(jnp.linalg.norm(g[i][1]))
+    return k_acc / prompts.shape[0], v_acc / prompts.shape[0]
+
+
+def allocate(k_scores: np.ndarray, v_scores: np.ndarray,
+             high_frac: float = 0.2, k_high_bits: int = 3,
+             v_high_bits: int = 4, low_bits: int = 2,
+             rpc_high: float = 0.2, rpc_low: float = 0.1) -> QuantPlan:
+    """Rank layers by importance; top ``high_frac`` get high bits (paper's
+    20%-80% split, adjustable)."""
+    n = len(k_scores)
+    n_high = int(round(high_frac * n))
+    k_top = set(np.argsort(-k_scores)[:n_high].tolist())
+    v_top = set(np.argsort(-v_scores)[:n_high].tolist())
+    k_bits = [k_high_bits if i in k_top else low_bits for i in range(n)]
+    v_bits = [v_high_bits if i in v_top else low_bits for i in range(n)]
+    k_rpc = [rpc_high if i in k_top else rpc_low for i in range(n)]
+    v_rpc = [rpc_high if i in v_top else rpc_low for i in range(n)]
+    return QuantPlan(k_bits, v_bits, k_rpc, v_rpc,
+                     k_scores.tolist(), v_scores.tolist())
+
+
+def profile(cfg: ModelConfig, params, n_prompts: int = 24, seq_len: int = 160,
+            seed: int = 7, task: str | None = None,
+            high_frac: float = 0.2) -> QuantPlan:
+    rng = np.random.RandomState(seed)
+    prompts, masks = corpus.batch(rng, n_prompts, seq_len, task=task)
+    ks, vs = grad_norms(cfg, params, prompts, masks)
+    return allocate(ks, vs, high_frac=high_frac)
+
+
+def save_importance(path: str, cfg: ModelConfig, plan: QuantPlan,
+                    extra: dict | None = None) -> None:
+    doc = {"model": cfg.to_dict(), "plan": plan.to_dict()}
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)

@@ -1,0 +1,91 @@
+"""Build-time training of the reproduction checkpoint.
+
+Trains the tiny Llama-style decoder (model.py) on the synthetic task
+mixture (corpus.py) with hand-rolled Adam, logging the loss curve to
+``train_log.json`` (recorded in EXPERIMENTS.md).  Runs once; ``aot.py``
+caches the resulting ``checkpoint.npz``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, forward_jnp, init_params, loss_fn
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def make_step(cfg: ModelConfig, lr: float = 3e-3, b1=0.9, b2=0.99, eps=1e-8,
+              warmup: int = 50):
+    @jax.jit
+    def step(params, opt, tokens, mask, t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, mask, cfg)
+        lr_t = lr * jnp.minimum(1.0, (t + 1) / warmup)
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+        mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** (t + 1)), m)
+        vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** (t + 1)), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr_t * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+        return params, {"m": m, "v": v, "t": t + 1}, loss
+
+    return step
+
+
+def train(cfg: ModelConfig, steps: int = 600, batch_size: int = 16,
+          seq_len: int = 160, seed: int = 0,
+          log_path: str | None = None) -> tuple[dict[str, Any], list[float]]:
+    rng = np.random.RandomState(seed)
+    params = jax.tree_util.tree_map(jnp.asarray, init_params(cfg, seed))
+    opt = adam_init(params)
+    step = make_step(cfg)
+    losses: list[float] = []
+    t0 = time.time()
+    for i in range(steps):
+        toks, mask = corpus.batch(rng, batch_size, seq_len)
+        params, opt, loss = step(params, opt, jnp.asarray(toks), jnp.asarray(mask), i)
+        losses.append(float(loss))
+        if i % 50 == 0 or i == steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+    if log_path:
+        with open(log_path, "w") as f:
+            json.dump({"steps": steps, "batch_size": batch_size,
+                       "seq_len": seq_len, "seconds": time.time() - t0,
+                       "loss": losses}, f)
+    return jax.tree_util.tree_map(np.asarray, params), losses
+
+
+def eval_task_metrics(cfg: ModelConfig, params, n: int = 32,
+                      seq_len: int = 160) -> dict[str, float]:
+    """Held-out metrics: lm perplexity, recall accuracy, chain accuracy."""
+    out: dict[str, float] = {}
+    fwd = jax.jit(lambda p, t: forward_jnp(p, t, cfg))
+    for task in ("lm", "recall", "chain"):
+        toks, mask = corpus.eval_set(task, n, seq_len, seed=999)
+        logits = fwd(params, jnp.asarray(toks))
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = toks[:, 1:]
+        nll = -np.asarray(jnp.take_along_axis(logp, jnp.asarray(tgt)[..., None], axis=-1))[..., 0]
+        w = mask[:, :-1]
+        denom = max(w.sum(), 1.0)
+        out[f"{task}_ppl"] = float(np.exp((nll * w).sum() / denom))
+        pred = np.asarray(jnp.argmax(logits[:, :-1], axis=-1))
+        out[f"{task}_acc"] = float(((pred == tgt) * w).sum() / denom)
+    return out
+
+
+if __name__ == "__main__":
+    cfg = ModelConfig()
+    params, losses = train(cfg, steps=200)
+    print(eval_task_metrics(cfg, params))

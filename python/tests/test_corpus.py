@@ -1,0 +1,80 @@
+"""Synthetic corpus: determinism, mask semantics, task structure."""
+
+import numpy as np
+
+from compile import corpus
+
+
+def test_deterministic():
+    a = corpus.batch(np.random.RandomState(1), 4, 64)
+    b = corpus.batch(np.random.RandomState(1), 4, 64)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_token_ranges():
+    toks, _ = corpus.batch(np.random.RandomState(2), 16, 96)
+    assert toks.min() >= 0 and toks.max() < corpus.VOCAB
+
+
+def test_recall_mask_points_at_value():
+    """mask>0 at queried-key positions; tokens[t+1] is the bound value."""
+    for seed in range(5):
+        s = corpus.gen_recall(np.random.RandomState(seed), 96)
+        pos = np.nonzero(s.loss_mask)[0]
+        assert len(pos) >= 4
+        sep = int(np.nonzero(s.tokens == corpus.SEP)[0][0])
+        for t in pos:
+            assert s.loss_mask[t] == corpus.ANSWER_WEIGHT
+            assert s.tokens[t - 1] == corpus.QRY
+            qkey = s.tokens[t]
+            assert corpus.KEY_BASE <= qkey < corpus.KEY_BASE + corpus.KEY_COUNT
+            v = s.tokens[t + 1]
+            assert corpus.VAL_BASE <= v < corpus.VAL_BASE + corpus.VAL_COUNT
+            # every binding of this key in the context carries value v
+            ks = np.nonzero(s.tokens[:sep] == qkey)[0]
+            assert len(ks) >= 1
+            for kpos in ks:
+                assert s.tokens[kpos + 1] == v
+
+
+def test_recall_query_offset_controls_distance():
+    recent = corpus.gen_recall(np.random.RandomState(0), 96, query_offset=0)
+    old = corpus.gen_recall(np.random.RandomState(0), 96, query_offset=10)
+
+    def last_binding(s):
+        t = int(np.nonzero(s.loss_mask)[0][0])
+        key = s.tokens[t]
+        sep = int(np.nonzero(s.tokens == corpus.SEP)[0][0])
+        return int(np.nonzero(s.tokens[:sep] == key)[0][-1])
+
+    # larger offset -> the queried key's last binding sits earlier
+    assert last_binding(old) < last_binding(recent)
+
+
+def test_chain_sums_correct():
+    for seed in range(5):
+        s = corpus.gen_chain(np.random.RandomState(seed), 80)
+        pos = np.nonzero(s.loss_mask)[0]
+        assert len(pos) > 3
+        for t in pos:
+            assert s.tokens[t] == corpus.EQL
+            ns = [int(s.tokens[t - 3]), int(s.tokens[t - 2]), int(s.tokens[t - 1])]
+            assert s.tokens[t + 1] == max(ns)
+
+
+def test_lm_dynamics_learnable():
+    s = corpus.gen_lm(np.random.RandomState(4), 64)
+    toks = s.tokens
+    # recover offset from first transition and check most steps follow it
+    xs = [t - corpus.LM_BASE for t in toks[1:] if t >= corpus.LM_BASE]
+    o = (xs[1] - corpus.LM_MULT * xs[0]) % corpus.LM_COUNT
+    follows = sum(1 for a, b in zip(xs, xs[1:])
+                  if b == (corpus.LM_MULT * a + o) % corpus.LM_COUNT)
+    assert follows / (len(xs) - 1) > 0.75
+
+
+def test_eval_set_fixed():
+    a = corpus.eval_set("recall", 4, 64)
+    b = corpus.eval_set("recall", 4, 64)
+    np.testing.assert_array_equal(a[0], b[0])

@@ -1,0 +1,95 @@
+"""Pallas qkv_proj and fused mixed-precision attention vs jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_attn import attn_mixed
+from compile.kernels.qkv_proj import qkv_proj
+
+
+def _qkv_ref(x, pos, lnw, wq, wk, wv, h, hkv, hd):
+    xn = ref.rmsnorm(x, lnw)
+    t = x.shape[0]
+    q = (xn @ wq).reshape(t, h, hd)
+    k = (xn @ wk).reshape(t, hkv, hd)
+    v = (xn @ wv).reshape(t, hkv, hd)
+    return ref.rope(q, pos), ref.rope(k, pos), v
+
+
+@pytest.mark.parametrize("t", [1, 2, 8, 32, 64])
+def test_qkv_proj_matches_ref(t):
+    h, hkv, hd, d = 4, 2, 32, 64
+    rng = np.random.RandomState(t)
+    x = jnp.asarray(rng.randn(t, d).astype(np.float32))
+    pos = jnp.asarray(rng.randint(0, 500, size=t).astype(np.int32))
+    lnw = jnp.asarray(rng.randn(d).astype(np.float32))
+    wq = jnp.asarray((rng.randn(d, h * hd) / 8).astype(np.float32))
+    wk = jnp.asarray((rng.randn(d, hkv * hd) / 8).astype(np.float32))
+    wv = jnp.asarray((rng.randn(d, hkv * hd) / 8).astype(np.float32))
+    q, k, v = qkv_proj(x, pos, lnw, wq, wk, wv, n_heads=h, n_kv_heads=hkv,
+                       head_dim=hd, block_t=min(32, t))
+    qr, kr, vr = _qkv_ref(x, pos, lnw, wq, wk, wv, h, hkv, hd)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(kr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=2e-5)
+
+
+@pytest.mark.parametrize("boundary", [0, 32, 64, 96])
+@pytest.mark.parametrize("k_bits,v_bits", [(2, 2), (3, 4), (2, 4)])
+def test_attn_mixed_matches_ref(boundary, k_bits, v_bits):
+    h, hkv, hd, t = 4, 2, 32, 96
+    rng = np.random.RandomState(boundary + k_bits)
+    q = jnp.asarray(rng.randn(h, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(t, hkv, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(t, hkv, hd).astype(np.float32))
+    out = attn_mixed(q, k, v, boundary, k_bits=k_bits, v_bits=v_bits, group=32)
+    want = ref.attn_mixed_ref(q, k, v, boundary, k_bits, v_bits, group=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attn_boundary_zero_is_full_precision():
+    """boundary=0 must equal plain softmax attention."""
+    h, hkv, hd, t = 4, 2, 32, 64
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(h, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(t, hkv, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(t, hkv, hd).astype(np.float32))
+    out2 = attn_mixed(q, k, v, 0, k_bits=1, v_bits=1, group=32)
+    want = ref.attn_mixed_ref(q, k, v, 0, 4, 4, group=32)  # bits irrelevant
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attn_quant_error_shrinks_with_bits():
+    """More bits on the history -> closer to full-precision output."""
+    h, hkv, hd, t = 4, 2, 32, 128
+    rng = np.random.RandomState(5)
+    q = jnp.asarray(rng.randn(h, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(t, hkv, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(t, hkv, hd).astype(np.float32))
+    full = np.asarray(ref.attn_mixed_ref(q, k, v, 0, 4, 4))
+    errs = []
+    for bits in (1, 2, 3, 4):
+        out = np.asarray(attn_mixed(q, k, v, 128, k_bits=bits, v_bits=bits))
+        errs.append(np.abs(out - full).mean())
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([32, 64]),
+       st.sampled_from([0, 32]))
+@settings(max_examples=10, deadline=None)
+def test_attn_mixed_hypothesis(seed, t, boundary):
+    h, hkv, hd = 4, 2, 32
+    rng = np.random.RandomState(seed % 10_000)
+    scale = rng.uniform(0.1, 3.0)
+    q = jnp.asarray((rng.randn(h, hd) * scale).astype(np.float32))
+    k = jnp.asarray((rng.randn(t, hkv, hd) * scale).astype(np.float32))
+    v = jnp.asarray((rng.randn(t, hkv, hd) * scale).astype(np.float32))
+    out = attn_mixed(q, k, v, boundary, k_bits=2, v_bits=2, group=32)
+    want = ref.attn_mixed_ref(q, k, v, boundary, 2, 2, group=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)

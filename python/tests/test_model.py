@@ -1,0 +1,115 @@
+"""Model graphs: shapes, artifact-graph == forward_jnp parity, profiler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, profiler
+from compile.model import (ModelConfig, forward_jnp, init_params, logits_graph,
+                           loss_fn, post_graph, pre_graph, flat_weights,
+                           unflatten)
+
+CFG = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, n_kv_heads=1,
+                  head_dim=16, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jax.tree_util.tree_map(jnp.asarray, init_params(CFG, seed=3))
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((2, 10), dtype=jnp.int32)
+    logits = forward_jnp(params, toks, CFG)
+    assert logits.shape == (2, 10, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(params):
+    """Changing a future token must not change past logits."""
+    rng = np.random.RandomState(0)
+    t1 = rng.randint(0, CFG.vocab, size=(1, 12)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % CFG.vocab
+    l1 = forward_jnp(params, jnp.asarray(t1), CFG)
+    l2 = forward_jnp(params, jnp.asarray(t2), CFG)
+    np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                               atol=1e-5)
+    assert np.abs(np.asarray(l1[0, -1]) - np.asarray(l2[0, -1])).max() > 1e-4
+
+
+def test_artifact_graphs_compose_to_forward(params):
+    """pre -> (jnp attention) -> post -> logits must reproduce forward_jnp.
+
+    This is exactly the decomposition the Rust engine performs; if this
+    passes and Rust matches the goldens, the whole pipeline is consistent.
+    """
+    t = 8
+    rng = np.random.RandomState(1)
+    toks = rng.randint(0, CFG.vocab, size=(1, t)).astype(np.int32)
+    want = np.asarray(forward_jnp(params, jnp.asarray(toks), CFG))[0]
+
+    pre, post, logits_g = pre_graph(CFG), post_graph(CFG), logits_graph(CFG)
+    h = jnp.take(params["embed"], jnp.asarray(toks[0]), axis=0)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    rep = CFG.n_heads // CFG.n_kv_heads
+    for lyr in params["layers"]:
+        q, k, v = pre(h, pos, lyr["ln1"], lyr["wq"], lyr["wk"], lyr["wv"])
+        kk, vv = jnp.repeat(k, rep, axis=1), jnp.repeat(v, rep, axis=1)
+        s = jnp.einsum("qhd,khd->hqk", q, kk) / np.sqrt(CFG.head_dim)
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", p, vv).reshape(t, CFG.q_dim)
+        h = post(attn, h, lyr["wo"], lyr["ln2"], lyr["wg"], lyr["wu"], lyr["wd"])
+    got = np.asarray(logits_g(h, params["lnf"], params["lm_head"]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_flatten_unflatten_roundtrip(params):
+    flat = [a for _, a in flat_weights(CFG, params)]
+    p2 = unflatten(CFG, [jnp.asarray(a) for a in flat])
+    np.testing.assert_array_equal(np.asarray(p2["embed"]),
+                                  np.asarray(params["embed"]))
+    np.testing.assert_array_equal(np.asarray(p2["layers"][1]["wk"]),
+                                  np.asarray(params["layers"][1]["wk"]))
+
+
+def test_loss_masked_only(params):
+    """Zero mask -> zero-ish denominator guard; partial mask selects positions."""
+    toks = jnp.zeros((1, 8), dtype=jnp.int32)
+    zero = loss_fn(params, toks, jnp.zeros((1, 8)), CFG)
+    assert bool(jnp.isfinite(zero))
+
+
+def test_profiler_grad_norms_positive(params):
+    rng = np.random.RandomState(0)
+    prompts, masks = corpus.batch(rng, 2, 24)
+    prompts = prompts % CFG.vocab
+    ks, vs = profiler.grad_norms(CFG, params, prompts, masks)
+    assert ks.shape == (CFG.n_layers,) and vs.shape == (CFG.n_layers,)
+    assert (ks > 0).all() and (vs > 0).all()
+
+
+def test_allocate_split():
+    ks = np.array([5.0, 1.0, 3.0, 2.0, 0.5, 0.1, 4.0, 0.2])
+    vs = np.array([0.1, 5.0, 0.2, 4.0, 3.0, 0.3, 0.4, 0.5])
+    plan = profiler.allocate(ks, vs, high_frac=0.25)
+    assert plan.k_bits.count(3) == 2 and plan.v_bits.count(4) == 2
+    assert plan.k_bits[0] == 3 and plan.k_bits[6] == 3      # top-2 K layers
+    assert plan.v_bits[1] == 4 and plan.v_bits[3] == 4      # top-2 V layers
+    assert plan.k_rpc[0] == 0.2 and plan.k_rpc[1] == 0.1
+    # paper's headline arithmetic: 20% of 32 layers at 3/4 bit
+    ks32 = np.arange(32, dtype=float)
+    plan32 = profiler.allocate(ks32, ks32, high_frac=0.1875)
+    assert abs(plan32.avg_k_bits - 2.1875) < 1e-9
+    assert abs(plan32.avg_v_bits - 2.375) < 1e-9
+
+
+def test_allocate_extremes():
+    ks = np.arange(8.0)
+    p0 = profiler.allocate(ks, ks, high_frac=0.0)
+    assert set(p0.k_bits) == {2} and set(p0.v_bits) == {2}
+    p1 = profiler.allocate(ks, ks, high_frac=1.0)
+    assert set(p1.k_bits) == {3} and set(p1.v_bits) == {4}

@@ -1,0 +1,65 @@
+//! Decode-attention benchmark over the mixed cache: tokens/s as a
+//! function of context length, bit width and RPC ratio — the L3 hot path
+//! that the paper accelerates with fused CUDA kernels.
+
+use kvmix::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
+use kvmix::util::bench::{bench, black_box};
+use kvmix::util::Rng;
+
+fn build_cache(key: KeyRepr, value: ValueRepr, window: WindowPolicy,
+               ctx: usize, kv_dim: usize) -> LayerKvCache {
+    let mut cache = LayerKvCache::new(LayerCacheCfg {
+        kv_dim, head_dim: 32, group: 32, key, value,
+        k_window: window, v_window: window, outlier_frac: 0.0,
+    });
+    let mut rng = Rng::new(9);
+    let k = rng.normal_vec(ctx * kv_dim);
+    let v = rng.normal_vec(ctx * kv_dim);
+    cache.append(&k, &v, ctx);
+    cache
+}
+
+fn main() {
+    println!("# decode attention over the mixed cache (4 heads, kv_dim 64)");
+    let kv_dim = 64;
+    let mut rng = Rng::new(1);
+    let q = rng.normal_vec(4 * 32);
+    let mut out = vec![0f32; 4 * 32];
+    let mut scratch = AttnScratch::default();
+
+    for ctx in [128usize, 512, 2048] {
+        // fp16 baseline
+        let fp = build_cache(KeyRepr::Fp, ValueRepr::Fp, WindowPolicy::All, ctx, kv_dim);
+        let s = bench(&format!("attend/fp/ctx{ctx}"), 50, || {
+            fp.attend(black_box(&q), 4, &mut out, &mut scratch);
+            black_box(&out);
+        });
+        println!("{}  ({:.1} Mtok/s)", s.line(), s.throughput(ctx as f64) / 1e6);
+
+        for bits in [2u8, 3, 4] {
+            let cache = build_cache(KeyRepr::PerChannel { bits },
+                                    ValueRepr::PerToken { bits },
+                                    WindowPolicy::Rpc { ratio: 0.1 }, ctx, kv_dim);
+            let s = bench(&format!("attend/kvmix{bits}bit/ctx{ctx}"), 50, || {
+                cache.attend(black_box(&q), 4, &mut out, &mut scratch);
+                black_box(&out);
+            });
+            println!("{}  ({:.1} Mtok/s, {} fp tokens)",
+                     s.line(), s.throughput(ctx as f64) / 1e6, cache.k_fp_tokens());
+        }
+    }
+
+    println!("\n# quantize+append (fused) — cost of pushing 1 token with block flush amortized");
+    for bits in [2u8, 3, 4] {
+        let mut cache = build_cache(KeyRepr::PerChannel { bits },
+                                    ValueRepr::PerToken { bits },
+                                    WindowPolicy::Rpc { ratio: 0.1 }, 64, kv_dim);
+        let mut rng2 = Rng::new(2);
+        let k1 = rng2.normal_vec(kv_dim);
+        let v1 = rng2.normal_vec(kv_dim);
+        let s = bench(&format!("append/{bits}bit"), 40, || {
+            cache.append(black_box(&k1), black_box(&v1), 1);
+        });
+        println!("{}", s.line());
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench harness for paper Fig. 7: peak KV memory by method at batch 4.
+//! (The same numbers as `kvmix repro fig7`, in bench form.)
+
+use kvmix::baselines::Method;
+use kvmix::config::QuantPlan;
+use kvmix::harness::tables::run_serving;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP fig7_memory: artifacts not built");
+        return;
+    }
+    let rt = Runtime::load_with(&dir, false).expect("runtime");
+    let plan = QuantPlan::from_importance_file(&dir.join("importance.json"))
+        .unwrap_or_else(|_| QuantPlan::uniform(rt.model.n_layers, 2));
+
+    println!("# Fig 7 bench — peak modeled KV bytes (batch 4, prompt 48, gen 64)");
+    println!("{:<22} {:>14} {:>10}", "method", "peak KiB", "vs FP16");
+    let mut fp16 = 0f64;
+    for method in Method::comparison_set(&plan) {
+        let (peak, _) = run_serving(&rt, &method, 4, 48, 64, None).expect("serve");
+        let kib = peak as f64 / 1024.0;
+        if matches!(method, Method::Fp16) {
+            fp16 = kib;
+        }
+        println!("{:<22} {:>14.2} {:>9.2}x", method.name(), kib, fp16 / kib);
+    }
+}

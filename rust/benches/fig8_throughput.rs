@@ -1,0 +1,39 @@
+//! Bench harness for paper Fig. 8: decode throughput vs batch size under
+//! the simulated HBM budget (OOM ceilings included).
+
+use kvmix::baselines::Method;
+use kvmix::config::QuantPlan;
+use kvmix::harness::tables::run_serving;
+use kvmix::kvcache::fp16_kv_bytes;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP fig8_throughput: artifacts not built");
+        return;
+    }
+    let rt = Runtime::load_with(&dir, false).expect("runtime");
+    let plan = QuantPlan::from_importance_file(&dir.join("importance.json"))
+        .unwrap_or_else(|_| QuantPlan::uniform(rt.model.n_layers, 2));
+
+    let prompt = 48;
+    let gen = 64;
+    let budget = 6 * fp16_kv_bytes(prompt + gen, rt.model.kv_dim(), rt.model.n_layers);
+    println!("# Fig 8 bench — tok/s by batch (budget {:.0} KiB of KV)", budget as f64 / 1024.0);
+    print!("{:<22}", "method");
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        print!(" {:>9}", format!("b={b}"));
+    }
+    println!();
+    for method in Method::comparison_set(&plan) {
+        print!("{:<22}", method.name());
+        for b in [1usize, 2, 4, 8, 16, 32] {
+            match run_serving(&rt, &method, b, prompt, gen, Some(budget)) {
+                Ok((_, thr)) => print!(" {:>9.1}", thr),
+                Err(_) => print!(" {:>9}", "OOM"),
+            }
+        }
+        println!();
+    }
+}

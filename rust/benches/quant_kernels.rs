@@ -1,0 +1,88 @@
+//! Microbenchmarks for the quantization hot path: pack/unpack at every
+//! bit width, group quantization, and fused vs unfused dequant·matvec —
+//! the paper's kernel-fusion claim (§CUDA Implementation) measured on the
+//! Rust analogs.
+
+use kvmix::quant::{fused, pack_stream, qmax_at, unpack_stream, FusedScratch, PackedBlock};
+use kvmix::util::bench::{bench, black_box};
+use kvmix::util::Rng;
+
+fn main() {
+    println!("# quant kernel microbenchmarks (4096-element blocks, group 32)");
+    let mut rng = Rng::new(1);
+    let n = 4096;
+    let data = rng.normal_vec(n);
+
+    for bits in [1u8, 2, 3, 4] {
+        let q: Vec<u32> = (0..n).map(|i| rng.below(qmax_at(bits, i) as usize + 1) as u32).collect();
+        let mut words = Vec::new();
+        pack_stream(&q, bits, &mut words);
+        let mut out = vec![0u32; n];
+
+        let s = bench(&format!("pack_stream/{bits}bit"), 60, || {
+            let mut w = Vec::new();
+            pack_stream(black_box(&q), bits, &mut w);
+            black_box(&w);
+        });
+        println!("{}  ({:.2} Gelem/s)", s.line(), s.throughput(n as f64) / 1e9);
+
+        let s = bench(&format!("unpack_stream/{bits}bit"), 60, || {
+            unpack_stream(black_box(&words), bits, n, &mut out);
+            black_box(&out);
+        });
+        println!("{}  ({:.2} Gelem/s)", s.line(), s.throughput(n as f64) / 1e9);
+
+        let s = bench(&format!("quantize_block/{bits}bit"), 60, || {
+            black_box(PackedBlock::quantize(black_box(&data), bits, 32));
+        });
+        println!("{}  ({:.2} Gelem/s)", s.line(), s.throughput(n as f64) / 1e9);
+    }
+
+    // fused vs unfused key scores (the paper's dequant+matvec fusion)
+    println!("\n# fused dequant·matvec vs dequantize-then-matvec (K block 64ch x 32tok)");
+    let kv_dim = 64;
+    let tokens = 32;
+    let kdata = rng.normal_vec(kv_dim * tokens);
+    let q32 = rng.normal_vec(32);
+    for bits in [2u8, 3, 4] {
+        let block = PackedBlock::quantize(&kdata, bits, tokens);
+        let mut scores = vec![0f32; tokens];
+        let mut scratch = FusedScratch::default();
+        let s_f = bench(&format!("key_scores_fused/{bits}bit"), 40, || {
+            scores.fill(0.0);
+            fused::key_scores_fused(black_box(&q32), &block, tokens, 0, &mut scratch, &mut scores);
+            black_box(&scores);
+        });
+        let s_u = bench(&format!("key_scores_unfused/{bits}bit"), 40, || {
+            scores.fill(0.0);
+            fused::unfused::key_scores(black_box(&q32), &block, tokens, 0, &mut scratch, &mut scores);
+            black_box(&scores);
+        });
+        println!("{}", s_f.line());
+        println!("{}", s_u.line());
+        println!("  fusion speedup: {:.2}x", s_u.mean / s_f.mean);
+    }
+
+    // value side
+    println!("\n# fused weighted-value (V block 32tok x 64ch)");
+    let vdata = rng.normal_vec(tokens * kv_dim);
+    let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+    for bits in [2u8, 4] {
+        let block = PackedBlock::quantize(&vdata, bits, 32);
+        let mut out = vec![0f32; 32];
+        let mut scratch = FusedScratch::default();
+        let s_f = bench(&format!("value_accum_fused/{bits}bit"), 40, || {
+            out.fill(0.0);
+            fused::value_accum_fused(black_box(&p), &block, kv_dim, 0, 32, &mut scratch, &mut out);
+            black_box(&out);
+        });
+        let s_u = bench(&format!("value_accum_unfused/{bits}bit"), 40, || {
+            out.fill(0.0);
+            fused::unfused::value_accum(black_box(&p), &block, kv_dim, 0, 32, &mut scratch, &mut out);
+            black_box(&out);
+        });
+        println!("{}", s_f.line());
+        println!("{}", s_u.line());
+        println!("  fusion speedup: {:.2}x", s_u.mean / s_f.mean);
+    }
+}

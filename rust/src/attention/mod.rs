@@ -1,0 +1,130 @@
+//! Attention kernels outside the quantized-cache path.
+//!
+//! Decode attention over the mixed cache lives in
+//! [`crate::kvcache::LayerKvCache::attend`]; this module provides the
+//! full-precision causal attention used for prefill (the prompt's
+//! self-attention is computed at full precision; the *cache* written from
+//! it is then quantized per policy, matching KIVI/KVQuant practice).
+
+/// Causal GQA attention over `t` tokens.
+///
+/// * `q` — `[t][n_heads*head_dim]` (RoPE'd)
+/// * `k`, `v` — `[t][n_kv*head_dim]` (RoPE'd keys)
+/// * returns `[t][n_heads*head_dim]`
+pub fn prefill_attention(q: &[f32], k: &[f32], v: &[f32], t: usize,
+                         n_heads: usize, n_kv: usize, head_dim: usize) -> Vec<f32> {
+    let qd = n_heads * head_dim;
+    let kd = n_kv * head_dim;
+    let rep = n_heads / n_kv;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut out = vec![0f32; t * qd];
+    let mut scores = vec![0f32; t];
+
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        for qi in 0..t {
+            let qv = &q[qi * qd + h * head_dim..qi * qd + (h + 1) * head_dim];
+            let n_ctx = qi + 1;
+            let row = &mut scores[..n_ctx];
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, s) in row.iter_mut().enumerate() {
+                let kv = &k[ki * kd + kvh * head_dim..ki * kd + (kvh + 1) * head_dim];
+                let mut acc = 0f32;
+                for d in 0..head_dim {
+                    acc += qv[d] * kv[d];
+                }
+                *s = acc * scale;
+                mx = mx.max(*s);
+            }
+            let mut sum = 0f32;
+            for s in row.iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            let inv = 1.0 / sum;
+            let o = &mut out[qi * qd + h * head_dim..qi * qd + (h + 1) * head_dim];
+            for (ki, s) in row.iter().enumerate() {
+                let p = s * inv;
+                let vv = &v[ki * kd + kvh * head_dim..ki * kd + (kvh + 1) * head_dim];
+                for d in 0..head_dim {
+                    o[d] += p * vv[d];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one_property() {
+        // with v = all-ones, output must be exactly ones (convex combination)
+        let t = 7;
+        let (h, kv, hd) = (2, 1, 8);
+        let mut rng = Rng::new(1);
+        let q = rng.normal_vec(t * h * hd);
+        let k = rng.normal_vec(t * kv * hd);
+        let v = vec![1f32; t * kv * hd];
+        let out = prefill_attention(&q, &k, &v, t, h, kv, hd);
+        for x in out {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causality() {
+        // output at position i must not depend on k/v after i
+        let t = 6;
+        let (h, kv, hd) = (2, 2, 8);
+        let mut rng = Rng::new(2);
+        let q = rng.normal_vec(t * h * hd);
+        let mut k = rng.normal_vec(t * kv * hd);
+        let mut v = rng.normal_vec(t * kv * hd);
+        let out1 = prefill_attention(&q, &k, &v, t, h, kv, hd);
+        // perturb the last token's k/v
+        for x in &mut k[(t - 1) * kv * hd..] {
+            *x += 5.0;
+        }
+        for x in &mut v[(t - 1) * kv * hd..] {
+            *x -= 3.0;
+        }
+        let out2 = prefill_attention(&q, &k, &v, t, h, kv, hd);
+        for i in 0..(t - 1) * h * hd {
+            assert!((out1[i] - out2[i]).abs() < 1e-6);
+        }
+        let last_diff: f32 = out1[(t - 1) * h * hd..].iter()
+            .zip(&out2[(t - 1) * h * hd..]).map(|(a, b)| (a - b).abs()).sum();
+        assert!(last_diff > 1e-3);
+    }
+
+    #[test]
+    fn matches_cache_attend_for_single_query() {
+        // last-position prefill attention == decode attend on an fp cache
+        use crate::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
+        let t = 12;
+        let (h, n_kv, hd) = (4, 2, 16);
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(t * h * hd);
+        let k = rng.normal_vec(t * n_kv * hd);
+        let v = rng.normal_vec(t * n_kv * hd);
+        let full = prefill_attention(&q, &k, &v, t, h, n_kv, hd);
+
+        let mut cache = LayerKvCache::new(LayerCacheCfg {
+            kv_dim: n_kv * hd, head_dim: hd, group: 32,
+            key: KeyRepr::Fp, value: ValueRepr::Fp,
+            k_window: WindowPolicy::All, v_window: WindowPolicy::All,
+            outlier_frac: 0.0,
+        });
+        cache.append(&k, &v, t);
+        let mut out = vec![0f32; h * hd];
+        let mut s = AttnScratch::default();
+        cache.attend(&q[(t - 1) * h * hd..], h, &mut out, &mut s);
+        for (a, b) in out.iter().zip(&full[(t - 1) * h * hd..]) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Comparator cache policies (paper Tables 2–3, Figs. 7–8), each a
+//! faithful reimplementation of the method's *cache policy* behind one
+//! constructor (their CUDA kernels are out of scope — DESIGN.md §3/§5):
+//!
+//! * **KIVI-2bit-r64** — K per-channel / V per-token 2-bit, fixed
+//!   full-precision residual of 64 tokens that never shrinks.
+//! * **KVQuant-3bit-1%** — K per-channel / V per-token 3-bit with 1% of
+//!   elements kept full precision as outliers (our K is post-RoPE).
+//! * **QJL-3bit** — K as 1-bit sign-JL sketch (zero scale/zero-point
+//!   constants) + per-token 3-bit V.
+//! * **Atom-4bit** — K and V per-token 4-bit, no residual (Atom also
+//!   quantizes weights/activations; only its KV policy is modeled here).
+//! * **uniform k-T,v-T** — Table 3's symmetric per-token rows.
+//! * **fp16** — no quantization (memory modeled at 2 B/element).
+
+use crate::config::{ModelConfig, QuantPlan};
+use crate::kvcache::{KeyRepr, LayerCacheCfg, SeqKvCache, ValueRepr, WindowPolicy};
+
+/// A named KV-cache policy.
+#[derive(Debug, Clone)]
+pub enum Method {
+    Fp16,
+    Kivi { bits: u8, residual: usize },
+    KvQuant { bits: u8, outlier_frac: f64 },
+    Qjl { jl_dim_mult: usize, v_bits: u8 },
+    Atom { bits: u8 },
+    /// Table 3's symmetric per-token quantization for both K and V.
+    UniformPerToken { bits: u8 },
+    /// KVmix with an explicit plan (profiled, random, uniform, w/oRPC...).
+    Kvmix(QuantPlan),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Fp16 => "FP16".into(),
+            Method::Kivi { bits, residual } => format!("KIVI-{bits}bit-r{residual}"),
+            Method::KvQuant { bits, outlier_frac } =>
+                format!("KVQuant-{bits}bit-{:.0}%", outlier_frac * 100.0),
+            Method::Qjl { v_bits, .. } => format!("QJL-{v_bits}bit"),
+            Method::Atom { bits } => format!("Atom-{bits}bit"),
+            Method::UniformPerToken { bits } => format!("{bits}bit (k-T, v-T)"),
+            Method::Kvmix(p) => p.name.clone(),
+        }
+    }
+
+    /// Build a fresh per-sequence cache implementing this policy.
+    pub fn make_cache(&self, m: &ModelConfig) -> SeqKvCache {
+        match self {
+            Method::Fp16 => SeqKvCache::new(m, &QuantPlan::fp16(m.n_layers)),
+            Method::Kvmix(plan) => SeqKvCache::new(m, plan),
+            Method::Kivi { bits, residual } => {
+                let plan = QuantPlan::uniform(m.n_layers, *bits);
+                SeqKvCache::with_policy(m, &plan, 0.0, Some(*residual))
+            }
+            Method::KvQuant { bits, outlier_frac } => {
+                let plan = QuantPlan::uniform(m.n_layers, *bits).without_rpc();
+                SeqKvCache::with_policy(m, &plan, *outlier_frac, None)
+            }
+            Method::Qjl { jl_dim_mult, v_bits } => {
+                let cfgs = (0..m.n_layers).map(|_| LayerCacheCfg {
+                    kv_dim: m.kv_dim(),
+                    head_dim: m.head_dim,
+                    group: m.group,
+                    key: KeyRepr::SignJl { jl_dim: jl_dim_mult * m.head_dim },
+                    value: ValueRepr::PerToken { bits: *v_bits },
+                    k_window: WindowPolicy::None,
+                    v_window: WindowPolicy::None,
+                    outlier_frac: 0.0,
+                }).collect();
+                SeqKvCache::from_cfgs(cfgs)
+            }
+            Method::Atom { bits } | Method::UniformPerToken { bits } => {
+                let cfgs = (0..m.n_layers).map(|_| LayerCacheCfg {
+                    kv_dim: m.kv_dim(),
+                    head_dim: m.head_dim,
+                    group: m.group,
+                    key: KeyRepr::PerToken { bits: *bits },
+                    value: ValueRepr::PerToken { bits: *bits },
+                    k_window: WindowPolicy::None,
+                    v_window: WindowPolicy::None,
+                    outlier_frac: 0.0,
+                }).collect();
+                SeqKvCache::from_cfgs(cfgs)
+            }
+        }
+    }
+
+    /// The paper's standard comparison set (Tables 2–3, Figs. 7–8).
+    pub fn comparison_set(kvmix_plan: &QuantPlan) -> Vec<Method> {
+        vec![
+            Method::Fp16,
+            Method::Kivi { bits: 2, residual: 64 },
+            Method::Qjl { jl_dim_mult: 4, v_bits: 3 },
+            Method::KvQuant { bits: 3, outlier_frac: 0.01 },
+            Method::Atom { bits: 4 },
+            Method::Kvmix(kvmix_plan.clone()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn all_methods_build_and_append() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2);
+        let mut rng = Rng::new(1);
+        for method in Method::comparison_set(&plan) {
+            let mut cache = method.make_cache(&m);
+            assert_eq!(cache.layers.len(), m.n_layers);
+            let kv = m.kv_dim();
+            for l in &mut cache.layers {
+                l.append(&rng.normal_vec(kv * 64), &rng.normal_vec(kv * 64), 64);
+            }
+            assert_eq!(cache.len(), 64, "{}", method.name());
+            assert!(cache.modeled_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn memory_ordering_fp16_worst() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2);
+        let mut sizes = Vec::new();
+        for method in [Method::Fp16, Method::Kivi { bits: 2, residual: 64 },
+                       Method::Kvmix(plan)] {
+            let mut cache = method.make_cache(&m);
+            let kv = m.kv_dim();
+            let mut rng = Rng::new(2);
+            for l in &mut cache.layers {
+                l.append(&rng.normal_vec(kv * 256), &rng.normal_vec(kv * 256), 256);
+            }
+            sizes.push((method.name(), cache.modeled_bytes()));
+        }
+        assert!(sizes[0].1 > sizes[1].1, "{sizes:?}"); // fp16 > kivi
+        assert!(sizes[1].1 > sizes[2].1, "{sizes:?}"); // kivi residual > kvmix rpc
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Method::Kivi { bits: 2, residual: 64 }.name(), "KIVI-2bit-r64");
+        assert_eq!(Method::KvQuant { bits: 3, outlier_frac: 0.01 }.name(), "KVQuant-3bit-1%");
+        assert_eq!(Method::UniformPerToken { bits: 2 }.name(), "2bit (k-T, v-T)");
+    }
+}

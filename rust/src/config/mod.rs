@@ -1,0 +1,212 @@
+//! Model / quantization / serving configuration.
+//!
+//! `ModelConfig` mirrors python/compile/model.py::ModelConfig and is read
+//! from `artifacts/manifest.json`.  `QuantPlan` is the paper's per-layer
+//! bit allocation + RPC ratios — produced by the profiler
+//! ([`crate::profiler`]) or by the named preset constructors used in the
+//! ablations (uniform 2-bit, random high-bit selection, w/oRPC, ...).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{parse_file, Json};
+use crate::util::Rng;
+
+/// Architecture of the reproduction model (must match the artifacts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    /// KV quantization group size (paper: 32).
+    pub group: usize,
+}
+
+impl ModelConfig {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelConfig {
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            group: j.get("group")?.as_usize()?,
+        })
+    }
+
+    /// Tiny config for unit tests (no artifacts needed).
+    pub fn test_small() -> Self {
+        ModelConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2,
+                      n_kv_heads: 1, head_dim: 16, d_ff: 64, group: 32 }
+    }
+}
+
+/// Per-layer K/V bit widths + RPC (Recent Pivotal Context) ratios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantPlan {
+    pub name: String,
+    pub k_bits: Vec<u8>,
+    pub v_bits: Vec<u8>,
+    /// Fraction of the current context kept full-precision, per layer.
+    pub k_rpc: Vec<f64>,
+    pub v_rpc: Vec<f64>,
+}
+
+impl QuantPlan {
+    pub fn n_layers(&self) -> usize {
+        self.k_bits.len()
+    }
+
+    pub fn avg_k_bits(&self) -> f64 {
+        self.k_bits.iter().map(|&b| b as f64).sum::<f64>() / self.k_bits.len() as f64
+    }
+
+    pub fn avg_v_bits(&self) -> f64 {
+        self.v_bits.iter().map(|&b| b as f64).sum::<f64>() / self.v_bits.len() as f64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.k_bits.len();
+        if self.v_bits.len() != n || self.k_rpc.len() != n || self.v_rpc.len() != n {
+            bail!("inconsistent plan lengths");
+        }
+        for &b in self.k_bits.iter().chain(self.v_bits.iter()) {
+            if !matches!(b, 1 | 2 | 3 | 4 | 16) {
+                bail!("unsupported bit width {b}");
+            }
+        }
+        for &r in self.k_rpc.iter().chain(self.v_rpc.iter()) {
+            if !(0.0..=1.0).contains(&r) {
+                bail!("rpc ratio {r} out of range");
+            }
+        }
+        Ok(())
+    }
+
+    /// Load the profiler's plan from artifacts/importance.json.
+    pub fn from_importance_file(path: &Path) -> Result<Self> {
+        let j = parse_file(path)?;
+        let p = j.get("plan")?;
+        Ok(QuantPlan {
+            name: p.get("name")?.as_str()?.to_string(),
+            k_bits: p.get("k_bits")?.usize_vec()?.iter().map(|&b| b as u8).collect(),
+            v_bits: p.get("v_bits")?.usize_vec()?.iter().map(|&b| b as u8).collect(),
+            k_rpc: p.get("k_rpc")?.f64_vec()?,
+            v_rpc: p.get("v_rpc")?.f64_vec()?,
+        })
+    }
+
+    // ------------- presets used by the paper's ablations -------------
+
+    /// FP16 baseline: 16 "bits", no quantization at all.
+    pub fn fp16(n_layers: usize) -> Self {
+        QuantPlan { name: "fp16".into(),
+                    k_bits: vec![16; n_layers], v_bits: vec![16; n_layers],
+                    k_rpc: vec![1.0; n_layers], v_rpc: vec![1.0; n_layers] }
+    }
+
+    /// Uniform asymmetric quantization at `bits` with the paper's default
+    /// RPC ratio for that bit width (10% for 2-bit, 20% for >=3).
+    pub fn uniform(n_layers: usize, bits: u8) -> Self {
+        let rpc = if bits >= 3 { 0.2 } else { 0.1 };
+        QuantPlan { name: format!("kvmix-{bits}bit"),
+                    k_bits: vec![bits; n_layers], v_bits: vec![bits; n_layers],
+                    k_rpc: vec![rpc; n_layers], v_rpc: vec![rpc; n_layers] }
+    }
+
+    /// Table 1's `random-k…v…`: same bit budget as the profiled plan but
+    /// the high-bit layers are chosen uniformly at random.
+    pub fn random_highbit(n_layers: usize, n_high: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let kh = rng.sample_distinct(n_layers, n_high);
+        let vh = rng.sample_distinct(n_layers, n_high);
+        let mut plan = QuantPlan {
+            name: "random-mixed".into(),
+            k_bits: vec![2; n_layers], v_bits: vec![2; n_layers],
+            k_rpc: vec![0.1; n_layers], v_rpc: vec![0.1; n_layers],
+        };
+        for &i in &kh {
+            plan.k_bits[i] = 3;
+            plan.k_rpc[i] = 0.2;
+        }
+        for &i in &vh {
+            plan.v_bits[i] = 4;
+            plan.v_rpc[i] = 0.2;
+        }
+        plan.name = format!("random-k{:.2}v{:.2}", plan.avg_k_bits(), plan.avg_v_bits());
+        plan
+    }
+
+    /// The same plan with RPC disabled (Table 1's `…w/oRPC`).
+    pub fn without_rpc(&self) -> Self {
+        QuantPlan {
+            name: format!("{}w/oRPC", self.name),
+            k_bits: self.k_bits.clone(),
+            v_bits: self.v_bits.clone(),
+            k_rpc: vec![0.0; self.k_bits.len()],
+            v_rpc: vec![0.0; self.v_bits.len()],
+        }
+    }
+
+    /// The same plan with every RPC ratio overridden (Table 4 / Fig 11).
+    pub fn with_rpc(&self, rpc_high: f64, rpc_low: f64) -> Self {
+        let mut p = self.clone();
+        for i in 0..p.k_bits.len() {
+            p.k_rpc[i] = if p.k_bits[i] > 2 { rpc_high } else { rpc_low };
+            p.v_rpc[i] = if p.v_bits[i] > 2 { rpc_high } else { rpc_low };
+        }
+        p.name = format!("{}-rpc{:.0}%/{:.0}%", self.name, rpc_high * 100.0, rpc_low * 100.0);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        for plan in [QuantPlan::fp16(8), QuantPlan::uniform(8, 2),
+                     QuantPlan::uniform(8, 4), QuantPlan::random_highbit(8, 2, 1)] {
+            plan.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn random_highbit_budget() {
+        let p = QuantPlan::random_highbit(8, 2, 42);
+        assert_eq!(p.k_bits.iter().filter(|&&b| b == 3).count(), 2);
+        assert_eq!(p.v_bits.iter().filter(|&&b| b == 4).count(), 2);
+        assert!((p.avg_k_bits() - 2.25).abs() < 1e-9);
+        assert!((p.avg_v_bits() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn without_rpc_zeroes() {
+        let p = QuantPlan::uniform(4, 2).without_rpc();
+        assert!(p.k_rpc.iter().all(|&r| r == 0.0));
+        assert!(p.name.ends_with("w/oRPC"));
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        let mut p = QuantPlan::uniform(2, 2);
+        p.k_bits[0] = 5;
+        assert!(p.validate().is_err());
+    }
+}

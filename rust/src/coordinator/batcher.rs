@@ -1,0 +1,94 @@
+//! Continuous batcher: admission control for the decode batch.
+//!
+//! Waiting requests join the running batch whenever (a) a batch slot is
+//! free (`max_batch`, bounded by the largest compiled bucket) and (b) the
+//! memory budget admits the request's *projected* KV footprint — prompt
+//! plus max_new_tokens at the policy's bytes/token rate.  This is the
+//! vLLM-style continuous batching loop, with the projection made cheap by
+//! the cache's modeled bytes/token.
+
+use std::collections::VecDeque;
+
+use crate::kvcache::MemoryBudget;
+
+use super::request::Request;
+
+pub struct Batcher {
+    pub queue: VecDeque<Request>,
+    pub max_batch: usize,
+    /// modeled KV bytes per token per sequence for the active policy
+    pub bytes_per_token: f64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, bytes_per_token: f64) -> Self {
+        Batcher { queue: VecDeque::new(), max_batch, bytes_per_token }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Projected KV bytes of a request at completion.
+    pub fn projected_bytes(&self, req: &Request) -> usize {
+        ((req.prompt.len() + req.max_new_tokens) as f64 * self.bytes_per_token).ceil() as usize
+    }
+
+    /// Pop the next request if a slot is free and the budget admits it.
+    pub fn admit(&mut self, active: usize, budget: &MemoryBudget) -> Option<Request> {
+        if active >= self.max_batch {
+            return None;
+        }
+        let req = self.queue.front()?;
+        if self.projected_bytes(req) > budget.free() {
+            return None;
+        }
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Sampler;
+
+    fn req(id: u64, prompt: usize, new: usize) -> Request {
+        Request { id, prompt: vec![1; prompt], max_new_tokens: new,
+                  sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+    }
+
+    #[test]
+    fn respects_batch_cap() {
+        let mut b = Batcher::new(2, 10.0);
+        b.submit(req(1, 4, 4));
+        let budget = MemoryBudget::new(1_000_000, 0).unwrap();
+        assert!(b.admit(2, &budget).is_none());
+        assert!(b.admit(1, &budget).is_some());
+    }
+
+    #[test]
+    fn respects_memory_budget() {
+        let mut b = Batcher::new(8, 100.0);
+        b.submit(req(1, 10, 10));       // projected 2000 bytes
+        let mut budget = MemoryBudget::new(2_500, 0).unwrap();
+        budget.alloc(1_000).unwrap();   // only 1500 free
+        assert!(b.admit(0, &budget).is_none());
+        budget.release(1_000);
+        assert!(b.admit(0, &budget).is_some());
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new(8, 1.0);
+        b.submit(req(1, 1, 1));
+        b.submit(req(2, 1, 1));
+        let budget = MemoryBudget::new(1_000_000, 0).unwrap();
+        assert_eq!(b.admit(0, &budget).unwrap().id, 1);
+        assert_eq!(b.admit(0, &budget).unwrap().id, 2);
+    }
+}

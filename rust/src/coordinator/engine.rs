@@ -1,0 +1,207 @@
+//! The serving engine: continuous-batching loop over the PJRT-backed
+//! forward pass and the mixed-precision caches.
+//!
+//! One `step()` = admit waiting requests (prefill them) + one batched
+//! decode step for every active request + retire completions.  Memory is
+//! charged against the [`MemoryBudget`] after each step; a simulated OOM
+//! evicts the *youngest* request back to the queue (preempt-restart, the
+//! usual vLLM recompute policy).
+
+use anyhow::Result;
+
+use crate::baselines::Method;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ActiveRequest, Completion, Request};
+use crate::kvcache::MemoryBudget;
+use crate::model::{DecodeScratch, Forward};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+pub struct EngineCfg {
+    pub method: Method,
+    pub max_batch: usize,
+    /// simulated HBM budget for KV (bytes); None = unlimited
+    pub kv_budget: Option<usize>,
+}
+
+pub struct Engine<'a> {
+    pub rt: &'a Runtime,
+    cfg: EngineCfg,
+    pub batcher: Batcher,
+    pub active: Vec<ActiveRequest>,
+    pub budget: MemoryBudget,
+    pub metrics: Metrics,
+    pub completions: Vec<Completion>,
+    scratch: DecodeScratch,
+    rng: Rng,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(rt: &'a Runtime, cfg: EngineCfg) -> Result<Self> {
+        let max_bucket = rt.buckets.iter().copied().max().unwrap_or(1);
+        let max_batch = cfg.max_batch.min(max_bucket);
+        // bytes/token estimate for admission: steady-state modeled bytes of
+        // the policy at a reference length
+        let bpt = estimate_bytes_per_token(rt, &cfg.method);
+        let capacity = cfg.kv_budget.unwrap_or(usize::MAX / 2);
+        Ok(Engine {
+            rt,
+            batcher: Batcher::new(max_batch, bpt),
+            cfg: EngineCfg { max_batch, ..cfg },
+            active: Vec::new(),
+            budget: MemoryBudget::new(capacity, 0)?,
+            metrics: Metrics::default(),
+            completions: Vec::new(),
+            scratch: DecodeScratch::default(),
+            rng: Rng::new(0xE161),
+        })
+    }
+
+    pub fn method_name(&self) -> String {
+        self.cfg.method.name()
+    }
+
+    pub fn submit(&mut self, mut req: Request) {
+        req.submitted_ns = self.metrics.now_ns();
+        self.batcher.submit(req);
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.batcher.waiting() == 0
+    }
+
+    /// One scheduler iteration; returns completions retired this step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let t0 = std::time::Instant::now();
+        let fwd = Forward::new(self.rt);
+
+        // ---- admission + prefill ----
+        let mut admitted_any = false;
+        while let Some(req) = self.batcher.admit(self.active.len(), &self.budget) {
+            admitted_any = true;
+            let mut cache = self.cfg.method.make_cache(&self.rt.model);
+            let logits = fwd.prefill(&req.prompt, &mut cache)?;
+            self.metrics.prefill_tokens += req.prompt.len();
+            let vocab = self.rt.model.vocab;
+            let last = &logits[(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
+            let first_tok = req.sampler.sample(last, &mut self.rng) as i32;
+            let now = self.metrics.now_ns();
+            let ar = ActiveRequest {
+                req, cache, generated: vec![first_tok], next_input: first_tok,
+                prefilled_ns: now, first_token_ns: Some(now),
+            };
+            self.metrics.decode_tokens += 1;
+            self.metrics.ttft_ms.record((now - ar.req.submitted_ns) as f64 / 1e6);
+            self.active.push(ar);
+            // post-prefill memory charge (admission already projected it;
+            // the decode-step OOM loop below handles any shortfall)
+            let _ = self.charge_memory()?;
+        }
+
+        // stall detection: nothing running and the head request can never
+        // be admitted -> surface the simulated OOM instead of spinning
+        if !admitted_any && self.active.is_empty() && self.batcher.waiting() > 0 {
+            self.metrics.oom_events += 1;
+            let head = self.batcher.queue.front().unwrap();
+            anyhow::bail!(
+                "request {} cannot be admitted: projected {} bytes > {} free (capacity {})",
+                head.id, self.batcher.projected_bytes(head), self.budget.free(),
+                self.budget.capacity);
+        }
+
+        // ---- one batched decode step ----
+        if !self.active.is_empty() {
+            let inputs: Vec<i32> = self.active.iter().map(|a| a.next_input).collect();
+            let mut caches: Vec<&mut crate::kvcache::SeqKvCache> =
+                self.active.iter_mut().map(|a| &mut a.cache).collect();
+            let logits = fwd.decode_step(&inputs, &mut caches, &mut self.scratch)?;
+            let vocab = self.rt.model.vocab;
+            for (b, ar) in self.active.iter_mut().enumerate() {
+                let row = &logits[b * vocab..(b + 1) * vocab];
+                let tok = ar.req.sampler.sample(row, &mut self.rng) as i32;
+                ar.generated.push(tok);
+                ar.next_input = tok;
+            }
+            self.metrics.decode_tokens += self.active.len();
+
+            // memory charge; simulated OOM evicts the youngest request
+            while self.charge_memory()?.is_err() {
+                self.metrics.oom_events += 1;
+                if self.active.len() <= 1 {
+                    break; // single request over budget: let it run (degraded)
+                }
+                let mut victim = self.active.pop().unwrap();
+                victim.generated.clear();
+                self.batcher.queue.push_front(victim.req);
+            }
+        }
+
+        // ---- retire ----
+        let now = self.metrics.now_ns();
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].is_done() {
+                let mut ar = self.active.remove(i);
+                done.push(self.retire(ar_into_completion(&mut ar, now)));
+            } else {
+                i += 1;
+            }
+        }
+        if !done.is_empty() {
+            // release retired caches' memory so waiting requests can admit
+            let _ = self.charge_memory()?;
+        }
+        self.metrics.step_us.record(t0.elapsed().as_micros() as f64);
+        Ok(done)
+    }
+
+    /// Run until all submitted requests complete; returns all completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    fn charge_memory(&mut self) -> Result<std::result::Result<(), ()>> {
+        let kv: usize = self.active.iter().map(|a| a.cache.modeled_bytes()).sum();
+        self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv);
+        Ok(self.budget.set_kv(kv).map_err(|_| ()))
+    }
+
+    fn retire(&mut self, c: Completion) -> Completion {
+        self.metrics.completions += 1;
+        self.metrics.total_ms.record(c.total_ms());
+        self.completions.push(c.clone());
+        c
+    }
+}
+
+fn ar_into_completion(ar: &mut ActiveRequest, now: u64) -> Completion {
+    Completion {
+        id: ar.req.id,
+        prompt_len: ar.req.prompt.len(),
+        tokens: std::mem::take(&mut ar.generated),
+        submitted_ns: ar.req.submitted_ns,
+        first_token_ns: ar.first_token_ns.unwrap_or(now),
+        finished_ns: now,
+    }
+}
+
+/// Modeled steady-state KV bytes/token for a policy (reference length 256).
+pub fn estimate_bytes_per_token(rt: &Runtime, method: &Method) -> f64 {
+    let m = &rt.model;
+    let mut cache = method.make_cache(m);
+    let n = 256;
+    let kv = m.kv_dim();
+    let mut rng = Rng::new(7);
+    let k = rng.normal_vec(n * kv);
+    let v = rng.normal_vec(n * kv);
+    for l in &mut cache.layers {
+        l.append(&k, &v, n);
+    }
+    cache.modeled_bytes() as f64 / n as f64
+}

@@ -1,0 +1,109 @@
+//! Serving metrics: counters + latency histogram + throughput window.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    started: Instant,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub completions: usize,
+    pub oom_events: usize,
+    pub ttft_ms: Histogram,
+    pub total_ms: Histogram,
+    pub step_us: Histogram,
+    pub peak_kv_bytes: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { started: Instant::now(), prefill_tokens: 0, decode_tokens: 0,
+                  completions: 0, oom_events: 0, ttft_ms: Histogram::default(),
+                  total_ms: Histogram::default(), step_us: Histogram::default(),
+                  peak_kv_bytes: 0 }
+    }
+}
+
+impl Metrics {
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// decode tokens per second since start
+    pub fn throughput(&self) -> f64 {
+        self.decode_tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.started.elapsed().as_nanos() as u64
+    }
+
+    pub fn report(&mut self) -> String {
+        format!(
+            "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
+             ttft p50 {:.1} ms p95 {:.1} ms | e2e p50 {:.1} ms | step p50 {:.0} µs | \
+             peak kv {:.2} MiB | oom {}",
+            self.prefill_tokens, self.decode_tokens, self.completions,
+            self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
+            self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
+            self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events)
+    }
+}
+
+/// Simple exact histogram (stores samples; fine at serving-bench scale).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() - 1) as f64 * q).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert!((h.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator: request router, continuous batcher,
+//! prefill/decode scheduling, engine loop, metrics, TCP server.
+//!
+//! The paper is a serving-side contribution, so the coordinator follows
+//! the vLLM-router shape: requests enter a FIFO, the batcher admits them
+//! into the running batch under a (simulated-HBM) memory budget computed
+//! from the cache policy's modeled bytes/token, and the engine interleaves
+//! prefill with one batched decode step per iteration, preempting the
+//! youngest request on simulated OOM.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use engine::{estimate_bytes_per_token, Engine, EngineCfg};
+pub use metrics::{Histogram, Metrics};
+pub use request::{ActiveRequest, Completion, Request, RequestId};

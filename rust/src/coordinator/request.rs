@@ -1,0 +1,63 @@
+//! Request types flowing through the serving coordinator.
+
+use crate::kvcache::SeqKvCache;
+use crate::model::Sampler;
+
+pub type RequestId = u64;
+
+/// An inference request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+    /// stop decoding at this token (None = run to max_new_tokens)
+    pub stop_token: Option<i32>,
+    /// submission timestamp (engine clock, ns)
+    pub submitted_ns: u64,
+}
+
+/// A request admitted into the running batch.
+pub struct ActiveRequest {
+    pub req: Request,
+    pub cache: SeqKvCache,
+    pub generated: Vec<i32>,
+    /// next input token for the decode step
+    pub next_input: i32,
+    pub prefilled_ns: u64,
+    pub first_token_ns: Option<u64>,
+}
+
+impl ActiveRequest {
+    pub fn is_done(&self) -> bool {
+        if self.generated.len() >= self.req.max_new_tokens {
+            return true;
+        }
+        if let (Some(stop), Some(&last)) = (self.req.stop_token, self.generated.last()) {
+            return last == stop;
+        }
+        false
+    }
+}
+
+/// A finished request with its generation and timing.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub submitted_ns: u64,
+    pub first_token_ns: u64,
+    pub finished_ns: u64,
+}
+
+impl Completion {
+    pub fn ttft_ms(&self) -> f64 {
+        (self.first_token_ns - self.submitted_ns) as f64 / 1e6
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        (self.finished_ns - self.submitted_ns) as f64 / 1e6
+    }
+}

@@ -1,0 +1,162 @@
+//! Line-protocol TCP server (std::net — tokio is unavailable offline).
+//!
+//! Protocol (one request per line):
+//!     GEN <max_new_tokens> <comma-separated prompt token ids>\n
+//! Response:
+//!     OK <comma-separated generated ids>\n   |   ERR <message>\n
+//!
+//! A client thread parses requests into the shared queue; the engine
+//! thread runs the continuous-batching loop and routes completions back
+//! over per-request channels.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::{Engine, EngineCfg};
+use crate::coordinator::request::{Completion, Request};
+use crate::model::Sampler;
+use crate::runtime::Runtime;
+
+enum Msg {
+    New(Request, Sender<Completion>),
+    Shutdown,
+}
+
+/// Serve until `max_requests` have completed (None = forever).
+pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
+             max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("kvmix serving on {addr} (policy {})", cfg.method.name());
+    let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+    let next_id = Arc::new(Mutex::new(0u64));
+
+    // acceptor thread
+    let tx_accept = tx.clone();
+    let accept_handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx_accept.clone();
+            let ids = next_id.clone();
+            std::thread::spawn(move || {
+                let _ = handle_client(stream, tx, ids);
+            });
+        }
+    });
+
+    // engine loop (current thread — PJRT client is not Sync-shared here)
+    let mut engine = Engine::new(rt, cfg)?;
+    let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
+    let mut served = 0usize;
+    loop {
+        // drain incoming
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::New(req, done_tx) => {
+                    pending.insert(req.id, done_tx);
+                    engine.submit(req);
+                }
+                Msg::Shutdown => return Ok(()),
+            }
+        }
+        if engine.idle() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            // nothing to do; check for exit condition
+            if let Some(max) = max_requests {
+                if served >= max {
+                    drop(accept_handle);
+                    println!("{}", engine.metrics.report());
+                    return Ok(());
+                }
+            }
+            continue;
+        }
+        for c in engine.step()? {
+            if let Some(done_tx) = pending.remove(&c.id) {
+                let _ = done_tx.send(c);
+            }
+            served += 1;
+        }
+    }
+}
+
+fn handle_client(stream: TcpStream, tx: Sender<Msg>,
+                 ids: Arc<Mutex<u64>>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // disconnected
+        }
+        match parse_gen_line(line.trim()) {
+            Err(e) => {
+                writeln!(out, "ERR {e}")?;
+            }
+            Ok((max_new, prompt)) => {
+                let id = {
+                    let mut g = ids.lock().unwrap();
+                    *g += 1;
+                    *g
+                };
+                let (done_tx, done_rx) = channel();
+                let req = Request { id, prompt, max_new_tokens: max_new,
+                                    sampler: Sampler::Greedy, stop_token: None,
+                                    submitted_ns: 0 };
+                tx.send(Msg::New(req, done_tx)).map_err(|_| anyhow!("engine gone"))?;
+                match done_rx.recv() {
+                    Ok(c) => {
+                        let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
+                        writeln!(out, "OK {}", toks.join(","))?;
+                    }
+                    Err(_) => writeln!(out, "ERR engine dropped request from {peer}")?,
+                }
+            }
+        }
+    }
+}
+
+/// Parse "GEN <n> <t0,t1,...>".
+pub fn parse_gen_line(line: &str) -> Result<(usize, Vec<i32>)> {
+    let mut parts = line.splitn(3, ' ');
+    let cmd = parts.next().unwrap_or("");
+    if cmd != "GEN" {
+        return Err(anyhow!("unknown command {cmd:?}"));
+    }
+    let n: usize = parts.next().ok_or_else(|| anyhow!("missing max_new_tokens"))?.parse()?;
+    let toks = parts.next().ok_or_else(|| anyhow!("missing prompt"))?;
+    let prompt: Vec<i32> = toks.split(',')
+        .map(|s| s.trim().parse::<i32>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow!("bad token list: {e}"))?;
+    if prompt.is_empty() {
+        return Err(anyhow!("empty prompt"));
+    }
+    Ok((n, prompt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_line() {
+        let (n, p) = parse_gen_line("GEN 8 1,5,9").unwrap();
+        assert_eq!(n, 8);
+        assert_eq!(p, vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_gen_line("NOPE 1 2").is_err());
+        assert!(parse_gen_line("GEN x 1").is_err());
+        assert!(parse_gen_line("GEN 5").is_err());
+        assert!(parse_gen_line("GEN 5 1,a").is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Task evaluation harness: teacher-forced scoring of a model + cache
+//! policy on the synthetic suites.
+//!
+//! Every scored prediction is produced by a *decode step over the
+//! quantized cache* (the prompt prefix before `prefill_len` is prefilled
+//! at full precision and excluded from scoring), so the metrics expose
+//! exactly the cache-quantization error the paper's tables measure.
+
+use anyhow::Result;
+
+use crate::baselines::Method;
+use crate::harness::workload::{self, Task};
+use crate::kvcache::SeqKvCache;
+use crate::model::sampler::{argmax, log_prob};
+use crate::model::{DecodeScratch, Forward};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalResult {
+    pub nll_sum: f64,
+    pub weight: f64,
+    pub correct: f64,
+    pub n_predictions: usize,
+    /// total KV bytes (modeled) at end of eval, summed over sequences
+    pub kv_bytes: usize,
+}
+
+impl EvalResult {
+    pub fn ppl(&self) -> f64 {
+        (self.nll_sum / self.weight.max(1e-9)).exp()
+    }
+
+    pub fn acc(&self) -> f64 {
+        self.correct / self.weight.max(1e-9)
+    }
+
+    /// Paper-style percentage score (accuracy * 100).
+    pub fn score(&self) -> f64 {
+        self.acc() * 100.0
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalCfg {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    pub prefill_len: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// recall-task retrieval distance override (None = random)
+    pub query_offset: Option<usize>,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg { n_seqs: 16, seq_len: 160, prefill_len: 32, batch: 16,
+                  seed: 1234, query_offset: None }
+    }
+}
+
+/// Evaluate `method` on `task`; teacher-forced, batched decode.
+pub fn evaluate(rt: &Runtime, method: &Method, task: Task, cfg: &EvalCfg)
+                -> Result<EvalResult> {
+    let mut rng = Rng::new(cfg.seed ^ (task.name().len() as u64) << 7);
+    let seqs: Vec<(Vec<i32>, Vec<f32>)> = (0..cfg.n_seqs).map(|_| match task {
+        Task::Recall => workload::gen_recall(&mut rng, cfg.seq_len, cfg.query_offset, 6),
+        t => workload::generate(t, &mut rng, cfg.seq_len),
+    }).collect();
+    evaluate_seqs(rt, method, &seqs, cfg)
+}
+
+pub fn evaluate_seqs(rt: &Runtime, method: &Method,
+                     seqs: &[(Vec<i32>, Vec<f32>)], cfg: &EvalCfg)
+                     -> Result<EvalResult> {
+    let fwd = Forward::new(rt);
+    let vocab = rt.model.vocab;
+    let mut result = EvalResult::default();
+    let mut scratch = DecodeScratch::default();
+
+    for chunk in seqs.chunks(cfg.batch) {
+        // per-sequence prefill of the fixed prefix
+        let mut caches: Vec<SeqKvCache> = Vec::with_capacity(chunk.len());
+        for (toks, _) in chunk {
+            let mut cache = method.make_cache(&rt.model);
+            fwd.prefill(&toks[..cfg.prefill_len], &mut cache)?;
+            caches.push(cache);
+        }
+        // teacher-forced batched decode over the rest
+        for p in cfg.prefill_len..cfg.seq_len - 1 {
+            let inputs: Vec<i32> = chunk.iter().map(|(t, _)| t[p]).collect();
+            let mut refs: Vec<&mut SeqKvCache> = caches.iter_mut().collect();
+            let logits = fwd.decode_step(&inputs, &mut refs, &mut scratch)?;
+            for (b, (toks, mask)) in chunk.iter().enumerate() {
+                let w = mask[p] as f64;
+                if w > 0.0 {
+                    let row = &logits[b * vocab..(b + 1) * vocab];
+                    let target = toks[p + 1] as usize;
+                    result.nll_sum += w * -log_prob(row, target);
+                    result.correct += w * (argmax(row) == target) as u8 as f64;
+                    result.weight += w;
+                    result.n_predictions += 1;
+                }
+            }
+        }
+        result.kv_bytes += caches.iter().map(|c| c.modeled_bytes()).sum::<usize>();
+    }
+    Ok(result)
+}
+
+/// Average score across the three suites (the tables' "Average" column).
+pub fn evaluate_all_tasks(rt: &Runtime, method: &Method, cfg: &EvalCfg)
+                          -> Result<Vec<(Task, EvalResult)>> {
+    Task::all().iter().map(|&t| Ok((t, evaluate(rt, method, t, cfg)?))).collect()
+}

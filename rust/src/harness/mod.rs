@@ -1,0 +1,11 @@
+//! Experiment harness: synthetic workloads (mirroring the training
+//! corpus), teacher-forced evaluation, and the per-table/figure
+//! reproduction drivers (DESIGN.md §6).
+
+pub mod eval;
+pub mod tables;
+pub mod workload;
+
+pub use eval::{evaluate, evaluate_all_tasks, EvalCfg, EvalResult};
+pub use tables::{ReproCfg};
+pub use workload::Task;

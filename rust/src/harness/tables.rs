@@ -1,0 +1,462 @@
+//! Reproduction harness for every table and figure in the paper's
+//! evaluation (see DESIGN.md §6 for the experiment index).  Each function
+//! prints the same rows/series the paper reports, measured on the
+//! reproduction stack.  Invoked via `kvmix repro <id>`.
+
+use anyhow::Result;
+
+use crate::baselines::Method;
+use crate::config::QuantPlan;
+use crate::coordinator::{Engine, EngineCfg, Request};
+use crate::harness::eval::{evaluate, evaluate_all_tasks, EvalCfg, EvalResult};
+use crate::harness::workload::{self, Task};
+use crate::kvcache::fp16_kv_bytes;
+use crate::model::Sampler;
+use crate::profiler;
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Common knobs for the repro harness.
+#[derive(Debug, Clone, Copy)]
+pub struct ReproCfg {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_profile_prompts: usize,
+    pub high_frac: f64,
+    pub seed: u64,
+    /// simulated HBM budget for fig8 (bytes of KV)
+    pub hbm_bytes: usize,
+}
+
+impl Default for ReproCfg {
+    fn default() -> Self {
+        ReproCfg { n_seqs: 12, seq_len: 160, batch: 12, n_profile_prompts: 16,
+                   high_frac: 0.25, seed: 42, hbm_bytes: 0 }
+    }
+}
+
+impl ReproCfg {
+    pub fn fast() -> Self {
+        ReproCfg { n_seqs: 6, seq_len: 96, batch: 6, n_profile_prompts: 6, ..Default::default() }
+    }
+
+    fn eval_cfg(&self) -> EvalCfg {
+        EvalCfg { n_seqs: self.n_seqs, seq_len: self.seq_len, prefill_len: 32,
+                  batch: self.batch, seed: self.seed ^ 0x5EED, query_offset: None }
+    }
+}
+
+fn profiled_plan(rt: &Runtime, cfg: &ReproCfg) -> Result<(profiler::Importance, QuantPlan)> {
+    let imp = profiler::profile(rt, cfg.n_profile_prompts, cfg.seed)?;
+    let plan = profiler::allocate(&imp, cfg.high_frac);
+    Ok((imp, plan))
+}
+
+fn print_task_header() {
+    println!("{:<28} {:>9} {:>9} {:>9} {:>9} {:>10} {:>9}",
+             "method", "lm_ppl", "lm_acc%", "recall%", "chain%", "avg%", "kv_MiB");
+}
+
+fn print_task_row(name: &str, rows: &[(Task, EvalResult)]) {
+    let get = |t: Task| rows.iter().find(|(x, _)| *x == t).map(|(_, r)| r).unwrap();
+    let lm = get(Task::Lm);
+    let rec = get(Task::Recall);
+    let ch = get(Task::Chain);
+    let avg = (lm.score() + rec.score() + ch.score()) / 3.0;
+    let kv: usize = rows.iter().map(|(_, r)| r.kv_bytes).sum();
+    println!("{:<28} {:>9.3} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>9.3}",
+             name, lm.ppl(), lm.score(), rec.score(), ch.score(), avg,
+             kv as f64 / (1 << 20) as f64);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — motivation: quantizing different layers hurts differently
+// ---------------------------------------------------------------------------
+pub fn fig1(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    // The reproduction model is robust to single-layer 2-bit per-channel
+    // quantization (group 32), so the motivation study stresses with
+    // 1-bit — same qualitative question: which layer's K/V hurts most?
+    println!("# Fig 1 — per-layer 1-bit quantization impact");
+    println!("{:<18} {:>10} {:>10} {:>10}", "quantized", "lm_ppl", "lm_acc%", "chain%");
+    let ecfg = cfg.eval_cfg();
+    let base_lm = evaluate(rt, &Method::Fp16, Task::Lm, &ecfg)?;
+    let base_ch = evaluate(rt, &Method::Fp16, Task::Chain, &ecfg)?;
+    println!("{:<18} {:>10.3} {:>10.2} {:>10.2}", "FP16 (none)",
+             base_lm.ppl(), base_lm.score(), base_ch.score());
+    let l = rt.model.n_layers;
+    for side in ["K", "V"] {
+        for i in 0..l {
+            let mut plan = QuantPlan::fp16(l);
+            if side == "K" {
+                plan.k_bits[i] = 1;
+                plan.k_rpc[i] = 0.0;
+            } else {
+                plan.v_bits[i] = 1;
+                plan.v_rpc[i] = 0.0;
+            }
+            plan.name = format!("{side}{i}-1bit");
+            let lm = evaluate(rt, &Method::Kvmix(plan.clone()), Task::Lm, &ecfg)?;
+            let ch = evaluate(rt, &Method::Kvmix(plan), Task::Chain, &ecfg)?;
+            println!("{:<18} {:>10.3} {:>10.2} {:>10.2}", format!("{side} layer {i}"),
+                     lm.ppl(), lm.score(), ch.score());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 / Fig 9 — W_k / W_v norms and ranges per layer
+// ---------------------------------------------------------------------------
+pub fn fig2(rt: &Runtime, _cfg: &ReproCfg) -> Result<()> {
+    println!("# Fig 2/9 — K/V projection weight statistics per layer");
+    println!("{:<6} {:>12} {:>12} {:>12} {:>12}", "layer", "|Wk|2", "range(Wk)", "|Wv|2", "range(Wv)");
+    for i in 0..rt.model.n_layers {
+        let wk = rt.weights.layer(i, "wk")?;
+        let wv = rt.weights.layer(i, "wv")?;
+        let stats = |d: &[f32]| {
+            let norm = (d.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()).sqrt();
+            let mn = d.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = d.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            (norm, (mx - mn) as f64)
+        };
+        let (kn, kr) = stats(&wk.data);
+        let (vn, vr) = stats(&wv.data);
+        println!("{:<6} {:>12.4} {:>12.4} {:>12.4} {:>12.4}", i, kn, kr, vn, vr);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 — RPC dynamics during prefill + decode
+// ---------------------------------------------------------------------------
+pub fn fig4(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Fig 4 — dynamic RPC window during decode (layer 0)");
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    let method = Method::Kvmix(plan);
+    let mut cache = method.make_cache(&rt.model);
+    let fwd = crate::model::Forward::new(rt);
+    let mut rng = Rng::new(cfg.seed);
+    let (toks, _) = workload::generate(Task::Lm, &mut rng, 64);
+    fwd.prefill(&toks[..32], &mut cache)?;
+    println!("{:>6} {:>10} {:>12} {:>12} {:>12}", "step", "total", "k_fp(RPC)", "k_quantized", "kv_KiB");
+    let mut scratch = crate::model::DecodeScratch::default();
+    let mut input = toks[32];
+    for step in 0..96 {
+        let l0 = &cache.layers[0];
+        if step % 8 == 0 {
+            println!("{:>6} {:>10} {:>12} {:>12} {:>12.2}", step, l0.len(),
+                     l0.k_fp_tokens(), l0.k_hist,
+                     cache.modeled_bytes() as f64 / 1024.0);
+        }
+        let mut refs = vec![&mut cache];
+        let logits = fwd.decode_step(&[input], &mut refs, &mut scratch)?;
+        input = crate::model::sampler::argmax(&logits[..rt.model.vocab]) as i32;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — accuracy / memory / throughput vs % high-bit layers
+// ---------------------------------------------------------------------------
+pub fn fig5(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Fig 5 — sweep of high-bit layer fraction");
+    let imp = profiler::profile(rt, cfg.n_profile_prompts, cfg.seed)?;
+    println!("{:<8} {:>12} {:>9} {:>9} {:>12} {:>12}",
+             "frac", "plan", "recall%", "chain%", "kv_MiB", "tok/s");
+    let ecfg = cfg.eval_cfg();
+    for pct in [0.0, 0.125, 0.25, 0.375, 0.5, 0.75, 1.0] {
+        let plan = profiler::allocate(&imp, pct);
+        let m = Method::Kvmix(plan.clone());
+        let rec = evaluate(rt, &m, Task::Recall, &ecfg)?;
+        let ch = evaluate(rt, &m, Task::Chain, &ecfg)?;
+        let thr = quick_throughput(rt, &m, 8, 48, 32)?;
+        println!("{:<8.3} {:>12} {:>9.2} {:>9.2} {:>12.3} {:>12.1}",
+                 pct, plan.name, rec.score(), ch.score(),
+                 (rec.kv_bytes + ch.kv_bytes) as f64 / (1 << 20) as f64, thr);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 / Fig 12 — detailed per-layer plan from the profiler
+// ---------------------------------------------------------------------------
+pub fn fig6(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Fig 6 — KVmix profiler plan (high_frac={})", cfg.high_frac);
+    let (imp, plan) = profiled_plan(rt, cfg)?;
+    print!("{}", profiler::plan_report(&imp, &plan));
+    println!("\n# Fig 12 variant — high_frac=0.375 (paper's 30% config)");
+    let plan30 = profiler::allocate(&imp, 0.375);
+    print!("{}", profiler::plan_report(&imp, &plan30));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7 — peak KV memory by method (fixed batch)
+// ---------------------------------------------------------------------------
+pub fn fig7(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Fig 7 — peak KV memory during inference (batch=4, prompt 64, gen 192)");
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    println!("{:<22} {:>12} {:>12} {:>10}", "method", "peak_kv_KiB", "vs FP16", "tok/s");
+    let mut fp16_peak = 0f64;
+    for method in Method::comparison_set(&plan) {
+        let (peak, thr) = run_serving(rt, &method, 4, 64, 192, None)?;
+        let kib = peak as f64 / 1024.0;
+        if matches!(method, Method::Fp16) {
+            fp16_peak = kib;
+        }
+        println!("{:<22} {:>12.2} {:>11.2}x {:>10.1}", method.name(), kib,
+                 fp16_peak / kib.max(1e-9), thr);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 8 — throughput vs batch size under a simulated HBM budget
+// ---------------------------------------------------------------------------
+pub fn fig8(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    // budget default: fp16 OOMs between batch 4 and 8 at this workload
+    let prompt_len = 64;
+    let gen = 192;
+    let budget = if cfg.hbm_bytes > 0 {
+        cfg.hbm_bytes
+    } else {
+        6 * fp16_kv_bytes(prompt_len + gen, rt.model.kv_dim(), rt.model.n_layers)
+    };
+    println!("# Fig 8 — throughput vs batch size (simulated HBM budget {:.1} KiB)",
+             budget as f64 / 1024.0);
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    print!("{:<22}", "method");
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    for b in batches {
+        print!(" {:>9}", format!("b={b}"));
+    }
+    println!();
+    for method in Method::comparison_set(&plan) {
+        print!("{:<22}", method.name());
+        for b in batches {
+            match run_serving(rt, &method, b, prompt_len, gen, Some(budget)) {
+                Ok((_, thr)) => print!(" {:>9.1}", thr),
+                Err(_) => print!(" {:>9}", "OOM"),
+            }
+        }
+        println!();
+    }
+    println!("(OOM = the batch could not be admitted within the budget)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 — profiler robustness across prompt sets
+// ---------------------------------------------------------------------------
+pub fn fig10(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Fig 10 — profiler consistency across prompt sources");
+    let n = cfg.n_profile_prompts;
+    let base = profiler::profile(rt, n, cfg.seed)?;
+    let variants: Vec<(String, profiler::Importance)> = vec![
+        (format!("mixture seed+1 (n={n})"), profiler::profile(rt, n, cfg.seed + 1)?),
+        (format!("mixture n={}", n / 2), profiler::profile(rt, n / 2, cfg.seed + 2)?),
+        ("recall-only".into(), profiler::profile_task(rt, Task::Recall, n, cfg.seed + 3)?),
+        ("lm-only".into(), profiler::profile_task(rt, Task::Lm, n, cfg.seed + 4)?),
+        ("chain-only".into(), profiler::profile_task(rt, Task::Chain, n, cfg.seed + 5)?),
+    ];
+    println!("{:<26} {:>12} {:>12} {:>14}", "prompt set", "rank_corr_K", "rank_corr_V", "same high-bit K");
+    let base_plan = profiler::allocate(&base, cfg.high_frac);
+    for (name, imp) in &variants {
+        let ck = profiler::rank_correlation(&base.k, &imp.k);
+        let cv = profiler::rank_correlation(&base.v, &imp.v);
+        let plan = profiler::allocate(imp, cfg.high_frac);
+        let same = plan.k_bits.iter().zip(&base_plan.k_bits)
+            .filter(|(a, b)| a == b).count();
+        println!("{:<26} {:>12.3} {:>12.3} {:>11}/{}", name, ck, cv, same,
+                 plan.k_bits.len());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11 / Table 4 — RPC ratio sweep
+// ---------------------------------------------------------------------------
+pub fn table4(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Table 4 / Fig 11 — RPC ratio ablation on kvmix plan");
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    let ecfg = cfg.eval_cfg();
+    print_task_header();
+    let fp_rows = evaluate_all_tasks(rt, &Method::Fp16, &ecfg)?;
+    print_task_row("FP16", &fp_rows);
+    let fp16_kv: usize = fp_rows.iter().map(|(_, r)| r.kv_bytes).sum();
+    for (name, hi, lo) in [("w/oRPC", 0.0, 0.0), ("10%/0%", 0.1, 0.0),
+                           ("10%/10%", 0.1, 0.1), ("20%/10%", 0.2, 0.1),
+                           ("20%/20%", 0.2, 0.2), ("30%/30%", 0.3, 0.3),
+                           ("50%/50%", 0.5, 0.5)] {
+        let p = if name == "w/oRPC" { plan.without_rpc() } else { plan.with_rpc(hi, lo) };
+        let rows = evaluate_all_tasks(rt, &Method::Kvmix(p), &ecfg)?;
+        print_task_row(name, &rows);
+        let kv: usize = rows.iter().map(|(_, r)| r.kv_bytes).sum();
+        println!("{:<28} compression vs fp16: {:.2}x", "", fp16_kv as f64 / kv as f64);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — ablations of the importance-aware allocation
+// ---------------------------------------------------------------------------
+pub fn table1(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Table 1 — quantization configurations (suite scores)");
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    let n = rt.model.n_layers;
+    let n_high = plan.k_bits.iter().filter(|&&b| b > 2).count();
+    let methods = vec![
+        Method::Fp16,
+        Method::Kvmix(QuantPlan::uniform(n, 2)),
+        Method::Kvmix(QuantPlan::random_highbit(n, n_high, cfg.seed + 9)),
+        Method::Kvmix(plan.without_rpc()),
+        Method::Kvmix(plan.clone()),
+    ];
+    let ecfg = cfg.eval_cfg();
+    print_task_header();
+    for m in methods {
+        let rows = evaluate_all_tasks(rt, &m, &ecfg)?;
+        print_task_row(&m.name(), &rows);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — method comparison
+// ---------------------------------------------------------------------------
+pub fn table2(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Table 2 — SOTA method comparison (suite scores)");
+    let (imp, plan) = profiled_plan(rt, cfg)?;
+    let mut methods = Method::comparison_set(&plan);
+    // the paper's kvmix-k2.28v2.56: high-bit fraction raised to 30%
+    methods.push(Method::Kvmix(profiler::allocate(&imp, 0.375)));
+    let ecfg = cfg.eval_cfg();
+    print_task_header();
+    for m in methods {
+        let rows = evaluate_all_tasks(rt, &m, &ecfg)?;
+        print_task_row(&m.name(), &rows);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — GSM8K-analog accuracy + Wikitext-analog perplexity
+// ---------------------------------------------------------------------------
+pub fn table3(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Table 3 — chain accuracy (GSM8K analog) + lm perplexity (Wikitext analog)");
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    let n = rt.model.n_layers;
+    let n_high = plan.k_bits.iter().filter(|&&b| b > 2).count();
+    let methods = vec![
+        Method::Fp16,
+        Method::UniformPerToken { bits: 2 },
+        Method::UniformPerToken { bits: 4 },
+        Method::Kvmix(QuantPlan::uniform(n, 2)),
+        Method::Kvmix(QuantPlan::random_highbit(n, n_high, cfg.seed + 9)),
+        Method::Atom { bits: 4 },
+        Method::Kivi { bits: 2, residual: 64 },
+        Method::Qjl { jl_dim_mult: 4, v_bits: 3 },
+        Method::KvQuant { bits: 3, outlier_frac: 0.01 },
+        Method::Kvmix(plan),
+    ];
+    println!("{:<28} {:>12} {:>14}", "method", "chain_acc%", "lm_ppl");
+    let ecfg = cfg.eval_cfg();
+    for m in methods {
+        let ch = evaluate(rt, &m, Task::Chain, &ecfg)?;
+        let lm = evaluate(rt, &m, Task::Lm, &ecfg)?;
+        println!("{:<28} {:>12.2} {:>14.4}", m.name(), ch.score(), lm.ppl());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — extended configurations
+// ---------------------------------------------------------------------------
+pub fn table5(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Table 5 — extended KVmix configurations");
+    let (imp, plan) = profiled_plan(rt, cfg)?;
+    let n = rt.model.n_layers;
+    let n_high = plan.k_bits.iter().filter(|&&b| b > 2).count();
+    let methods = vec![
+        Method::Fp16,
+        Method::Kvmix(QuantPlan::uniform(n, 4)),
+        Method::Kvmix(QuantPlan::uniform(n, 2)),
+        Method::Kvmix(QuantPlan::random_highbit(n, n_high, cfg.seed + 9)),
+        Method::Kvmix(plan),
+        Method::Kvmix(profiler::allocate(&imp, 0.375)),
+    ];
+    let ecfg = cfg.eval_cfg();
+    print_task_header();
+    for m in methods {
+        let rows = evaluate_all_tasks(rt, &m, &ecfg)?;
+        print_task_row(&m.name(), &rows);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Headline — the 4.9x memory / 5.3x throughput summary
+// ---------------------------------------------------------------------------
+pub fn headline(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
+    println!("# Headline — memory compression + throughput gain vs FP16");
+    let (_, plan) = profiled_plan(rt, cfg)?;
+    let prompt_len = 64;
+    let gen = 192;
+    let (fp_peak, _) = run_serving(rt, &Method::Fp16, 4, prompt_len, gen, None)?;
+    let (kv_peak, _) = run_serving(rt, &Method::Kvmix(plan.clone()), 4, prompt_len, gen, None)?;
+    println!("KV memory (batch 4): fp16 {:.1} KiB -> kvmix {:.1} KiB = {:.2}x compression",
+             fp_peak as f64 / 1024.0, kv_peak as f64 / 1024.0,
+             fp_peak as f64 / kv_peak as f64);
+    let budget = 6 * fp16_kv_bytes(prompt_len + gen, rt.model.kv_dim(), rt.model.n_layers);
+    let mut best_fp = 0f64;
+    let mut best_kv = 0f64;
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        if let Ok((_, t)) = run_serving(rt, &Method::Fp16, b, prompt_len, gen, Some(budget)) {
+            best_fp = best_fp.max(t);
+        }
+        if let Ok((_, t)) = run_serving(rt, &Method::Kvmix(plan.clone()), b, prompt_len, gen, Some(budget)) {
+            best_kv = best_kv.max(t);
+        }
+    }
+    println!("max throughput within budget: fp16 {best_fp:.1} tok/s -> kvmix {best_kv:.1} tok/s = {:.2}x",
+             best_kv / best_fp.max(1e-9));
+    println!("(paper on Llama-2-7B/RTX4090: 4.9x memory, 5.3x throughput)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// shared serving runners
+// ---------------------------------------------------------------------------
+
+/// Run `batch` identical-shape requests through the engine; returns
+/// (peak kv bytes, decode throughput tok/s).  Errors if the batch can't be
+/// fully admitted within the budget (reported as OOM by fig8).
+pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usize,
+                   gen: usize, kv_budget: Option<usize>) -> Result<(usize, f64)> {
+    let mut engine = Engine::new(rt, EngineCfg {
+        method: method.clone(), max_batch: batch, kv_budget,
+    })?;
+    let mut rng = Rng::new(123);
+    for id in 0..batch {
+        let (toks, _) = workload::sample_mixture(&mut rng, prompt_len);
+        engine.submit(Request {
+            id: id as u64, prompt: toks, max_new_tokens: gen,
+            sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0,
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let done = engine.run_to_completion()?;
+    let secs = t0.elapsed().as_secs_f64();
+    if done.len() < batch || engine.metrics.oom_events > 0 {
+        anyhow::bail!("OOM: {}/{} completed, {} oom events", done.len(), batch,
+                      engine.metrics.oom_events);
+    }
+    let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+    Ok((engine.metrics.peak_kv_bytes, tokens as f64 / secs))
+}
+
+fn quick_throughput(rt: &Runtime, method: &Method, batch: usize,
+                    prompt_len: usize, gen: usize) -> Result<f64> {
+    Ok(run_serving(rt, method, batch, prompt_len, gen, None)?.1)
+}

@@ -1,0 +1,255 @@
+//! Synthetic task generators — the Rust mirror of python/compile/corpus.py
+//! (same token space and task structure; the model was trained on exactly
+//! this distribution).  Deterministic in the seed via [`crate::util::Rng`].
+
+use crate::util::Rng;
+
+// token space — keep in sync with corpus.py
+pub const VOCAB: usize = 512;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const QRY: i32 = 4;
+pub const ANS: i32 = 5;
+pub const EQL: i32 = 6;
+pub const NUM_BASE: i32 = 10;
+pub const NUM_COUNT: usize = 16;
+pub const KEY_BASE: i32 = 100;
+pub const KEY_COUNT: usize = 48;
+pub const VAL_BASE: i32 = 200;
+pub const VAL_COUNT: usize = 48;
+pub const LM_BASE: i32 = 300;
+pub const LM_COUNT: usize = 212;
+pub const LM_NOISE: f64 = 0.05;
+pub const LM_MULT: i32 = 3;
+pub const ANSWER_WEIGHT: f32 = 4.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Wikitext-2 analog: pseudo-language perplexity
+    Lm,
+    /// LongBench analog: key/value retrieval at distance
+    Recall,
+    /// GSM8K analog: local modular sums
+    Chain,
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Lm => "lm",
+            Task::Recall => "recall",
+            Task::Chain => "chain",
+        }
+    }
+
+    pub fn all() -> [Task; 3] {
+        [Task::Lm, Task::Recall, Task::Chain]
+    }
+}
+
+/// (tokens, loss_mask) — mask[t] weights the prediction made *at* t
+/// (of tokens[t+1]); PAD-padded to `seq_len`.
+pub fn generate(task: Task, rng: &mut Rng, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    match task {
+        Task::Lm => gen_lm(rng, seq_len),
+        Task::Recall => gen_recall(rng, seq_len, None, 6),
+        Task::Chain => gen_chain(rng, seq_len),
+    }
+}
+
+/// Training-mixture sample (lm 20%, recall 40%, chain 40% — corpus.TRAIN_MIX).
+pub fn sample_mixture(rng: &mut Rng, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    let x = rng.f64();
+    let task = if x < 0.2 {
+        Task::Lm
+    } else if x < 0.6 {
+        Task::Recall
+    } else {
+        Task::Chain
+    };
+    generate(task, rng, seq_len)
+}
+
+fn pad(mut toks: Vec<i32>, mut mask: Vec<f32>, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    toks.truncate(seq_len);
+    mask.truncate(seq_len);
+    toks.resize(seq_len, PAD);
+    mask.resize(seq_len, 0.0);
+    (toks, mask)
+}
+
+pub fn gen_lm(rng: &mut Rng, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    let o = rng.range(1, 16) as i32;
+    let mut x = rng.below(LM_COUNT) as i32;
+    let mut toks = vec![BOS, LM_BASE + x];
+    let mut mask = vec![0.0f32, 0.0];
+    for _ in 0..seq_len.saturating_sub(3) {
+        if rng.bool(LM_NOISE) {
+            x = rng.below(LM_COUNT) as i32;
+        } else {
+            x = (LM_MULT * x + o).rem_euclid(LM_COUNT as i32);
+        }
+        toks.push(LM_BASE + x);
+        *mask.last_mut().unwrap() = 1.0;
+        mask.push(0.0);
+    }
+    toks.push(EOS);
+    *mask.last_mut().unwrap() = 1.0;
+    mask.push(0.0);
+    pad(toks, mask, seq_len)
+}
+
+pub const N_DISTINCT_PAIRS: usize = 16;
+
+/// In-context associative recall (induction-head format — corpus.gen_recall).
+///
+/// `query_offset`: Some(0) queries the key whose last binding is most
+/// recent; larger = older (retrieval-distance stress).
+pub fn gen_recall(rng: &mut Rng, seq_len: usize, query_offset: Option<usize>,
+                  n_queries: usize) -> (Vec<i32>, Vec<f32>) {
+    let n_distinct = N_DISTINCT_PAIRS.min(KEY_COUNT);
+    let keys = rng.sample_distinct(KEY_COUNT, n_distinct);
+    let vals: Vec<usize> = (0..n_distinct).map(|_| rng.below(VAL_COUNT)).collect();
+    let budget = seq_len.saturating_sub(2 + 3 * n_queries + 1);
+    let mut toks = vec![BOS];
+    let mut mask = vec![0.0f32];
+    let mut order: Vec<usize> = Vec::new();
+    while toks.len() + 2 <= budget {
+        if order.is_empty() {
+            order = (0..n_distinct).collect();
+            rng.shuffle(&mut order);
+        }
+        let i = order.pop().unwrap();
+        toks.push(KEY_BASE + keys[i] as i32);
+        toks.push(VAL_BASE + vals[i] as i32);
+        mask.push(0.0);
+        mask.push(0.0);
+    }
+    toks.push(SEP);
+    mask.push(0.0);
+    // last-occurrence recency ranking for query_offset targeting
+    let mut last_pos: Vec<(usize, usize)> = Vec::new(); // (key idx, pos)
+    for (i, &k) in keys.iter().enumerate() {
+        if let Some(p) = toks.iter().rposition(|&t| t == KEY_BASE + k as i32) {
+            last_pos.push((i, p));
+        }
+    }
+    last_pos.sort_by_key(|&(_, p)| std::cmp::Reverse(p));
+    for qn in 0..n_queries {
+        if toks.len() + 3 > seq_len {
+            break;
+        }
+        let qi = if qn == 0 && query_offset.is_some() && !last_pos.is_empty() {
+            last_pos[query_offset.unwrap() % last_pos.len()].0
+        } else {
+            rng.below(n_distinct)
+        };
+        toks.push(QRY);
+        toks.push(KEY_BASE + keys[qi] as i32);
+        toks.push(VAL_BASE + vals[qi] as i32);
+        mask.push(0.0);
+        mask.push(ANSWER_WEIGHT); // key position predicts the value
+        mask.push(0.0);
+    }
+    toks.push(EOS);
+    mask.push(0.0);
+    pad(toks, mask, seq_len)
+}
+
+/// Exact-state selection (corpus.gen_chain): `n1 n2 n3 EQL max(n1,n2,n3)`.
+pub fn gen_chain(rng: &mut Rng, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut toks = vec![BOS];
+    let mut mask = vec![0.0f32];
+    while toks.len() + 6 < seq_len {
+        let ns: Vec<i32> = (0..3).map(|_| rng.below(NUM_COUNT) as i32).collect();
+        for &n in &ns {
+            toks.push(NUM_BASE + n);
+            mask.push(0.0);
+        }
+        toks.push(EQL);
+        mask.push(ANSWER_WEIGHT);
+        toks.push(NUM_BASE + ns.iter().copied().max().unwrap());
+        mask.push(0.0);
+    }
+    toks.push(EOS);
+    mask.push(0.0);
+    pad(toks, mask, seq_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(Task::Recall, &mut Rng::new(5), 96);
+        let b = generate(Task::Recall, &mut Rng::new(5), 96);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn token_ranges() {
+        let mut rng = Rng::new(1);
+        for task in Task::all() {
+            let (toks, mask) = generate(task, &mut rng, 128);
+            assert_eq!(toks.len(), 128);
+            assert_eq!(mask.len(), 128);
+            assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
+        }
+    }
+
+    #[test]
+    fn recall_answers_consistent() {
+        let mut rng = Rng::new(2);
+        let (toks, mask) = gen_recall(&mut rng, 96, None, 6);
+        let sep = toks.iter().position(|&t| t == SEP).unwrap();
+        let mut found = 0;
+        for t in 1..toks.len() - 1 {
+            if mask[t] > 0.0 {
+                assert_eq!(toks[t - 1], QRY);
+                let key = toks[t];
+                let val = toks[t + 1];
+                // every context binding of the key carries the same value
+                let mut bound = 0;
+                for p in 0..sep {
+                    if toks[p] == key {
+                        assert_eq!(toks[p + 1], val);
+                        bound += 1;
+                    }
+                }
+                assert!(bound >= 1);
+                found += 1;
+            }
+        }
+        assert!(found >= 4);
+    }
+
+    #[test]
+    fn chain_max() {
+        let mut rng = Rng::new(3);
+        let (toks, mask) = gen_chain(&mut rng, 96);
+        for t in 3..toks.len() - 1 {
+            if mask[t] > 0.0 {
+                assert_eq!(toks[t], EQL);
+                let m = (1..=3).map(|i| toks[t - i]).max().unwrap();
+                assert_eq!(toks[t + 1], m);
+            }
+        }
+    }
+
+    #[test]
+    fn query_offset_orders_distance() {
+        let (t_recent, m_recent) = gen_recall(&mut Rng::new(7), 96, Some(0), 1);
+        let (t_old, m_old) = gen_recall(&mut Rng::new(7), 96, Some(10), 1);
+        // distance is measured to the key's *last* binding in the context
+        let last_binding = |t: &[i32], m: &[f32]| {
+            let a = m.iter().position(|&x| x > 0.0).unwrap();
+            let key = t[a];
+            let sep = t.iter().position(|&x| x == SEP).unwrap();
+            t[..sep].iter().rposition(|&x| x == key).unwrap()
+        };
+        assert!(last_binding(&t_old, &m_old) < last_binding(&t_recent, &m_recent));
+    }
+}

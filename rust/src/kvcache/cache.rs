@@ -1,0 +1,529 @@
+//! The mixed-precision KV cache: full-precision RPC window + packed
+//! quantized history, with fused quantize+append (paper §CUDA
+//! Implementation ①) and per-layer K/V representations.
+//!
+//! Layouts (stream order of the packed blocks, see quant/groupq.rs):
+//! * Key blocks   — channel-major `[kv_dim][group_tokens]` ⇒ per-channel
+//!   groups (one group = one channel's `group` tokens).
+//! * Value blocks — token-major `[group_tokens][kv_dim]` ⇒ per-token
+//!   groups (`kv_dim/group` groups per token).
+//!
+//! Keys are cached *post-RoPE* (the L2 `pre` graph applies RoPE before the
+//! cache sees them).  KVQuant quantizes pre-RoPE keys; DESIGN.md §5 notes
+//! this substitution.
+
+use crate::quant::{key_scores_fused, value_accum_fused, FusedScratch, PackedBlock};
+
+use super::jl::{JlProjector, SignJlKeys};
+use super::window::WindowPolicy;
+
+/// Key representation for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyRepr {
+    /// no quantization (fp16-modeled)
+    Fp,
+    /// paper's per-channel asymmetric quantization
+    PerChannel { bits: u8 },
+    /// per-token (Atom / the k-T ablation rows of Table 3)
+    PerToken { bits: u8 },
+    /// QJL sign-bit JL transform
+    SignJl { jl_dim: usize },
+}
+
+/// Value representation for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueRepr {
+    Fp,
+    /// paper's per-token asymmetric quantization
+    PerToken { bits: u8 },
+}
+
+/// Static configuration of one layer's cache.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCacheCfg {
+    pub kv_dim: usize,
+    pub head_dim: usize,
+    /// quant group size (= tokens per history block; paper: 32)
+    pub group: usize,
+    pub key: KeyRepr,
+    pub value: ValueRepr,
+    pub k_window: WindowPolicy,
+    pub v_window: WindowPolicy,
+    /// KVQuant-style fp outlier fraction applied inside each block
+    pub outlier_frac: f64,
+}
+
+impl LayerCacheCfg {
+    pub fn n_kv_heads(&self) -> usize {
+        self.kv_dim / self.head_dim
+    }
+}
+
+/// One layer's cache for one sequence.
+pub struct LayerKvCache {
+    pub cfg: LayerCacheCfg,
+    /// fp tail, token-major `[t][kv_dim]` — K and V windows shrink
+    /// independently so each keeps its own buffer.
+    k_fp: Vec<f32>,
+    v_fp: Vec<f32>,
+    /// quantized history
+    pub k_blocks: Vec<PackedBlock>,
+    pub v_blocks: Vec<PackedBlock>,
+    /// QJL store (when cfg.key == SignJl)
+    pub k_jl: Option<SignJlKeys>,
+    jl_proj: Option<JlProjector>,
+    /// tokens represented in quantized K history / V history
+    pub k_hist: usize,
+    pub v_hist: usize,
+    /// scratch reused across appends
+    qscratch: Vec<u32>,
+    tscratch: Vec<f32>,
+}
+
+impl LayerKvCache {
+    pub fn new(cfg: LayerCacheCfg) -> Self {
+        let (k_jl, jl_proj) = if let KeyRepr::SignJl { jl_dim } = cfg.key {
+            (Some(SignJlKeys::new(jl_dim)), Some(JlProjector::new(cfg.head_dim, jl_dim, 99)))
+        } else {
+            (None, None)
+        };
+        LayerKvCache {
+            cfg,
+            k_fp: Vec::new(),
+            v_fp: Vec::new(),
+            k_blocks: Vec::new(),
+            v_blocks: Vec::new(),
+            k_jl,
+            jl_proj,
+            k_hist: 0,
+            v_hist: 0,
+            qscratch: Vec::new(),
+            tscratch: Vec::new(),
+        }
+    }
+
+    /// Total tokens cached (same for K and V).
+    pub fn len(&self) -> usize {
+        self.k_hist + self.k_fp.len() / self.cfg.kv_dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn k_fp_tokens(&self) -> usize {
+        self.k_fp.len() / self.cfg.kv_dim
+    }
+
+    pub fn v_fp_tokens(&self) -> usize {
+        self.v_fp.len() / self.cfg.kv_dim
+    }
+
+    pub fn k_fp(&self) -> &[f32] {
+        &self.k_fp
+    }
+
+    pub fn v_fp(&self) -> &[f32] {
+        &self.v_fp
+    }
+
+    /// Fused quantize+append: push `n` new tokens (k/v row-major
+    /// `[n][kv_dim]`, keys already RoPE'd), then enforce the window
+    /// policies, quantizing overflowing whole blocks in place.
+    pub fn append(&mut self, k: &[f32], v: &[f32], n: usize) {
+        let kv = self.cfg.kv_dim;
+        debug_assert_eq!(k.len(), n * kv);
+        debug_assert_eq!(v.len(), n * kv);
+        self.k_fp.extend_from_slice(k);
+        self.v_fp.extend_from_slice(v);
+        self.enforce_windows();
+    }
+
+    fn enforce_windows(&mut self) {
+        let group = self.cfg.group;
+        // Key side
+        let k_quantize = match self.cfg.key {
+            KeyRepr::Fp => 0,
+            _ => self.cfg.k_window.blocks_to_quantize(self.k_fp_tokens(), group),
+        };
+        for _ in 0..k_quantize {
+            self.quantize_oldest_k_block();
+        }
+        // Value side
+        let v_quantize = match self.cfg.value {
+            ValueRepr::Fp => 0,
+            _ => self.cfg.v_window.blocks_to_quantize(self.v_fp_tokens(), group),
+        };
+        for _ in 0..v_quantize {
+            self.quantize_oldest_v_block();
+        }
+    }
+
+    fn quantize_oldest_k_block(&mut self) {
+        let kv = self.cfg.kv_dim;
+        let g = self.cfg.group;
+        let rows = &self.k_fp[..g * kv];
+        match self.cfg.key {
+            KeyRepr::Fp => unreachable!(),
+            KeyRepr::PerChannel { bits } => {
+                // transpose token-major rows into channel-major stream
+                self.tscratch.resize(g * kv, 0.0);
+                for c in 0..kv {
+                    for t in 0..g {
+                        self.tscratch[c * g + t] = rows[t * kv + c];
+                    }
+                }
+                let mut block = PackedBlock::default();
+                if self.cfg.outlier_frac > 0.0 {
+                    block.quantize_outliers_into(&self.tscratch, bits, g,
+                                                 self.cfg.outlier_frac, &mut self.qscratch);
+                } else {
+                    block.quantize_into(&self.tscratch, bits, g, &mut self.qscratch);
+                }
+                self.k_blocks.push(block);
+            }
+            KeyRepr::PerToken { bits } => {
+                // token-major stream, groups of `group` channels
+                let mut block = PackedBlock::default();
+                block.quantize_into(rows, bits, self.cfg.group, &mut self.qscratch);
+                self.k_blocks.push(block);
+            }
+            KeyRepr::SignJl { jl_dim } => {
+                let store = self.k_jl.as_mut().unwrap();
+                let proj = self.jl_proj.as_ref().unwrap();
+                let hd = self.cfg.head_dim;
+                let mut rp = vec![0f32; jl_dim];
+                for t in 0..g {
+                    // each kv head's key is projected separately; store
+                    // heads consecutively (len() counts per-head entries)
+                    for h in 0..kv / hd {
+                        let key = &rows[t * kv + h * hd..t * kv + (h + 1) * hd];
+                        let norm = key.iter().map(|x| x * x).sum::<f32>().sqrt();
+                        proj.project(key, &mut rp);
+                        store.push(&rp, norm);
+                    }
+                }
+            }
+        }
+        self.k_fp.drain(..g * kv);
+        self.k_hist += g;
+    }
+
+    fn quantize_oldest_v_block(&mut self) {
+        let kv = self.cfg.kv_dim;
+        let g = self.cfg.group;
+        let rows_len = g * kv;
+        match self.cfg.value {
+            ValueRepr::Fp => unreachable!(),
+            ValueRepr::PerToken { bits } => {
+                let mut block = PackedBlock::default();
+                if self.cfg.outlier_frac > 0.0 {
+                    let rows = self.v_fp[..rows_len].to_vec();
+                    block.quantize_outliers_into(&rows, bits, self.cfg.group,
+                                                 self.cfg.outlier_frac, &mut self.qscratch);
+                } else {
+                    block.quantize_into(&self.v_fp[..rows_len], bits, self.cfg.group,
+                                        &mut self.qscratch);
+                }
+                self.v_blocks.push(block);
+            }
+        }
+        self.v_fp.drain(..rows_len);
+        self.v_hist += g;
+    }
+
+    /// Modeled bytes (fp elements at 2B as fp16, packed blocks per their
+    /// own accounting) — the paper's Fig. 7 memory metric.
+    pub fn modeled_bytes(&self) -> usize {
+        let mut b = (self.k_fp.len() + self.v_fp.len()) * 2;
+        b += self.k_blocks.iter().map(|x| x.modeled_bytes()).sum::<usize>();
+        b += self.v_blocks.iter().map(|x| x.modeled_bytes()).sum::<usize>();
+        if let Some(jl) = &self.k_jl {
+            b += jl.modeled_bytes();
+        }
+        b
+    }
+
+    /// Actual resident bytes of the rust buffers.
+    pub fn resident_bytes(&self) -> usize {
+        let mut b = (self.k_fp.capacity() + self.v_fp.capacity()) * 4;
+        b += self.k_blocks.iter().map(|x| x.resident_bytes()).sum::<usize>();
+        b += self.v_blocks.iter().map(|x| x.resident_bytes()).sum::<usize>();
+        b
+    }
+
+    // ---------------- attention ----------------
+
+    /// Decode attention for a batchful of query heads against this cache.
+    ///
+    /// `q`: `[n_heads][head_dim]` (RoPE'd), `out`: `[n_heads][head_dim]`
+    /// overwritten.  `n_heads` must be a multiple of the kv head count
+    /// (GQA).  `scratch` carries reusable buffers.
+    pub fn attend(&self, q: &[f32], n_heads: usize, out: &mut [f32],
+                  scratch: &mut AttnScratch) {
+        let hd = self.cfg.head_dim;
+        let kv = self.cfg.kv_dim;
+        let n_kv = self.cfg.n_kv_heads();
+        let rep = n_heads / n_kv;
+        let total = self.len();
+        debug_assert!(total > 0);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let g = self.cfg.group;
+
+        scratch.scores.resize(n_heads * total, 0.0);
+        scratch.scores.fill(0.0);
+
+        // --- K scores ---
+        match self.cfg.key {
+            KeyRepr::SignJl { jl_dim } => {
+                let store = self.k_jl.as_ref().unwrap();
+                let proj = self.jl_proj.as_ref().unwrap();
+                scratch.rq.resize(jl_dim, 0.0);
+                // JL history scores per head; store entries are interleaved
+                // [t][kv_head] — score rows select by head
+                for h in 0..n_heads {
+                    let kvh = h / rep;
+                    proj.project(&q[h * hd..(h + 1) * hd], &mut scratch.rq);
+                    let row = &mut scratch.scores[h * total..h * total + self.k_hist];
+                    // compute per (token,kv_head) entries
+                    scratch.jl_tmp.resize(self.k_hist * n_kv, 0.0);
+                    scratch.jl_tmp.fill(0.0);
+                    store.scores(&scratch.rq, &mut scratch.jl_tmp);
+                    for t in 0..self.k_hist {
+                        row[t] = scratch.jl_tmp[t * n_kv + kvh];
+                    }
+                }
+            }
+            KeyRepr::PerChannel { .. } => {
+                for (bi, block) in self.k_blocks.iter().enumerate() {
+                    for h in 0..n_heads {
+                        let kvh = h / rep;
+                        let qh = &q[h * hd..(h + 1) * hd];
+                        let row = &mut scratch.scores[h * total + bi * g..h * total + (bi + 1) * g];
+                        key_scores_fused(qh, block, g, kvh * hd, &mut scratch.fused, row);
+                    }
+                }
+            }
+            KeyRepr::PerToken { .. } => {
+                for (bi, block) in self.k_blocks.iter().enumerate() {
+                    token_major_key_scores(block, q, n_heads, hd, kv, rep, g,
+                                           bi * g, total, scratch);
+                }
+            }
+            KeyRepr::Fp => {}
+        }
+        // fp K window
+        let k_fp_tokens = self.k_fp_tokens();
+        let k_fp_start = total - k_fp_tokens;
+        for h in 0..n_heads {
+            let kvh = h / rep;
+            let qh = &q[h * hd..(h + 1) * hd];
+            let row = &mut scratch.scores[h * total..(h + 1) * total];
+            for t in 0..k_fp_tokens {
+                let key = &self.k_fp[t * kv + kvh * hd..t * kv + kvh * hd + hd];
+                let mut acc = 0f32;
+                for d in 0..hd {
+                    acc += qh[d] * key[d];
+                }
+                row[k_fp_start + t] += acc;
+            }
+        }
+
+        // --- softmax (scaled) per head ---
+        for h in 0..n_heads {
+            let row = &mut scratch.scores[h * total..(h + 1) * total];
+            let mut mx = f32::NEG_INFINITY;
+            for s in row.iter_mut() {
+                *s *= scale;
+                mx = mx.max(*s);
+            }
+            let mut sum = 0f32;
+            for s in row.iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            let inv = 1.0 / sum;
+            for s in row.iter_mut() {
+                *s *= inv;
+            }
+        }
+
+        // --- weighted values ---
+        out[..n_heads * hd].fill(0.0);
+        match self.cfg.value {
+            ValueRepr::PerToken { .. } => {
+                for (bi, block) in self.v_blocks.iter().enumerate() {
+                    for h in 0..n_heads {
+                        let kvh = h / rep;
+                        let p = &scratch.scores[h * total + bi * g..h * total + (bi + 1) * g];
+                        let o = &mut out[h * hd..(h + 1) * hd];
+                        value_accum_fused(p, block, kv, kvh * hd, hd, &mut scratch.fused, o);
+                    }
+                }
+            }
+            ValueRepr::Fp => {}
+        }
+        // fp V window
+        let v_fp_tokens = self.v_fp_tokens();
+        let v_fp_start = total - v_fp_tokens;
+        for h in 0..n_heads {
+            let kvh = h / rep;
+            let row = &scratch.scores[h * total..(h + 1) * total];
+            let o = &mut out[h * hd..(h + 1) * hd];
+            for t in 0..v_fp_tokens {
+                let p = row[v_fp_start + t];
+                if p == 0.0 {
+                    continue;
+                }
+                let val = &self.v_fp[t * kv + kvh * hd..t * kv + kvh * hd + hd];
+                for d in 0..hd {
+                    o[d] += p * val[d];
+                }
+            }
+        }
+    }
+}
+
+/// Per-token-grouped Key scores (Atom / k-T rows): token-major stream.
+fn token_major_key_scores(block: &PackedBlock, q: &[f32], n_heads: usize,
+                          hd: usize, kv: usize, rep: usize, g: usize,
+                          t_off: usize, total: usize, scratch: &mut AttnScratch) {
+    // dequantize block once into f32 scratch (the per-token layout doesn't
+    // admit the per-channel bias trick; this is still block-local)
+    scratch.fused.f32s.resize(block.n, 0.0);
+    let mut ints = std::mem::take(&mut scratch.fused.ints);
+    block.dequantize_into(&mut scratch.fused.f32s, &mut ints);
+    scratch.fused.ints = ints;
+    scratch.fused.invalidate();
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * hd..(h + 1) * hd];
+        for t in 0..g {
+            let key = &scratch.fused.f32s[t * kv + kvh * hd..t * kv + kvh * hd + hd];
+            let mut acc = 0f32;
+            for d in 0..hd {
+                acc += qh[d] * key[d];
+            }
+            scratch.scores[h * total + t_off + t] += acc;
+        }
+    }
+}
+
+/// Reusable buffers for [`LayerKvCache::attend`].
+#[derive(Default)]
+pub struct AttnScratch {
+    pub scores: Vec<f32>,
+    pub fused: FusedScratch,
+    pub rq: Vec<f32>,
+    pub jl_tmp: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg(key: KeyRepr, value: ValueRepr, kw: WindowPolicy, vw: WindowPolicy) -> LayerCacheCfg {
+        LayerCacheCfg { kv_dim: 64, head_dim: 32, group: 32, key, value,
+                        k_window: kw, v_window: vw, outlier_frac: 0.0 }
+    }
+
+    #[test]
+    fn append_and_window_dynamics() {
+        let c = cfg(KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+                    WindowPolicy::Rpc { ratio: 0.1 }, WindowPolicy::Rpc { ratio: 0.1 });
+        let mut cache = LayerKvCache::new(c);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let k = rng.normal_vec(64);
+            let v = rng.normal_vec(64);
+            cache.append(&k, &v, 1);
+        }
+        assert_eq!(cache.len(), 100);
+        // rpc 10%: fp window stays small, most history quantized
+        assert!(cache.k_hist >= 64, "k_hist={}", cache.k_hist);
+        assert!(cache.k_fp_tokens() < 40);
+        assert_eq!(cache.k_hist + cache.k_fp_tokens(), 100);
+        assert_eq!(cache.v_hist + cache.v_fp_tokens(), 100);
+    }
+
+    #[test]
+    fn fp16_never_quantizes() {
+        let c = cfg(KeyRepr::Fp, ValueRepr::Fp, WindowPolicy::All, WindowPolicy::All);
+        let mut cache = LayerKvCache::new(c);
+        let mut rng = Rng::new(2);
+        for _ in 0..80 {
+            cache.append(&rng.normal_vec(64), &rng.normal_vec(64), 1);
+        }
+        assert_eq!(cache.k_hist, 0);
+        assert_eq!(cache.k_fp_tokens(), 80);
+    }
+
+    #[test]
+    fn attention_close_to_fp_reference() {
+        // quantized at 4 bits should be very close to a pure-fp cache
+        let mut rng = Rng::new(3);
+        let n_tok = 96;
+        let ks: Vec<f32> = rng.normal_vec(n_tok * 64);
+        let vs: Vec<f32> = rng.normal_vec(n_tok * 64);
+        let q: Vec<f32> = rng.normal_vec(4 * 32);
+
+        let cfq = cfg(KeyRepr::PerChannel { bits: 4 }, ValueRepr::PerToken { bits: 4 },
+                      WindowPolicy::None, WindowPolicy::None);
+        let mut quant = LayerKvCache::new(cfq);
+        quant.append(&ks, &vs, n_tok);
+        assert_eq!(quant.k_hist, 96);
+
+        let cff = cfg(KeyRepr::Fp, ValueRepr::Fp, WindowPolicy::All, WindowPolicy::All);
+        let mut full = LayerKvCache::new(cff);
+        full.append(&ks, &vs, n_tok);
+
+        let mut o1 = vec![0f32; 4 * 32];
+        let mut o2 = vec![0f32; 4 * 32];
+        let mut s = AttnScratch::default();
+        quant.attend(&q, 4, &mut o1, &mut s);
+        full.attend(&q, 4, &mut o2, &mut s);
+        let max_diff = o1.iter().zip(&o2).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_diff < 0.08, "4-bit cache drifted {max_diff}");
+        // and 1-bit must drift strictly more than 4-bit
+        let cf1 = cfg(KeyRepr::PerChannel { bits: 1 }, ValueRepr::PerToken { bits: 1 },
+                      WindowPolicy::None, WindowPolicy::None);
+        let mut one = LayerKvCache::new(cf1);
+        one.append(&ks, &vs, n_tok);
+        let mut o3 = vec![0f32; 4 * 32];
+        one.attend(&q, 4, &mut o3, &mut s);
+        let drift1 = o3.iter().zip(&o2).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(drift1 > max_diff, "1-bit ({drift1}) should drift more than 4-bit ({max_diff})");
+    }
+
+    #[test]
+    fn memory_shrinks_with_bits() {
+        let mut sizes = Vec::new();
+        for bits in [4u8, 2] {
+            let c = cfg(KeyRepr::PerChannel { bits }, ValueRepr::PerToken { bits },
+                        WindowPolicy::None, WindowPolicy::None);
+            let mut cache = LayerKvCache::new(c);
+            let mut rng = Rng::new(4);
+            cache.append(&rng.normal_vec(128 * 64), &rng.normal_vec(128 * 64), 128);
+            sizes.push(cache.modeled_bytes());
+        }
+        assert!(sizes[1] < sizes[0]);
+        // fp16 reference for 128 tokens: 128*64*2*2 bytes
+        let fp = 128 * 64 * 2 * 2;
+        assert!((fp as f64 / sizes[1] as f64) > 4.0, "2-bit compression {}", fp as f64 / sizes[1] as f64);
+    }
+
+    #[test]
+    fn kivi_fixed_residual_keeps_constant_window() {
+        let c = cfg(KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+                    WindowPolicy::FixedResidual { tokens: 64 },
+                    WindowPolicy::FixedResidual { tokens: 64 });
+        let mut cache = LayerKvCache::new(c);
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            cache.append(&rng.normal_vec(64), &rng.normal_vec(64), 1);
+        }
+        let fp = cache.k_fp_tokens();
+        assert!((64..64 + 32).contains(&fp), "kivi window {fp}");
+    }
+}

@@ -1,0 +1,150 @@
+//! QJL baseline substrate: 1-bit Johnson–Lindenstrauss Key representation
+//! (Zandieh, Daliri & Han, AAAI 2025 — the paper's strongest "zero
+//! constant overhead" comparator).
+//!
+//! Keys are stored as the sign bits of `R·k` (R a fixed Gaussian JL matrix
+//! of `jl_dim` rows) plus one fp16-modeled norm per token.  The inner
+//! product is estimated by the QJL estimator
+//!
+//!   <q, k> ≈ ‖k‖ · (sqrt(π/2) / m) · Σ_j sign(Rk)_j · (Rq)_j ... up to the
+//!   estimator's constant; we use the standard form
+//!   <q, k> ≈ ‖q‖‖k‖·cos(π·(1 − hamming_agreement)) for sign-JL, which the
+//!   QJL paper tightens to the one-sided quantized estimator below.
+
+use crate::util::Rng;
+
+/// Fixed JL projection for one layer (seeded so Rust/Python could agree).
+pub struct JlProjector {
+    /// [jl_dim, head_dim] row-major
+    pub r: Vec<f32>,
+    pub jl_dim: usize,
+    pub head_dim: usize,
+}
+
+impl JlProjector {
+    pub fn new(head_dim: usize, jl_dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x514e_0bad);
+        JlProjector { r: rng.normal_vec(jl_dim * head_dim), jl_dim, head_dim }
+    }
+
+    /// Project a head_dim vector; returns jl_dim f32s into `out`.
+    pub fn project(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        debug_assert!(out.len() >= self.jl_dim);
+        for j in 0..self.jl_dim {
+            let row = &self.r[j * self.head_dim..(j + 1) * self.head_dim];
+            let mut acc = 0f32;
+            for d in 0..self.head_dim {
+                acc += row[d] * x[d];
+            }
+            out[j] = acc;
+        }
+    }
+}
+
+/// Sign-bit store for one head's keys: packed sign words + per-token norm.
+#[derive(Default)]
+pub struct SignJlKeys {
+    /// ceil(jl_dim/32) words per token, token-major
+    pub words: Vec<u32>,
+    pub norms: Vec<f32>,
+    pub words_per_token: usize,
+}
+
+impl SignJlKeys {
+    pub fn new(jl_dim: usize) -> Self {
+        SignJlKeys { words: Vec::new(), norms: Vec::new(), words_per_token: jl_dim.div_ceil(32) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+
+    /// Append one key (already projected to jl_dim in `proj`), with its
+    /// original L2 norm.
+    pub fn push(&mut self, proj: &[f32], norm: f32) {
+        let mut w = 0u32;
+        let mut nbits = 0;
+        for (j, &v) in proj.iter().enumerate() {
+            if v >= 0.0 {
+                w |= 1 << (j % 32);
+            }
+            nbits += 1;
+            if nbits == 32 || j == proj.len() - 1 {
+                self.words.push(w);
+                w = 0;
+                nbits = 0;
+            }
+        }
+        self.norms.push(norm);
+    }
+
+    /// QJL inner-product estimates against a projected query `rq`:
+    /// score[t] ≈ ‖k_t‖ · (sqrt(π/2)/m) · Σ_j sign_j(k_t)·rq_j
+    pub fn scores(&self, rq: &[f32], out: &mut [f32]) {
+        let m = rq.len();
+        let c = (std::f32::consts::PI / 2.0).sqrt() / m as f32;
+        for t in 0..self.len() {
+            let words = &self.words[t * self.words_per_token..(t + 1) * self.words_per_token];
+            let mut acc = 0f32;
+            for (j, &q) in rq.iter().enumerate() {
+                let bit = (words[j / 32] >> (j % 32)) & 1;
+                acc += if bit == 1 { q } else { -q };
+            }
+            out[t] += self.norms[t] * c * acc;
+        }
+    }
+
+    /// Modeled bytes: 1 bit/dim + fp16 norm per token (QJL's zero-constant
+    /// claim: no scales/zero-points).
+    pub fn modeled_bytes(&self) -> usize {
+        self.words.len() * 4 + self.norms.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_correlates_with_true_dot() {
+        let hd = 32;
+        let jl = JlProjector::new(hd, 128, 7);
+        let mut rng = Rng::new(1);
+        let q: Vec<f32> = rng.normal_vec(hd);
+        let mut rq = vec![0f32; 128];
+        jl.project(&q, &mut rq);
+        let mut store = SignJlKeys::new(128);
+        let mut truth = Vec::new();
+        let mut proj = vec![0f32; 128];
+        for _ in 0..64 {
+            let k: Vec<f32> = rng.normal_vec(hd);
+            let dot: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+            truth.push(dot);
+            let norm = k.iter().map(|x| x * x).sum::<f32>().sqrt();
+            jl.project(&k, &mut proj);
+            store.push(&proj, norm);
+        }
+        let mut est = vec![0f32; 64];
+        store.scores(&rq, &mut est);
+        // pearson correlation should be strongly positive
+        let n = 64f32;
+        let (mt, me) = (truth.iter().sum::<f32>() / n, est.iter().sum::<f32>() / n);
+        let cov: f32 = truth.iter().zip(&est).map(|(a, b)| (a - mt) * (b - me)).sum();
+        let vt: f32 = truth.iter().map(|a| (a - mt) * (a - mt)).sum();
+        let ve: f32 = est.iter().map(|b| (b - me) * (b - me)).sum();
+        let corr = cov / (vt.sqrt() * ve.sqrt());
+        assert!(corr > 0.8, "JL estimator correlation {corr}");
+    }
+
+    #[test]
+    fn bytes_model() {
+        let mut s = SignJlKeys::new(64);
+        s.push(&vec![1.0; 64], 1.0);
+        assert_eq!(s.modeled_bytes(), 2 * 4 + 2);
+    }
+}

@@ -1,0 +1,108 @@
+//! Mixed-precision KV cache: packed history blocks + dynamic
+//! full-precision windows (RPC), per-layer representations, memory
+//! accounting and the HBM budget simulator.
+
+pub mod cache;
+pub mod jl;
+pub mod memory;
+pub mod window;
+
+pub use cache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr};
+pub use memory::{fp16_kv_bytes, MemoryBudget};
+pub use window::WindowPolicy;
+
+use crate::config::{ModelConfig, QuantPlan};
+
+/// All layers' caches for one sequence, built from a [`QuantPlan`].
+pub struct SeqKvCache {
+    pub layers: Vec<LayerKvCache>,
+}
+
+impl SeqKvCache {
+    pub fn new(model: &ModelConfig, plan: &QuantPlan) -> Self {
+        Self::with_policy(model, plan, 0.0, None)
+    }
+
+    /// Fully explicit construction (used by the QJL/Atom baselines whose
+    /// representations aren't expressible as a bit plan).
+    pub fn from_cfgs(cfgs: Vec<LayerCacheCfg>) -> Self {
+        SeqKvCache { layers: cfgs.into_iter().map(LayerKvCache::new).collect() }
+    }
+
+    /// `outlier_frac` / `fixed_residual` support the KVQuant and KIVI
+    /// baselines (see baselines/mod.rs).
+    pub fn with_policy(model: &ModelConfig, plan: &QuantPlan, outlier_frac: f64,
+                       fixed_residual: Option<usize>) -> Self {
+        let layers = (0..model.n_layers).map(|i| {
+            let kb = plan.k_bits[i];
+            let vb = plan.v_bits[i];
+            let key = if kb == 16 { KeyRepr::Fp } else { KeyRepr::PerChannel { bits: kb } };
+            let value = if vb == 16 { ValueRepr::Fp } else { ValueRepr::PerToken { bits: vb } };
+            let k_window = window_for(kb, plan.k_rpc[i], fixed_residual);
+            let v_window = window_for(vb, plan.v_rpc[i], fixed_residual);
+            LayerKvCache::new(LayerCacheCfg {
+                kv_dim: model.kv_dim(),
+                head_dim: model.head_dim,
+                group: model.group,
+                key,
+                value,
+                k_window,
+                v_window,
+                outlier_frac,
+            })
+        }).collect();
+        SeqKvCache { layers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.first().map(|l| l.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn modeled_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.modeled_bytes()).sum()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.resident_bytes()).sum()
+    }
+}
+
+fn window_for(bits: u8, rpc: f64, fixed_residual: Option<usize>) -> WindowPolicy {
+    if bits == 16 {
+        return WindowPolicy::All;
+    }
+    if let Some(tokens) = fixed_residual {
+        return WindowPolicy::FixedResidual { tokens };
+    }
+    if rpc <= 0.0 {
+        WindowPolicy::None
+    } else {
+        WindowPolicy::Rpc { ratio: rpc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_cache_from_plan() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2);
+        let mut c = SeqKvCache::new(&m, &plan);
+        assert_eq!(c.layers.len(), 2);
+        let kv = m.kv_dim();
+        let mut rng = crate::util::Rng::new(1);
+        for l in &mut c.layers {
+            let k = rng.normal_vec(kv * 4);
+            let v = rng.normal_vec(kv * 4);
+            l.append(&k, &v, 4);
+        }
+        assert_eq!(c.len(), 4);
+        assert!(c.modeled_bytes() > 0);
+    }
+}

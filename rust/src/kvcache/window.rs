@@ -1,0 +1,72 @@
+//! Full-precision window policies (paper §Dynamic Pivotal Context
+//! Selection + the baselines' residual strategies).
+//!
+//! After appending `n` new tokens the window holds `current` fp tokens;
+//! the policy decides how many to *keep* fp.  Quantization then proceeds
+//! in whole groups (32 tokens) from the oldest end, so the kept count is
+//! a lower bound — the actual fp count is `current - floor((current -
+//! keep)/group)*group`.
+
+/// How the full-precision tail is managed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowPolicy {
+    /// Everything stays fp (fp16 baseline).
+    All,
+    /// KVmix dynamic RPC: keep `floor(ratio * current)` (paper:
+    /// `num_RPC = floor(r × current_RPC)`).
+    Rpc { ratio: f64 },
+    /// KIVI-style fixed residual: keep exactly `tokens` fp, regardless of
+    /// context length (never shrinks — the paper's Fig. 7 contrast).
+    FixedResidual { tokens: usize },
+    /// Quantize everything that forms a complete group (Atom / uniform
+    /// k-T,v-T baselines, and KVmix w/oRPC).
+    None,
+}
+
+impl WindowPolicy {
+    /// fp tokens to keep given the current fp window size.
+    pub fn keep(&self, current: usize) -> usize {
+        match *self {
+            WindowPolicy::All => current,
+            WindowPolicy::Rpc { ratio } => ((ratio * current as f64).floor() as usize).min(current),
+            WindowPolicy::FixedResidual { tokens } => tokens.min(current),
+            WindowPolicy::None => 0,
+        }
+    }
+
+    /// Number of whole `group`-token blocks to quantize now.
+    pub fn blocks_to_quantize(&self, current: usize, group: usize) -> usize {
+        (current - self.keep(current)) / group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rpc_shrinks_dynamically() {
+        let p = WindowPolicy::Rpc { ratio: 0.2 };
+        assert_eq!(p.keep(10), 2);
+        assert_eq!(p.keep(100), 20);
+        // grows sublinearly vs FixedResidual which stays constant
+        let f = WindowPolicy::FixedResidual { tokens: 64 };
+        assert_eq!(f.keep(100), 64);
+        assert_eq!(f.keep(10), 10);
+    }
+
+    #[test]
+    fn block_granularity() {
+        let p = WindowPolicy::Rpc { ratio: 0.1 };
+        // current=40: keep 4 -> overflow 36 -> 1 block of 32
+        assert_eq!(p.blocks_to_quantize(40, 32), 1);
+        // current=33: keep 3 -> overflow 30 -> 0 blocks
+        assert_eq!(p.blocks_to_quantize(33, 32), 0);
+    }
+
+    #[test]
+    fn none_quantizes_full_blocks() {
+        assert_eq!(WindowPolicy::None.blocks_to_quantize(70, 32), 2);
+        assert_eq!(WindowPolicy::All.blocks_to_quantize(1000, 32), 0);
+    }
+}

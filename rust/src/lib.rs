@@ -1,0 +1,39 @@
+//! # KVmix — layer importance-aware mixed-precision KV-cache quantization
+//!
+//! Rust L3 coordinator of the three-layer reproduction of *KVmix:
+//! Gradient-Based Layer Importance-Aware Mixed-Precision Quantization for
+//! KV Cache* (AAAI 2026).  The request path is pure Rust: the transformer's
+//! dense compute runs as AOT-compiled XLA executables (lowered once from
+//! JAX/Pallas by `make artifacts`), while the paper's contribution — the
+//! quantized KV cache, the dynamic Recent-Pivotal-Context windows, the
+//! fused dequantize·matvec attention kernels and the gradient-based layer
+//! profiler — lives in the modules below.
+//!
+//! Architecture map (see DESIGN.md):
+//!
+//! * [`config`]    — model / quantization / serving configuration
+//! * [`runtime`]   — PJRT client, executable registry, weights loader
+//! * [`quant`]     — bit packing (incl. the paper's 3-bit 11-per-u32
+//!   scheme) + group-wise asymmetric quantization + fused kernels
+//! * [`kvcache`]   — packed per-layer pools, RPC windows, memory accounting
+//! * [`attention`] — decode/prefill attention over the mixed cache
+//! * [`model`]     — per-layer orchestration through the XLA executables
+//! * [`profiler`]  — gradient-norm importance analysis + bit allocation
+//! * [`baselines`] — KIVI / KVQuant / QJL / Atom / uniform cache policies
+//! * [`coordinator`] — request router, continuous batcher, scheduler, engine
+//! * [`harness`]   — synthetic workloads, evaluation metrics, paper tables
+//! * [`util`]      — in-repo substrates (JSON, CLI, RNG, bench timing)
+
+pub mod attention;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod kvcache;
+pub mod model;
+pub mod profiler;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use config::{ModelConfig, QuantPlan};

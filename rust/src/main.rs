@@ -1,0 +1,161 @@
+//! `kvmix` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   generate  --prompt 1,2,3 --max-new 32 [--method kvmix|fp16|kivi|...]
+//!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
+//!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
+//!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
+//!   inspect                                       artifact + weight summary
+//!
+//! Global flags: --artifacts DIR, --fast (smaller repro workloads)
+
+use anyhow::{anyhow, bail, Result};
+use kvmix::baselines::Method;
+use kvmix::config::QuantPlan;
+use kvmix::coordinator::{server, EngineCfg, Engine, Request};
+use kvmix::harness::tables::{self, ReproCfg};
+use kvmix::model::Sampler;
+use kvmix::profiler;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::cli::Args;
+use kvmix::util::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!("usage: kvmix <generate|serve|profile|repro|inspect> [options]");
+    eprintln!("  see rust/src/main.rs header or README.md for options");
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["fast", "no-profiler", "help"]);
+    if args.flag("help") || args.positional.is_empty() {
+        usage();
+    }
+    let dir = args.get("artifacts").map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let cmd = args.positional[0].as_str();
+
+    match cmd {
+        "inspect" => {
+            let rt = Runtime::load_with(&dir, false)?;
+            println!("artifacts: {}", dir.display());
+            println!("model: {:?}", rt.model);
+            println!("buckets: {:?}", rt.buckets);
+            println!("parameters: {}", rt.weights.param_count());
+            println!("weights (fp16-modeled): {:.2} MiB",
+                     rt.weights.modeled_bytes_fp16() as f64 / (1 << 20) as f64);
+            Ok(())
+        }
+        "profile" => {
+            let rt = Runtime::load(&dir)?;
+            let n = args.usize_or("prompts", 16)?;
+            let frac = args.f64_or("high-frac", 0.25)?;
+            let imp = profiler::profile(&rt, n, args.usize_or("seed", 42)? as u64)?;
+            let plan = profiler::allocate(&imp, frac);
+            print!("{}", profiler::plan_report(&imp, &plan));
+            Ok(())
+        }
+        "generate" => {
+            let rt = Runtime::load_with(&dir, false)?;
+            let method = parse_method(&rt, &args)?;
+            let prompt: Vec<i32> = match args.get("prompt") {
+                Some(p) => p.split(',').map(|s| s.trim().parse::<i32>())
+                    .collect::<std::result::Result<_, _>>()?,
+                None => {
+                    let mut rng = Rng::new(args.usize_or("seed", 1)? as u64);
+                    kvmix::harness::workload::sample_mixture(&mut rng, 48).0
+                }
+            };
+            let max_new = args.usize_or("max-new", 32)?;
+            let mut engine = Engine::new(&rt, EngineCfg {
+                method, max_batch: 1, kv_budget: None,
+            })?;
+            engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
+                                    sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
+            let done = engine.run_to_completion()?;
+            println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
+            println!("generated: {:?}", done[0].tokens);
+            println!("{}", engine.metrics.report());
+            Ok(())
+        }
+        "serve" => {
+            let rt = Runtime::load_with(&dir, false)?;
+            let method = parse_method(&rt, &args)?;
+            let addr = args.get_or("addr", "127.0.0.1:7979");
+            let max_batch = args.usize_or("max-batch", 16)?;
+            let kv_budget = args.get("kv-budget-kib")
+                .map(|v| v.parse::<usize>().map(|k| k * 1024))
+                .transpose()?;
+            server::serve(&rt, EngineCfg { method, max_batch, kv_budget }, &addr, None)
+        }
+        "repro" => {
+            let exp = args.positional.get(1)
+                .ok_or_else(|| anyhow!("repro needs an experiment id (fig1..fig10, table1..table5, headline, all)"))?;
+            let rt = Runtime::load(&dir)?;
+            let mut cfg = if args.flag("fast") { ReproCfg::fast() } else { ReproCfg::default() };
+            cfg.hbm_bytes = args.usize_or("hbm-bytes", 0)?;
+            cfg.high_frac = args.f64_or("high-frac", cfg.high_frac)?;
+            run_repro(&rt, &cfg, exp)
+        }
+        _ => bail!("unknown command {cmd:?}"),
+    }
+}
+
+fn run_repro(rt: &Runtime, cfg: &ReproCfg, exp: &str) -> Result<()> {
+    let all = ["fig1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig10",
+               "table1", "table2", "table3", "table4", "table5", "headline"];
+    let run_one = |e: &str| -> Result<()> {
+        match e {
+            "fig1" => tables::fig1(rt, cfg),
+            "fig2" | "fig9" => tables::fig2(rt, cfg),
+            "fig4" => tables::fig4(rt, cfg),
+            "fig5" => tables::fig5(rt, cfg),
+            "fig6" | "fig12" => tables::fig6(rt, cfg),
+            "fig7" => tables::fig7(rt, cfg),
+            "fig8" => tables::fig8(rt, cfg),
+            "fig10" => tables::fig10(rt, cfg),
+            "table1" => tables::table1(rt, cfg),
+            "table2" => tables::table2(rt, cfg),
+            "table3" => tables::table3(rt, cfg),
+            "table4" | "fig11" => tables::table4(rt, cfg),
+            "table5" => tables::table5(rt, cfg),
+            "headline" => tables::headline(rt, cfg),
+            _ => bail!("unknown experiment {e:?} (options: {all:?} or 'all')"),
+        }
+    };
+    if exp == "all" {
+        for e in all {
+            run_one(e)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run_one(exp)
+    }
+}
+
+fn parse_method(rt: &Runtime, args: &Args) -> Result<Method> {
+    let plan_path = rt.artifacts_dir().join("importance.json");
+    let kvmix_plan = || -> Result<QuantPlan> {
+        QuantPlan::from_importance_file(&plan_path)
+    };
+    Ok(match args.get_or("method", "kvmix").as_str() {
+        "kvmix" => Method::Kvmix(kvmix_plan()?),
+        "fp16" => Method::Fp16,
+        "kvmix-2bit" => Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2)),
+        "kvmix-4bit" => Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 4)),
+        "kivi" => Method::Kivi { bits: 2, residual: 64 },
+        "kvquant" => Method::KvQuant { bits: 3, outlier_frac: 0.01 },
+        "qjl" => Method::Qjl { jl_dim_mult: 4, v_bits: 3 },
+        "atom" => Method::Atom { bits: 4 },
+        other => bail!("unknown method {other:?}"),
+    })
+}

@@ -1,0 +1,76 @@
+//! Model orchestration: drives the per-layer XLA executables + the
+//! quantized-cache attention to implement prefill and batched decode.
+
+pub mod sampler;
+
+use anyhow::Result;
+
+use crate::attention::prefill_attention;
+use crate::kvcache::{AttnScratch, SeqKvCache};
+use crate::runtime::Runtime;
+
+pub use sampler::Sampler;
+
+/// Stateless forward driver over a [`Runtime`].
+pub struct Forward<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl<'a> Forward<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        Forward { rt }
+    }
+
+    /// Prefill `tokens` into `cache` (which must be empty); returns the
+    /// full `[t][vocab]` logits of the prompt.
+    ///
+    /// Prompt self-attention is full precision; the K/V written to the
+    /// cache are quantized per the cache's policy as the windows overflow
+    /// (paper Fig. 4 prefill phase).
+    pub fn prefill(&self, tokens: &[i32], cache: &mut SeqKvCache) -> Result<Vec<f32>> {
+        let m = &self.rt.model;
+        let t = tokens.len();
+        debug_assert!(cache.is_empty());
+        let mut h = self.rt.embed(tokens)?;
+        let pos: Vec<i32> = (0..t as i32).collect();
+        for layer in 0..m.n_layers {
+            let (q, k, v) = self.rt.pre(layer, &h, &pos, t)?;
+            let attn = prefill_attention(&q, &k, &v, t, m.n_heads, m.n_kv_heads, m.head_dim);
+            h = self.rt.post(layer, &attn, &h, t)?;
+            cache.layers[layer].append(&k, &v, t);
+        }
+        self.rt.logits(&h, t)
+    }
+
+    /// One batched decode step: `tokens[b]` is the next input token of
+    /// sequence `b`, `caches[b]` its cache.  Returns `[b][vocab]` logits.
+    pub fn decode_step(&self, tokens: &[i32], caches: &mut [&mut SeqKvCache],
+                       scratch: &mut DecodeScratch) -> Result<Vec<f32>> {
+        let m = &self.rt.model;
+        let bsz = tokens.len();
+        debug_assert_eq!(caches.len(), bsz);
+        let qd = m.q_dim();
+        let kvd = m.kv_dim();
+        let mut h = self.rt.embed(tokens)?;
+        let pos: Vec<i32> = caches.iter().map(|c| c.len() as i32).collect();
+        scratch.attn.resize(bsz * qd, 0.0);
+        for layer in 0..m.n_layers {
+            let (q, k, v) = self.rt.pre(layer, &h, &pos, bsz)?;
+            for b in 0..bsz {
+                let lc = &mut caches[b].layers[layer];
+                lc.append(&k[b * kvd..(b + 1) * kvd], &v[b * kvd..(b + 1) * kvd], 1);
+                lc.attend(&q[b * qd..(b + 1) * qd], m.n_heads,
+                          &mut scratch.attn[b * qd..(b + 1) * qd], &mut scratch.attn_scratch);
+            }
+            h = self.rt.post(layer, &scratch.attn, &h, bsz)?;
+        }
+        self.rt.logits(&h, bsz)
+    }
+}
+
+/// Reusable buffers for decode steps.
+#[derive(Default)]
+pub struct DecodeScratch {
+    pub attn: Vec<f32>,
+    pub attn_scratch: AttnScratch,
+}

@@ -1,0 +1,79 @@
+//! Token sampling: greedy / temperature / top-k over a logits row.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Sampler {
+    Greedy,
+    /// softmax(logits / temperature) restricted to the top-k tokens
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { k, temperature } => {
+                let k = k.max(1).min(logits.len());
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap()
+                });
+                idx.truncate(k);
+                let mx = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f64> = idx.iter()
+                    .map(|&i| (((logits[i] - mx) / temperature.max(1e-6)) as f64).exp())
+                    .collect();
+                idx[rng.choice_weighted(&weights)]
+            }
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax probability of `target` under `logits` (for perplexity).
+pub fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f64 = logits.iter().map(|&x| ((x - mx) as f64).exp()).sum::<f64>().ln() + mx as f64;
+    logits[target] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let l = [0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(Sampler::Greedy.sample(&l, &mut Rng::new(0)), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_topk() {
+        let l = [0.0f32, 10.0, 9.0, -5.0, 8.0];
+        let s = Sampler::TopK { k: 3, temperature: 1.0 };
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let t = s.sample(&l, &mut rng);
+            assert!(matches!(t, 1 | 2 | 4), "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn log_prob_normalized() {
+        let l = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_prob(&l, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

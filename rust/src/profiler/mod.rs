@@ -1,0 +1,181 @@
+//! The KVmix profiler on the Rust side (paper §KV Importance Analysis,
+//! Algorithm 1): runs the AOT-lowered loss+gradient graph over a set of
+//! prompts through PJRT, averages the per-layer L2 gradient norms of
+//! W_k / W_v (Eq. 10–11), and allocates per-layer bit widths + RPC ratios
+//! (top `high_frac` of layers → 3-bit K / 4-bit V, rest 2-bit).
+//!
+//! Python never runs on this path; `python/compile/profiler.py` is the
+//! build-time reference the result is cross-checked against
+//! (rust/tests/integration.rs).
+
+use anyhow::Result;
+
+use crate::config::QuantPlan;
+use crate::harness::workload::{self, Task};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Averaged per-layer importance scores.
+#[derive(Debug, Clone)]
+pub struct Importance {
+    pub k: Vec<f64>,
+    pub v: Vec<f64>,
+    pub mean_loss: f64,
+    pub n_prompts: usize,
+}
+
+/// Run the gradient graph over `prompts` (tokens, mask) pairs.
+pub fn importance_from_prompts(rt: &Runtime, prompts: &[(Vec<i32>, Vec<f32>)])
+                               -> Result<Importance> {
+    let l = rt.model.n_layers;
+    let mut k = vec![0f64; l];
+    let mut v = vec![0f64; l];
+    let mut loss_acc = 0f64;
+    for (toks, mask) in prompts {
+        let (loss, kn, vn) = rt.profiler_grads(toks, mask)?;
+        loss_acc += loss as f64;
+        for i in 0..l {
+            k[i] += kn[i] as f64;
+            v[i] += vn[i] as f64;
+        }
+    }
+    let n = prompts.len().max(1) as f64;
+    for x in k.iter_mut().chain(v.iter_mut()) {
+        *x /= n;
+    }
+    Ok(Importance { k, v, mean_loss: loss_acc / n, n_prompts: prompts.len() })
+}
+
+/// Sample `n` prompts from the synthetic task mixture and profile.
+pub fn profile(rt: &Runtime, n_prompts: usize, seed: u64) -> Result<Importance> {
+    let t = rt.profile_seq_len;
+    let mut rng = Rng::new(seed);
+    let prompts: Vec<(Vec<i32>, Vec<f32>)> = (0..n_prompts)
+        .map(|_| workload::sample_mixture(&mut rng, t))
+        .collect();
+    importance_from_prompts(rt, &prompts)
+}
+
+/// Profile restricted to a single task (Fig. 10 robustness study).
+pub fn profile_task(rt: &Runtime, task: Task, n_prompts: usize, seed: u64)
+                    -> Result<Importance> {
+    let t = rt.profile_seq_len;
+    let mut rng = Rng::new(seed);
+    let prompts: Vec<(Vec<i32>, Vec<f32>)> = (0..n_prompts)
+        .map(|_| workload::generate(task, &mut rng, t))
+        .collect();
+    importance_from_prompts(rt, &prompts)
+}
+
+/// Rank layers and allocate bits (mirror of python profiler.allocate).
+pub fn allocate(imp: &Importance, high_frac: f64) -> QuantPlan {
+    allocate_with(imp, high_frac, 3, 4, 2, 0.2, 0.1)
+}
+
+pub fn allocate_with(imp: &Importance, high_frac: f64, k_high_bits: u8,
+                     v_high_bits: u8, low_bits: u8, rpc_high: f64,
+                     rpc_low: f64) -> QuantPlan {
+    let n = imp.k.len();
+    let n_high = ((high_frac * n as f64).round() as usize).min(n);
+    let top = |scores: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        idx.truncate(n_high);
+        idx
+    };
+    let k_top = top(&imp.k);
+    let v_top = top(&imp.v);
+    let mut plan = QuantPlan {
+        name: String::new(),
+        k_bits: vec![low_bits; n],
+        v_bits: vec![low_bits; n],
+        k_rpc: vec![rpc_low; n],
+        v_rpc: vec![rpc_low; n],
+    };
+    for &i in &k_top {
+        plan.k_bits[i] = k_high_bits;
+        plan.k_rpc[i] = rpc_high;
+    }
+    for &i in &v_top {
+        plan.v_bits[i] = v_high_bits;
+        plan.v_rpc[i] = rpc_high;
+    }
+    plan.name = format!("kvmix-k{:.2}v{:.2}", plan.avg_k_bits(), plan.avg_v_bits());
+    plan
+}
+
+/// Spearman rank correlation between two importance orderings (Fig. 10's
+/// consistency metric).
+pub fn rank_correlation(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    let rank = |xs: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        let mut r = vec![0f64; xs.len()];
+        for (rk, &i) in idx.iter().enumerate() {
+            r[i] = rk as f64;
+        }
+        r
+    };
+    let (ra, rb) = (rank(a), rank(b));
+    let d2: f64 = ra.iter().zip(&rb).map(|(x, y)| (x - y) * (x - y)).sum();
+    1.0 - 6.0 * d2 / (n as f64 * ((n * n - 1) as f64))
+}
+
+/// Fig. 6-style report of a plan.
+pub fn plan_report(imp: &Importance, plan: &QuantPlan) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("plan: {}  (avg K {:.4} bits, avg V {:.4} bits)\n",
+                        plan.name, plan.avg_k_bits(), plan.avg_v_bits()));
+    s.push_str("layer |  s_k (grad norm) | k_bits | k_rpc |  s_v (grad norm) | v_bits | v_rpc\n");
+    for i in 0..plan.n_layers() {
+        s.push_str(&format!(
+            "{:>5} | {:>16.6} | {:>6} | {:>4.0}% | {:>16.6} | {:>6} | {:>4.0}%\n",
+            i, imp.k[i], plan.k_bits[i], plan.k_rpc[i] * 100.0,
+            imp.v[i], plan.v_bits[i], plan.v_rpc[i] * 100.0));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn imp(k: Vec<f64>, v: Vec<f64>) -> Importance {
+        Importance { k, v, mean_loss: 1.0, n_prompts: 4 }
+    }
+
+    #[test]
+    fn allocation_top_frac() {
+        let i = imp(vec![5.0, 1.0, 3.0, 2.0, 0.5, 0.1, 4.0, 0.2],
+                    vec![0.1, 5.0, 0.2, 4.0, 3.0, 0.3, 0.4, 0.5]);
+        let p = allocate(&i, 0.25);
+        assert_eq!(p.k_bits.iter().filter(|&&b| b == 3).count(), 2);
+        assert_eq!(p.k_bits[0], 3);
+        assert_eq!(p.k_bits[6], 3);
+        assert_eq!(p.v_bits[1], 4);
+        assert_eq!(p.v_bits[3], 4);
+        assert!((p.avg_k_bits() - 2.25).abs() < 1e-9);
+        assert!((p.avg_v_bits() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_headline_arithmetic() {
+        // 32 layers, 6 high (18.75% ≈ paper's "20%") -> K 2.1875 / V 2.375
+        let scores: Vec<f64> = (0..32).map(|x| x as f64).collect();
+        let i = imp(scores.clone(), scores);
+        let p = allocate(&i, 0.1875);
+        assert!((p.avg_k_bits() - 2.1875).abs() < 1e-9);
+        assert!((p.avg_v_bits() - 2.375).abs() < 1e-9);
+        assert_eq!(p.name, "kvmix-k2.19v2.38");
+    }
+
+    #[test]
+    fn rank_corr() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((rank_correlation(&a, &a) - 1.0).abs() < 1e-12);
+        let rev: Vec<f64> = a.iter().rev().cloned().collect();
+        assert!((rank_correlation(&a, &rev) + 1.0).abs() < 1e-12);
+    }
+}

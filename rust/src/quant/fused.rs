@@ -1,0 +1,248 @@
+//! Fused dequantize·matvec kernels — the Rust analog of the paper's CUDA
+//! contribution (§CUDA Implementation ②③).
+//!
+//! Never materializes a dequantized f32 cache block.  Each call unpacks a
+//! block's integer stream into a reusable scratch (the "shared memory"
+//! staging of the CUDA version), then folds the affine dequantization into
+//! the dot products algebraically:
+//!
+//!   Key  (per-channel groups): score[t] = Σ_c q[c]·(Q[c,t]·s_c + m_c)
+//!        = Σ_c (q[c]·s_c)·Q[c,t]  +  Σ_c q[c]·m_c
+//!     — the bias term is token-independent and hoisted out of the loop;
+//!       the weighted sum runs channel-outer/token-inner so the inner loop
+//!       is a contiguous fused-multiply-add over the block's tokens.
+//!
+//!   Value (per-token groups):  out[c] += Σ_t p[t]·(Q[t,c]·s_{t,g} + m_{t,g})
+//!        = Σ_t (p[t]·s_{t,g})·Q[t,c]  +  bias_g(c∈g)
+//!     — token-outer/channel-inner, again contiguous in the stream.
+
+use super::groupq::PackedBlock;
+use super::pack::unpack_stream;
+
+/// Reusable scratch buffers for the fused kernels (one per engine thread).
+#[derive(Default)]
+pub struct FusedScratch {
+    pub ints: Vec<u32>,
+    pub f32s: Vec<f32>,
+    /// identity of the block currently unpacked in `ints`
+    /// (words ptr + n) — lets per-head loops skip redundant unpacks
+    tag: (usize, usize),
+}
+
+impl FusedScratch {
+    /// Invalidate the unpack cache (call if a block is mutated in place).
+    pub fn invalidate(&mut self) {
+        self.tag = (0, 0);
+    }
+}
+
+/// Attention scores of one query head against a **Key block**.
+///
+/// * `q` — the query slice for this KV head (`head_dim` f32s, RoPE'd).
+/// * `block` — channel-major Key block: stream index `c*tokens + t`,
+///   channels are the *full* kv_dim; `chan_offset` selects this head's
+///   `head_dim` channels.
+/// * `tokens` — tokens in the block (= the per-channel group size).
+/// * `out[t] +=` raw (unscaled) dot products — caller applies 1/sqrt(hd).
+pub fn key_scores_fused(q: &[f32], block: &PackedBlock, tokens: usize,
+                        chan_offset: usize, scratch: &mut FusedScratch,
+                        out: &mut [f32]) {
+    debug_assert_eq!(block.group, tokens);
+    debug_assert!(out.len() >= tokens);
+    let hd = q.len();
+    // Unpack just once per (block); callers iterating heads pass the same
+    // scratch so `ensure_unpacked` skips redundant work.
+    ensure_unpacked(block, scratch);
+    let ints = &scratch.ints;
+
+    let mut bias = 0f32;
+    for (d, &qd) in q.iter().enumerate() {
+        let c = chan_offset + d;
+        let s = block.scales[c];
+        let m = block.mins[c];
+        let qs = qd * s;
+        bias += qd * m;
+        let row = &ints[c * tokens..c * tokens + tokens];
+        for t in 0..tokens {
+            out[t] += qs * row[t] as f32;
+        }
+    }
+    let _ = hd;
+    for t in 0..tokens {
+        out[t] += bias;
+    }
+    // outlier corrections (KVQuant baseline): exact value replaces the
+    // packed approximation for its (channel, token) element
+    for &(i, v) in &block.outliers {
+        let c = i as usize / tokens;
+        if c >= chan_offset && c < chan_offset + q.len() {
+            let t = i as usize % tokens;
+            out[t] += q[c - chan_offset] * (v - block.dequant_one(i as usize, ints));
+        }
+    }
+}
+
+/// Weighted-value accumulation of one head's probabilities against a
+/// **Value block**.
+///
+/// * `p[t]` — softmax probabilities for this block's tokens.
+/// * `block` — token-major Value block: stream index `t*kv_dim + c`,
+///   groups of `block.group` consecutive channels per token.
+/// * `kv_dim` — full channel count per token; `chan_offset` selects this
+///   head's `head_dim` channels (must be group-aligned).
+/// * `out[d] +=` accumulated weighted values for d in 0..head_dim.
+pub fn value_accum_fused(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                         chan_offset: usize, head_dim: usize,
+                         scratch: &mut FusedScratch, out: &mut [f32]) {
+    debug_assert_eq!(chan_offset % block.group, 0);
+    debug_assert_eq!(head_dim % block.group, 0);
+    ensure_unpacked(block, scratch);
+    let ints = &scratch.ints;
+    let tokens = block.n / kv_dim;
+    let groups_per_token = kv_dim / block.group;
+    let g0 = chan_offset / block.group;
+    let gn = head_dim / block.group;
+
+    for (t, &pt) in p.iter().enumerate().take(tokens) {
+        if pt == 0.0 {
+            continue;
+        }
+        let base = t * kv_dim + chan_offset;
+        let row = &ints[base..base + head_dim];
+        for g in 0..gn {
+            let gi = t * groups_per_token + g0 + g;
+            let ps = pt * block.scales[gi];
+            let pm = pt * block.mins[gi];
+            let o = &mut out[g * block.group..(g + 1) * block.group];
+            let r = &row[g * block.group..(g + 1) * block.group];
+            for i in 0..block.group {
+                o[i] += ps * r[i] as f32 + pm;
+            }
+        }
+    }
+    // outlier corrections for this head's channel range
+    for &(i, v) in &block.outliers {
+        let t = i as usize / kv_dim;
+        let c = i as usize % kv_dim;
+        if c >= chan_offset && c < chan_offset + head_dim && t < p.len() && p[t] != 0.0 {
+            out[c - chan_offset] += p[t] * (v - block.dequant_one(i as usize, ints));
+        }
+    }
+}
+
+/// Unpack the block's integer stream into `scratch.ints`, skipping if the
+/// scratch already holds this block's data (tagged by words-ptr + n).
+fn ensure_unpacked(block: &PackedBlock, scratch: &mut FusedScratch) {
+    let tag = (block.words.as_ptr() as usize, block.n);
+    if scratch.tag == tag && scratch.ints.len() >= block.n {
+        return;
+    }
+    scratch.ints.resize(block.n, 0);
+    unpack_stream(&block.words, block.bits, block.n, &mut scratch.ints);
+    scratch.tag = tag;
+}
+
+/// Reference (unfused) implementations for tests/benches: dequantize the
+/// whole block to f32, then plain matvec.
+pub mod unfused {
+    use super::*;
+
+    pub fn key_scores(q: &[f32], block: &PackedBlock, tokens: usize,
+                      chan_offset: usize, scratch: &mut FusedScratch,
+                      out: &mut [f32]) {
+        scratch.f32s.resize(block.n, 0.0);
+        let mut ints = std::mem::take(&mut scratch.ints);
+        block.dequantize_into(&mut scratch.f32s, &mut ints);
+        scratch.ints = ints;
+        scratch.invalidate(); // ints no longer matches the cached tag
+        for (d, &qd) in q.iter().enumerate() {
+            let c = chan_offset + d;
+            for t in 0..tokens {
+                out[t] += qd * scratch.f32s[c * tokens + t];
+            }
+        }
+    }
+
+    pub fn value_accum(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                       chan_offset: usize, head_dim: usize,
+                       scratch: &mut FusedScratch, out: &mut [f32]) {
+        scratch.f32s.resize(block.n, 0.0);
+        let mut ints = std::mem::take(&mut scratch.ints);
+        block.dequantize_into(&mut scratch.f32s, &mut ints);
+        scratch.ints = ints;
+        scratch.invalidate();
+        let tokens = block.n / kv_dim;
+        for (t, &pt) in p.iter().enumerate().take(tokens) {
+            for d in 0..head_dim {
+                out[d] += pt * scratch.f32s[t * kv_dim + chan_offset + d];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn key_block(rng: &mut Rng, kv_dim: usize, tokens: usize, bits: u8) -> (Vec<f32>, PackedBlock) {
+        // channel-major stream
+        let data = rng.normal_vec(kv_dim * tokens);
+        let b = PackedBlock::quantize(&data, bits, tokens);
+        (data, b)
+    }
+
+    #[test]
+    fn fused_key_matches_unfused() {
+        let mut rng = Rng::new(11);
+        for bits in [1u8, 2, 3, 4] {
+            let (_, block) = key_block(&mut rng, 64, 32, bits);
+            let q = rng.normal_vec(32);
+            let mut a = vec![0f32; 32];
+            let mut b = vec![0f32; 32];
+            let mut s = FusedScratch::default();
+            key_scores_fused(&q, &block, 32, 16, &mut s, &mut a);
+            unfused::key_scores(&q, &block, 32, 16, &mut s, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "bits={bits}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_value_matches_unfused() {
+        let mut rng = Rng::new(12);
+        for bits in [1u8, 2, 3, 4] {
+            let kv_dim = 64;
+            let tokens = 32;
+            let data = rng.normal_vec(tokens * kv_dim); // token-major
+            let block = PackedBlock::quantize(&data, bits, 32);
+            let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+            let mut a = vec![0f32; 32];
+            let mut b = vec![0f32; 32];
+            let mut s = FusedScratch::default();
+            value_accum_fused(&p, &block, kv_dim, 32, 32, &mut s, &mut a);
+            unfused::value_accum(&p, &block, kv_dim, 32, 32, &mut s, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "bits={bits}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_key_accumulates() {
+        // out is += so two calls double
+        let mut rng = Rng::new(13);
+        let (_, block) = key_block(&mut rng, 32, 32, 2);
+        let q = rng.normal_vec(32);
+        let mut s = FusedScratch::default();
+        let mut once = vec![0f32; 32];
+        key_scores_fused(&q, &block, 32, 0, &mut s, &mut once);
+        let mut twice = vec![0f32; 32];
+        key_scores_fused(&q, &block, 32, 0, &mut s, &mut twice);
+        key_scores_fused(&q, &block, 32, 0, &mut s, &mut twice);
+        for (x, y) in once.iter().zip(&twice) {
+            assert!((2.0 * x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Group-wise asymmetric quantization (paper §Asymmetric Low-Bit
+//! Quantization) over packed streams.
+//!
+//! A [`PackedBlock`] holds one quantized cache block as a contiguous
+//! element stream: consecutive runs of `group` elements share one
+//! (scale, min) pair.  The *stream order* encodes the paper's asymmetric
+//! strategy (decided by the cache layer, [`crate::kvcache`]):
+//!
+//! * Key blocks    — channel-major: each channel's `group` tokens are one
+//!   group  ⇒ per-channel quantization.
+//! * Value blocks  — token-major: each token's channels split into groups
+//!   of `group` ⇒ per-token quantization.
+//!
+//! Numerics match python/compile/kernels/ref.py exactly:
+//! `s = (max-min)/qmax` (s<1e-6 ⇒ 1.0), `q = clip(floor((x-min)/s + .5))`,
+//! `x~ = q·s + min`, with 3-bit clipping index-dependent per Eq. 12.
+
+use super::pack::{pack_stream, qmax, qmax_at, unpack_stream, words_for};
+
+pub const EPS: f32 = 1e-6;
+
+/// One quantized block: packed words + per-group (scale, min).
+///
+/// `outliers` optionally holds KVQuant-style full-precision exceptions:
+/// the largest-|x| fraction of elements is excluded from the group
+/// statistics and stored exactly as (stream index, value); the fused
+/// kernels apply them as corrections after the packed pass.
+#[derive(Debug, Clone, Default)]
+pub struct PackedBlock {
+    pub bits: u8,
+    /// total elements in the stream
+    pub n: usize,
+    /// elements per (scale, min) group; groups are stream-consecutive
+    pub group: usize,
+    pub words: Vec<u32>,
+    pub scales: Vec<f32>,
+    pub mins: Vec<f32>,
+    pub outliers: Vec<(u32, f32)>,
+}
+
+impl PackedBlock {
+    /// Quantize `data` (stream order) into a new block.
+    pub fn quantize(data: &[f32], bits: u8, group: usize) -> Self {
+        let mut b = PackedBlock::default();
+        b.quantize_into(data, bits, group, &mut Vec::new());
+        b
+    }
+
+    /// Quantize reusing `scratch` for the intermediate integer stream
+    /// (the fused quantize+append path calls this in a loop).
+    pub fn quantize_into(&mut self, data: &[f32], bits: u8, group: usize,
+                         scratch: &mut Vec<u32>) {
+        assert!(data.len() % group == 0, "stream {} not a multiple of group {group}", data.len());
+        let n_groups = data.len() / group;
+        self.bits = bits;
+        self.n = data.len();
+        self.group = group;
+        self.scales.clear();
+        self.mins.clear();
+        self.outliers.clear();
+        self.scales.reserve(n_groups);
+        self.mins.reserve(n_groups);
+        scratch.clear();
+        scratch.resize(data.len(), 0);
+
+        let qm = qmax(bits) as f32;
+        for (g, chunk) in data.chunks(group).enumerate() {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &x in chunk {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            let mut s = (mx - mn) / qm;
+            if s < EPS {
+                s = 1.0;
+            }
+            self.scales.push(s);
+            self.mins.push(mn);
+            let inv = 1.0 / s;
+            let base = g * group;
+            for (i, &x) in chunk.iter().enumerate() {
+                let q = ((x - mn) * inv + 0.5).floor();
+                let cap = qmax_at(bits, base + i) as f32;
+                scratch[base + i] = q.clamp(0.0, cap) as u32;
+            }
+        }
+        pack_stream(scratch, bits, &mut self.words);
+    }
+
+    /// Quantize with a KVQuant-style outlier budget: the `frac` largest-|x|
+    /// elements per block are excluded from group statistics and stored
+    /// exactly in `self.outliers`.
+    pub fn quantize_outliers_into(&mut self, data: &[f32], bits: u8, group: usize,
+                                  frac: f64, scratch: &mut Vec<u32>) {
+        let n_out = ((data.len() as f64 * frac).ceil() as usize).min(data.len());
+        if n_out == 0 {
+            self.quantize_into(data, bits, group, scratch);
+            return;
+        }
+        // indices of the n_out largest |x|
+        let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+        idx.select_nth_unstable_by(n_out - 1, |&a, &b| {
+            data[b as usize].abs().partial_cmp(&data[a as usize].abs()).unwrap()
+        });
+        let mut keep: Vec<(u32, f32)> =
+            idx[..n_out].iter().map(|&i| (i, data[i as usize])).collect();
+        keep.sort_unstable_by_key(|&(i, _)| i);
+        // neutralize outliers: replace with the mean of their group's
+        // remaining elements so stats tighten around the inliers
+        let mut tmp = data.to_vec();
+        for &(i, _) in &keep {
+            let g = i as usize / group;
+            let gslice = &data[g * group..(g + 1) * group];
+            let inlier_sum: f32 = gslice.iter().sum::<f32>()
+                - keep.iter().filter(|&&(j, _)| (j as usize) / group == g)
+                    .map(|&(_, v)| v).sum::<f32>();
+            let n_in = group - keep.iter().filter(|&&(j, _)| (j as usize) / group == g).count();
+            tmp[i as usize] = if n_in > 0 { inlier_sum / n_in as f32 } else { 0.0 };
+        }
+        self.quantize_into(&tmp, bits, group, scratch);
+        self.outliers = keep;
+    }
+
+    /// Dequantized value of a single stream element (slow path — used for
+    /// outlier corrections in the fused kernels).
+    #[inline]
+    pub fn dequant_one(&self, idx: usize, ints: &[u32]) -> f32 {
+        let g = idx / self.group;
+        ints[idx] as f32 * self.scales[g] + self.mins[g]
+    }
+
+    /// Dequantize the full stream into `out[..n]`.
+    pub fn dequantize_into(&self, out: &mut [f32], scratch: &mut Vec<u32>) {
+        assert!(out.len() >= self.n);
+        scratch.clear();
+        scratch.resize(self.n, 0);
+        unpack_stream(&self.words, self.bits, self.n, scratch);
+        for (g, chunk) in scratch[..self.n].chunks(self.group).enumerate() {
+            let (s, m) = (self.scales[g], self.mins[g]);
+            let base = g * self.group;
+            for (i, &q) in chunk.iter().enumerate() {
+                out[base + i] = q as f32 * s + m;
+            }
+        }
+        for &(i, v) in &self.outliers {
+            out[i as usize] = v;
+        }
+    }
+
+    /// Modeled memory footprint in bytes, counting scale/min at fp16 as a
+    /// production implementation would store them (paper Fig. 7 metric).
+    pub fn modeled_bytes(&self) -> usize {
+        // fp16 scale+min per group; outliers as (u32 idx, fp16 value)
+        self.words.len() * 4 + self.scales.len() * 2 * 2 + self.outliers.len() * 6
+    }
+
+    /// Actual resident bytes of this block's buffers.
+    pub fn resident_bytes(&self) -> usize {
+        self.words.capacity() * 4 + (self.scales.capacity() + self.mins.capacity()) * 4
+    }
+}
+
+/// Quant error statistics for a block vs the original stream.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantError {
+    pub mse: f64,
+    pub max_abs: f32,
+}
+
+pub fn quant_error(block: &PackedBlock, original: &[f32]) -> QuantError {
+    let mut out = vec![0f32; block.n];
+    block.dequantize_into(&mut out, &mut Vec::new());
+    let mut mse = 0f64;
+    let mut max_abs = 0f32;
+    for (a, b) in out.iter().zip(original) {
+        let d = (a - b).abs();
+        mse += (d as f64) * (d as f64);
+        max_abs = max_abs.max(d);
+    }
+    QuantError { mse: mse / original.len() as f64, max_abs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_bound() {
+        let mut rng = Rng::new(3);
+        for bits in [1u8, 2, 3, 4] {
+            let data = rng.normal_vec(256);
+            let block = PackedBlock::quantize(&data, bits, 32);
+            let mut out = vec![0f32; 256];
+            block.dequantize_into(&mut out, &mut Vec::new());
+            for (g, chunk) in data.chunks(32).enumerate() {
+                let s = block.scales[g];
+                for (i, &x) in chunk.iter().enumerate() {
+                    let err = (out[g * 32 + i] - x).abs();
+                    // 3-bit Eq.12: every 11th *stream* element only has 2
+                    // bits -> its clip point is 3s not 7s; error can reach
+                    // (qmax - cap)*s + s/2 there.
+                    let cap = qmax_at(bits, g * 32 + i) as f32;
+                    let qm = qmax(bits) as f32;
+                    let bound = if cap < qm { (qm - cap) * s + s / 2.0 } else { s / 2.0 };
+                    assert!(err <= bound + 1e-4, "bits={bits} err={err} bound={bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_group_lossless() {
+        let data = vec![2.5f32; 64];
+        let block = PackedBlock::quantize(&data, 2, 32);
+        let mut out = vec![0f32; 64];
+        block.dequantize_into(&mut out, &mut Vec::new());
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn endpoints_exact() {
+        let mut rng = Rng::new(9);
+        let data = rng.normal_vec(32);
+        let block = PackedBlock::quantize(&data, 2, 32);
+        let mut out = vec![0f32; 32];
+        block.dequantize_into(&mut out, &mut Vec::new());
+        let imn = data.iter().enumerate().min_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let imx = data.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert!((out[imn] - data[imn]).abs() < 1e-6);
+        assert!((out[imx] - data[imx]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(5);
+        let data = rng.normal_vec(1024);
+        let errs: Vec<f64> = [1u8, 2, 3, 4].iter()
+            .map(|&b| quant_error(&PackedBlock::quantize(&data, b, 32), &data).mse)
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn modeled_bytes_compression() {
+        let data = vec![0.5f32; 4096];
+        let b2 = PackedBlock::quantize(&data, 2, 32);
+        // 4096 elts at 2 bit = 1024 bytes + 128 groups * 4B overhead
+        assert_eq!(b2.modeled_bytes(), 4096 / 16 * 4 + 128 * 4);
+        let ratio = (4096.0 * 2.0) / b2.modeled_bytes() as f64; // vs fp16
+        assert!(ratio > 5.0, "2-bit compression vs fp16 = {ratio}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Low-bit quantization: packing, group-wise asymmetric quant, fused
+//! dequantize·matvec kernels (the paper's CUDA-kernel contribution mapped
+//! to CPU — see DESIGN.md §Hardware-Adaptation).
+
+pub mod fused;
+pub mod groupq;
+pub mod pack;
+
+pub use fused::{key_scores_fused, value_accum_fused, FusedScratch};
+pub use groupq::{quant_error, PackedBlock, QuantError};
+pub use pack::{elems_per_word, pack_stream, qmax, qmax_at, unpack_stream, words_for};

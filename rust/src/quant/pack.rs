@@ -1,0 +1,174 @@
+//! Bit packing for quantized KV elements.
+//!
+//! Uniform widths (1/2/4 bits) pack `32/bits` elements per `u32` word.
+//! 3-bit uses the paper's Eq. 12 scheme: **11 elements per word** — ten
+//! 3-bit fields in bits 0..30 plus one 2-bit field in bits 30..32
+//! (`q_max` = 7 for indices 0..9, 3 for index 10) — a 10% density win over
+//! the naive 10-per-word layout.  Layout is pinned by the python oracle
+//! (kernels/ref.py::pack3) and the goldens.
+
+/// Elements per u32 word for a given bit width.
+pub const fn elems_per_word(bits: u8) -> usize {
+    match bits {
+        3 => 11,
+        b => 32 / b as usize,
+    }
+}
+
+/// Words needed to pack `n` elements.
+pub const fn words_for(n: usize, bits: u8) -> usize {
+    let per = elems_per_word(bits);
+    n.div_ceil(per)
+}
+
+/// Max quantized value for element index `i` within its pack-block
+/// (only 3-bit is index-dependent — paper Eq. 12).
+#[inline]
+pub fn qmax_at(bits: u8, i: usize) -> u32 {
+    match bits {
+        3 => {
+            if i % 11 == 10 {
+                3
+            } else {
+                7
+            }
+        }
+        b => (1u32 << b) - 1,
+    }
+}
+
+/// Largest qmax for the width (group scale uses this: s = range / qmax).
+#[inline]
+pub const fn qmax(bits: u8) -> u32 {
+    match bits {
+        3 => 7,
+        b => (1u32 << b) - 1,
+    }
+}
+
+/// Pack a stream of already-clipped quantized values.  `out` is cleared.
+pub fn pack_stream(q: &[u32], bits: u8, out: &mut Vec<u32>) {
+    out.clear();
+    out.reserve(words_for(q.len(), bits));
+    match bits {
+        3 => {
+            for chunk in q.chunks(11) {
+                let mut w = 0u32;
+                for (i, &v) in chunk.iter().enumerate() {
+                    if i == 10 {
+                        w |= (v & 0x3) << 30;
+                    } else {
+                        w |= (v & 0x7) << (3 * i);
+                    }
+                }
+                out.push(w);
+            }
+        }
+        b => {
+            let per = elems_per_word(b);
+            let mask = (1u32 << b) - 1;
+            for chunk in q.chunks(per) {
+                let mut w = 0u32;
+                for (i, &v) in chunk.iter().enumerate() {
+                    w |= (v & mask) << (b as usize * i);
+                }
+                out.push(w);
+            }
+        }
+    }
+}
+
+/// Unpack `n` elements from a packed stream into `out[..n]`.
+pub fn unpack_stream(words: &[u32], bits: u8, n: usize, out: &mut [u32]) {
+    debug_assert!(out.len() >= n);
+    match bits {
+        3 => {
+            let mut idx = 0usize;
+            'outer: for &w in words {
+                for i in 0..11 {
+                    if idx == n {
+                        break 'outer;
+                    }
+                    out[idx] = if i == 10 { (w >> 30) & 0x3 } else { (w >> (3 * i)) & 0x7 };
+                    idx += 1;
+                }
+            }
+            debug_assert_eq!(idx, n);
+        }
+        b => {
+            let per = elems_per_word(b);
+            let mask = (1u32 << b) - 1;
+            let bu = b as usize;
+            let full_words = n / per;
+            let mut idx = 0usize;
+            for &w in &words[..full_words] {
+                // fixed-trip inner loop — autovectorizes cleanly
+                for i in 0..per {
+                    out[idx + i] = (w >> (bu * i)) & mask;
+                }
+                idx += per;
+            }
+            if idx < n {
+                let w = words[full_words];
+                for i in 0..(n - idx) {
+                    out[idx + i] = (w >> (bu * i)) & mask;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn density_claims() {
+        assert_eq!(elems_per_word(3), 11); // paper's +10% over 10/word
+        assert_eq!(elems_per_word(2), 16);
+        assert_eq!(elems_per_word(4), 8);
+        assert_eq!(elems_per_word(1), 32);
+        assert_eq!(words_for(2048, 3), 187); // vs 205 naive
+    }
+
+    #[test]
+    fn qmax_schedule() {
+        assert_eq!(qmax_at(3, 0), 7);
+        assert_eq!(qmax_at(3, 9), 7);
+        assert_eq!(qmax_at(3, 10), 3);
+        assert_eq!(qmax_at(3, 21), 3);
+        assert_eq!(qmax_at(2, 10), 3);
+        assert_eq!(qmax_at(4, 5), 15);
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(1);
+        for bits in [1u8, 2, 3, 4] {
+            for n in [1usize, 7, 11, 32, 33, 352, 1000] {
+                let q: Vec<u32> = (0..n).map(|i| rng.below(qmax_at(bits, i) as usize + 1) as u32).collect();
+                let mut words = Vec::new();
+                pack_stream(&q, bits, &mut words);
+                assert_eq!(words.len(), words_for(n, bits));
+                let mut out = vec![0u32; n];
+                unpack_stream(&words, bits, n, &mut out);
+                assert_eq!(out, q, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack3_matches_python_layout() {
+        // fixed vector with in-range fields: ten 3-bit values + one 2-bit
+        let q: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 0, 1, 2, 2];
+        let mut words = Vec::new();
+        pack_stream(&q, 3, &mut words);
+        let mut expect = 0u32;
+        for (i, &v) in q[..10].iter().enumerate() {
+            expect |= v << (3 * i);
+        }
+        expect |= 2 << 30;
+        assert_eq!(words, vec![expect]);
+    }
+}

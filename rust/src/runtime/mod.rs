@@ -1,0 +1,255 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (HLO **text**, the 0.5.1-safe
+//! interchange — see /opt/xla-example/README.md), compiles them on the CPU
+//! PJRT client, keeps all model weights device-resident, and exposes the
+//! typed `pre` / `post` / `logits` / `profiler_grads` entry points the
+//! engine drives.  Shapes are bucketized (manifest `buckets`); inputs are
+//! zero-padded up to the bucket and outputs truncated back.
+
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::ModelConfig;
+use crate::util::json::parse_file;
+pub use weights::{Tensor, Weights};
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub model: ModelConfig,
+    pub buckets: Vec<usize>,
+    dir: PathBuf,
+    /// compiled executables: ("pre"|"post"|"logits", bucket) -> exe
+    exes: HashMap<(&'static str, usize), PjRtLoadedExecutable>,
+    profiler_exe: Option<PjRtLoadedExecutable>,
+    pub profile_seq_len: usize,
+    /// device-resident weight buffers by canonical name
+    wbuf: HashMap<String, PjRtBuffer>,
+    pub weights: Weights,
+}
+
+impl Runtime {
+    /// Load the manifest, weights and all bucketed executables (with the
+    /// profiler graph).
+    pub fn load(dir: &Path) -> Result<Self> {
+        Self::load_with(dir, true)
+    }
+
+    /// `with_profiler=false` skips compiling the (large) gradient graph.
+    pub fn load_with(dir: &Path, with_profiler: bool) -> Result<Self> {
+        let manifest = parse_file(&dir.join("manifest.json"))
+            .context("artifacts missing — run `make artifacts` first")?;
+        let model = ModelConfig::from_json(manifest.get("model")?)?;
+        let buckets = manifest.get("buckets")?.usize_vec()?;
+        let weights = Weights::load(dir, &manifest)?;
+        let client = PjRtClient::cpu()?;
+
+        let mut exes = HashMap::new();
+        let index = manifest.get("executables")?;
+        for kind in ["pre", "post", "logits"] {
+            let table = index.get(kind)?.as_obj()?;
+            for (bucket, file) in table {
+                let b: usize = bucket.parse()?;
+                let exe = compile_hlo(&client, &dir.join(file.as_str()?))?;
+                exes.insert((kind, b), exe);
+            }
+        }
+        let profile_seq_len = index.get("profiler")?.get("seq_len")?.as_usize()?;
+        let profiler_exe = if with_profiler {
+            let f = index.get("profiler")?.get("file")?.as_str()?.to_string();
+            Some(compile_hlo(&client, &dir.join(&f))?)
+        } else {
+            None
+        };
+
+        // device-resident weights
+        let mut wbuf = HashMap::new();
+        for t in &weights.tensors {
+            let buf = client.buffer_from_host_buffer(&t.data, &t.shape, None)?;
+            wbuf.insert(t.name.clone(), buf);
+        }
+
+        Ok(Runtime { client, model, buckets, dir: dir.to_path_buf(), exes,
+                     profiler_exe, profile_seq_len, wbuf, weights })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Smallest bucket >= rows.
+    pub fn bucket_for(&self, rows: usize) -> Result<usize> {
+        self.buckets.iter().copied().filter(|&b| b >= rows).min()
+            .ok_or_else(|| anyhow!("no bucket fits {rows} rows (buckets {:?})", self.buckets))
+    }
+
+    fn exe(&self, kind: &'static str, bucket: usize) -> Result<&PjRtLoadedExecutable> {
+        self.exes.get(&(kind, bucket))
+            .ok_or_else(|| anyhow!("no {kind} executable for bucket {bucket}"))
+    }
+
+    fn wb(&self, name: &str) -> Result<&PjRtBuffer> {
+        self.wbuf.get(name).ok_or_else(|| anyhow!("no weight buffer {name}"))
+    }
+
+    fn layer_wb(&self, layer: usize, field: &str) -> Result<&PjRtBuffer> {
+        self.wb(&format!("layers.{layer}.{field}"))
+    }
+
+    /// RMSNorm + QKV projection + RoPE for `rows` tokens of `layer`
+    /// (Pallas kernel inside the lowered graph).
+    ///
+    /// `hidden`: `[rows][d_model]`, `pos`: `[rows]` absolute positions.
+    /// Returns (q `[rows][q_dim]`, k `[rows][kv_dim]`, v `[rows][kv_dim]`).
+    pub fn pre(&self, layer: usize, hidden: &[f32], pos: &[i32], rows: usize)
+               -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = self.model.d_model;
+        debug_assert_eq!(hidden.len(), rows * d);
+        let b = self.bucket_for(rows)?;
+        let hbuf = self.padded_f32(hidden, rows * d, b * d, &[b, d])?;
+        let pbuf = self.padded_i32(pos, rows, b, &[b])?;
+        let exe = self.exe("pre", b)?;
+        let out = exe.execute_b::<&PjRtBuffer>(&[
+            &hbuf, &pbuf,
+            self.layer_wb(layer, "ln1")?, self.layer_wb(layer, "wq")?,
+            self.layer_wb(layer, "wk")?, self.layer_wb(layer, "wv")?,
+        ])?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("pre returned {} outputs", parts.len());
+        }
+        let mut q = parts[0].to_vec::<f32>()?;
+        let mut k = parts[1].to_vec::<f32>()?;
+        let mut v = parts[2].to_vec::<f32>()?;
+        q.truncate(rows * self.model.q_dim());
+        k.truncate(rows * self.model.kv_dim());
+        v.truncate(rows * self.model.kv_dim());
+        Ok((q, k, v))
+    }
+
+    /// Attention out-projection + residual + MLP for `rows` tokens.
+    pub fn post(&self, layer: usize, attn: &[f32], resid: &[f32], rows: usize)
+                -> Result<Vec<f32>> {
+        let d = self.model.d_model;
+        let qd = self.model.q_dim();
+        let b = self.bucket_for(rows)?;
+        let abuf = self.padded_f32(attn, rows * qd, b * qd, &[b, qd])?;
+        let rbuf = self.padded_f32(resid, rows * d, b * d, &[b, d])?;
+        let exe = self.exe("post", b)?;
+        let out = exe.execute_b::<&PjRtBuffer>(&[
+            &abuf, &rbuf,
+            self.layer_wb(layer, "wo")?, self.layer_wb(layer, "ln2")?,
+            self.layer_wb(layer, "wg")?, self.layer_wb(layer, "wu")?,
+            self.layer_wb(layer, "wd")?,
+        ])?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let mut h = lit.to_vec::<f32>()?;
+        h.truncate(rows * d);
+        Ok(h)
+    }
+
+    /// Final RMSNorm + LM head.
+    pub fn logits(&self, hidden: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let d = self.model.d_model;
+        let b = self.bucket_for(rows)?;
+        let hbuf = self.padded_f32(hidden, rows * d, b * d, &[b, d])?;
+        let exe = self.exe("logits", b)?;
+        let out = exe.execute_b::<&PjRtBuffer>(&[&hbuf, self.wb("lnf")?, self.wb("lm_head")?])?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let mut l = lit.to_vec::<f32>()?;
+        l.truncate(rows * self.model.vocab);
+        Ok(l)
+    }
+
+    /// KVmix profiler graph: loss + per-layer L2 grad norms of W_k / W_v
+    /// for one prompt (padded/truncated to `profile_seq_len`).
+    pub fn profiler_grads(&self, tokens: &[i32], mask: &[f32])
+                          -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let t = self.profile_seq_len;
+        let exe = self.profiler_exe.as_ref()
+            .ok_or_else(|| anyhow!("runtime loaded without profiler"))?;
+        let used = tokens.len().min(t);
+        let tb = self.padded_i32(&tokens[..used], used, t, &[1, t])?;
+        let mut m = mask[..mask.len().min(t)].to_vec();
+        m.resize(t, 0.0);
+        let mb = self.client.buffer_from_host_buffer(&m, &[1, t], None)?;
+        let mut args: Vec<&PjRtBuffer> = vec![&tb, &mb];
+        for tensor in &self.weights.tensors {
+            args.push(self.wb(&tensor.name)?);
+        }
+        let out = exe.execute_b(&args)?;
+        let parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("profiler returned {} outputs", parts.len());
+        }
+        let loss = parts[0].to_vec::<f32>()?[0];
+        Ok((loss, parts[1].to_vec::<f32>()?, parts[2].to_vec::<f32>()?))
+    }
+
+    /// Embedding lookup stays host-side (a row gather over the table).
+    pub fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let e = self.weights.get("embed")?;
+        let d = self.model.d_model;
+        let mut out = vec![0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.model.vocab {
+                bail!("token {t} out of vocab");
+            }
+            out[i * d..(i + 1) * d].copy_from_slice(&e.data[t * d..(t + 1) * d]);
+        }
+        Ok(out)
+    }
+
+    fn padded_f32(&self, data: &[f32], used: usize, padded: usize, dims: &[usize])
+                  -> Result<PjRtBuffer> {
+        debug_assert!(data.len() >= used);
+        if used == padded {
+            return Ok(self.client.buffer_from_host_buffer(&data[..used], dims, None)?);
+        }
+        let mut tmp = Vec::with_capacity(padded);
+        tmp.extend_from_slice(&data[..used]);
+        tmp.resize(padded, 0.0);
+        Ok(self.client.buffer_from_host_buffer(&tmp, dims, None)?)
+    }
+
+    fn padded_i32(&self, data: &[i32], used: usize, padded: usize, dims: &[usize])
+                  -> Result<PjRtBuffer> {
+        if used == padded {
+            return Ok(self.client.buffer_from_host_buffer(&data[..used], dims, None)?);
+        }
+        let mut tmp = Vec::with_capacity(padded);
+        tmp.extend_from_slice(&data[..used]);
+        tmp.resize(padded, 0);
+        Ok(self.client.buffer_from_host_buffer(&tmp, dims, None)?)
+    }
+}
+
+fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+        .with_context(|| format!("loading {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Default artifacts directory: $KVMIX_ARTIFACTS, else walk up from cwd.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("KVMIX_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = d.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !d.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

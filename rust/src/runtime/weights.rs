@@ -1,0 +1,83 @@
+//! Checkpoint loader: `artifacts/weights.bin` (raw f32 LE, canonical
+//! order) + the manifest's weight table.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use byteorder::{ByteOrder, LittleEndian};
+
+use crate::util::json::Json;
+
+/// One named tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All model weights, canonical order preserved.
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn load(dir: &Path, manifest: &Json) -> Result<Self> {
+        let entries = manifest.get("weights")?.as_arr()?;
+        let bin_path = dir.join("weights.bin");
+        let mut raw = Vec::new();
+        std::fs::File::open(&bin_path)
+            .with_context(|| format!("opening {}", bin_path.display()))?
+            .read_to_end(&mut raw)?;
+
+        let mut tensors = Vec::with_capacity(entries.len());
+        let mut by_name = HashMap::new();
+        for e in entries {
+            let name = e.get("name")?.as_str()?.to_string();
+            let shape = e.get("shape")?.usize_vec()?;
+            let offset = e.get("offset")?.as_usize()?;
+            let numel = e.get("numel")?.as_usize()?;
+            if shape.iter().product::<usize>() != numel {
+                bail!("{name}: shape {shape:?} != numel {numel}");
+            }
+            let end = offset + numel * 4;
+            if end > raw.len() {
+                bail!("{name}: extends past weights.bin ({end} > {})", raw.len());
+            }
+            let mut data = vec![0f32; numel];
+            LittleEndian::read_f32_into(&raw[offset..end], &mut data);
+            by_name.insert(name.clone(), tensors.len());
+            tensors.push(Tensor { name, shape, data });
+        }
+        Ok(Weights { tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("missing weight {name:?}"))
+    }
+
+    pub fn layer(&self, i: usize, field: &str) -> Result<&Tensor> {
+        self.get(&format!("layers.{i}.{field}"))
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Modeled resident bytes of the weights at fp16 (Fig. 7's "model
+    /// memory before inference" term).
+    pub fn modeled_bytes_fp16(&self) -> usize {
+        self.param_count() * 2
+    }
+}

@@ -1,0 +1,84 @@
+//! Micro-benchmark timing substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the harness=false binaries under rust/benches/, each
+//! of which uses [`bench`] / [`Stats`] for warmup + repeated timing and
+//! prints criterion-style lines.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    /// nanoseconds per iteration
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean),
+            fmt_ns(self.p50),
+            fmt_ns(self.p95),
+            self.iters
+        )
+    }
+
+    /// items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, auto-scaling iteration count to fill ~`budget_ms` per sample.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Stats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let per_sample = (budget_ms as f64 * 1e6 / 8.0).max(once);
+    let inner = ((per_sample / once) as usize).clamp(1, 1_000_000);
+    let samples = 10usize;
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..inner {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / inner as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Stats {
+        name: name.to_string(),
+        mean,
+        p50: times[times.len() / 2],
+        p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+        min: times[0],
+        iters: inner * samples,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

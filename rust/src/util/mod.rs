@@ -1,0 +1,10 @@
+//! In-repo substrates for functionality whose usual crates are not
+//! available in this offline environment (see Cargo.toml note).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,217 @@
+//! Property-based tests (hand-rolled generator loop — proptest is not
+//! available offline).  Each property runs a few hundred randomized cases
+//! seeded deterministically; failures print the seed for replay.
+
+use kvmix::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
+use kvmix::quant::{pack_stream, qmax_at, unpack_stream, words_for, PackedBlock};
+use kvmix::util::json;
+use kvmix::util::Rng;
+
+fn for_cases(n: usize, seed0: u64, mut f: impl FnMut(u64, &mut Rng)) {
+    for i in 0..n {
+        let seed = seed0.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip() {
+    for_cases(300, 1, |seed, rng| {
+        let bits = [1u8, 2, 3, 4][rng.below(4)];
+        let n = rng.range(1, 600);
+        let q: Vec<u32> = (0..n).map(|i| rng.below(qmax_at(bits, i) as usize + 1) as u32).collect();
+        let mut words = Vec::new();
+        pack_stream(&q, bits, &mut words);
+        assert_eq!(words.len(), words_for(n, bits), "seed {seed}");
+        let mut out = vec![0u32; n];
+        unpack_stream(&words, bits, n, &mut out);
+        assert_eq!(out, q, "seed {seed} bits {bits} n {n}");
+    });
+}
+
+#[test]
+fn prop_quant_error_bounded() {
+    // per-element |x - x~| <= s/2 except 3-bit Eq.12 2-bit slots
+    for_cases(150, 2, |seed, rng| {
+        let bits = [1u8, 2, 4][rng.below(3)];
+        let groups = rng.range(1, 6);
+        let scale = rng.uniform(0.01, 20.0) as f32;
+        let data: Vec<f32> = (0..groups * 32).map(|_| rng.normal_f32() * scale).collect();
+        let b = PackedBlock::quantize(&data, bits, 32);
+        let mut out = vec![0f32; data.len()];
+        b.dequantize_into(&mut out, &mut Vec::new());
+        for (g, chunk) in data.chunks(32).enumerate() {
+            let s = b.scales[g];
+            for (i, &x) in chunk.iter().enumerate() {
+                let err = (out[g * 32 + i] - x).abs();
+                assert!(err <= s / 2.0 + s * 1e-3 + 1e-6,
+                        "seed {seed} bits {bits} err {err} s {s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quant_idempotent() {
+    // quantizing an already-dequantized stream is exact (fixed point)
+    for_cases(80, 3, |seed, rng| {
+        let bits = [1u8, 2, 4][rng.below(3)];
+        let data: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let b1 = PackedBlock::quantize(&data, bits, 32);
+        let mut d1 = vec![0f32; 64];
+        b1.dequantize_into(&mut d1, &mut Vec::new());
+        let b2 = PackedBlock::quantize(&d1, bits, 32);
+        let mut d2 = vec![0f32; 64];
+        b2.dequantize_into(&mut d2, &mut Vec::new());
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "seed {seed}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_outliers_reduce_error() {
+    for_cases(60, 4, |seed, rng| {
+        let mut data: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        // inject heavy outliers
+        for _ in 0..4 {
+            let i = rng.below(128);
+            data[i] = (rng.normal_f32()) * 40.0;
+        }
+        let plain = kvmix::quant::quant_error(&PackedBlock::quantize(&data, 3, 32), &data);
+        let mut ob = PackedBlock::default();
+        ob.quantize_outliers_into(&data, 3, 32, 0.05, &mut Vec::new());
+        let with_out = kvmix::quant::quant_error(&ob, &data);
+        assert!(with_out.mse <= plain.mse + 1e-9,
+                "seed {seed}: outlier mse {} > plain {}", with_out.mse, plain.mse);
+    });
+}
+
+#[test]
+fn prop_window_policies() {
+    for_cases(200, 5, |seed, rng| {
+        let ratio = rng.f64();
+        let current = rng.below(4096);
+        let keep = WindowPolicy::Rpc { ratio }.keep(current);
+        assert!(keep <= current, "seed {seed}");
+        assert_eq!(keep, ((ratio * current as f64).floor() as usize).min(current));
+        let blocks = WindowPolicy::Rpc { ratio }.blocks_to_quantize(current, 32);
+        assert!(blocks * 32 <= current - keep, "seed {seed}");
+        // fixed residual never goes below min(tokens, current)
+        let t = rng.below(256);
+        assert_eq!(WindowPolicy::FixedResidual { tokens: t }.keep(current), t.min(current));
+    });
+}
+
+#[test]
+fn prop_cache_token_accounting() {
+    // k_hist + k_fp == v_hist + v_fp == total appended, hist % group == 0
+    for_cases(40, 6, |seed, rng| {
+        let kv_dim = 64;
+        let cfg = LayerCacheCfg {
+            kv_dim, head_dim: 32, group: 32,
+            key: KeyRepr::PerChannel { bits: [1u8, 2, 3, 4][rng.below(4)] },
+            value: ValueRepr::PerToken { bits: [1u8, 2, 4][rng.below(3)] },
+            k_window: WindowPolicy::Rpc { ratio: rng.f64() * 0.5 },
+            v_window: WindowPolicy::Rpc { ratio: rng.f64() * 0.5 },
+            outlier_frac: 0.0,
+        };
+        let mut cache = LayerKvCache::new(cfg);
+        let mut total = 0usize;
+        for _ in 0..rng.range(1, 30) {
+            let n = rng.range(1, 40);
+            let k = rng.normal_vec(n * kv_dim);
+            let v = rng.normal_vec(n * kv_dim);
+            cache.append(&k, &v, n);
+            total += n;
+            assert_eq!(cache.k_hist + cache.k_fp_tokens(), total, "seed {seed}");
+            assert_eq!(cache.v_hist + cache.v_fp_tokens(), total, "seed {seed}");
+            assert_eq!(cache.k_hist % 32, 0, "seed {seed}");
+            assert_eq!(cache.len(), total);
+        }
+    });
+}
+
+#[test]
+fn prop_cache_bytes_bounded_by_fp16_equivalent() {
+    // quantized bytes never exceed the fp16-modeled cache, and the
+    // long-run average bytes/token stays near the bit-plan prediction
+    for_cases(20, 7, |seed, rng| {
+        let kv_dim = 64;
+        let bits = [2u8, 3, 4][rng.below(3)];
+        let cfg = LayerCacheCfg {
+            kv_dim, head_dim: 32, group: 32,
+            key: KeyRepr::PerChannel { bits },
+            value: ValueRepr::PerToken { bits },
+            k_window: WindowPolicy::Rpc { ratio: 0.1 },
+            v_window: WindowPolicy::Rpc { ratio: 0.1 },
+            outlier_frac: 0.0,
+        };
+        let mut cache = LayerKvCache::new(cfg);
+        let mut total = 0usize;
+        for _ in 0..30 {
+            let n = rng.range(8, 24);
+            cache.append(&rng.normal_vec(n * kv_dim), &rng.normal_vec(n * kv_dim), n);
+            total += n;
+            let fp16 = total * kv_dim * 2 * 2;
+            assert!(cache.modeled_bytes() <= fp16, "seed {seed}");
+        }
+        // steady state (>=240 tokens): compression within ~half of the
+        // ideal 16/bits (fp RPC window + group remainder eat the rest)
+        let ratio = (total * kv_dim * 2 * 2) as f64 / cache.modeled_bytes() as f64;
+        let floor = 16.0 / bits as f64 * 0.45;
+        assert!(ratio > floor, "seed {seed}: compression only {ratio:.2}x at {bits} bits ({total} tokens)");
+    });
+}
+
+#[test]
+fn prop_attend_probability_simplex() {
+    // with v == all-ones the attention output must be exactly ones
+    for_cases(30, 8, |seed, rng| {
+        let kv_dim = 64;
+        let n = rng.range(33, 128);
+        let cfg = LayerCacheCfg {
+            kv_dim, head_dim: 32, group: 32,
+            key: KeyRepr::PerChannel { bits: [2u8, 4][rng.below(2)] },
+            value: ValueRepr::PerToken { bits: 4 },
+            k_window: WindowPolicy::Rpc { ratio: 0.2 },
+            v_window: WindowPolicy::Rpc { ratio: 0.2 },
+            outlier_frac: 0.0,
+        };
+        let mut cache = LayerKvCache::new(cfg);
+        let k = rng.normal_vec(n * kv_dim);
+        let v = vec![1f32; n * kv_dim];
+        cache.append(&k, &v, n);
+        let q = rng.normal_vec(4 * 32);
+        let mut out = vec![0f32; 4 * 32];
+        cache.attend(&q, 4, &mut out, &mut AttnScratch::default());
+        for x in out {
+            // constant-value groups quantize losslessly, so ones survive
+            assert!((x - 1.0).abs() < 1e-4, "seed {seed}: {x}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for_cases(100, 9, |seed, rng| {
+        // random float vectors survive serialize->parse
+        let v: Vec<f64> = (0..rng.range(0, 50)).map(|_| (rng.normal() * 100.0).round() / 16.0).collect();
+        let j = json::Json::from_f64s(&v);
+        let back = json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.f64_vec().unwrap(), v, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_rng_shuffle_is_permutation() {
+    for_cases(100, 10, |seed, rng| {
+        let n = rng.range(1, 60);
+        let mut xs: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "seed {seed}");
+    });
+}
