@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         method: Method::Kvmix(plan),
         max_batch: 1,
         kv_budget: None,
+        threads: 1,
     })?;
 
     // a recall-task prompt: bindings ... SEP QRY key -> the model should

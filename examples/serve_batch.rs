@@ -4,7 +4,7 @@
 //! KVmix cache, and reports latency/throughput + memory vs the FP16
 //! baseline.
 //!
-//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8]
+//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4]
 
 use anyhow::Result;
 use kvmix::baselines::Method;
@@ -14,7 +14,7 @@ use kvmix::harness::workload;
 use kvmix::model::Sampler;
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 use kvmix::util::cli::Args;
-use kvmix::util::Rng;
+use kvmix::util::{Rng, WorkerPool};
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -22,6 +22,7 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 24)?;
     let batch = args.usize_or("batch", 8)?;
     let max_new = args.usize_or("max-new", 48)?;
+    let threads = args.usize_or("threads", 1)?;
 
     let dir = default_artifacts_dir();
     let rt = Runtime::load_with(&dir, false)?;
@@ -29,28 +30,33 @@ fn main() -> Result<()> {
 
     for method in [Method::Fp16, Method::Kvmix(plan)] {
         let name = method.name();
-        let mut engine = Engine::new(&rt, EngineCfg {
-            method, max_batch: batch, kv_budget: None,
+        // long-lived scoped workers for the decode attention fan-out;
+        // generated tokens are bit-identical for any --threads value
+        WorkerPool::scoped(threads, |pool| -> Result<()> {
+            let mut engine = Engine::with_pool(&rt, EngineCfg {
+                method: method.clone(), max_batch: batch, kv_budget: None, threads,
+            }, Some(pool))?;
+            let mut rng = Rng::new(42);
+            for id in 0..n_requests {
+                let plen = 32 + rng.below(64);
+                let (toks, _) = workload::sample_mixture(&mut rng, plen);
+                engine.submit(Request {
+                    id: id as u64, prompt: toks, max_new_tokens: max_new,
+                    sampler: Sampler::TopK { k: 4, temperature: 0.8 },
+                    stop_token: None, submitted_ns: 0,
+                });
+            }
+            let t0 = std::time::Instant::now();
+            let done = engine.run_to_completion()?;
+            let secs = t0.elapsed().as_secs_f64();
+            let gen_tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+            println!("== {name} ({} worker thread(s)) ==", pool.threads());
+            println!("  {} requests, batch {}, {:.2}s wall", done.len(), batch, secs);
+            println!("  decode throughput: {:.1} tok/s ({gen_tokens} tokens)",
+                     gen_tokens as f64 / secs);
+            println!("  {}", engine.metrics.report());
+            Ok(())
         })?;
-        let mut rng = Rng::new(42);
-        for id in 0..n_requests {
-            let plen = 32 + rng.below(64);
-            let (toks, _) = workload::sample_mixture(&mut rng, plen);
-            engine.submit(Request {
-                id: id as u64, prompt: toks, max_new_tokens: max_new,
-                sampler: Sampler::TopK { k: 4, temperature: 0.8 },
-                stop_token: None, submitted_ns: 0,
-            });
-        }
-        let t0 = std::time::Instant::now();
-        let done = engine.run_to_completion()?;
-        let secs = t0.elapsed().as_secs_f64();
-        let gen_tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
-        println!("== {name} ==");
-        println!("  {} requests, batch {}, {:.2}s wall", done.len(), batch, secs);
-        println!("  decode throughput: {:.1} tok/s ({gen_tokens} tokens)",
-                 gen_tokens as f64 / secs);
-        println!("  {}", engine.metrics.report());
     }
     Ok(())
 }

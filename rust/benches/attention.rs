@@ -1,10 +1,13 @@
 //! Decode-attention benchmark over the mixed cache: tokens/s as a
 //! function of context length, bit width and RPC ratio — the L3 hot path
-//! that the paper accelerates with fused CUDA kernels.
+//! that the paper accelerates with fused CUDA kernels — plus the
+//! worker-pool fan-out rows (threads={1,2,4,8}) for batched decode and
+//! head-parallel prefill (DESIGN.md §Threading-Model).
 
+use kvmix::attention::prefill_attention_with;
 use kvmix::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
 use kvmix::util::bench::{bench, black_box};
-use kvmix::util::Rng;
+use kvmix::util::{Rng, WorkerPool};
 
 fn build_cache(key: KeyRepr, value: ValueRepr, window: WindowPolicy,
                ctx: usize, kv_dim: usize) -> LayerKvCache {
@@ -46,6 +49,63 @@ fn main() {
             });
             println!("{}  ({:.1} Mtok/s, {} fp tokens)",
                      s.line(), s.throughput(ctx as f64) / 1e6, cache.k_fp_tokens());
+        }
+    }
+
+    println!("\n# batched decode attend fan-out (8 lanes, ctx 512, kvmix 2-bit)");
+    {
+        let (n_heads, hd) = (4usize, 32usize);
+        let qd = n_heads * hd;
+        let bsz = 8usize;
+        let lanes: Vec<LayerKvCache> = (0..bsz).map(|_| {
+            build_cache(KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+                        WindowPolicy::Rpc { ratio: 0.1 }, 512, kv_dim)
+        }).collect();
+        let mut rngb = Rng::new(4);
+        let qs = rngb.normal_vec(bsz * qd);
+        let mut outs = vec![0f32; bsz * qd];
+        for threads in [1usize, 2, 4, 8] {
+            WorkerPool::scoped(threads, |pool| {
+                let nw = pool.threads().min(bsz);
+                let per = bsz.div_ceil(nw);
+                let mut scratches: Vec<AttnScratch> = Vec::new();
+                scratches.resize_with(nw, AttnScratch::default);
+                let s = bench(&format!("attend/batch{bsz}/threads{threads}"), 40, || {
+                    let chunks = outs.chunks_mut(per * qd)
+                        .zip(scratches.iter_mut())
+                        .enumerate()
+                        .map(|(ci, (o, ws))| (ci * per, o, ws));
+                    pool.run_tasks(chunks, |_w, (lane0, o, ws)| {
+                        for i in 0..o.len() / qd {
+                            let b = lane0 + i;
+                            lanes[b].attend(black_box(&qs[b * qd..(b + 1) * qd]),
+                                            n_heads, &mut o[i * qd..(i + 1) * qd], ws);
+                        }
+                    });
+                    black_box(&outs);
+                });
+                println!("{}  ({:.1} Mtok/s over all lanes)",
+                         s.line(), s.throughput((bsz * 512) as f64) / 1e6);
+            });
+        }
+    }
+
+    println!("\n# head-parallel prefill attention (t=256, 8 heads, hd 32)");
+    {
+        let (t, h, n_kv, hd) = (256usize, 8usize, 4usize, 32usize);
+        let mut rngp = Rng::new(5);
+        let q = rngp.normal_vec(t * h * hd);
+        let k = rngp.normal_vec(t * n_kv * hd);
+        let v = rngp.normal_vec(t * n_kv * hd);
+        for threads in [1usize, 2, 4, 8] {
+            WorkerPool::scoped(threads, |pool| {
+                let s = bench(&format!("prefill/t{t}/threads{threads}"), 20, || {
+                    let o = prefill_attention_with(black_box(&q), &k, &v, t, h, n_kv,
+                                                   hd, Some(pool));
+                    black_box(&o);
+                });
+                println!("{}  ({:.2} Mtok/s)", s.line(), s.throughput(t as f64) / 1e6);
+            });
         }
     }
 

@@ -1,13 +1,18 @@
 //! End-to-end decode-step benchmark through the real PJRT runtime:
-//! ms/step and tokens/s by batch size and policy.  Skips (exit 0) when
-//! artifacts are missing so `cargo bench` works pre-build.
+//! ms/step and tokens/s by batch size, worker-thread count and policy.
+//! Skips (exit 0) when artifacts are missing so `cargo bench` works
+//! pre-build.
+//!
+//! The threads={1,2,4,8} rows measure the decode attention fan-out
+//! (DESIGN.md §Threading-Model); logits are bit-identical across rows,
+//! only the wall time changes.
 
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
 use kvmix::harness::workload;
 use kvmix::model::{DecodeScratch, Forward};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
-use kvmix::util::Rng;
+use kvmix::util::{Rng, WorkerPool};
 
 fn main() {
     let dir = default_artifacts_dir();
@@ -18,36 +23,42 @@ fn main() {
     let rt = Runtime::load_with(&dir, false).expect("runtime");
     let plan = QuantPlan::from_importance_file(&dir.join("importance.json"))
         .unwrap_or_else(|_| QuantPlan::uniform(rt.model.n_layers, 2));
-    let fwd = Forward::new(&rt);
 
     println!("# e2e decode step (prefill 48, then timed decode)");
-    println!("{:<22} {:>6} {:>12} {:>12}", "method", "batch", "ms/step", "tok/s");
+    println!("{:<22} {:>6} {:>8} {:>12} {:>12}",
+             "method", "batch", "threads", "ms/step", "tok/s");
     for method in [Method::Fp16, Method::Kvmix(plan)] {
         for batch in [1usize, 4, 8, 16] {
-            let mut rng = Rng::new(3);
-            let mut caches: Vec<_> = (0..batch).map(|_| {
-                let mut c = method.make_cache(&rt.model);
-                let (toks, _) = workload::sample_mixture(&mut rng, 48);
-                fwd.prefill(&toks, &mut c).expect("prefill");
-                c
-            }).collect();
-            let mut scratch = DecodeScratch::default();
-            let inputs = vec![workload::BOS; batch];
-            // warmup
-            for _ in 0..3 {
-                let mut refs: Vec<_> = caches.iter_mut().collect();
-                fwd.decode_step(&inputs, &mut refs, &mut scratch).unwrap();
+            for threads in [1usize, 2, 4, 8] {
+                WorkerPool::scoped(threads, |pool| {
+                    let fwd = Forward::with_pool(&rt, Some(pool));
+                    let mut rng = Rng::new(3);
+                    let mut caches: Vec<_> = (0..batch).map(|_| {
+                        let mut c = method.make_cache(&rt.model);
+                        let (toks, _) = workload::sample_mixture(&mut rng, 48);
+                        fwd.prefill(&toks, &mut c).expect("prefill");
+                        c
+                    }).collect();
+                    let mut scratch = DecodeScratch::default();
+                    let inputs = vec![workload::BOS; batch];
+                    // warmup
+                    for _ in 0..3 {
+                        let mut refs: Vec<_> = caches.iter_mut().collect();
+                        fwd.decode_step(&inputs, &mut refs, &mut scratch).unwrap();
+                    }
+                    let steps = 40;
+                    let t0 = std::time::Instant::now();
+                    for _ in 0..steps {
+                        let mut refs: Vec<_> = caches.iter_mut().collect();
+                        fwd.decode_step(&inputs, &mut refs, &mut scratch).unwrap();
+                    }
+                    let secs = t0.elapsed().as_secs_f64();
+                    println!("{:<22} {:>6} {:>8} {:>12.3} {:>12.1}",
+                             method.name(), batch, threads,
+                             secs / steps as f64 * 1e3,
+                             (steps * batch) as f64 / secs);
+                });
             }
-            let steps = 40;
-            let t0 = std::time::Instant::now();
-            for _ in 0..steps {
-                let mut refs: Vec<_> = caches.iter_mut().collect();
-                fwd.decode_step(&inputs, &mut refs, &mut scratch).unwrap();
-            }
-            let secs = t0.elapsed().as_secs_f64();
-            println!("{:<22} {:>6} {:>12.3} {:>12.1}", method.name(), batch,
-                     secs / steps as f64 * 1e3,
-                     (steps * batch) as f64 / secs);
         }
     }
 }

@@ -5,54 +5,119 @@
 //! full-precision causal attention used for prefill (the prompt's
 //! self-attention is computed at full precision; the *cache* written from
 //! it is then quantized per policy, matching KIVI/KVQuant practice).
+//!
+//! Prefill attention is head-parallel: heads are independent, so
+//! [`prefill_attention_with`] fans them out across a
+//! [`WorkerPool`] (DESIGN.md §Threading-Model).  Both
+//! the sequential and pooled paths run the same per-head kernel in the
+//! same order, so results are bit-identical for any thread count.
 
-/// Causal GQA attention over `t` tokens.
+use crate::util::WorkerPool;
+
+/// Causal GQA attention over `t` tokens (sequential; equivalent to
+/// [`prefill_attention_with`] with no pool).
 ///
 /// * `q` — `[t][n_heads*head_dim]` (RoPE'd)
 /// * `k`, `v` — `[t][n_kv*head_dim]` (RoPE'd keys)
 /// * returns `[t][n_heads*head_dim]`
 pub fn prefill_attention(q: &[f32], k: &[f32], v: &[f32], t: usize,
                          n_heads: usize, n_kv: usize, head_dim: usize) -> Vec<f32> {
+    prefill_attention_with(q, k, v, t, n_heads, n_kv, head_dim, None)
+}
+
+/// [`prefill_attention`] with the per-head loop fanned out across `pool`.
+pub fn prefill_attention_with(q: &[f32], k: &[f32], v: &[f32], t: usize,
+                              n_heads: usize, n_kv: usize, head_dim: usize,
+                              pool: Option<&WorkerPool>) -> Vec<f32> {
     let qd = n_heads * head_dim;
     let kd = n_kv * head_dim;
     let rep = n_heads / n_kv;
     let scale = 1.0 / (head_dim as f32).sqrt();
     let mut out = vec![0f32; t * qd];
-    let mut scores = vec![0f32; t];
 
-    for h in 0..n_heads {
-        let kvh = h / rep;
-        for qi in 0..t {
-            let qv = &q[qi * qd + h * head_dim..qi * qd + (h + 1) * head_dim];
-            let n_ctx = qi + 1;
-            let row = &mut scores[..n_ctx];
-            let mut mx = f32::NEG_INFINITY;
-            for (ki, s) in row.iter_mut().enumerate() {
-                let kv = &k[ki * kd + kvh * head_dim..ki * kd + (kvh + 1) * head_dim];
-                let mut acc = 0f32;
-                for d in 0..head_dim {
-                    acc += qv[d] * kv[d];
+    match pool {
+        Some(pool) if pool.threads() > 1 && n_heads > 1 => {
+            // a head's output rows are strided in the `[t][qd]` layout, so
+            // workers write into contiguous `[h][t][head_dim]` staging
+            // chunks and the caller interleaves afterwards
+            let head_span = t * head_dim;
+            let mut heads = vec![0f32; n_heads * head_span];
+            let nw = pool.threads().min(n_heads);
+            let per = n_heads.div_ceil(nw);
+            let chunks = heads
+                .chunks_mut(per * head_span)
+                .enumerate()
+                .map(|(ci, c)| (ci * per, c));
+            pool.run_tasks(chunks, |_w, (h0, chunk)| {
+                let mut scores = vec![0f32; t];
+                for (i, dst) in chunk.chunks_mut(head_span).enumerate() {
+                    head_attention(h0 + i, q, k, v, t, qd, kd, head_dim, rep,
+                                   scale, dst, head_dim, &mut scores);
                 }
-                *s = acc * scale;
-                mx = mx.max(*s);
-            }
-            let mut sum = 0f32;
-            for s in row.iter_mut() {
-                *s = (*s - mx).exp();
-                sum += *s;
-            }
-            let inv = 1.0 / sum;
-            let o = &mut out[qi * qd + h * head_dim..qi * qd + (h + 1) * head_dim];
-            for (ki, s) in row.iter().enumerate() {
-                let p = s * inv;
-                let vv = &v[ki * kd + kvh * head_dim..ki * kd + (kvh + 1) * head_dim];
-                for d in 0..head_dim {
-                    o[d] += p * vv[d];
+            });
+            // interleave `[h][t][head_dim]` -> `[t][n_heads*head_dim]`
+            for h in 0..n_heads {
+                for qi in 0..t {
+                    let src = &heads[(h * t + qi) * head_dim..(h * t + qi + 1) * head_dim];
+                    out[qi * qd + h * head_dim..qi * qd + (h + 1) * head_dim]
+                        .copy_from_slice(src);
                 }
+            }
+        }
+        _ => {
+            // sequential: write each head's rows directly into `out` at
+            // stride `qd` — no staging buffer, no interleave copy
+            let mut scores = vec![0f32; t];
+            for h in 0..n_heads {
+                head_attention(h, q, k, v, t, qd, kd, head_dim, rep, scale,
+                               &mut out[h * head_dim..], qd, &mut scores);
             }
         }
     }
     out
+}
+
+/// Causal attention of one query head over all `t` positions.
+///
+/// `dst` holds the head's output rows at pitch `stride`: row `qi` is
+/// `dst[qi*stride .. qi*stride+head_dim]` (stride `qd` writes straight
+/// into the interleaved output; stride `head_dim` fills a contiguous
+/// staging chunk).  Arithmetic is identical either way, which is what
+/// keeps pooled prefill bit-identical to sequential.
+fn head_attention(h: usize, q: &[f32], k: &[f32], v: &[f32], t: usize,
+                  qd: usize, kd: usize, head_dim: usize, rep: usize,
+                  scale: f32, dst: &mut [f32], stride: usize,
+                  scores: &mut [f32]) {
+    let kvh = h / rep;
+    for qi in 0..t {
+        let qv = &q[qi * qd + h * head_dim..qi * qd + (h + 1) * head_dim];
+        let n_ctx = qi + 1;
+        let row = &mut scores[..n_ctx];
+        let mut mx = f32::NEG_INFINITY;
+        for (ki, s) in row.iter_mut().enumerate() {
+            let kv = &k[ki * kd + kvh * head_dim..ki * kd + (kvh + 1) * head_dim];
+            let mut acc = 0f32;
+            for d in 0..head_dim {
+                acc += qv[d] * kv[d];
+            }
+            *s = acc * scale;
+            mx = mx.max(*s);
+        }
+        let mut sum = 0f32;
+        for s in row.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        let o = &mut dst[qi * stride..qi * stride + head_dim];
+        for (ki, s) in row.iter().enumerate() {
+            let p = s * inv;
+            let vv = &v[ki * kd + kvh * head_dim..ki * kd + (kvh + 1) * head_dim];
+            for d in 0..head_dim {
+                o[d] += p * vv[d];
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +190,23 @@ mod tests {
         cache.attend(&q[(t - 1) * h * hd..], h, &mut out, &mut s);
         for (a, b) in out.iter().zip(&full[(t - 1) * h * hd..]) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pooled_prefill_bit_identical_to_sequential() {
+        let t = 19;
+        let (h, n_kv, hd) = (6, 3, 16);
+        let mut rng = Rng::new(4);
+        let q = rng.normal_vec(t * h * hd);
+        let k = rng.normal_vec(t * n_kv * hd);
+        let v = rng.normal_vec(t * n_kv * hd);
+        let seq = prefill_attention(&q, &k, &v, t, h, n_kv, hd);
+        for threads in [2usize, 3, 4, 8] {
+            let par = WorkerPool::scoped(threads, |pool| {
+                prefill_attention_with(&q, &k, &v, t, h, n_kv, hd, Some(pool))
+            });
+            assert!(seq == par, "threads={threads}: prefill attention diverged");
         }
     }
 }

@@ -16,13 +16,19 @@ use crate::coordinator::request::{ActiveRequest, Completion, Request};
 use crate::kvcache::MemoryBudget;
 use crate::model::{DecodeScratch, Forward};
 use crate::runtime::Runtime;
-use crate::util::Rng;
+use crate::util::{Rng, WorkerPool};
 
 pub struct EngineCfg {
     pub method: Method,
     pub max_batch: usize,
     /// simulated HBM budget for KV (bytes); None = unlimited
     pub kv_budget: Option<usize>,
+    /// worker threads for the decode attention fan-out
+    /// (0 = one per available core, 1 = sequential).  The engine itself
+    /// only *uses* a pool handed to [`Engine::with_pool`]; this knob is
+    /// how `--threads` travels from the CLI to whoever builds the pool
+    /// (see `server::serve` and `main.rs`).
+    pub threads: usize,
 }
 
 pub struct Engine<'a> {
@@ -35,26 +41,43 @@ pub struct Engine<'a> {
     pub completions: Vec<Completion>,
     scratch: DecodeScratch,
     rng: Rng,
+    /// attention fan-out workers (None = sequential decode)
+    pool: Option<&'a WorkerPool>,
 }
 
 impl<'a> Engine<'a> {
+    /// Sequential engine (no attention fan-out).
     pub fn new(rt: &'a Runtime, cfg: EngineCfg) -> Result<Self> {
+        Self::with_pool(rt, cfg, None)
+    }
+
+    /// Engine whose decode/prefill attention fans out across `pool`
+    /// (`None` behaves exactly like [`Engine::new`]).  Everything that
+    /// touches the PJRT client stays on the thread calling
+    /// [`Engine::step`]; only the pure-Rust cache attention is fanned out
+    /// (DESIGN.md §Threading-Model).
+    pub fn with_pool(rt: &'a Runtime, cfg: EngineCfg,
+                     pool: Option<&'a WorkerPool>) -> Result<Self> {
         let max_bucket = rt.buckets.iter().copied().max().unwrap_or(1);
         let max_batch = cfg.max_batch.min(max_bucket);
         // bytes/token estimate for admission: steady-state modeled bytes of
         // the policy at a reference length
         let bpt = estimate_bytes_per_token(rt, &cfg.method);
         let capacity = cfg.kv_budget.unwrap_or(usize::MAX / 2);
+        // the attached pool is the source of truth for parallelism; keep
+        // the stored cfg consistent with it so the two can't diverge
+        let threads = pool.map(|p| p.threads()).unwrap_or(1);
         Ok(Engine {
             rt,
             batcher: Batcher::new(max_batch, bpt),
-            cfg: EngineCfg { max_batch, ..cfg },
+            cfg: EngineCfg { max_batch, threads, ..cfg },
             active: Vec::new(),
             budget: MemoryBudget::new(capacity, 0)?,
             metrics: Metrics::default(),
             completions: Vec::new(),
             scratch: DecodeScratch::default(),
             rng: Rng::new(0xE161),
+            pool,
         })
     }
 
@@ -74,7 +97,7 @@ impl<'a> Engine<'a> {
     /// One scheduler iteration; returns completions retired this step.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         let t0 = std::time::Instant::now();
-        let fwd = Forward::new(self.rt);
+        let fwd = Forward::with_pool(self.rt, self.pool);
 
         // ---- admission + prefill ----
         let mut admitted_any = false;
@@ -115,7 +138,16 @@ impl<'a> Engine<'a> {
             let inputs: Vec<i32> = self.active.iter().map(|a| a.next_input).collect();
             let mut caches: Vec<&mut crate::kvcache::SeqKvCache> =
                 self.active.iter_mut().map(|a| &mut a.cache).collect();
+            let busy0 = self.pool.map(|p| p.busy_ns()).unwrap_or(0);
             let logits = fwd.decode_step(&inputs, &mut caches, &mut self.scratch)?;
+            self.metrics.attn_us.record(self.scratch.attn_ns as f64 / 1e3);
+            if let Some(p) = self.pool {
+                if p.threads() > 1 && self.scratch.attn_ns > 0 {
+                    let busy = (p.busy_ns() - busy0) as f64;
+                    let denom = p.threads() as f64 * self.scratch.attn_ns as f64;
+                    self.metrics.pool_util.record((busy / denom).min(1.0));
+                }
+            }
             let vocab = self.rt.model.vocab;
             for (b, ar) in self.active.iter_mut().enumerate() {
                 let row = &logits[b * vocab..(b + 1) * vocab];

@@ -1,4 +1,5 @@
-//! Serving metrics: counters + latency histogram + throughput window.
+//! Serving metrics: counters + latency histograms + decode throughput +
+//! attention-time / pool-utilization instrumentation.
 
 use std::time::Instant;
 
@@ -12,6 +13,13 @@ pub struct Metrics {
     pub ttft_ms: Histogram,
     pub total_ms: Histogram,
     pub step_us: Histogram,
+    /// per-step wall time of the decode attention fan-out (append+attend
+    /// summed over layers), in microseconds
+    pub attn_us: Histogram,
+    /// per-step worker-pool utilization of the decode attention fan-out:
+    /// `busy_time / (threads * attention_wall_time)`, in `[0, 1]`.
+    /// Only recorded when the engine runs with a pool of >1 threads.
+    pub pool_util: Histogram,
     pub peak_kv_bytes: usize,
 }
 
@@ -20,18 +28,32 @@ impl Default for Metrics {
         Metrics { started: Instant::now(), prefill_tokens: 0, decode_tokens: 0,
                   completions: 0, oom_events: 0, ttft_ms: Histogram::default(),
                   total_ms: Histogram::default(), step_us: Histogram::default(),
+                  attn_us: Histogram::default(), pool_util: Histogram::default(),
                   peak_kv_bytes: 0 }
     }
 }
 
 impl Metrics {
+    /// Wall-clock seconds since the engine was created (includes idle
+    /// time; use [`Metrics::throughput`] for serving rate).
     pub fn elapsed_s(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// decode tokens per second since start
+    /// Decode throughput in tokens/second.
+    ///
+    /// **Definition:** `decode_tokens / Σ step_us` — tokens produced per
+    /// second of *engine step wall time* (the accumulated duration of
+    /// [`Engine::step`](crate::coordinator::Engine::step) calls), not per
+    /// second since `Engine::new`.  An engine that sat idle in the queue
+    /// loop before or between requests is therefore not under-reported.
+    /// Returns 0.0 before the first step completes.
     pub fn throughput(&self) -> f64 {
-        self.decode_tokens as f64 / self.elapsed_s().max(1e-9)
+        let decode_secs = self.step_us.sum() / 1e6;
+        if decode_secs <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / decode_secs
     }
 
     pub fn now_ns(&self) -> u64 {
@@ -39,13 +61,19 @@ impl Metrics {
     }
 
     pub fn report(&mut self) -> String {
+        let util = if self.pool_util.is_empty() {
+            String::new()
+        } else {
+            format!(" | pool util {:.0}%", self.pool_util.mean() * 100.0)
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
              ttft p50 {:.1} ms p95 {:.1} ms | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             peak kv {:.2} MiB | oom {}",
+             attn p50 {:.0} µs{} | peak kv {:.2} MiB | oom {}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
             self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
+            self.attn_us.quantile(0.5), util,
             self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events)
     }
 }
@@ -69,6 +97,11 @@ impl Histogram {
 
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
     }
 
     pub fn quantile(&mut self, q: f64) -> f64 {
@@ -105,5 +138,26 @@ mod tests {
         assert_eq!(h.quantile(1.0), 100.0);
         assert!((h.quantile(0.5) - 50.0).abs() <= 1.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.sum() - 5050.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_uses_decode_wall_time_not_engine_age() {
+        let mut m = Metrics::default();
+        // engine idle before the first request must not dilute throughput:
+        // 100 tokens over 2 accumulated step-seconds = 50 tok/s regardless
+        // of when the engine was created
+        m.decode_tokens = 100;
+        m.step_us.record(1_500_000.0);
+        m.step_us.record(500_000.0);
+        assert!((m.throughput() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_zero_before_first_step() {
+        let mut m = Metrics::default();
+        m.decode_tokens = 5; // hypothetical; no steps recorded yet
+        assert_eq!(m.throughput(), 0.0);
+        let _ = m.report();
     }
 }

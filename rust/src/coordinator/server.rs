@@ -21,6 +21,7 @@ use crate::coordinator::engine::{Engine, EngineCfg};
 use crate::coordinator::request::{Completion, Request};
 use crate::model::Sampler;
 use crate::runtime::Runtime;
+use crate::util::pool::{resolve_threads, WorkerPool};
 
 enum Msg {
     New(Request, Sender<Completion>),
@@ -28,10 +29,15 @@ enum Msg {
 }
 
 /// Serve until `max_requests` have completed (None = forever).
+///
+/// `cfg.threads` sizes the decode attention worker pool (0 = one per
+/// core); the engine loop itself — and with it every PJRT call — stays on
+/// the calling thread.
 pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
              max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    println!("kvmix serving on {addr} (policy {})", cfg.method.name());
+    println!("kvmix serving on {addr} (policy {}, {} attention worker(s))",
+             cfg.method.name(), resolve_threads(cfg.threads));
     let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
     let next_id = Arc::new(Mutex::new(0u64));
 
@@ -48,40 +54,44 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
         }
     });
 
-    // engine loop (current thread — PJRT client is not Sync-shared here)
-    let mut engine = Engine::new(rt, cfg)?;
-    let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
-    let mut served = 0usize;
-    loop {
-        // drain incoming
-        while let Ok(msg) = rx.try_recv() {
-            match msg {
-                Msg::New(req, done_tx) => {
-                    pending.insert(req.id, done_tx);
-                    engine.submit(req);
-                }
-                Msg::Shutdown => return Ok(()),
-            }
-        }
-        if engine.idle() {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-            // nothing to do; check for exit condition
-            if let Some(max) = max_requests {
-                if served >= max {
-                    drop(accept_handle);
-                    println!("{}", engine.metrics.report());
-                    return Ok(());
+    // engine loop (current thread — PJRT client is not Sync-shared here;
+    // only the cache attention fans out across the scoped pool)
+    let threads = cfg.threads;
+    WorkerPool::scoped(threads, |pool| {
+        let mut engine = Engine::with_pool(rt, cfg, Some(pool))?;
+        let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
+        let mut served = 0usize;
+        loop {
+            // drain incoming
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Msg::New(req, done_tx) => {
+                        pending.insert(req.id, done_tx);
+                        engine.submit(req);
+                    }
+                    Msg::Shutdown => return Ok(()),
                 }
             }
-            continue;
-        }
-        for c in engine.step()? {
-            if let Some(done_tx) = pending.remove(&c.id) {
-                let _ = done_tx.send(c);
+            if engine.idle() {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                // nothing to do; check for exit condition
+                if let Some(max) = max_requests {
+                    if served >= max {
+                        drop(accept_handle);
+                        println!("{}", engine.metrics.report());
+                        return Ok(());
+                    }
+                }
+                continue;
             }
-            served += 1;
+            for c in engine.step()? {
+                if let Some(done_tx) = pending.remove(&c.id) {
+                    let _ = done_tx.send(c);
+                }
+                served += 1;
+            }
         }
-    }
+    })
 }
 
 fn handle_client(stream: TcpStream, tx: Sender<Msg>,

@@ -435,7 +435,7 @@ pub fn headline(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
 pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usize,
                    gen: usize, kv_budget: Option<usize>) -> Result<(usize, f64)> {
     let mut engine = Engine::new(rt, EngineCfg {
-        method: method.clone(), max_batch: batch, kv_budget,
+        method: method.clone(), max_batch: batch, kv_budget, threads: 1,
     })?;
     let mut rng = Rng::new(123);
     for id in 0..batch {

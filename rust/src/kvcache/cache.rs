@@ -11,6 +11,12 @@
 //! Keys are cached *post-RoPE* (the L2 `pre` graph applies RoPE before the
 //! cache sees them).  KVQuant quantizes pre-RoPE keys; DESIGN.md §5 notes
 //! this substitution.
+//!
+//! Threading (DESIGN.md §Threading-Model): one `LayerKvCache` belongs to
+//! one sequence, so the batched decode fan-out hands disjoint `&mut
+//! LayerKvCache` lanes to different pool workers.  Everything in here is
+//! owned `Vec` state — `Send` holds structurally and is asserted at
+//! compile time below; nothing is (or needs to be) `Sync`-shared.
 
 use crate::quant::{key_scores_fused, value_accum_fused, FusedScratch, PackedBlock};
 
@@ -410,6 +416,10 @@ fn token_major_key_scores(block: &PackedBlock, q: &[f32], n_heads: usize,
 }
 
 /// Reusable buffers for [`LayerKvCache::attend`].
+///
+/// Not shared between threads: the decode fan-out keeps one `AttnScratch`
+/// per pool worker (`DecodeScratch::lanes`), sized once and reused every
+/// step so the steady-state path does not allocate.
 #[derive(Default)]
 pub struct AttnScratch {
     pub scores: Vec<f32>,
@@ -417,6 +427,18 @@ pub struct AttnScratch {
     pub rq: Vec<f32>,
     pub jl_tmp: Vec<f32>,
 }
+
+// The decode fan-out sends per-lane caches and per-worker scratches to
+// scoped pool workers; every field is owned Vec/Option state, so `Send`
+// must (and does) hold for all of these.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<LayerKvCache>();
+    assert_send::<AttnScratch>();
+    assert_send::<PackedBlock>();
+    assert_send::<super::jl::JlProjector>();
+    assert_send::<super::jl::SignJlKeys>();
+};
 
 #[cfg(test)]
 mod tests {

@@ -22,7 +22,9 @@
 //! * [`baselines`] — KIVI / KVQuant / QJL / Atom / uniform cache policies
 //! * [`coordinator`] — request router, continuous batcher, scheduler, engine
 //! * [`harness`]   — synthetic workloads, evaluation metrics, paper tables
-//! * [`util`]      — in-repo substrates (JSON, CLI, RNG, bench timing)
+//! * [`util`]      — in-repo substrates (JSON, CLI, RNG, bench timing, and
+//!   the scoped worker pool behind the decode fan-out — DESIGN.md
+//!   §Threading-Model)
 
 pub mod attention;
 pub mod baselines;

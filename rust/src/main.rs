@@ -1,13 +1,17 @@
-//! `kvmix` CLI — the L3 leader entrypoint.
+//! `kvmix` CLI — the L3 leader entrypoint (full reference: README.md).
 //!
 //! Subcommands:
 //!   generate  --prompt 1,2,3 --max-new 32 [--method kvmix|fp16|kivi|...]
+//!             [--threads N]
 //!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
+//!             [--kv-budget-kib K] [--threads N]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
 //!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
 //!   inspect                                       artifact + weight summary
 //!
-//! Global flags: --artifacts DIR, --fast (smaller repro workloads)
+//! Global flags: --artifacts DIR, --fast (smaller repro workloads).
+//! --threads N sizes the decode attention worker pool (0 = one per core,
+//! default 1 = sequential); results are bit-identical for any N.
 
 use anyhow::{anyhow, bail, Result};
 use kvmix::baselines::Method;
@@ -18,7 +22,7 @@ use kvmix::model::Sampler;
 use kvmix::profiler;
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 use kvmix::util::cli::Args;
-use kvmix::util::Rng;
+use kvmix::util::{Rng, WorkerPool};
 
 fn main() {
     if let Err(e) = run() {
@@ -75,26 +79,31 @@ fn run() -> Result<()> {
                 }
             };
             let max_new = args.usize_or("max-new", 32)?;
-            let mut engine = Engine::new(&rt, EngineCfg {
-                method, max_batch: 1, kv_budget: None,
-            })?;
-            engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
-                                    sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
-            let done = engine.run_to_completion()?;
-            println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
-            println!("generated: {:?}", done[0].tokens);
-            println!("{}", engine.metrics.report());
-            Ok(())
+            let threads = args.usize_or("threads", 1)?;
+            WorkerPool::scoped(threads, |pool| {
+                let mut engine = Engine::with_pool(&rt, EngineCfg {
+                    method, max_batch: 1, kv_budget: None, threads,
+                }, Some(pool))?;
+                engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
+                                        sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
+                let done = engine.run_to_completion()?;
+                println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
+                println!("generated: {:?}", done[0].tokens);
+                println!("{}", engine.metrics.report());
+                Ok(())
+            })
         }
         "serve" => {
             let rt = Runtime::load_with(&dir, false)?;
             let method = parse_method(&rt, &args)?;
             let addr = args.get_or("addr", "127.0.0.1:7979");
             let max_batch = args.usize_or("max-batch", 16)?;
+            let threads = args.usize_or("threads", 1)?;
             let kv_budget = args.get("kv-budget-kib")
                 .map(|v| v.parse::<usize>().map(|k| k * 1024))
                 .transpose()?;
-            server::serve(&rt, EngineCfg { method, max_batch, kv_budget }, &addr, None)
+            server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads },
+                          &addr, None)
         }
         "repro" => {
             let exp = args.positional.get(1)

@@ -1,24 +1,42 @@
 //! Model orchestration: drives the per-layer XLA executables + the
 //! quantized-cache attention to implement prefill and batched decode.
+//!
+//! Threading (DESIGN.md §Threading-Model): the dense per-layer compute
+//! (`pre`/`post`/`logits`) stays on the engine thread — the PJRT client is
+//! driven from exactly one thread — while the quantized-cache attention,
+//! which is embarrassingly parallel across batch lanes, fans out across a
+//! [`WorkerPool`] when one is attached via [`Forward::with_pool`].
 
 pub mod sampler;
 
+use std::time::Instant;
+
 use anyhow::Result;
 
-use crate::attention::prefill_attention;
+use crate::attention::prefill_attention_with;
 use crate::kvcache::{AttnScratch, SeqKvCache};
 use crate::runtime::Runtime;
+use crate::util::WorkerPool;
 
 pub use sampler::Sampler;
 
 /// Stateless forward driver over a [`Runtime`].
 pub struct Forward<'a> {
     pub rt: &'a Runtime,
+    /// decode/prefill attention fan-out; `None` = sequential
+    pool: Option<&'a WorkerPool>,
 }
 
 impl<'a> Forward<'a> {
+    /// Sequential driver (no attention fan-out).
     pub fn new(rt: &'a Runtime) -> Self {
-        Forward { rt }
+        Forward { rt, pool: None }
+    }
+
+    /// Driver whose per-lane attention fans out across `pool`
+    /// (`None` behaves exactly like [`Forward::new`]).
+    pub fn with_pool(rt: &'a Runtime, pool: Option<&'a WorkerPool>) -> Self {
+        Forward { rt, pool }
     }
 
     /// Prefill `tokens` into `cache` (which must be empty); returns the
@@ -35,7 +53,8 @@ impl<'a> Forward<'a> {
         let pos: Vec<i32> = (0..t as i32).collect();
         for layer in 0..m.n_layers {
             let (q, k, v) = self.rt.pre(layer, &h, &pos, t)?;
-            let attn = prefill_attention(&q, &k, &v, t, m.n_heads, m.n_kv_heads, m.head_dim);
+            let attn = prefill_attention_with(&q, &k, &v, t, m.n_heads, m.n_kv_heads,
+                                              m.head_dim, self.pool);
             h = self.rt.post(layer, &attn, &h, t)?;
             cache.layers[layer].append(&k, &v, t);
         }
@@ -44,6 +63,13 @@ impl<'a> Forward<'a> {
 
     /// One batched decode step: `tokens[b]` is the next input token of
     /// sequence `b`, `caches[b]` its cache.  Returns `[b][vocab]` logits.
+    ///
+    /// With a pool attached, each layer's per-lane quantized-cache
+    /// attention (append + [`crate::kvcache::LayerKvCache::attend`]) runs
+    /// on the workers, one contiguous lane range per worker with its own
+    /// [`AttnScratch`]; per-lane arithmetic and lane order are identical
+    /// to the sequential path, so logits are bit-identical for any thread
+    /// count (see `rust/tests/threading.rs`).
     pub fn decode_step(&self, tokens: &[i32], caches: &mut [&mut SeqKvCache],
                        scratch: &mut DecodeScratch) -> Result<Vec<f32>> {
         let m = &self.rt.model;
@@ -51,26 +77,92 @@ impl<'a> Forward<'a> {
         debug_assert_eq!(caches.len(), bsz);
         let qd = m.q_dim();
         let kvd = m.kv_dim();
+        let n_heads = m.n_heads;
         let mut h = self.rt.embed(tokens)?;
         let pos: Vec<i32> = caches.iter().map(|c| c.len() as i32).collect();
         scratch.attn.resize(bsz * qd, 0.0);
+        scratch.attn_ns = 0;
+        // one scratch per worker so the steady-state path never allocates
+        let nw = match self.pool {
+            Some(p) => p.threads().min(bsz).max(1),
+            None => 1,
+        };
+        if scratch.lanes.len() < nw {
+            scratch.lanes.resize_with(nw, AttnScratch::default);
+        }
         for layer in 0..m.n_layers {
             let (q, k, v) = self.rt.pre(layer, &h, &pos, bsz)?;
-            for b in 0..bsz {
-                let lc = &mut caches[b].layers[layer];
-                lc.append(&k[b * kvd..(b + 1) * kvd], &v[b * kvd..(b + 1) * kvd], 1);
-                lc.attend(&q[b * qd..(b + 1) * qd], m.n_heads,
-                          &mut scratch.attn[b * qd..(b + 1) * qd], &mut scratch.attn_scratch);
+            let t0 = Instant::now();
+            match self.pool {
+                Some(pool) if nw > 1 => {
+                    let per = bsz.div_ceil(nw);
+                    let chunks = caches
+                        .chunks_mut(per)
+                        .zip(scratch.attn.chunks_mut(per * qd))
+                        .zip(scratch.lanes.iter_mut())
+                        .enumerate()
+                        .map(|(ci, ((lanes, out), ws))| {
+                            LaneChunk { lane0: ci * per, lanes, out, ws }
+                        });
+                    pool.run_tasks(chunks, |_w, c| {
+                        attend_lanes(c.lanes, layer, c.lane0, &q, &k, &v,
+                                     qd, kvd, n_heads, c.out, c.ws);
+                    });
+                }
+                _ => {
+                    attend_lanes(caches, layer, 0, &q, &k, &v, qd, kvd, n_heads,
+                                 &mut scratch.attn, &mut scratch.lanes[0]);
+                }
             }
+            scratch.attn_ns += t0.elapsed().as_nanos() as u64;
             h = self.rt.post(layer, &scratch.attn, &h, bsz)?;
         }
         self.rt.logits(&h, bsz)
     }
 }
 
+/// One worker's share of a layer's decode attention: a contiguous lane
+/// range, its slice of the attention output, and a private scratch.
+struct LaneChunk<'a, 'c> {
+    lane0: usize,
+    lanes: &'a mut [&'c mut SeqKvCache],
+    out: &'a mut [f32],
+    ws: &'a mut AttnScratch,
+}
+
+/// Append + attend for `lanes` (global lane ids `lane0..`) of `layer`.
+/// Shared by the sequential and pooled paths so both execute identical
+/// per-lane arithmetic.
+fn attend_lanes(lanes: &mut [&mut SeqKvCache], layer: usize, lane0: usize,
+                q: &[f32], k: &[f32], v: &[f32], qd: usize, kvd: usize,
+                n_heads: usize, out: &mut [f32], ws: &mut AttnScratch) {
+    for (i, cache) in lanes.iter_mut().enumerate() {
+        let b = lane0 + i;
+        let lc = &mut cache.layers[layer];
+        lc.append(&k[b * kvd..(b + 1) * kvd], &v[b * kvd..(b + 1) * kvd], 1);
+        lc.attend(&q[b * qd..(b + 1) * qd], n_heads,
+                  &mut out[i * qd..(i + 1) * qd], ws);
+    }
+}
+
+// The fan-out moves `&mut SeqKvCache` and the scratch buffers onto scoped
+// worker threads; keep that requirement checked at compile time.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<SeqKvCache>();
+    assert_send::<AttnScratch>();
+};
+
 /// Reusable buffers for decode steps.
 #[derive(Default)]
 pub struct DecodeScratch {
+    /// `[bsz][q_dim]` attention output fed to the `post` executable
     pub attn: Vec<f32>,
-    pub attn_scratch: AttnScratch,
+    /// per-worker attention scratches (index = worker id; grown on demand,
+    /// then reused every step)
+    pub lanes: Vec<AttnScratch>,
+    /// wall-clock nanoseconds the last `decode_step` spent in the
+    /// append+attend fan-out, summed over layers (feeds
+    /// `Metrics::attn_us` and the pool-utilization metric)
+    pub attn_ns: u64,
 }

@@ -19,7 +19,13 @@
 use super::groupq::PackedBlock;
 use super::pack::unpack_stream;
 
-/// Reusable scratch buffers for the fused kernels (one per engine thread).
+/// Reusable scratch buffers for the fused kernels (one per worker thread:
+/// the decode fan-out carries a `FusedScratch` inside each worker's
+/// `AttnScratch`, never sharing one across threads).
+///
+/// The unpack-cache `tag` stores the block's words pointer as a plain
+/// `usize` identity, so the struct stays `Send` (asserted in
+/// `kvcache::cache`); it only elides re-unpacking, never changes results.
 #[derive(Default)]
 pub struct FusedScratch {
     pub ints: Vec<u32>,

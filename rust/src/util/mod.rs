@@ -4,7 +4,9 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 pub use json::Json;
+pub use pool::{resolve_threads, WorkerPool};
 pub use rng::Rng;

@@ -1,0 +1,387 @@
+//! Scoped worker pool for the decode hot path (DESIGN.md §Threading-Model,
+//! docs/adr/001-scoped-threads-over-rayon.md).
+//!
+//! rayon is unavailable offline, and spawning OS threads per decode step
+//! costs more than the per-layer attention fan-out it would parallelize.
+//! [`WorkerPool::scoped`] therefore spawns **long-lived** workers once,
+//! inside a [`std::thread::scope`], and [`WorkerPool::run`] dispatches one
+//! parallel region at a time to them: the calling thread participates as
+//! worker 0, the scoped threads are workers `1..threads`, and `run`
+//! returns only after every worker has finished the region.
+//!
+//! That barrier is what makes the one `unsafe` block here sound: `run`
+//! erases the lifetime of the job closure so it can sit in the shared
+//! slot the long-lived workers poll, but the borrow it erases provably
+//! outlives every use because `run` blocks until `remaining == 0`.
+//!
+//! Worker panics are caught, counted, and re-raised on the submitting
+//! thread once the region completes, so a panicking lane cannot leave the
+//! pool wedged (see the `panic_in_worker_propagates` test).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// A parallel region: invoked once per worker with the worker id in
+/// `0..threads`. Workers with no work for their id must return promptly.
+type Job<'a> = &'a (dyn Fn(usize) + Sync);
+
+struct PoolState {
+    /// bumped once per `run` call so workers run each region exactly once
+    epoch: u64,
+    /// the current region, lifetime-erased (see `WorkerPool::run`)
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// scoped workers still inside the current region
+    remaining: usize,
+    /// workers that panicked inside the current region
+    worker_panics: usize,
+    shutdown: bool,
+}
+
+/// Reusable fork-join pool over `std::thread::scope` workers.
+///
+/// Construction is only possible through [`WorkerPool::scoped`], which
+/// ties the workers' lifetime to a caller-provided closure — there is no
+/// way to leak a running pool.
+pub struct WorkerPool {
+    threads: usize,
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// total nanoseconds all workers (incl. the caller) spent executing
+    /// jobs — the numerator of the pool-utilization metric
+    busy_ns: AtomicU64,
+}
+
+/// Resolve a `--threads` request: `0` means one worker per available core.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+impl WorkerPool {
+    /// Run `f` with a pool of `threads` workers (`0` = one per core).
+    ///
+    /// Workers are spawned once, live for the whole closure, and are
+    /// joined (via the enclosing [`std::thread::scope`]) before `scoped`
+    /// returns — even if `f` panics.  `threads == 1` spawns nothing and
+    /// every [`WorkerPool::run`] executes inline on the caller.
+    pub fn scoped<R>(threads: usize, f: impl FnOnce(&WorkerPool) -> R) -> R {
+        let threads = resolve_threads(threads).max(1);
+        let pool = WorkerPool {
+            threads,
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                worker_panics: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            busy_ns: AtomicU64::new(0),
+        };
+        if threads == 1 {
+            return f(&pool);
+        }
+        std::thread::scope(|s| {
+            for id in 1..threads {
+                let p = &pool;
+                s.spawn(move || p.worker_loop(id));
+            }
+            // release the workers when `f` unwinds, or the scope's implicit
+            // join would deadlock
+            struct ShutdownOnDrop<'p>(&'p WorkerPool);
+            impl Drop for ShutdownOnDrop<'_> {
+                fn drop(&mut self) {
+                    self.0.lock_state().shutdown = true;
+                    self.0.work_cv.notify_all();
+                }
+            }
+            let _shutdown = ShutdownOnDrop(&pool);
+            f(&pool)
+        })
+    }
+
+    /// Worker count, caller thread included (always >= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cumulative time workers have spent executing jobs. Sample before
+    /// and after a timed region to compute utilization:
+    /// `(busy_after - busy_before) / (threads * wall_ns)`.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Execute one parallel region: `job(w)` runs once for every worker id
+    /// `w` in `0..threads`, concurrently, with `job(0)` on the calling
+    /// thread.  Blocks until all workers finish; re-raises any panic.
+    ///
+    /// Lane order guarantee: `run` adds no ordering of its own — callers
+    /// partition work by id, and each partition executes exactly the
+    /// statements the sequential path would, so a deterministic job is
+    /// bit-identical to its `threads == 1` execution.
+    pub fn run(&self, job: Job<'_>) {
+        if self.threads == 1 {
+            let t0 = Instant::now();
+            let r = catch_unwind(AssertUnwindSafe(|| job(0)));
+            self.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if let Err(p) = r {
+                resume_unwind(p);
+            }
+            return;
+        }
+        // SAFETY: the job slot outlives `'_` only inside this call — the
+        // wait loop below does not return until every worker has both
+        // finished executing the job and dropped its copy of the
+        // reference (`remaining == 0`), after which the slot is cleared.
+        let job_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(job) };
+        {
+            let mut st = self.lock_state();
+            // hard assert (not debug_assert): a nested `run` from inside a
+            // job would corrupt `remaining` and deadlock silently in
+            // release builds — fail loudly instead
+            assert!(
+                st.job.is_none() && st.remaining == 0,
+                "WorkerPool::run is not reentrant"
+            );
+            st.job = Some(job_static);
+            st.remaining = self.threads - 1;
+            st.epoch += 1;
+            self.work_cv.notify_all();
+        }
+        let t0 = Instant::now();
+        let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
+        self.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut st = self.lock_state();
+        while st.remaining > 0 {
+            st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let worker_panics = std::mem::take(&mut st.worker_panics);
+        drop(st);
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if worker_panics > 0 {
+            panic!("{worker_panics} WorkerPool worker(s) panicked in a parallel region");
+        }
+    }
+
+    /// Distribute owned `tasks` across the workers — task `i` runs as
+    /// `f(i, task)` on worker `i` — and block until all finish.
+    ///
+    /// This is the pool's fork-join idiom for mutable work: callers chunk
+    /// their `&mut` data into at most [`WorkerPool::threads`] disjoint
+    /// task values (typically one contiguous chunk + one scratch per
+    /// worker) and hand them over by value; ownership transfer through
+    /// the id-indexed slots is what lets every worker mutate its chunk
+    /// without contention.  Used by the decode fan-out, prefill
+    /// attention, and the benches/tests, so all of them exercise the
+    /// same dispatch path.
+    pub fn run_tasks<T, I, F>(&self, tasks: I, f: F)
+    where
+        T: Send,
+        I: IntoIterator<Item = T>,
+        F: Fn(usize, T) + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        assert!(slots.len() <= self.threads,
+                "run_tasks: {} tasks for {} workers — excess tasks would be dropped",
+                slots.len(), self.threads);
+        if slots.is_empty() {
+            return;
+        }
+        self.run(&|w| {
+            if let Some(slot) = slots.get(w) {
+                let t = slot.lock().unwrap_or_else(|e| e.into_inner()).take();
+                if let Some(t) = t {
+                    f(w, t);
+                }
+            }
+        });
+    }
+
+    fn worker_loop(&self, id: usize) {
+        let mut seen_epoch = 0u64;
+        loop {
+            let job = {
+                let mut st = self.lock_state();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.epoch != seen_epoch {
+                        if let Some(job) = st.job {
+                            seen_epoch = st.epoch;
+                            break job;
+                        }
+                    }
+                    st = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            let t0 = Instant::now();
+            let result = catch_unwind(AssertUnwindSafe(|| job(id)));
+            self.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let mut st = self.lock_state();
+            if result.is_err() {
+                st.worker_panics += 1;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        // a caught worker panic can poison the mutex between the catch and
+        // the bookkeeping; the state itself stays consistent, so recover
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let n = 1024usize;
+        let data: Vec<u64> = (0..n as u64).map(|x| x * x + 1).collect();
+        let seq: u64 = data.iter().sum();
+        for threads in [1usize, 2, 4, 8] {
+            let got = WorkerPool::scoped(threads, |pool| {
+                let nw = pool.threads();
+                let per = n.div_ceil(nw);
+                let partials: Vec<AtomicU64> = (0..nw).map(|_| AtomicU64::new(0)).collect();
+                pool.run(&|w| {
+                    let lo = (w * per).min(n);
+                    let hi = ((w + 1) * per).min(n);
+                    let s: u64 = data[lo..hi].iter().sum();
+                    partials[w].store(s, Ordering::Relaxed);
+                });
+                partials.iter().map(|p| p.load(Ordering::Relaxed)).sum::<u64>()
+            });
+            assert_eq!(got, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_runs() {
+        WorkerPool::scoped(4, |pool| {
+            let hits = AtomicUsize::new(0);
+            for _ in 0..50 {
+                pool.run(&|_w| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            assert_eq!(hits.load(Ordering::Relaxed), 50 * pool.threads());
+        });
+    }
+
+    #[test]
+    fn run_tasks_mutable_chunks() {
+        // the decode fan-out pattern: disjoint &mut chunks handed to
+        // workers by value, for every thread count incl. sequential
+        for threads in [1usize, 2, 4] {
+            let mut out = vec![0u32; 37];
+            WorkerPool::scoped(threads, |pool| {
+                let nw = pool.threads();
+                let per = out.len().div_ceil(nw);
+                let chunks = out.chunks_mut(per).enumerate()
+                    .map(|(ci, c)| (ci * per, c));
+                pool.run_tasks(chunks, |_w, (base, chunk)| {
+                    for (i, x) in chunk.iter_mut().enumerate() {
+                        *x = (base + i) as u32;
+                    }
+                });
+            });
+            for (i, x) in out.iter().enumerate() {
+                assert_eq!(*x, i as u32, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_rejects_more_tasks_than_workers() {
+        WorkerPool::scoped(2, |pool| {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run_tasks(0..3usize, |_w, _t| {});
+            }));
+            assert!(r.is_err(), "3 tasks on 2 workers must panic, not drop work");
+        });
+    }
+
+    #[test]
+    fn panic_in_worker_propagates() {
+        WorkerPool::scoped(4, |pool| {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(&|w| {
+                    if w == 1 {
+                        panic!("boom in worker");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "worker panic must surface on the caller");
+            // the pool must stay usable after a propagated panic
+            let hits = AtomicUsize::new(0);
+            pool.run(&|_w| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), pool.threads());
+        });
+    }
+
+    #[test]
+    fn panic_on_caller_thread_propagates() {
+        WorkerPool::scoped(2, |pool| {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(&|w| {
+                    if w == 0 {
+                        panic!("boom on caller");
+                    }
+                });
+            }));
+            assert!(r.is_err());
+        });
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        WorkerPool::scoped(1, |pool| {
+            assert_eq!(pool.threads(), 1);
+            let main_id = std::thread::current().id();
+            pool.run(&|w| {
+                assert_eq!(w, 0);
+                assert_eq!(std::thread::current().id(), main_id);
+            });
+        });
+    }
+
+    #[test]
+    fn busy_counter_advances() {
+        WorkerPool::scoped(2, |pool| {
+            let before = pool.busy_ns();
+            pool.run(&|_w| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            });
+            assert!(pool.busy_ns() > before);
+        });
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

@@ -106,6 +106,7 @@ fn engine_serves_batch_with_budget() {
         &default_artifacts_dir().join("importance.json")).unwrap();
     let mut engine = Engine::new(&rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: Some(64 << 20),
+        threads: 1,
     }).unwrap();
     let mut rng = Rng::new(3);
     for id in 0..6 {
@@ -131,7 +132,7 @@ fn engine_oom_eviction_still_completes() {
     let bpt = kvmix::coordinator::estimate_bytes_per_token(&rt, &method);
     let budget = (bpt * 140.0) as usize; // fits ~1 seq of 40+24 comfortably
     let mut engine = Engine::new(&rt, EngineCfg {
-        method, max_batch: 4, kv_budget: Some(budget),
+        method, max_batch: 4, kv_budget: Some(budget), threads: 1,
     }).unwrap();
     let mut rng = Rng::new(4);
     for id in 0..3 {

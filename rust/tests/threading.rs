@@ -1,0 +1,170 @@
+//! Parallel/sequential parity for the decode fan-out (DESIGN.md
+//! §Threading-Model): the pooled paths must produce **bit-identical**
+//! results to the sequential ones for any thread count.
+//!
+//! The cache-level test runs without artifacts; the full `decode_step`
+//! test is gated on `make artifacts` like the other integration tests.
+
+use kvmix::baselines::Method;
+use kvmix::config::QuantPlan;
+use kvmix::harness::workload;
+use kvmix::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
+use kvmix::model::{DecodeScratch, Forward};
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::{Rng, WorkerPool};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load_with(&dir, false).expect("runtime load"))
+}
+
+/// Per-lane decode attention fanned out across the pool, mirroring the
+/// chunking in `Forward::decode_step`, must be bit-identical to the
+/// sequential loop — per policy, and without needing the PJRT runtime.
+#[test]
+fn pooled_lane_attend_bit_identical_no_runtime() {
+    let (n_heads, hd, kv_dim) = (4usize, 32usize, 64usize);
+    let qd = n_heads * hd;
+    let policies: [(&str, KeyRepr, ValueRepr, WindowPolicy); 3] = [
+        ("kvmix", KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+         WindowPolicy::Rpc { ratio: 0.1 }),
+        ("kivi", KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+         WindowPolicy::FixedResidual { tokens: 64 }),
+        ("fp16", KeyRepr::Fp, ValueRepr::Fp, WindowPolicy::All),
+    ];
+    for (name, key, value, window) in policies {
+        let bsz = 7usize; // deliberately not a multiple of the thread count
+        let build_lanes = || -> Vec<LayerKvCache> {
+            (0..bsz).map(|b| {
+                let mut c = LayerKvCache::new(LayerCacheCfg {
+                    kv_dim, head_dim: hd, group: 32, key, value,
+                    k_window: window, v_window: window, outlier_frac: 0.0,
+                });
+                let mut rng = Rng::new(100 + b as u64);
+                c.append(&rng.normal_vec(80 * kv_dim), &rng.normal_vec(80 * kv_dim), 80);
+                c
+            }).collect()
+        };
+        let mut rng = Rng::new(7);
+        let qs = rng.normal_vec(bsz * qd);
+        let ks = rng.normal_vec(bsz * kv_dim);
+        let vs = rng.normal_vec(bsz * kv_dim);
+
+        // sequential reference (one scratch, lane order 0..bsz)
+        let mut seq_lanes = build_lanes();
+        let mut seq_out = vec![0f32; bsz * qd];
+        let mut ws = AttnScratch::default();
+        for b in 0..bsz {
+            let lc = &mut seq_lanes[b];
+            lc.append(&ks[b * kv_dim..(b + 1) * kv_dim],
+                      &vs[b * kv_dim..(b + 1) * kv_dim], 1);
+            lc.attend(&qs[b * qd..(b + 1) * qd], n_heads,
+                      &mut seq_out[b * qd..(b + 1) * qd], &mut ws);
+        }
+
+        for threads in [2usize, 4] {
+            let mut lanes = build_lanes();
+            let mut out = vec![0f32; bsz * qd];
+            WorkerPool::scoped(threads, |pool| {
+                let nw = pool.threads().min(bsz);
+                let per = bsz.div_ceil(nw);
+                let mut scratches: Vec<AttnScratch> = Vec::new();
+                scratches.resize_with(nw, AttnScratch::default);
+                let chunks = lanes.chunks_mut(per)
+                    .zip(out.chunks_mut(per * qd))
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                    .map(|(ci, ((lc, o), ws))| (ci * per, lc, o, ws));
+                pool.run_tasks(chunks, |_w, (lane0, lanes, out, ws)| {
+                    for (i, lc) in lanes.iter_mut().enumerate() {
+                        let b = lane0 + i;
+                        lc.append(&ks[b * kv_dim..(b + 1) * kv_dim],
+                                  &vs[b * kv_dim..(b + 1) * kv_dim], 1);
+                        lc.attend(&qs[b * qd..(b + 1) * qd], n_heads,
+                                  &mut out[i * qd..(i + 1) * qd], ws);
+                    }
+                });
+            });
+            assert!(out == seq_out,
+                    "{name}: pooled attend (threads={threads}) not bit-identical");
+            for (a, b) in lanes.iter().zip(&seq_lanes) {
+                assert_eq!(a.modeled_bytes(), b.modeled_bytes(),
+                           "{name}: modeled_bytes diverged (threads={threads})");
+            }
+        }
+    }
+}
+
+/// Full `decode_step` parity through the PJRT runtime: `threads=4` must
+/// produce bit-identical logits and identical `modeled_bytes()` to
+/// `threads=1` across the kvmix / kivi / fp16 policies.
+#[test]
+fn decode_step_parity_across_thread_counts() {
+    let Some(rt) = runtime() else { return };
+    let methods = [
+        Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2)),
+        Method::Kivi { bits: 2, residual: 64 },
+        Method::Fp16,
+    ];
+    for method in methods {
+        let run = |threads: usize| -> (Vec<Vec<f32>>, Vec<usize>) {
+            WorkerPool::scoped(threads, |pool| {
+                let fwd = Forward::with_pool(&rt, Some(pool));
+                let mut rng = Rng::new(9);
+                let bsz = 4usize;
+                let mut caches: Vec<_> = (0..bsz).map(|_| {
+                    let mut c = method.make_cache(&rt.model);
+                    let (toks, _) = workload::sample_mixture(&mut rng, 40);
+                    fwd.prefill(&toks, &mut c).expect("prefill");
+                    c
+                }).collect();
+                let mut scratch = DecodeScratch::default();
+                let inputs = vec![workload::BOS; bsz];
+                let mut per_step = Vec::new();
+                for _ in 0..6 {
+                    let mut refs: Vec<_> = caches.iter_mut().collect();
+                    per_step.push(fwd.decode_step(&inputs, &mut refs, &mut scratch)
+                                     .expect("decode"));
+                }
+                let bytes = caches.iter().map(|c| c.modeled_bytes()).collect();
+                (per_step, bytes)
+            })
+        };
+        let (seq_logits, seq_bytes) = run(1);
+        let (par_logits, par_bytes) = run(4);
+        assert_eq!(seq_bytes, par_bytes, "{}: modeled_bytes diverged", method.name());
+        for (step, (a, b)) in seq_logits.iter().zip(&par_logits).enumerate() {
+            assert!(a == b, "{}: logits at step {step} not bit-identical",
+                    method.name());
+        }
+    }
+}
+
+/// `DecodeScratch` worker buffers must grow once and then be reused —
+/// the steady-state decode path may not allocate new scratches.
+#[test]
+fn decode_scratch_lane_count_is_stable() {
+    let Some(rt) = runtime() else { return };
+    WorkerPool::scoped(4, |pool| {
+        let fwd = Forward::with_pool(&rt, Some(pool));
+        let method = Method::Fp16;
+        let mut rng = Rng::new(3);
+        let mut caches: Vec<_> = (0..4).map(|_| {
+            let mut c = method.make_cache(&rt.model);
+            let (toks, _) = workload::sample_mixture(&mut rng, 16);
+            fwd.prefill(&toks, &mut c).expect("prefill");
+            c
+        }).collect();
+        let mut scratch = DecodeScratch::default();
+        let inputs = vec![workload::BOS; 4];
+        for _ in 0..3 {
+            let mut refs: Vec<_> = caches.iter_mut().collect();
+            fwd.decode_step(&inputs, &mut refs, &mut scratch).expect("decode");
+        }
+        assert_eq!(scratch.lanes.len(), 4, "one scratch per worker, reused");
+    });
+}
