@@ -29,6 +29,7 @@ fn main() -> Result<()> {
         max_batch: 1,
         kv_budget: None,
         threads: 1,
+        page_tokens: 0, // monolithic accounting; see DESIGN.md §Memory-Manager
     })?;
 
     // a recall-task prompt: bindings ... SEP QRY key -> the model should

@@ -4,7 +4,7 @@
 //! KVmix cache, and reports latency/throughput + memory vs the FP16
 //! baseline.
 //!
-//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4]
+//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4 --page-tokens 64]
 
 use anyhow::Result;
 use kvmix::baselines::Method;
@@ -23,6 +23,8 @@ fn main() -> Result<()> {
     let batch = args.usize_or("batch", 8)?;
     let max_new = args.usize_or("max-new", 48)?;
     let threads = args.usize_or("threads", 1)?;
+    // 0 = monolithic; e.g. --page-tokens 64 enables the paged KV pool
+    let page_tokens = args.usize_or("page-tokens", 0)?;
 
     let dir = default_artifacts_dir();
     let rt = Runtime::load_with(&dir, false)?;
@@ -35,6 +37,7 @@ fn main() -> Result<()> {
         WorkerPool::scoped(threads, |pool| -> Result<()> {
             let mut engine = Engine::with_pool(&rt, EngineCfg {
                 method: method.clone(), max_batch: batch, kv_budget: None, threads,
+                page_tokens,
             }, Some(pool))?;
             let mut rng = Rng::new(42);
             for id in 0..n_requests {

@@ -5,11 +5,16 @@
 //!
 //! The threads={1,2,4,8} rows measure the decode attention fan-out
 //! (DESIGN.md §Threading-Model); logits are bit-identical across rows,
-//! only the wall time changes.
+//! only the wall time changes.  The trailing `+paged64` rows re-run the
+//! threads=1 sweep with a per-step page-table reconcile + page-granular
+//! byte charge against a [`kvmix::kvcache::PagePool`] — i.e. they price
+//! the paged pool's accounting overhead on the decode hot path
+//! (DESIGN.md §Memory-Manager); the arithmetic is identical.
 
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
 use kvmix::harness::workload;
+use kvmix::kvcache::PagePool;
 use kvmix::model::{DecodeScratch, Forward};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 use kvmix::util::{Rng, WorkerPool};
@@ -59,6 +64,41 @@ fn main() {
                              (steps * batch) as f64 / secs);
                 });
             }
+            // paged accounting overhead: identical decode, plus per-step
+            // page-table sync + page-granular charge (engine-thread work)
+            let fwd = Forward::new(&rt);
+            let mut rng = Rng::new(3);
+            let mut caches: Vec<_> = (0..batch).map(|_| {
+                let mut c = method.make_cache(&rt.model);
+                let (toks, _) = workload::sample_mixture(&mut rng, 48);
+                fwd.prefill(&toks, &mut c).expect("prefill");
+                c
+            }).collect();
+            let mut pool = PagePool::new(64, rt.model.kv_dim(), rt.model.group)
+                .expect("page pool");
+            let mut scratch = DecodeScratch::default();
+            let inputs = vec![workload::BOS; batch];
+            for _ in 0..3 {
+                let mut refs: Vec<_> = caches.iter_mut().collect();
+                fwd.decode_step(&inputs, &mut refs, &mut scratch).unwrap();
+            }
+            let steps = 40;
+            let t0 = std::time::Instant::now();
+            let mut charged = 0usize;
+            for _ in 0..steps {
+                let mut refs: Vec<_> = caches.iter_mut().collect();
+                fwd.decode_step(&inputs, &mut refs, &mut scratch).unwrap();
+                for (id, c) in caches.iter().enumerate() {
+                    pool.sync(id as u64, c);
+                }
+                charged = pool.modeled_bytes();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            println!("{:<22} {:>6} {:>8} {:>12.3} {:>12.1}   (pages {} / {:.1} KiB)",
+                     format!("{} +paged64", method.name()), batch, 1,
+                     secs / steps as f64 * 1e3,
+                     (steps * batch) as f64 / secs,
+                     pool.allocated_pages(), charged as f64 / 1024.0);
         }
     }
 }

@@ -1,5 +1,9 @@
-//! Bench harness for paper Fig. 7: peak KV memory by method at batch 4.
-//! (The same numbers as `kvmix repro fig7`, in bench form.)
+//! Bench harness for paper Fig. 7: peak KV memory by method at batch 4
+//! (the same numbers as `kvmix repro fig7`, in bench form), plus the
+//! paged-vs-monolithic pressure rows: under a budget that OOMs the
+//! monolithic engine at batch 4, the paged pool downshifts old pages down
+//! the bit ladder (then preempts, only past the floors) and sustains a
+//! strictly larger decode batch (DESIGN.md §Memory-Manager).
 
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
@@ -20,11 +24,36 @@ fn main() {
     println!("{:<22} {:>14} {:>10}", "method", "peak KiB", "vs FP16");
     let mut fp16 = 0f64;
     for method in Method::comparison_set(&plan) {
-        let (peak, _) = run_serving(&rt, &method, 4, 48, 64, None).expect("serve");
-        let kib = peak as f64 / 1024.0;
+        let s = run_serving(&rt, &method, 4, 48, 64, None, 0).expect("serve");
+        let kib = s.peak_kv_bytes as f64 / 1024.0;
         if matches!(method, Method::Fp16) {
             fp16 = kib;
         }
         println!("{:<22} {:>14.2} {:>9.2}x", method.name(), kib, fp16 / kib);
+    }
+
+    // -- pressure section: paged vs monolithic under a squeezed budget --
+    let kvmix = Method::Kvmix(plan);
+    let base = run_serving(&rt, &kvmix, 4, 48, 64, None, 0)
+        .expect("unbudgeted baseline").peak_kv_bytes;
+    let budget = base * 55 / 100; // tight enough that monolithic batch 4 OOMs
+    println!();
+    println!("# paged vs monolithic, kvmix plan, budget {:.1} KiB \
+              (55% of the monolithic batch-4 peak)",
+             budget as f64 / 1024.0);
+    println!("{:<12} {:>6} {:>8} {:>12} {:>14} {:>9} {:>10}",
+             "mode", "batch", "status", "peak KiB", "pages_requant", "preempt", "tok/s");
+    let cases: [(&str, usize, &[usize]); 2] =
+        [("monolithic", 0, &[4]), ("paged-64", 64, &[4, 6, 8])];
+    for (mode, page_tokens, batches) in cases {
+        for &b in batches {
+            match run_serving(&rt, &kvmix, b, 48, 64, Some(budget), page_tokens) {
+                Ok(s) => println!("{:<12} {:>6} {:>8} {:>12.2} {:>14} {:>9} {:>10.1}",
+                                  mode, b, "ok", s.peak_kv_bytes as f64 / 1024.0,
+                                  s.pages_requantized, s.preemptions, s.tok_per_s),
+                Err(_) => println!("{:<12} {:>6} {:>8} {:>12} {:>14} {:>9} {:>10}",
+                                   mode, b, "OOM", "-", "-", "-", "-"),
+            }
+        }
     }
 }

@@ -29,8 +29,8 @@ fn main() {
     for method in Method::comparison_set(&plan) {
         print!("{:<22}", method.name());
         for b in [1usize, 2, 4, 8, 16, 32] {
-            match run_serving(&rt, &method, b, prompt, gen, Some(budget)) {
-                Ok((_, thr)) => print!(" {:>9.1}", thr),
+            match run_serving(&rt, &method, b, prompt, gen, Some(budget), 0) {
+                Ok(s) => print!(" {:>9.1}", s.tok_per_s),
                 Err(_) => print!(" {:>9}", "OOM"),
             }
         }

@@ -14,7 +14,8 @@
 //! * **fp16** — no quantization (memory modeled at 2 B/element).
 
 use crate::config::{ModelConfig, QuantPlan};
-use crate::kvcache::{KeyRepr, LayerCacheCfg, SeqKvCache, ValueRepr, WindowPolicy};
+use crate::kvcache::{KeyRepr, LayerCacheCfg, PressureCfg, SeqKvCache, ValueRepr,
+                     WindowPolicy};
 
 /// A named KV-cache policy.
 #[derive(Debug, Clone)]
@@ -86,6 +87,29 @@ impl Method {
         }
     }
 
+    /// Requantization floors for the paged pool's pressure controller
+    /// (DESIGN.md §Memory-Manager).  KVmix floors derive from the
+    /// gradient-importance plan; uniform baselines floor at 2 bits when
+    /// their plan sits above 2 bits, else 1; fp16 has nothing to
+    /// downshift, and QJL's sign-JL keys are not requantizable (only its
+    /// value pages move down the ladder).
+    pub fn pressure_floors(&self, n_layers: usize) -> PressureCfg {
+        let unif = |b: u8| if b > 2 { 2 } else { 1 };
+        match self {
+            Method::Fp16 => PressureCfg::uniform(n_layers, 16),
+            Method::Kvmix(plan) => PressureCfg::from_plan(plan),
+            Method::Kivi { bits, .. }
+            | Method::KvQuant { bits, .. }
+            | Method::Atom { bits }
+            | Method::UniformPerToken { bits } => PressureCfg::uniform(n_layers, unif(*bits)),
+            Method::Qjl { v_bits, .. } => {
+                let mut p = PressureCfg::uniform(n_layers, unif(*v_bits));
+                p.k_floor = vec![16; n_layers];
+                p
+            }
+        }
+    }
+
     /// The paper's standard comparison set (Tables 2–3, Figs. 7–8).
     pub fn comparison_set(kvmix_plan: &QuantPlan) -> Vec<Method> {
         vec![
@@ -138,6 +162,18 @@ mod tests {
         }
         assert!(sizes[0].1 > sizes[1].1, "{sizes:?}"); // fp16 > kivi
         assert!(sizes[1].1 > sizes[2].1, "{sizes:?}"); // kivi residual > kvmix rpc
+    }
+
+    #[test]
+    fn pressure_floor_presets() {
+        assert_eq!(Method::Fp16.pressure_floors(3).k_floor, vec![16, 16, 16]);
+        let kivi = Method::Kivi { bits: 2, residual: 64 }.pressure_floors(2);
+        assert_eq!(kivi.k_floor, vec![1, 1]);
+        let atom = Method::Atom { bits: 4 }.pressure_floors(2);
+        assert_eq!(atom.v_floor, vec![2, 2]);
+        let qjl = Method::Qjl { jl_dim_mult: 4, v_bits: 3 }.pressure_floors(2);
+        assert_eq!(qjl.k_floor, vec![16, 16], "sign-JL keys are not requantizable");
+        assert_eq!(qjl.v_floor, vec![2, 2]);
     }
 
     #[test]

@@ -6,12 +6,33 @@
 //! plus max_new_tokens at the policy's bytes/token rate.  This is the
 //! vLLM-style continuous batching loop, with the projection made cheap by
 //! the cache's modeled bytes/token.
+//!
+//! Admission scans a bounded lookahead of the queue ([`ADMIT_LOOKAHEAD`])
+//! so one huge projected request cannot starve small ones behind it.
 
 use std::collections::VecDeque;
 
 use crate::kvcache::MemoryBudget;
 
 use super::request::Request;
+
+/// Bounded admission lookahead: [`Batcher::admit`] considers at most this
+/// many waiting requests from the head of the FIFO.  A head request whose
+/// projected footprint cannot currently fit no longer blocks admissible
+/// smaller requests queued just behind it (head-of-line blocking), and
+/// the bound keeps admission O(1) per step.
+///
+/// The trade-off, stated plainly: this is *not* strict FIFO anymore.  A
+/// memory-blocked head is examined first every step but can be overtaken
+/// repeatedly — under a sustained stream of small requests that keep
+/// free memory below its projection, a large head may wait unboundedly
+/// (the bound limits how deep the scheduler looks, not how long the head
+/// waits; there is no aging or memory-reservation mechanism).  Requests
+/// *beyond* the window cannot overtake, and among requests that fit,
+/// oldest still wins.  In paged mode the engine's admission-time
+/// pressure relief works in the head's favor by downshifting old pages
+/// toward its projection (see `coordinator/engine.rs`).
+pub const ADMIT_LOOKAHEAD: usize = 4;
 
 pub struct Batcher {
     pub queue: VecDeque<Request>,
@@ -38,16 +59,29 @@ impl Batcher {
         ((req.prompt.len() + req.max_new_tokens) as f64 * self.bytes_per_token).ceil() as usize
     }
 
-    /// Pop the next request if a slot is free and the budget admits it.
+    /// Pop the next admissible request: the oldest of the first
+    /// [`ADMIT_LOOKAHEAD`] waiting requests whose projected footprint
+    /// fits the free budget, provided a batch slot is free.
     pub fn admit(&mut self, active: usize, budget: &MemoryBudget) -> Option<Request> {
         if active >= self.max_batch {
             return None;
         }
-        let req = self.queue.front()?;
-        if self.projected_bytes(req) > budget.free() {
-            return None;
+        let lim = self.queue.len().min(ADMIT_LOOKAHEAD);
+        for i in 0..lim {
+            if self.projected_bytes(&self.queue[i]) <= budget.free() {
+                return self.queue.remove(i);
+            }
         }
-        self.queue.pop_front()
+        None
+    }
+
+    /// Smallest projected footprint within the admission lookahead — what
+    /// the pressure controller must free for admission to progress
+    /// (`None` when the queue is empty).
+    pub fn min_projected_in_lookahead(&self) -> Option<usize> {
+        self.queue.iter().take(ADMIT_LOOKAHEAD)
+            .map(|r| self.projected_bytes(r))
+            .min()
     }
 }
 
@@ -90,5 +124,30 @@ mod tests {
         let budget = MemoryBudget::new(1_000_000, 0).unwrap();
         assert_eq!(b.admit(0, &budget).unwrap().id, 1);
         assert_eq!(b.admit(0, &budget).unwrap().id, 2);
+    }
+
+    #[test]
+    fn lookahead_skips_head_of_line_blocker() {
+        let mut b = Batcher::new(8, 100.0);
+        b.submit(req(1, 1_000, 1_000)); // projected 200_000: cannot fit
+        b.submit(req(2, 5, 5));         // projected 1_000: fits
+        let budget = MemoryBudget::new(10_000, 0).unwrap();
+        assert_eq!(b.admit(0, &budget).unwrap().id, 2, "small request must not starve");
+        assert!(b.admit(0, &budget).is_none(), "blocker itself still waits");
+        assert_eq!(b.waiting(), 1);
+        assert_eq!(b.min_projected_in_lookahead(), Some(200_000));
+    }
+
+    #[test]
+    fn lookahead_is_bounded() {
+        let mut b = Batcher::new(8, 100.0);
+        for id in 0..ADMIT_LOOKAHEAD as u64 {
+            b.submit(req(id, 1_000, 1_000)); // a full window of blockers
+        }
+        b.submit(req(99, 1, 1)); // admissible, but beyond the window
+        let budget = MemoryBudget::new(10_000, 0).unwrap();
+        assert!(b.admit(0, &budget).is_none(),
+                "requests beyond ADMIT_LOOKAHEAD must not be admitted");
+        assert!(b.min_projected_in_lookahead().unwrap() > budget.free());
     }
 }

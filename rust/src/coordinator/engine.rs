@@ -3,9 +3,21 @@
 //!
 //! One `step()` = admit waiting requests (prefill them) + one batched
 //! decode step for every active request + retire completions.  Memory is
-//! charged against the [`MemoryBudget`] after each step; a simulated OOM
-//! evicts the *youngest* request back to the queue (preempt-restart, the
-//! usual vLLM recompute policy).
+//! charged against the [`MemoryBudget`] after each step.
+//!
+//! Two memory regimes (DESIGN.md §Memory-Manager):
+//!
+//! * **Monolithic** (`page_tokens == 0`, the pre-pool behavior): each
+//!   sequence is charged its exact modeled bytes; a simulated OOM evicts
+//!   the *youngest* request back to the queue and counts an `oom_event`
+//!   (preempt-restart, the usual vLLM recompute policy).
+//! * **Paged** (`page_tokens > 0`): sequences map onto a global
+//!   [`PagePool`] and the budget is charged at page granularity.  Under
+//!   pressure — admission failure or simulated OOM — the engine first
+//!   requantizes the oldest out-of-window pages down the bit ladder
+//!   (bounded by the per-layer gradient-importance floors) and only when
+//!   every page sits at its floor preempts the lowest-priority (youngest)
+//!   sequence; `oom_events` then only counts the unrecoverable case.
 
 use anyhow::Result;
 
@@ -13,7 +25,7 @@ use crate::baselines::Method;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ActiveRequest, Completion, Request};
-use crate::kvcache::MemoryBudget;
+use crate::kvcache::{pressure, MemoryBudget, PagePool, PressureCfg};
 use crate::model::{DecodeScratch, Forward};
 use crate::runtime::Runtime;
 use crate::util::{Rng, WorkerPool};
@@ -29,6 +41,10 @@ pub struct EngineCfg {
     /// how `--threads` travels from the CLI to whoever builds the pool
     /// (see `server::serve` and `main.rs`).
     pub threads: usize,
+    /// paged KV pool page size in tokens — must be a positive multiple of
+    /// the quant group, or 0 to keep the monolithic per-sequence
+    /// accounting (DESIGN.md §Memory-Manager; `--page-tokens` on the CLI).
+    pub page_tokens: usize,
 }
 
 pub struct Engine<'a> {
@@ -43,6 +59,10 @@ pub struct Engine<'a> {
     rng: Rng,
     /// attention fan-out workers (None = sequential decode)
     pool: Option<&'a WorkerPool>,
+    /// paged KV pool (None = monolithic accounting)
+    pages: Option<PagePool>,
+    /// per-layer requantization floors for the pressure controller
+    pressure: PressureCfg,
 }
 
 impl<'a> Engine<'a> {
@@ -67,6 +87,12 @@ impl<'a> Engine<'a> {
         // the attached pool is the source of truth for parallelism; keep
         // the stored cfg consistent with it so the two can't diverge
         let threads = pool.map(|p| p.threads()).unwrap_or(1);
+        let pages = if cfg.page_tokens > 0 {
+            Some(PagePool::new(cfg.page_tokens, rt.model.kv_dim(), rt.model.group)?)
+        } else {
+            None
+        };
+        let pressure = cfg.method.pressure_floors(rt.model.n_layers);
         Ok(Engine {
             rt,
             batcher: Batcher::new(max_batch, bpt),
@@ -78,6 +104,8 @@ impl<'a> Engine<'a> {
             scratch: DecodeScratch::default(),
             rng: Rng::new(0xE161),
             pool,
+            pages,
+            pressure,
         })
     }
 
@@ -100,37 +128,80 @@ impl<'a> Engine<'a> {
         let fwd = Forward::with_pool(self.rt, self.pool);
 
         // ---- admission + prefill ----
+        // Paged mode interleaves admission with pressure relief: when a
+        // waiting request is blocked on memory alone and the pool can
+        // still reclaim enough by downshifting old pages to their floors,
+        // requantize one page and retry (DESIGN.md §Memory-Manager).
         let mut admitted_any = false;
-        while let Some(req) = self.batcher.admit(self.active.len(), &self.budget) {
-            admitted_any = true;
-            let mut cache = self.cfg.method.make_cache(&self.rt.model);
-            let logits = fwd.prefill(&req.prompt, &mut cache)?;
-            self.metrics.prefill_tokens += req.prompt.len();
-            let vocab = self.rt.model.vocab;
-            let last = &logits[(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
-            let first_tok = req.sampler.sample(last, &mut self.rng) as i32;
-            let now = self.metrics.now_ns();
-            let ar = ActiveRequest {
-                req, cache, generated: vec![first_tok], next_input: first_tok,
-                prefilled_ns: now, first_token_ns: Some(now),
+        // all-floors reclaimable bound, computed at most once per step and
+        // decremented by each downshift's frame-accounting delta.  It can
+        // only underestimate as new admissions bring more pages (we break
+        // early instead of grinding too far) — conservative and cheap.
+        let mut reclaim_cache: Option<usize> = None;
+        loop {
+            while let Some(req) = self.batcher.admit(self.active.len(), &self.budget) {
+                admitted_any = true;
+                let mut cache = self.cfg.method.make_cache(&self.rt.model);
+                let logits = fwd.prefill(&req.prompt, &mut cache)?;
+                self.metrics.prefill_tokens += req.prompt.len();
+                let vocab = self.rt.model.vocab;
+                let last = &logits[(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
+                let first_tok = req.sampler.sample(last, &mut self.rng) as i32;
+                let now = self.metrics.now_ns();
+                let ar = ActiveRequest {
+                    req, cache, generated: vec![first_tok], next_input: first_tok,
+                    prefilled_ns: now, first_token_ns: Some(now),
+                };
+                self.metrics.decode_tokens += 1;
+                self.metrics.ttft_ms.record((now - ar.req.submitted_ns) as f64 / 1e6);
+                self.active.push(ar);
+                // post-prefill memory charge (admission already projected
+                // it; the decode-step pressure loop handles any
+                // shortfall).  Only the new sequence needs syncing — the
+                // rest were reconciled by the last full charge.
+                let _ = self.charge_admitted()?;
+            }
+            if self.pages.is_none()
+                || self.active.len() >= self.batcher.max_batch
+                || self.batcher.waiting() == 0 {
+                break;
+            }
+            let Some(need) = self.batcher.min_projected_in_lookahead() else { break };
+            if need <= self.budget.free() {
+                break; // nothing is memory-blocked (admit stopped on slots)
+            }
+            let reclaimable = match reclaim_cache {
+                Some(r) => r,
+                None => {
+                    let page_tokens = self.cfg.page_tokens;
+                    let r = self.active.iter()
+                        .map(|a| pressure::reclaimable_bytes(&a.cache, page_tokens,
+                                                            &self.pressure))
+                        .sum();
+                    reclaim_cache = Some(r);
+                    r
+                }
             };
-            self.metrics.decode_tokens += 1;
-            self.metrics.ttft_ms.record((now - ar.req.submitted_ns) as f64 / 1e6);
-            self.active.push(ar);
-            // post-prefill memory charge (admission already projected it;
-            // the decode-step OOM loop below handles any shortfall)
-            let _ = self.charge_memory()?;
+            if need > self.budget.free() + reclaimable {
+                break; // even all-floors downshift cannot fit it
+            }
+            let Some(delta) = self.downshift_once() else { break };
+            reclaim_cache = Some(reclaimable.saturating_sub(delta));
+            // recharge (O(1): downshift_once reconciled the mutated
+            // sequence's table itself), then retry admission
+            let _ = self.charge_current()?;
         }
 
-        // stall detection: nothing running and the head request can never
-        // be admitted -> surface the simulated OOM instead of spinning
+        // stall detection: nothing running and no waiting request can
+        // ever be admitted -> surface the simulated OOM instead of
+        // spinning
         if !admitted_any && self.active.is_empty() && self.batcher.waiting() > 0 {
             self.metrics.oom_events += 1;
-            let head = self.batcher.queue.front().unwrap();
+            let need = self.batcher.min_projected_in_lookahead().unwrap_or(0);
             anyhow::bail!(
-                "request {} cannot be admitted: projected {} bytes > {} free (capacity {})",
-                head.id, self.batcher.projected_bytes(head), self.budget.free(),
-                self.budget.capacity);
+                "no waiting request can be admitted: smallest projected footprint \
+                 {} bytes > {} free (capacity {})",
+                need, self.budget.free(), self.budget.capacity);
         }
 
         // ---- one batched decode step ----
@@ -157,15 +228,39 @@ impl<'a> Engine<'a> {
             }
             self.metrics.decode_tokens += self.active.len();
 
-            // memory charge; simulated OOM evicts the youngest request
-            while self.charge_memory()?.is_err() {
-                self.metrics.oom_events += 1;
+            // memory charge; on simulated OOM the pressure controller
+            // first downshifts the oldest out-of-window pages down the
+            // bit ladder and only at the floors preempts the
+            // lowest-priority (youngest) sequence (paged mode); the
+            // monolithic path keeps the original evict-youngest policy,
+            // counting each eviction as an oom_event.  One full page-table
+            // reconcile after the decode mutations; the relief rounds keep
+            // the pool consistent themselves (targeted sync in
+            // downshift_once, free_owner on preempt) so each retry charge
+            // is the O(1) counter, not a rescan of every sequence.
+            let mut over = self.charge_memory()?.is_err();
+            while over {
+                if self.downshift_once().is_some() {
+                    over = self.charge_current()?.is_err();
+                    continue;
+                }
                 if self.active.len() <= 1 {
-                    break; // single request over budget: let it run (degraded)
+                    // single request over budget: let it run (degraded)
+                    self.metrics.oom_events += 1;
+                    break;
+                }
+                if self.pages.is_some() {
+                    self.metrics.preemptions += 1;
+                } else {
+                    self.metrics.oom_events += 1;
                 }
                 let mut victim = self.active.pop().unwrap();
+                if let Some(pool) = &mut self.pages {
+                    pool.free_owner(victim.req.id);
+                }
                 victim.generated.clear();
                 self.batcher.queue.push_front(victim.req);
+                over = self.charge_current()?.is_err();
             }
         }
 
@@ -176,6 +271,9 @@ impl<'a> Engine<'a> {
         while i < self.active.len() {
             if self.active[i].is_done() {
                 let mut ar = self.active.remove(i);
+                if let Some(pool) = &mut self.pages {
+                    pool.free_owner(ar.req.id);
+                }
                 done.push(self.retire(ar_into_completion(&mut ar, now)));
             } else {
                 i += 1;
@@ -198,10 +296,86 @@ impl<'a> Engine<'a> {
         Ok(all)
     }
 
+    /// Read-only view of the paged pool (None in monolithic mode) —
+    /// benches and tests inspect allocator stats through this.
+    pub fn page_pool(&self) -> Option<&PagePool> {
+        self.pages.as_ref()
+    }
+
+    /// Charge the budget with the current KV footprint: page-granular via
+    /// the pool when paged (every sequence's page table is reconciled
+    /// here, on the engine thread — the decode fan-out never touches the
+    /// pool), else the exact summed modeled bytes.
     fn charge_memory(&mut self) -> Result<std::result::Result<(), ()>> {
-        let kv: usize = self.active.iter().map(|a| a.cache.modeled_bytes()).sum();
+        self.charge(true)
+    }
+
+    /// Cheaper variant for the admission loop: only the just-admitted
+    /// (last) sequence's table needs reconciling — everyone else was
+    /// synced by the previous full charge and hasn't decoded since.
+    fn charge_admitted(&mut self) -> Result<std::result::Result<(), ()>> {
+        self.charge(false)
+    }
+
+    fn charge(&mut self, full_sync: bool) -> Result<std::result::Result<(), ()>> {
+        let kv = match &mut self.pages {
+            Some(pool) => {
+                if full_sync {
+                    for a in &self.active {
+                        pool.sync(a.req.id, &a.cache);
+                    }
+                } else if let Some(a) = self.active.last() {
+                    pool.sync(a.req.id, &a.cache);
+                }
+                pool.modeled_bytes()
+            }
+            None => self.active.iter().map(|a| a.cache.modeled_bytes()).sum(),
+        };
         self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv);
         Ok(self.budget.set_kv(kv).map_err(|_| ()))
+    }
+
+    /// Recharge from the current accounting without reconciling any page
+    /// tables: valid whenever every mutation since the last full charge
+    /// kept the pool consistent itself (downshift_once's targeted sync,
+    /// free_owner).  O(1) in paged mode (the pool's running counter).
+    fn charge_current(&mut self) -> Result<std::result::Result<(), ()>> {
+        let kv = match &self.pages {
+            Some(pool) => pool.modeled_bytes(),
+            None => self.active.iter().map(|a| a.cache.modeled_bytes()).sum(),
+        };
+        self.metrics.peak_kv_bytes = self.metrics.peak_kv_bytes.max(kv);
+        Ok(self.budget.set_kv(kv).map_err(|_| ()))
+    }
+
+    /// One pressure-controller downshift: requantize the oldest sealed
+    /// page still above its floor, scanning the oldest-admitted sequence
+    /// first, and reconcile that one sequence's page table immediately.
+    /// Returns the frame-accounting bytes reclaimed, or `None` in
+    /// monolithic mode / when every page across the batch already sits at
+    /// its floor (the caller then preempts).
+    ///
+    /// The underlying scan restarts from page 0 each call on purpose —
+    /// it's O(1) field reads per already-floored entry, and admissions /
+    /// preemptions change the page population between relief rounds, so
+    /// a carried cursor would go stale.
+    fn downshift_once(&mut self) -> Option<usize> {
+        self.pages.as_ref()?;
+        let page_tokens = self.cfg.page_tokens;
+        for i in 0..self.active.len() {
+            let ds = pressure::downshift_one(&mut self.active[i].cache, page_tokens,
+                                             &self.pressure);
+            if let Some(d) = ds {
+                self.metrics.pages_requantized += 1;
+                let pool = self.pages.as_mut().unwrap();
+                let delta = pool.page_bytes(d.from_bits) - pool.page_bytes(d.to_bits);
+                // only this sequence's table changed: reconcile it alone
+                let a = &self.active[i];
+                pool.sync(a.req.id, &a.cache);
+                return Some(delta);
+            }
+        }
+        None
     }
 
     fn retire(&mut self, c: Completion) -> Completion {
@@ -223,7 +397,10 @@ fn ar_into_completion(ar: &mut ActiveRequest, now: u64) -> Completion {
     }
 }
 
-/// Modeled steady-state KV bytes/token for a policy (reference length 256).
+/// Modeled steady-state KV bytes/token for a policy (reference length
+/// 256).  Admission projections use this exact (monolithic) rate in both
+/// memory regimes; paged charging additionally pays page-rounding
+/// fragmentation, which the decode-step pressure loop absorbs.
 pub fn estimate_bytes_per_token(rt: &Runtime, method: &Method) -> f64 {
     let m = &rt.model;
     let mut cache = method.make_cache(m);

@@ -21,6 +21,12 @@ pub struct Metrics {
     /// Only recorded when the engine runs with a pool of >1 threads.
     pub pool_util: Histogram,
     pub peak_kv_bytes: usize,
+    /// pages the pressure controller requantized down the bit ladder
+    /// (paged mode only — DESIGN.md §Memory-Manager)
+    pub pages_requantized: usize,
+    /// sequences preempted back to the batcher queue after downshift was
+    /// exhausted (paged mode; monolithic evictions count as `oom_events`)
+    pub preemptions: usize,
 }
 
 impl Default for Metrics {
@@ -29,7 +35,7 @@ impl Default for Metrics {
                   completions: 0, oom_events: 0, ttft_ms: Histogram::default(),
                   total_ms: Histogram::default(), step_us: Histogram::default(),
                   attn_us: Histogram::default(), pool_util: Histogram::default(),
-                  peak_kv_bytes: 0 }
+                  peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0 }
     }
 }
 
@@ -66,15 +72,21 @@ impl Metrics {
         } else {
             format!(" | pool util {:.0}%", self.pool_util.mean() * 100.0)
         };
+        let pressure = if self.pages_requantized == 0 && self.preemptions == 0 {
+            String::new()
+        } else {
+            format!(" | requant {} pages | preempt {}",
+                    self.pages_requantized, self.preemptions)
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
              ttft p50 {:.1} ms p95 {:.1} ms | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             attn p50 {:.0} µs{} | peak kv {:.2} MiB | oom {}",
+             attn p50 {:.0} µs{} | peak kv {:.2} MiB | oom {}{}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
             self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
             self.attn_us.quantile(0.5), util,
-            self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events)
+            self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure)
     }
 }
 

@@ -4,9 +4,12 @@
 //! The paper is a serving-side contribution, so the coordinator follows
 //! the vLLM-router shape: requests enter a FIFO, the batcher admits them
 //! into the running batch under a (simulated-HBM) memory budget computed
-//! from the cache policy's modeled bytes/token, and the engine interleaves
-//! prefill with one batched decode step per iteration, preempting the
-//! youngest request on simulated OOM.
+//! from the cache policy's modeled bytes/token (with a bounded admission
+//! lookahead against head-of-line blocking), and the engine interleaves
+//! prefill with one batched decode step per iteration.  Under memory
+//! pressure the paged pool first requantizes old pages down the bit
+//! ladder and then preempts the youngest request (monolithic mode keeps
+//! the plain evict-youngest-on-OOM policy) — DESIGN.md §Memory-Manager.
 
 pub mod batcher;
 pub mod engine;

@@ -36,7 +36,12 @@ enum Msg {
 pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
              max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    println!("kvmix serving on {addr} (policy {}, {} attention worker(s))",
+    let paging = if cfg.page_tokens > 0 {
+        format!(", {}-token KV pages", cfg.page_tokens)
+    } else {
+        String::new()
+    };
+    println!("kvmix serving on {addr} (policy {}, {} attention worker(s){paging})",
              cfg.method.name(), resolve_threads(cfg.threads));
     let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
     let next_id = Arc::new(Mutex::new(0u64));

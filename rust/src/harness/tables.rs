@@ -200,13 +200,13 @@ pub fn fig7(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     println!("{:<22} {:>12} {:>12} {:>10}", "method", "peak_kv_KiB", "vs FP16", "tok/s");
     let mut fp16_peak = 0f64;
     for method in Method::comparison_set(&plan) {
-        let (peak, thr) = run_serving(rt, &method, 4, 64, 192, None)?;
-        let kib = peak as f64 / 1024.0;
+        let s = run_serving(rt, &method, 4, 64, 192, None, 0)?;
+        let kib = s.peak_kv_bytes as f64 / 1024.0;
         if matches!(method, Method::Fp16) {
             fp16_peak = kib;
         }
         println!("{:<22} {:>12.2} {:>11.2}x {:>10.1}", method.name(), kib,
-                 fp16_peak / kib.max(1e-9), thr);
+                 fp16_peak / kib.max(1e-9), s.tok_per_s);
     }
     Ok(())
 }
@@ -235,8 +235,8 @@ pub fn fig8(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     for method in Method::comparison_set(&plan) {
         print!("{:<22}", method.name());
         for b in batches {
-            match run_serving(rt, &method, b, prompt_len, gen, Some(budget)) {
-                Ok((_, thr)) => print!(" {:>9.1}", thr),
+            match run_serving(rt, &method, b, prompt_len, gen, Some(budget), 0) {
+                Ok(s) => print!(" {:>9.1}", s.tok_per_s),
                 Err(_) => print!(" {:>9}", "OOM"),
             }
         }
@@ -403,8 +403,9 @@ pub fn headline(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     let (_, plan) = profiled_plan(rt, cfg)?;
     let prompt_len = 64;
     let gen = 192;
-    let (fp_peak, _) = run_serving(rt, &Method::Fp16, 4, prompt_len, gen, None)?;
-    let (kv_peak, _) = run_serving(rt, &Method::Kvmix(plan.clone()), 4, prompt_len, gen, None)?;
+    let fp_peak = run_serving(rt, &Method::Fp16, 4, prompt_len, gen, None, 0)?.peak_kv_bytes;
+    let kv_peak = run_serving(rt, &Method::Kvmix(plan.clone()), 4, prompt_len, gen, None, 0)?
+        .peak_kv_bytes;
     println!("KV memory (batch 4): fp16 {:.1} KiB -> kvmix {:.1} KiB = {:.2}x compression",
              fp_peak as f64 / 1024.0, kv_peak as f64 / 1024.0,
              fp_peak as f64 / kv_peak as f64);
@@ -412,11 +413,12 @@ pub fn headline(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     let mut best_fp = 0f64;
     let mut best_kv = 0f64;
     for b in [1usize, 2, 4, 8, 16, 32] {
-        if let Ok((_, t)) = run_serving(rt, &Method::Fp16, b, prompt_len, gen, Some(budget)) {
-            best_fp = best_fp.max(t);
+        if let Ok(s) = run_serving(rt, &Method::Fp16, b, prompt_len, gen, Some(budget), 0) {
+            best_fp = best_fp.max(s.tok_per_s);
         }
-        if let Ok((_, t)) = run_serving(rt, &Method::Kvmix(plan.clone()), b, prompt_len, gen, Some(budget)) {
-            best_kv = best_kv.max(t);
+        if let Ok(s) = run_serving(rt, &Method::Kvmix(plan.clone()), b, prompt_len, gen,
+                                   Some(budget), 0) {
+            best_kv = best_kv.max(s.tok_per_s);
         }
     }
     println!("max throughput within budget: fp16 {best_fp:.1} tok/s -> kvmix {best_kv:.1} tok/s = {:.2}x",
@@ -429,13 +431,27 @@ pub fn headline(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
 // shared serving runners
 // ---------------------------------------------------------------------------
 
-/// Run `batch` identical-shape requests through the engine; returns
-/// (peak kv bytes, decode throughput tok/s).  Errors if the batch can't be
-/// fully admitted within the budget (reported as OOM by fig8).
+/// Outcome of one [`run_serving`] pass.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingStats {
+    /// peak KV footprint — page-granular when `page_tokens > 0`
+    pub peak_kv_bytes: usize,
+    pub tok_per_s: f64,
+    /// pressure-controller downshifts (paged mode only)
+    pub pages_requantized: usize,
+    /// preemptions after the downshift floors were exhausted (paged mode)
+    pub preemptions: usize,
+}
+
+/// Serve `batch` synthetic requests to completion and report peak
+/// memory + throughput.  `page_tokens > 0` runs the paged KV pool with
+/// the downshift-then-preempt pressure controller; 0 keeps the
+/// monolithic accounting, whose simulated OOM counts as failure here.
 pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usize,
-                   gen: usize, kv_budget: Option<usize>) -> Result<(usize, f64)> {
+                   gen: usize, kv_budget: Option<usize>, page_tokens: usize)
+                   -> Result<ServingStats> {
     let mut engine = Engine::new(rt, EngineCfg {
-        method: method.clone(), max_batch: batch, kv_budget, threads: 1,
+        method: method.clone(), max_batch: batch, kv_budget, threads: 1, page_tokens,
     })?;
     let mut rng = Rng::new(123);
     for id in 0..batch {
@@ -453,10 +469,15 @@ pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usiz
                       engine.metrics.oom_events);
     }
     let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
-    Ok((engine.metrics.peak_kv_bytes, tokens as f64 / secs))
+    Ok(ServingStats {
+        peak_kv_bytes: engine.metrics.peak_kv_bytes,
+        tok_per_s: tokens as f64 / secs,
+        pages_requantized: engine.metrics.pages_requantized,
+        preemptions: engine.metrics.preemptions,
+    })
 }
 
 fn quick_throughput(rt: &Runtime, method: &Method, batch: usize,
                     prompt_len: usize, gen: usize) -> Result<f64> {
-    Ok(run_serving(rt, method, batch, prompt_len, gen, None)?.1)
+    Ok(run_serving(rt, method, batch, prompt_len, gen, None, 0)?.tok_per_s)
 }

@@ -21,6 +21,7 @@
 use crate::quant::{key_scores_fused, value_accum_fused, FusedScratch, PackedBlock};
 
 use super::jl::{JlProjector, SignJlKeys};
+use super::pages::KvSide;
 use super::window::WindowPolicy;
 
 /// Key representation for one layer.
@@ -256,6 +257,74 @@ impl LayerKvCache {
         b += self.k_blocks.iter().map(|x| x.resident_bytes()).sum::<usize>();
         b += self.v_blocks.iter().map(|x| x.resident_bytes()).sum::<usize>();
         b
+    }
+
+    // ------------- paged-pool views (DESIGN.md §Memory-Manager) -------------
+    //
+    // The page pool maps this cache at `page_tokens`-token granularity:
+    // the fp window occupies fp16 pages, the quantized history occupies
+    // packed pages of `page_tokens / group` blocks each.  Pages are
+    // bit-uniform: appends always write the plan's width and the pressure
+    // controller requantizes whole pages, so a page's class is its first
+    // block's width.
+
+    /// Quantized history blocks of one side.
+    pub fn quant_blocks(&self, side: KvSide) -> &[PackedBlock] {
+        match side {
+            KvSide::Key => &self.k_blocks,
+            KvSide::Value => &self.v_blocks,
+        }
+    }
+
+    /// Full-precision window tokens of one side.
+    pub fn fp_tokens(&self, side: KvSide) -> usize {
+        match side {
+            KvSide::Key => self.k_fp_tokens(),
+            KvSide::Value => self.v_fp_tokens(),
+        }
+    }
+
+    /// Pages (rounded up) holding one side's fp window.
+    pub fn fp_pages(&self, side: KvSide, page_tokens: usize) -> usize {
+        self.fp_tokens(side).div_ceil(page_tokens)
+    }
+
+    /// Pages (rounded up) holding one side's quantized history.
+    pub fn quant_pages(&self, side: KvSide, page_tokens: usize) -> usize {
+        let bpp = page_tokens / self.cfg.group;
+        self.quant_blocks(side).len().div_ceil(bpp)
+    }
+
+    /// Fully-populated ("sealed") quantized pages — the only pages the
+    /// pressure controller may downshift; a partial page is still being
+    /// appended into at the plan's width.
+    pub fn sealed_quant_pages(&self, side: KvSide, page_tokens: usize) -> usize {
+        let bpp = page_tokens / self.cfg.group;
+        self.quant_blocks(side).len() / bpp
+    }
+
+    /// Precision class of quantized page `page` of one side.
+    pub fn quant_page_bits(&self, side: KvSide, page: usize, page_tokens: usize) -> u8 {
+        let bpp = page_tokens / self.cfg.group;
+        self.quant_blocks(side)[page * bpp].bits
+    }
+
+    /// Requantize quantized page `page` of `side` in place to `to_bits`
+    /// — the pressure controller's downshift, reusing the groupq packing
+    /// via [`PackedBlock::requantize`].  Returns modeled bytes saved.
+    pub fn requant_page(&mut self, side: KvSide, page: usize, page_tokens: usize,
+                        to_bits: u8) -> usize {
+        let bpp = page_tokens / self.cfg.group;
+        let blocks = match side {
+            KvSide::Key => &mut self.k_blocks,
+            KvSide::Value => &mut self.v_blocks,
+        };
+        let b1 = ((page + 1) * bpp).min(blocks.len());
+        let mut saved = 0;
+        for b in &mut blocks[page * bpp..b1] {
+            saved += b.requantize(to_bits, &mut self.tscratch, &mut self.qscratch);
+        }
+        saved
     }
 
     // ---------------- attention ----------------
@@ -533,6 +602,41 @@ mod tests {
         // fp16 reference for 128 tokens: 128*64*2*2 bytes
         let fp = 128 * 64 * 2 * 2;
         assert!((fp as f64 / sizes[1] as f64) > 4.0, "2-bit compression {}", fp as f64 / sizes[1] as f64);
+    }
+
+    #[test]
+    fn requant_page_downshifts_oldest_history_only() {
+        let c = cfg(KeyRepr::PerChannel { bits: 4 }, ValueRepr::PerToken { bits: 4 },
+                    WindowPolicy::None, WindowPolicy::None);
+        let mut cache = LayerKvCache::new(c);
+        let mut rng = Rng::new(17);
+        let n_tok = 128; // 4 blocks per side = 2 pages at 64-token pages
+        let ks = rng.normal_vec(n_tok * 64);
+        let vs = rng.normal_vec(n_tok * 64);
+        cache.append(&ks, &vs, n_tok);
+        let pt = 64;
+        assert_eq!(cache.quant_pages(KvSide::Key, pt), 2);
+        assert_eq!(cache.sealed_quant_pages(KvSide::Key, pt), 2);
+        let before = cache.modeled_bytes();
+
+        // reference attention at the original 4-bit precision
+        let q = rng.normal_vec(4 * 32);
+        let mut s = AttnScratch::default();
+        let mut o4 = vec![0f32; 4 * 32];
+        cache.attend(&q, 4, &mut o4, &mut s);
+
+        let saved = cache.requant_page(KvSide::Key, 0, pt, 2);
+        assert!(saved > 0);
+        assert_eq!(cache.modeled_bytes(), before - saved);
+        assert_eq!(cache.quant_page_bits(KvSide::Key, 0, pt), 2, "oldest page downshifted");
+        assert_eq!(cache.quant_page_bits(KvSide::Key, 1, pt), 4, "newest page untouched");
+
+        // attention still runs over the mixed-precision pages, with a
+        // bounded drift vs the pre-downshift output
+        let mut o2 = vec![0f32; 4 * 32];
+        cache.attend(&q, 4, &mut o2, &mut s);
+        let drift = o2.iter().zip(&o4).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(drift > 0.0 && drift < 1.0, "drift {drift}");
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! charged against the budget and an allocation beyond it raises the same
 //! admission failure a real allocator would.  Budgets are scaled to the
 //! reproduction model (see harness/tables.rs: `--hbm-bytes`).
+//!
+//! With the paged pool enabled the engine charges
+//! [`crate::kvcache::PagePool::modeled_bytes`] here instead of the summed
+//! per-sequence bytes — page-granular accounting, see
+//! DESIGN.md §Memory-Manager.  A failed [`MemoryBudget::set_kv`] is the
+//! pressure controller's trigger; note it records the *attempted* peak
+//! but leaves the standing charge untouched (tests below pin both).
 
 use anyhow::{bail, Result};
 
@@ -95,5 +102,44 @@ mod tests {
     fn fp16_model() {
         // 100 tokens, kv_dim 64, 8 layers: 100*64*2*2*8
         assert_eq!(fp16_kv_bytes(100, 64, 8), 204_800);
+    }
+
+    #[test]
+    fn set_kv_failure_keeps_charge_and_records_attempted_peak() {
+        let mut m = MemoryBudget::new(1_000, 100).unwrap();
+        m.set_kv(500).unwrap();
+        assert_eq!(m.peak, 600);
+        // over-capacity set_kv: error, standing charge untouched, but the
+        // attempted footprint still registers as the peak (the paper's
+        // "would have OOMed here" marker)
+        assert!(m.set_kv(950).is_err());
+        assert_eq!(m.kv_bytes, 500, "failed set_kv must not change the charge");
+        assert_eq!(m.used(), 600);
+        assert_eq!(m.free(), 400);
+        assert_eq!(m.peak, 1_050);
+        // recovery: a smaller footprint still lands
+        m.set_kv(300).unwrap();
+        assert_eq!(m.used(), 400);
+        assert_eq!(m.peak, 1_050, "peak is monotone");
+    }
+
+    #[test]
+    fn release_below_zero_saturates() {
+        let mut m = MemoryBudget::new(1_000, 0).unwrap();
+        m.alloc(300).unwrap();
+        m.release(500); // over-release: saturate at zero, don't wrap
+        assert_eq!(m.kv_bytes, 0);
+        assert_eq!(m.free(), 1_000);
+        m.alloc(1_000).unwrap(); // the full capacity is usable again
+        assert_eq!(m.used(), 1_000);
+    }
+
+    #[test]
+    fn set_kv_zero_clears_charge() {
+        let mut m = MemoryBudget::new(1_000, 250).unwrap();
+        m.set_kv(700).unwrap();
+        m.set_kv(0).unwrap();
+        assert_eq!(m.used(), 250);
+        assert_eq!(m.peak, 950);
     }
 }

@@ -1,14 +1,19 @@
 //! Mixed-precision KV cache: packed history blocks + dynamic
 //! full-precision windows (RPC), per-layer representations, memory
-//! accounting and the HBM budget simulator.
+//! accounting, the HBM budget simulator, and the paged KV pool with its
+//! pressure controller (DESIGN.md §Memory-Manager).
 
 pub mod cache;
 pub mod jl;
 pub mod memory;
+pub mod pages;
+pub mod pressure;
 pub mod window;
 
 pub use cache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr};
 pub use memory::{fp16_kv_bytes, MemoryBudget};
+pub use pages::{KvSide, PageId, PagePool, PoolStats, DEFAULT_PAGE_TOKENS};
+pub use pressure::PressureCfg;
 pub use window::WindowPolicy;
 
 use crate::config::{ModelConfig, QuantPlan};
@@ -82,6 +87,31 @@ fn window_for(bits: u8, rpc: f64, fixed_residual: Option<usize>) -> WindowPolicy
         WindowPolicy::None
     } else {
         WindowPolicy::Rpc { ratio: rpc }
+    }
+}
+
+/// Shared fixtures for the in-crate kvcache test modules (pages,
+/// pressure).  Integration tests under `rust/tests/` keep their own copy
+/// — `#[cfg(test)]` items don't cross the crate boundary.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::config::{ModelConfig, QuantPlan};
+    use crate::util::Rng;
+
+    use super::SeqKvCache;
+
+    /// A cache with `tokens` seeded-random tokens appended to every layer.
+    pub(crate) fn filled_cache(m: &ModelConfig, plan: &QuantPlan, tokens: usize,
+                               seed: u64) -> SeqKvCache {
+        let mut c = SeqKvCache::new(m, plan);
+        let kv = m.kv_dim();
+        let mut rng = Rng::new(seed);
+        let k = rng.normal_vec(tokens * kv);
+        let v = rng.normal_vec(tokens * kv);
+        for l in &mut c.layers {
+            l.append(&k, &v, tokens);
+        }
+        c
     }
 }
 

@@ -1,0 +1,399 @@
+//! The global paged KV pool (DESIGN.md §Memory-Manager).
+//!
+//! Fixed `page_tokens`-token page frames, per-layer per-precision free
+//! lists, and per-sequence page tables mapping each sequence's cache onto
+//! the pool — the substrate the paper's Fig. 7/8 efficiency story assumes
+//! (KV memory as the scarce serving resource) and that KVTuner-style
+//! layer-wise allocation and query-aware schemes take for granted.
+//!
+//! **Division of labour.**  The per-sequence [`LayerKvCache`] stays the
+//! *data plane*: it owns the fp windows and the packed blocks the
+//! attention kernels read, and the decode fan-out keeps handing disjoint
+//! `&mut` lanes to pool workers (DESIGN.md §Threading-Model) with no new
+//! shared state.  The `PagePool` is the *control plane*: the allocator
+//! and the accountant.  After every engine step — on the engine thread,
+//! like vLLM's scheduler-side block manager — [`PagePool::sync`]
+//! reconciles each sequence's page table against its cache and
+//! [`crate::kvcache::MemoryBudget`] is charged `PagePool::modeled_bytes`,
+//! i.e. at **page granularity**: a partially-filled page costs a whole
+//! frame, which is exactly the fragmentation a real paged allocator pays
+//! (and what the monolithic per-sequence accounting hides).
+//!
+//! A page frame covers `page_tokens` tokens of **one side** (K or V) of
+//! **one layer** at **one precision class**: `16` (fp16 window pages) or
+//! a packed bit width.  Freed frames park on a `(layer, precision)` free
+//! list and are reused before the pool grows — observable via
+//! [`PoolStats::reuses`].
+//!
+//! Not paged (charged by the monolithic path only, noted here so the
+//! accounting difference is explicit): QJL's sign-bit JL key store, and
+//! KVQuant's per-element outlier list.  Both are baseline-only details;
+//! the KVmix policies the pool exists for use neither.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::quant::words_for;
+
+use super::cache::LayerKvCache;
+use super::SeqKvCache;
+
+/// Default `--page-tokens` when paging is enabled (2 quant groups).
+pub const DEFAULT_PAGE_TOKENS: usize = 64;
+
+/// Which half of the KV cache a page holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvSide {
+    Key,
+    Value,
+}
+
+/// Both sides, in the fixed scan order used everywhere (K before V).
+pub const KV_SIDES: [KvSide; 2] = [KvSide::Key, KvSide::Value];
+
+/// Index of a page frame in the pool (stable across free + reuse).
+pub type PageId = u32;
+
+/// Metadata of one live page frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub layer: u16,
+    pub side: KvSide,
+    /// precision class: 16 = fp16 window page, else packed bit width
+    pub bits: u8,
+    /// request id of the mapping sequence
+    pub owner: u64,
+}
+
+/// Allocation / lifecycle counters.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub allocs: usize,
+    /// allocs served from a free list instead of growing the pool
+    pub reuses: usize,
+    pub frees: usize,
+    /// precision-class changes observed at sync time (pressure-driven
+    /// requantization moved a page down the bit ladder)
+    pub retags: usize,
+}
+
+/// One layer's slice of a sequence's page table.
+#[derive(Debug, Clone, Default)]
+struct LayerPages {
+    k_fp: Vec<PageId>,
+    v_fp: Vec<PageId>,
+    k_q: Vec<PageId>,
+    v_q: Vec<PageId>,
+}
+
+impl LayerPages {
+    fn count(&self) -> usize {
+        self.k_fp.len() + self.v_fp.len() + self.k_q.len() + self.v_q.len()
+    }
+}
+
+/// A sequence's page table: frames per layer, per side, fp + quantized.
+#[derive(Debug, Clone, Default)]
+pub struct SeqPageTable {
+    layers: Vec<LayerPages>,
+}
+
+impl SeqPageTable {
+    /// Total frames mapped by this sequence.
+    pub fn pages(&self) -> usize {
+        self.layers.iter().map(LayerPages::count).sum()
+    }
+}
+
+/// The global page allocator + per-sequence page tables.
+pub struct PagePool {
+    /// tokens per page frame (a multiple of the quant group)
+    pub page_tokens: usize,
+    kv_dim: usize,
+    group: usize,
+    /// slot map: `frames[id]` is `Some` while frame `id` is allocated
+    frames: Vec<Option<Frame>>,
+    /// free lists keyed by (layer, precision class)
+    free: BTreeMap<(u16, u8), Vec<PageId>>,
+    tables: BTreeMap<u64, SeqPageTable>,
+    /// running page-granular byte total of all live frames — maintained
+    /// by alloc/release/retag so [`PagePool::modeled_bytes`] is O(1)
+    /// (the engine charges it once per admission and per relief round)
+    bytes: usize,
+    pub stats: PoolStats,
+}
+
+impl PagePool {
+    pub fn new(page_tokens: usize, kv_dim: usize, group: usize) -> Result<Self> {
+        if page_tokens == 0 || page_tokens % group != 0 {
+            bail!("page_tokens {page_tokens} must be a positive multiple of \
+                   the quant group ({group})");
+        }
+        Ok(PagePool {
+            page_tokens,
+            kv_dim,
+            group,
+            frames: Vec::new(),
+            free: BTreeMap::new(),
+            tables: BTreeMap::new(),
+            bytes: 0,
+            stats: PoolStats::default(),
+        })
+    }
+
+    /// Modeled bytes of one page frame at precision class `bits`.
+    pub fn page_bytes(&self, bits: u8) -> usize {
+        page_frame_bytes(self.page_tokens, self.kv_dim, self.group, bits)
+    }
+
+    /// Frames currently mapped by some sequence.
+    pub fn allocated_pages(&self) -> usize {
+        self.frames.iter().filter(|f| f.is_some()).count()
+    }
+
+    /// Frames ever created (allocated + parked on free lists) — the
+    /// pool's high-water mark.
+    pub fn frame_count(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Page-granular modeled KV bytes of everything currently mapped —
+    /// what the engine charges against the memory budget.  O(1): a
+    /// running counter maintained by every alloc/release/retag (debug
+    /// builds cross-check it against a full frame scan).
+    pub fn modeled_bytes(&self) -> usize {
+        debug_assert_eq!(
+            self.bytes,
+            self.frames.iter().flatten().map(|f| self.page_bytes(f.bits)).sum::<usize>(),
+            "page byte counter out of sync with the frame table");
+        self.bytes
+    }
+
+    /// Frames mapped by one sequence (0 if it has no table).
+    pub fn owner_pages(&self, owner: u64) -> usize {
+        self.tables.get(&owner).map(SeqPageTable::pages).unwrap_or(0)
+    }
+
+    /// Reconcile `owner`'s page table with the current contents of its
+    /// cache: grow/shrink fp-window pages, append quantized pages as
+    /// blocks overflow the window, and retag pages whose blocks a
+    /// pressure downshift moved to a narrower precision class.
+    ///
+    /// Engine-thread only (the data plane mutates during the decode
+    /// fan-out; the table catches up here, after the step).
+    pub fn sync(&mut self, owner: u64, cache: &SeqKvCache) {
+        let mut table = self.tables.remove(&owner).unwrap_or_default();
+        if table.layers.len() < cache.layers.len() {
+            table.layers.resize_with(cache.layers.len(), LayerPages::default);
+        }
+        for (li, layer) in cache.layers.iter().enumerate() {
+            // move the id vecs out so `self` stays free for alloc/release
+            let mut lp = std::mem::take(&mut table.layers[li]);
+            let pt = self.page_tokens;
+            self.sync_fp(&mut lp.k_fp, li as u16, KvSide::Key, owner,
+                         layer.fp_pages(KvSide::Key, pt));
+            self.sync_fp(&mut lp.v_fp, li as u16, KvSide::Value, owner,
+                         layer.fp_pages(KvSide::Value, pt));
+            self.sync_quant(&mut lp.k_q, li as u16, KvSide::Key, owner, layer);
+            self.sync_quant(&mut lp.v_q, li as u16, KvSide::Value, owner, layer);
+            table.layers[li] = lp;
+        }
+        self.tables.insert(owner, table);
+    }
+
+    fn sync_fp(&mut self, ids: &mut Vec<PageId>, layer: u16, side: KvSide,
+               owner: u64, n_pages: usize) {
+        while ids.len() < n_pages {
+            ids.push(self.alloc(layer, side, 16, owner));
+        }
+        while ids.len() > n_pages {
+            let id = ids.pop().unwrap();
+            self.release(id);
+        }
+    }
+
+    fn sync_quant(&mut self, ids: &mut Vec<PageId>, layer: u16, side: KvSide,
+                  owner: u64, cache: &LayerKvCache) {
+        let n = cache.quant_pages(side, self.page_tokens);
+        for j in 0..n {
+            let bits = cache.quant_page_bits(side, j, self.page_tokens);
+            if let Some(&id) = ids.get(j) {
+                let old = self.frames[id as usize].as_ref().expect("live frame").bits;
+                if old != bits {
+                    // precision-class change (pressure downshift): retag
+                    // the frame and move the byte counter between classes
+                    let (ob, nb) = (self.page_bytes(old), self.page_bytes(bits));
+                    self.frames[id as usize].as_mut().unwrap().bits = bits;
+                    self.bytes = self.bytes - ob + nb;
+                    self.stats.retags += 1;
+                }
+            } else {
+                ids.push(self.alloc(layer, side, bits, owner));
+            }
+        }
+        while ids.len() > n {
+            let id = ids.pop().unwrap();
+            self.release(id);
+        }
+    }
+
+    /// Release every frame mapped by `owner` (retire or preemption).
+    pub fn free_owner(&mut self, owner: u64) {
+        let Some(table) = self.tables.remove(&owner) else { return };
+        for lp in table.layers {
+            for id in lp.k_fp.into_iter().chain(lp.v_fp).chain(lp.k_q).chain(lp.v_q) {
+                self.release(id);
+            }
+        }
+    }
+
+    fn alloc(&mut self, layer: u16, side: KvSide, bits: u8, owner: u64) -> PageId {
+        self.stats.allocs += 1;
+        self.bytes += self.page_bytes(bits);
+        let frame = Frame { layer, side, bits, owner };
+        if let Some(id) = self.free.get_mut(&(layer, bits)).and_then(Vec::pop) {
+            self.stats.reuses += 1;
+            self.frames[id as usize] = Some(frame);
+            return id;
+        }
+        let id = self.frames.len() as PageId;
+        self.frames.push(Some(frame));
+        id
+    }
+
+    fn release(&mut self, id: PageId) {
+        let f = self.frames[id as usize].take().expect("double free of page frame");
+        self.bytes -= self.page_bytes(f.bits);
+        self.stats.frees += 1;
+        self.free.entry((f.layer, f.bits)).or_default().push(id);
+    }
+}
+
+/// Modeled bytes of one page frame: `page_tokens × kv_dim` elements at
+/// fp16 for `bits == 16`, else the packed-block accounting of the page's
+/// `page_tokens / group` blocks — words plus an fp16 (scale, min) pair
+/// per group, the same model as `PackedBlock::modeled_bytes` (without
+/// per-element outliers, which stay a monolithic-accounting detail).
+pub fn page_frame_bytes(page_tokens: usize, kv_dim: usize, group: usize,
+                        bits: u8) -> usize {
+    let elems = page_tokens * kv_dim;
+    if bits == 16 {
+        return elems * 2;
+    }
+    let block_elems = group * kv_dim;
+    let blocks = page_tokens / group;
+    blocks * (words_for(block_elems, bits) * 4 + (block_elems / group) * 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::filled_cache as filled;
+    use super::*;
+    use crate::config::{ModelConfig, QuantPlan};
+    use crate::util::Rng;
+
+    const PT: usize = 64;
+
+    #[test]
+    fn rejects_misaligned_page_size() {
+        assert!(PagePool::new(0, 16, 32).is_err());
+        assert!(PagePool::new(48, 16, 32).is_err()); // not a group multiple
+        assert!(PagePool::new(64, 16, 32).is_ok());
+    }
+
+    #[test]
+    fn partial_pages_charge_whole_frames() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let c = filled(&m, &plan, 96, 1); // 3 blocks/side: 2 pages, one partial
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.sync(7, &c);
+        // 2 layers x 2 sides x 2 pages, no fp pages under WindowPolicy::None
+        assert_eq!(pool.allocated_pages(), 8);
+        assert_eq!(pool.owner_pages(7), 8);
+        assert_eq!(pool.modeled_bytes(), 8 * pool.page_bytes(2));
+        // page-granular charge strictly exceeds the exact modeled bytes:
+        // the partial page's missing block is the fragmentation cost
+        assert!(pool.modeled_bytes() > c.modeled_bytes(),
+                "pool {} must exceed exact {}", pool.modeled_bytes(), c.modeled_bytes());
+    }
+
+    #[test]
+    fn fp_window_pages_then_quant_pages() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2); // RPC window
+        let mut c = SeqKvCache::new(&m, &plan);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        let kv = m.kv_dim();
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            for l in &mut c.layers {
+                l.append(&rng.normal_vec(kv), &rng.normal_vec(kv), 1);
+            }
+        }
+        pool.sync(1, &c);
+        // 20 fp tokens: one fp page per side per layer, no quant pages yet
+        assert_eq!(pool.allocated_pages(), m.n_layers * 2);
+        assert_eq!(pool.modeled_bytes(), m.n_layers * 2 * pool.page_bytes(16));
+        for _ in 0..180 {
+            for l in &mut c.layers {
+                l.append(&rng.normal_vec(kv), &rng.normal_vec(kv), 1);
+            }
+        }
+        pool.sync(1, &c);
+        let expect: usize = c.layers.iter().map(|l| {
+            KV_SIDES.iter().map(|&s| l.fp_pages(s, PT) + l.quant_pages(s, PT))
+                .sum::<usize>()
+        }).sum();
+        assert_eq!(pool.allocated_pages(), expect);
+        assert!(c.layers[0].quant_pages(KvSide::Key, PT) > 0, "history must page");
+    }
+
+    #[test]
+    fn free_lists_recycle_frames() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let c = filled(&m, &plan, 128, 2);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.sync(0, &c);
+        let high_water = pool.frame_count();
+        pool.free_owner(0);
+        assert_eq!(pool.allocated_pages(), 0);
+        assert_eq!(pool.modeled_bytes(), 0);
+        let c2 = filled(&m, &plan, 128, 3);
+        pool.sync(1, &c2);
+        assert_eq!(pool.frame_count(), high_water, "frames must be reused, not regrown");
+        assert!(pool.stats.reuses > 0);
+        assert_eq!(pool.allocated_pages(), pool.owner_pages(1));
+    }
+
+    #[test]
+    fn sync_retags_downshifted_pages() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let mut c = filled(&m, &plan, 128, 4);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.sync(0, &c);
+        let before = pool.modeled_bytes();
+        let saved = c.layers[0].requant_page(KvSide::Key, 0, PT, 2);
+        assert!(saved > 0);
+        pool.sync(0, &c);
+        assert_eq!(pool.stats.retags, 1);
+        assert_eq!(pool.modeled_bytes(),
+                   before - (pool.page_bytes(4) - pool.page_bytes(2)));
+    }
+
+    #[test]
+    fn page_frame_bytes_model() {
+        // fp16: tokens x channels x 2B
+        assert_eq!(page_frame_bytes(64, 16, 32, 16), 64 * 16 * 2);
+        // 2-bit: 2 blocks of 512 elems -> 32 words + 16 groups each
+        assert_eq!(page_frame_bytes(64, 16, 32, 2), 2 * (32 * 4 + 16 * 4));
+        // narrower bits, smaller frames
+        assert!(page_frame_bytes(64, 16, 32, 1) < page_frame_bytes(64, 16, 32, 2));
+        assert!(page_frame_bytes(64, 16, 32, 2) < page_frame_bytes(64, 16, 32, 4));
+        assert!(page_frame_bytes(64, 16, 32, 4) < page_frame_bytes(64, 16, 32, 8));
+        assert!(page_frame_bytes(64, 16, 32, 8) < page_frame_bytes(64, 16, 32, 16));
+    }
+}

@@ -1,0 +1,241 @@
+//! The pressure controller (DESIGN.md §Memory-Manager): what happens when
+//! the paged pool cannot satisfy a charge.
+//!
+//! On admission failure or simulated OOM the engine first **requantizes
+//! the oldest out-of-window pages down the bit ladder** (8 → 4 → 2, with
+//! a 3-bit entry rung for plans that start there), bounded below by
+//! per-layer floors derived from the gradient-importance profile, and
+//! only when every sealed page sits at its floor does it **preempt** the
+//! lowest-priority sequence back to the batcher queue.  This makes the
+//! paper's dynamic long-context policy — re-compress older tokens, keep
+//! recent pivotal ones precise — an actual runtime mechanism instead of a
+//! static window.
+//!
+//! Everything here runs on the engine thread between decode steps; the
+//! decode fan-out never sees a page mid-downshift
+//! (DESIGN.md §Threading-Model).
+
+use crate::config::QuantPlan;
+
+use super::pages::{page_frame_bytes, KvSide, KV_SIDES};
+use super::SeqKvCache;
+
+/// Per-layer requantization floors: the narrowest width the controller
+/// may downshift each layer's pages to.
+#[derive(Debug, Clone)]
+pub struct PressureCfg {
+    pub k_floor: Vec<u8>,
+    pub v_floor: Vec<u8>,
+}
+
+impl PressureCfg {
+    /// Floors derived from the gradient-importance plan: layers the
+    /// profiler allocated high widths (> 2 bits — the important ones)
+    /// never drop below 2 bits; low-importance layers may fall to 1 bit;
+    /// fp16 layers have no quantized pages to downshift (floor 16).
+    pub fn from_plan(plan: &QuantPlan) -> Self {
+        let floor = |b: u8| match b {
+            16 => 16,
+            b if b > 2 => 2,
+            _ => 1,
+        };
+        PressureCfg {
+            k_floor: plan.k_bits.iter().map(|&b| floor(b)).collect(),
+            v_floor: plan.v_bits.iter().map(|&b| floor(b)).collect(),
+        }
+    }
+
+    /// The same floor for every layer (uniform baselines).
+    pub fn uniform(n_layers: usize, floor: u8) -> Self {
+        PressureCfg { k_floor: vec![floor; n_layers], v_floor: vec![floor; n_layers] }
+    }
+
+    pub fn floor(&self, layer: usize, side: KvSide) -> u8 {
+        let floors = match side {
+            KvSide::Key => &self.k_floor,
+            KvSide::Value => &self.v_floor,
+        };
+        floors.get(layer).copied().unwrap_or(16)
+    }
+}
+
+/// One rung down the requantization bit ladder.
+pub fn ladder_down(bits: u8) -> u8 {
+    match bits {
+        16 => 8,
+        8 => 4,
+        4 => 2,
+        3 => 2,
+        2 => 1,
+        b => b,
+    }
+}
+
+/// A single pressure-controller downshift.
+#[derive(Debug, Clone, Copy)]
+pub struct Downshift {
+    pub layer: usize,
+    pub side: KvSide,
+    pub page: usize,
+    pub from_bits: u8,
+    pub to_bits: u8,
+    pub bytes_saved: usize,
+}
+
+/// Requantize the oldest sealed page still above its floor, one ladder
+/// rung down.  Scan order is oldest-page-first, then layer order, K
+/// before V — so the most recent context keeps its precision for as long
+/// as possible.  Returns `None` when every sealed page sits at its floor
+/// (the caller's cue to move on to preemption).
+pub fn downshift_one(cache: &mut SeqKvCache, page_tokens: usize,
+                     cfg: &PressureCfg) -> Option<Downshift> {
+    let max_pages = cache.layers.iter()
+        .flat_map(|l| KV_SIDES.iter().map(move |&s| l.sealed_quant_pages(s, page_tokens)))
+        .max()
+        .unwrap_or(0);
+    for page in 0..max_pages {
+        for (li, layer) in cache.layers.iter_mut().enumerate() {
+            for &side in &KV_SIDES {
+                if page >= layer.sealed_quant_pages(side, page_tokens) {
+                    continue;
+                }
+                let bits = layer.quant_page_bits(side, page, page_tokens);
+                let floor = cfg.floor(li, side);
+                if bits <= floor {
+                    continue;
+                }
+                let to = ladder_down(bits).max(floor);
+                if to >= bits {
+                    continue;
+                }
+                let bytes_saved = layer.requant_page(side, page, page_tokens, to);
+                return Some(Downshift {
+                    layer: li, side, page, from_bits: bits, to_bits: to, bytes_saved,
+                });
+            }
+        }
+    }
+    None
+}
+
+/// Upper bound on page-accounting bytes the controller could still
+/// reclaim from `cache` by downshifting every sealed page to its floor —
+/// the engine's gate for admission-time relief (don't grind pages for a
+/// request that can't fit even then).
+pub fn reclaimable_bytes(cache: &SeqKvCache, page_tokens: usize,
+                         cfg: &PressureCfg) -> usize {
+    let mut total = 0usize;
+    for (li, layer) in cache.layers.iter().enumerate() {
+        let (kv_dim, group) = (layer.cfg.kv_dim, layer.cfg.group);
+        for &side in &KV_SIDES {
+            let floor = cfg.floor(li, side);
+            if floor >= 16 {
+                continue;
+            }
+            for page in 0..layer.sealed_quant_pages(side, page_tokens) {
+                let bits = layer.quant_page_bits(side, page, page_tokens);
+                if bits > floor {
+                    total += page_frame_bytes(page_tokens, kv_dim, group, bits)
+                        .saturating_sub(page_frame_bytes(page_tokens, kv_dim, group, floor));
+                }
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::filled_cache as filled;
+    use super::*;
+    use crate::config::{ModelConfig, QuantPlan};
+
+    const PT: usize = 64;
+
+    #[test]
+    fn ladder_rungs() {
+        assert_eq!(ladder_down(16), 8);
+        assert_eq!(ladder_down(8), 4);
+        assert_eq!(ladder_down(4), 2);
+        assert_eq!(ladder_down(3), 2);
+        assert_eq!(ladder_down(2), 1);
+        assert_eq!(ladder_down(1), 1); // bottom: no further rung
+    }
+
+    #[test]
+    fn floors_follow_importance() {
+        let mut plan = QuantPlan::uniform(4, 2);
+        plan.k_bits[1] = 3; // "important" layer per the profiler
+        plan.v_bits[2] = 4;
+        plan.k_bits[3] = 16;
+        let cfg = PressureCfg::from_plan(&plan);
+        assert_eq!(cfg.floor(0, KvSide::Key), 1);
+        assert_eq!(cfg.floor(1, KvSide::Key), 2);
+        assert_eq!(cfg.floor(2, KvSide::Value), 2);
+        assert_eq!(cfg.floor(3, KvSide::Key), 16);
+        assert_eq!(cfg.floor(99, KvSide::Key), 16); // out of range: untouchable
+    }
+
+    #[test]
+    fn downshift_is_oldest_first_and_floors_out() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let cfg = PressureCfg::from_plan(&plan); // floor 2 everywhere
+        let mut cache = filled(&m, &plan, 256, 1); // 8 blocks = 4 pages per side
+        let first = downshift_one(&mut cache, PT, &cfg).expect("downshiftable");
+        assert_eq!((first.layer, first.side, first.page), (0, KvSide::Key, 0));
+        assert_eq!((first.from_bits, first.to_bits), (4, 2));
+        assert!(first.bytes_saved > 0);
+        let second = downshift_one(&mut cache, PT, &cfg).unwrap();
+        assert_eq!((second.layer, second.side, second.page), (0, KvSide::Value, 0));
+        // page 0 across all layers/sides drains before page 1 is touched
+        let mut seen: usize = 2;
+        while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
+            seen += 1;
+            if seen <= m.n_layers * 2 {
+                assert_eq!(d.page, 0, "downshift #{seen} must still be page 0");
+            }
+        }
+        // 4 pages x 2 layers x 2 sides, one rung (4 -> 2) each
+        assert_eq!(seen, 4 * m.n_layers * 2);
+        for l in &cache.layers {
+            for &s in &KV_SIDES {
+                for p in 0..l.sealed_quant_pages(s, PT) {
+                    assert_eq!(l.quant_page_bits(s, p, PT), 2, "all pages at floor");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reclaimable_matches_actual_savings() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let cfg = PressureCfg::from_plan(&plan);
+        let mut cache = filled(&m, &plan, 256, 2);
+        let claim = reclaimable_bytes(&cache, PT, &cfg);
+        assert!(claim > 0);
+        let mut actual = 0usize;
+        while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
+            // page accounting, not exact block bytes: recompute per page
+            let _ = d;
+            actual += 1;
+        }
+        assert!(actual > 0);
+        assert_eq!(reclaimable_bytes(&cache, PT, &cfg), 0, "nothing left at floor");
+        // the page-accounting claim equals frames x (bytes(4) - bytes(2))
+        let per_page = page_frame_bytes(PT, m.kv_dim(), m.group, 4)
+            - page_frame_bytes(PT, m.kv_dim(), m.group, 2);
+        assert_eq!(claim, actual * per_page);
+    }
+
+    #[test]
+    fn fp16_plan_has_nothing_to_downshift() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::fp16(m.n_layers);
+        let cfg = PressureCfg::from_plan(&plan);
+        let mut cache = filled(&m, &plan, 128, 3);
+        assert!(downshift_one(&mut cache, PT, &cfg).is_none());
+        assert_eq!(reclaimable_bytes(&cache, PT, &cfg), 0);
+    }
+}

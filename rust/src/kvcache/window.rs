@@ -6,6 +6,12 @@
 //! in whole groups (32 tokens) from the oldest end, so the kept count is
 //! a lower bound — the actual fp count is `current - floor((current -
 //! keep)/group)*group`.
+//!
+//! Window policies only decide when tokens *leave* the fp tail.  What
+//! happens to already-quantized history under memory pressure — the
+//! bit-ladder downshift of the oldest out-of-window pages — is the
+//! pressure controller's job (`kvcache/pressure.rs`,
+//! DESIGN.md §Memory-Manager).
 
 /// How the full-precision tail is managed.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -15,7 +15,9 @@
 //! * [`runtime`]   — PJRT client, executable registry, weights loader
 //! * [`quant`]     — bit packing (incl. the paper's 3-bit 11-per-u32
 //!   scheme) + group-wise asymmetric quantization + fused kernels
-//! * [`kvcache`]   — packed per-layer pools, RPC windows, memory accounting
+//! * [`kvcache`]   — packed per-layer caches, RPC windows, memory
+//!   accounting, and the paged KV pool + pressure controller
+//!   (DESIGN.md §Memory-Manager)
 //! * [`attention`] — decode/prefill attention over the mixed cache
 //! * [`model`]     — per-layer orchestration through the XLA executables
 //! * [`profiler`]  — gradient-norm importance analysis + bit allocation

@@ -2,9 +2,9 @@
 //!
 //! Subcommands:
 //!   generate  --prompt 1,2,3 --max-new 32 [--method kvmix|fp16|kivi|...]
-//!             [--threads N]
+//!             [--threads N] [--page-tokens N]
 //!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
-//!             [--kv-budget-kib K] [--threads N]
+//!             [--kv-budget-kib K] [--threads N] [--page-tokens N]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
 //!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
 //!   inspect                                       artifact + weight summary
@@ -12,6 +12,10 @@
 //! Global flags: --artifacts DIR, --fast (smaller repro workloads).
 //! --threads N sizes the decode attention worker pool (0 = one per core,
 //! default 1 = sequential); results are bit-identical for any N.
+//! --page-tokens N enables the paged KV pool with N-token pages (a
+//! multiple of the quant group; 0 = monolithic accounting, the default)
+//! and with it the downshift-then-preempt pressure controller
+//! (DESIGN.md §Memory-Manager).
 
 use anyhow::{anyhow, bail, Result};
 use kvmix::baselines::Method;
@@ -80,9 +84,10 @@ fn run() -> Result<()> {
             };
             let max_new = args.usize_or("max-new", 32)?;
             let threads = args.usize_or("threads", 1)?;
+            let page_tokens = args.usize_or("page-tokens", 0)?;
             WorkerPool::scoped(threads, |pool| {
                 let mut engine = Engine::with_pool(&rt, EngineCfg {
-                    method, max_batch: 1, kv_budget: None, threads,
+                    method, max_batch: 1, kv_budget: None, threads, page_tokens,
                 }, Some(pool))?;
                 engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
                                         sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
@@ -99,10 +104,12 @@ fn run() -> Result<()> {
             let addr = args.get_or("addr", "127.0.0.1:7979");
             let max_batch = args.usize_or("max-batch", 16)?;
             let threads = args.usize_or("threads", 1)?;
+            let page_tokens = args.usize_or("page-tokens", 0)?;
             let kv_budget = args.get("kv-budget-kib")
                 .map(|v| v.parse::<usize>().map(|k| k * 1024))
                 .transpose()?;
-            server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads },
+            server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads,
+                                           page_tokens },
                           &addr, None)
         }
         "repro" => {

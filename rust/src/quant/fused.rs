@@ -23,22 +23,25 @@ use super::pack::unpack_stream;
 /// the decode fan-out carries a `FusedScratch` inside each worker's
 /// `AttnScratch`, never sharing one across threads).
 ///
-/// The unpack-cache `tag` stores the block's words pointer as a plain
-/// `usize` identity, so the struct stays `Send` (asserted in
-/// `kvcache::cache`); it only elides re-unpacking, never changes results.
+/// The unpack-cache `tag` stores the [`PackedBlock::uid`] of the block
+/// currently staged in `ints`.  The uid is refreshed on every
+/// (re)quantization, so a pressure-controller downshift that rewrites a
+/// block in place — or a new block whose buffers reuse a freed
+/// allocation — can never match a stale unpack.  The cache only elides
+/// re-unpacking, never changes results.
 #[derive(Default)]
 pub struct FusedScratch {
     pub ints: Vec<u32>,
     pub f32s: Vec<f32>,
-    /// identity of the block currently unpacked in `ints`
-    /// (words ptr + n) — lets per-head loops skip redundant unpacks
-    tag: (usize, usize),
+    /// uid of the block currently unpacked in `ints` (0 = none) — lets
+    /// per-head loops skip redundant unpacks
+    tag: u64,
 }
 
 impl FusedScratch {
-    /// Invalidate the unpack cache (call if a block is mutated in place).
+    /// Invalidate the unpack cache (call if `ints` is clobbered by hand).
     pub fn invalidate(&mut self) {
-        self.tag = (0, 0);
+        self.tag = 0;
     }
 }
 
@@ -137,15 +140,14 @@ pub fn value_accum_fused(p: &[f32], block: &PackedBlock, kv_dim: usize,
 }
 
 /// Unpack the block's integer stream into `scratch.ints`, skipping if the
-/// scratch already holds this block's data (tagged by words-ptr + n).
+/// scratch already holds this block's data (tagged by the block uid).
 fn ensure_unpacked(block: &PackedBlock, scratch: &mut FusedScratch) {
-    let tag = (block.words.as_ptr() as usize, block.n);
-    if scratch.tag == tag && scratch.ints.len() >= block.n {
+    if block.uid != 0 && scratch.tag == block.uid && scratch.ints.len() >= block.n {
         return;
     }
     scratch.ints.resize(block.n, 0);
     unpack_stream(&block.words, block.bits, block.n, &mut scratch.ints);
-    scratch.tag = tag;
+    scratch.tag = block.uid;
 }
 
 /// Reference (unfused) implementations for tests/benches: dequantize the
@@ -233,6 +235,25 @@ mod tests {
                 assert!((x - y).abs() < 1e-3, "bits={bits}: {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn unpack_cache_tracks_inplace_requantization() {
+        // an in-place downshift must invalidate a scratch that still
+        // holds the block's old integers (uid-keyed cache)
+        let mut rng = Rng::new(21);
+        let (_, mut block) = key_block(&mut rng, 32, 32, 4);
+        let q = rng.normal_vec(32);
+        let mut s = FusedScratch::default();
+        let mut before = vec![0f32; 32];
+        key_scores_fused(&q, &block, 32, 0, &mut s, &mut before);
+        block.requantize(2, &mut Vec::new(), &mut Vec::new());
+        let mut after = vec![0f32; 32];
+        key_scores_fused(&q, &block, 32, 0, &mut s, &mut after);
+        let mut fresh = vec![0f32; 32];
+        key_scores_fused(&q, &block, 32, 0, &mut FusedScratch::default(), &mut fresh);
+        assert_eq!(after, fresh, "stale unpack served after requantize");
+        assert_ne!(after, before, "2-bit scores should differ from 4-bit");
     }
 
     #[test]

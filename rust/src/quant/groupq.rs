@@ -15,9 +15,14 @@
 //! `s = (max-min)/qmax` (s<1e-6 ⇒ 1.0), `q = clip(floor((x-min)/s + .5))`,
 //! `x~ = q·s + min`, with 3-bit clipping index-dependent per Eq. 12.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::pack::{pack_stream, qmax, qmax_at, unpack_stream, words_for};
 
 pub const EPS: f32 = 1e-6;
+
+/// Monotonic source for [`PackedBlock::uid`] (0 = never quantized).
+static NEXT_UID: AtomicU64 = AtomicU64::new(1);
 
 /// One quantized block: packed words + per-group (scale, min).
 ///
@@ -36,6 +41,11 @@ pub struct PackedBlock {
     pub scales: Vec<f32>,
     pub mins: Vec<f32>,
     pub outliers: Vec<(u32, f32)>,
+    /// Identity of the current packed contents, refreshed on every
+    /// (re)quantization.  The fused kernels' unpack cache keys on this,
+    /// so an in-place requantization (or a new block whose buffers reuse
+    /// a freed allocation) can never be served stale integers.
+    pub uid: u64,
 }
 
 impl PackedBlock {
@@ -55,6 +65,7 @@ impl PackedBlock {
         self.bits = bits;
         self.n = data.len();
         self.group = group;
+        self.uid = NEXT_UID.fetch_add(1, Ordering::Relaxed);
         self.scales.clear();
         self.mins.clear();
         self.outliers.clear();
@@ -146,6 +157,35 @@ impl PackedBlock {
         for &(i, v) in &self.outliers {
             out[i as usize] = v;
         }
+    }
+
+    /// Requantize this block in place to a narrower width (the paged
+    /// pool's pressure-controller downshift — DESIGN.md §Memory-Manager):
+    /// dequantize the current stream (outliers applied exactly), then
+    /// re-encode it at `to_bits` with the same group size.  Outliers are
+    /// folded into the narrower encoding rather than kept, so the
+    /// downshifted block is pure packed words + group params.
+    ///
+    /// No-op (returns 0) unless `to_bits < self.bits`.  Otherwise returns
+    /// the modeled bytes saved.  Quantization error compounds across
+    /// downshifts — by design: this trades the oldest pages' fidelity for
+    /// admission headroom, exactly the paper's dynamic long-context
+    /// policy under memory pressure.
+    pub fn requantize(&mut self, to_bits: u8, f32s: &mut Vec<f32>,
+                      ints: &mut Vec<u32>) -> usize {
+        if to_bits >= self.bits || self.n == 0 {
+            return 0;
+        }
+        let before = self.modeled_bytes();
+        let n = self.n;
+        let group = self.group;
+        f32s.clear();
+        f32s.resize(n, 0.0);
+        self.dequantize_into(f32s, ints);
+        let data = std::mem::take(f32s);
+        self.quantize_into(&data[..n], to_bits, group, ints);
+        *f32s = data;
+        before.saturating_sub(self.modeled_bytes())
     }
 
     /// Modeled memory footprint in bytes, counting scale/min at fp16 as a
@@ -240,6 +280,71 @@ mod tests {
             .map(|&b| quant_error(&PackedBlock::quantize(&data, b, 32), &data).mse)
             .collect();
         assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn requantize_down_the_ladder() {
+        // 8 -> 4 -> 2: bytes shrink and error grows monotonically at
+        // every rung of the pressure controller's bit ladder
+        let mut rng = Rng::new(7);
+        let data = rng.normal_vec(512);
+        let mut block = PackedBlock::quantize(&data, 8, 32);
+        let mut f32s = Vec::new();
+        let mut ints = Vec::new();
+        let mut prev_bytes = block.modeled_bytes();
+        let mut prev_err = quant_error(&block, &data).mse;
+        let mut prev_uid = block.uid;
+        for to in [4u8, 2] {
+            let saved = block.requantize(to, &mut f32s, &mut ints);
+            assert!(saved > 0, "downshift to {to} must save bytes");
+            assert_eq!(block.modeled_bytes(), prev_bytes - saved);
+            assert_eq!(block.bits, to);
+            assert_eq!(block.n, 512);
+            assert_ne!(block.uid, prev_uid, "requantize must refresh uid");
+            let err = quant_error(&block, &data).mse;
+            assert!(err > prev_err, "error must grow: {prev_err} -> {err}");
+            prev_bytes = block.modeled_bytes();
+            prev_err = err;
+            prev_uid = block.uid;
+        }
+    }
+
+    #[test]
+    fn requantize_same_or_wider_is_noop() {
+        let mut rng = Rng::new(8);
+        let data = rng.normal_vec(64);
+        let mut block = PackedBlock::quantize(&data, 2, 32);
+        let uid = block.uid;
+        let words = block.words.clone();
+        assert_eq!(block.requantize(2, &mut Vec::new(), &mut Vec::new()), 0);
+        assert_eq!(block.requantize(4, &mut Vec::new(), &mut Vec::new()), 0);
+        assert_eq!(block.uid, uid);
+        assert_eq!(block.words, words);
+    }
+
+    #[test]
+    fn requantize_folds_outliers() {
+        // a block with exact outliers downshifts to a pure packed block
+        let mut rng = Rng::new(14);
+        let data = rng.normal_vec(256);
+        let mut block = PackedBlock::default();
+        block.quantize_outliers_into(&data, 4, 32, 0.05, &mut Vec::new());
+        assert!(!block.outliers.is_empty());
+        block.requantize(2, &mut Vec::new(), &mut Vec::new());
+        assert!(block.outliers.is_empty());
+        assert_eq!(block.bits, 2);
+        // still decodes to something finite and sane
+        let e = quant_error(&block, &data);
+        assert!(e.mse.is_finite() && e.max_abs.is_finite());
+    }
+
+    #[test]
+    fn uids_are_unique_per_quantization() {
+        let data = vec![1.0f32; 32];
+        let a = PackedBlock::quantize(&data, 2, 32);
+        let b = PackedBlock::quantize(&data, 2, 32);
+        assert_ne!(a.uid, 0);
+        assert_ne!(a.uid, b.uid);
     }
 
     #[test]

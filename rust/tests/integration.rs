@@ -106,7 +106,7 @@ fn engine_serves_batch_with_budget() {
         &default_artifacts_dir().join("importance.json")).unwrap();
     let mut engine = Engine::new(&rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: Some(64 << 20),
-        threads: 1,
+        threads: 1, page_tokens: 0,
     }).unwrap();
     let mut rng = Rng::new(3);
     for id in 0..6 {
@@ -132,7 +132,7 @@ fn engine_oom_eviction_still_completes() {
     let bpt = kvmix::coordinator::estimate_bytes_per_token(&rt, &method);
     let budget = (bpt * 140.0) as usize; // fits ~1 seq of 40+24 comfortably
     let mut engine = Engine::new(&rt, EngineCfg {
-        method, max_batch: 4, kv_budget: Some(budget), threads: 1,
+        method, max_batch: 4, kv_budget: Some(budget), threads: 1, page_tokens: 0,
     }).unwrap();
     let mut rng = Rng::new(4);
     for id in 0..3 {
@@ -143,6 +143,89 @@ fn engine_oom_eviction_still_completes() {
     }
     let done = engine.run_to_completion().unwrap();
     assert_eq!(done.len(), 3, "all requests must eventually finish");
+}
+
+#[test]
+fn paged_preemption_resumes_bit_identically() {
+    // paged mode, fp16 policy (floors = 16, so the pressure controller
+    // has no downshift rungs and must go straight to preempt-restart):
+    // a preempted request recomputes from its original tokens, so with
+    // greedy sampling its completion must be bit-identical to an
+    // unconstrained run.  (Per-lane decode is independent of batch
+    // composition — the bucketized executables compute each row
+    // identically — so the comparison across the two runs is exact; the
+    // pure-cache half of this property is pinned without PJRT in
+    // tests/paging.rs::preempted_sequence_recomputes_to_identical_pages.)
+    let Some(rt) = runtime() else { return };
+    let method = Method::Fp16;
+    let bpt = kvmix::coordinator::estimate_bytes_per_token(&rt, &method);
+    // 3 requests of 40+40 = 80 tokens, i.e. two 64-token pages each at
+    // the end.  230 token-equivalents admit all three while their caches
+    // are one page each (192), but cannot hold two grown sequences
+    // (2 x 128 = 256): preemption must kick in as they cross a page
+    // boundary, and one grown sequence (128) always fits -> no hard OOM.
+    let budget = (bpt * 230.0) as usize;
+    let run = |kv_budget: Option<usize>| {
+        let mut engine = Engine::new(&rt, EngineCfg {
+            method: Method::Fp16, max_batch: 4, kv_budget, threads: 1,
+            page_tokens: 64,
+        }).unwrap();
+        let mut rng = Rng::new(4);
+        for id in 0..3 {
+            let (toks, _) = workload::sample_mixture(&mut rng, 40);
+            engine.submit(Request { id, prompt: toks, max_new_tokens: 40,
+                                    sampler: Sampler::Greedy, stop_token: None,
+                                    submitted_ns: 0 });
+        }
+        let mut done = engine.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        (done, engine.metrics.preemptions, engine.metrics.oom_events)
+    };
+    let (unconstrained, p0, _) = run(None);
+    assert_eq!(p0, 0);
+    let (tight, preempts, ooms) = run(Some(budget));
+    assert!(preempts > 0, "tight budget must force preemption");
+    assert_eq!(ooms, 0, "paged preemption is not an OOM");
+    assert_eq!(unconstrained.len(), 3);
+    assert_eq!(tight.len(), 3);
+    for (a, b) in unconstrained.iter().zip(&tight) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens,
+                   "request {} must resume bit-identically after preemption", a.id);
+    }
+}
+
+#[test]
+fn paged_pressure_downshifts_under_budget() {
+    // kvmix plan in paged mode under a budget squeezed well below the
+    // unconstrained peak: the run must complete with pages_requantized>0
+    // and no hard OOM — downshift-then-preempt in action
+    let Some(rt) = runtime() else { return };
+    let plan = QuantPlan::from_importance_file(
+        &default_artifacts_dir().join("importance.json")).unwrap();
+    let method = Method::Kvmix(plan);
+    let run = |kv_budget: Option<usize>| {
+        let mut engine = Engine::new(&rt, EngineCfg {
+            method: method.clone(), max_batch: 4, kv_budget, threads: 1,
+            page_tokens: 64,
+        }).unwrap();
+        let mut rng = Rng::new(6);
+        for id in 0..4 {
+            let (toks, _) = workload::sample_mixture(&mut rng, 48);
+            engine.submit(Request { id, prompt: toks, max_new_tokens: 48,
+                                    sampler: Sampler::Greedy, stop_token: None,
+                                    submitted_ns: 0 });
+        }
+        let done = engine.run_to_completion().unwrap();
+        (done.len(), engine.metrics.peak_kv_bytes, engine.metrics.pages_requantized,
+         engine.metrics.oom_events)
+    };
+    let (n, peak, _, _) = run(None);
+    assert_eq!(n, 4);
+    let (n2, _, requants, ooms) = run(Some(peak * 55 / 100));
+    assert_eq!(n2, 4, "squeezed run must still complete");
+    assert!(requants > 0, "pressure must requantize pages before anything drastic");
+    assert_eq!(ooms, 0);
 }
 
 #[test]

@@ -1,0 +1,165 @@
+//! Paged KV pool + pressure controller invariants that need no PJRT
+//! runtime: the downshift-before-preempt ordering, floor enforcement,
+//! page lifecycle across preemption, and page-granular budget charging
+//! (DESIGN.md §Memory-Manager).
+
+use kvmix::baselines::Method;
+use kvmix::config::{ModelConfig, QuantPlan};
+use kvmix::kvcache::{pressure, KvSide, MemoryBudget, PagePool, SeqKvCache};
+use kvmix::util::Rng;
+
+const PT: usize = 64;
+
+fn filled(m: &ModelConfig, plan: &QuantPlan, tokens: usize, seed: u64) -> SeqKvCache {
+    let mut c = SeqKvCache::new(m, plan);
+    let kv = m.kv_dim();
+    let mut rng = Rng::new(seed);
+    let k = rng.normal_vec(tokens * kv);
+    let v = rng.normal_vec(tokens * kv);
+    for l in &mut c.layers {
+        l.append(&k, &v, tokens);
+    }
+    c
+}
+
+/// Drive the engine's pressure policy against a budget: sync + charge;
+/// on failure downshift (oldest sequence first), and only when no page
+/// can move preempt the youngest sequence.  Returns the event log.
+fn relieve_until_fit(caches: &mut Vec<(u64, SeqKvCache)>, pool: &mut PagePool,
+                     budget: &mut MemoryBudget,
+                     floors: &kvmix::kvcache::PressureCfg) -> Vec<char> {
+    let mut events = Vec::new();
+    loop {
+        for (id, c) in caches.iter() {
+            pool.sync(*id, c);
+        }
+        if budget.set_kv(pool.modeled_bytes()).is_ok() {
+            return events;
+        }
+        let mut moved = false;
+        for (_, c) in caches.iter_mut() {
+            if pressure::downshift_one(c, PT, floors).is_some() {
+                events.push('D');
+                moved = true;
+                break;
+            }
+        }
+        if moved {
+            continue;
+        }
+        assert!(caches.len() > 1, "budget unsatisfiable even after preempting all but one");
+        events.push('P');
+        let (id, _) = caches.pop().unwrap();
+        pool.free_owner(id);
+    }
+}
+
+#[test]
+fn downshift_satisfies_budget_without_preemption() {
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+    let floors = Method::Kvmix(plan.clone()).pressure_floors(m.n_layers);
+    let mut caches: Vec<(u64, SeqKvCache)> = (0..2u64)
+        .map(|i| (i, filled(&m, &plan, 256, i + 1)))
+        .collect();
+    let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    for (id, c) in &caches {
+        pool.sync(*id, c);
+    }
+    let full = pool.modeled_bytes();
+    let reclaimable: usize = caches.iter()
+        .map(|(_, c)| pressure::reclaimable_bytes(c, PT, &floors))
+        .sum();
+    assert!(reclaimable > 0);
+    // budget = exactly the all-at-floor footprint: downshift alone must
+    // cover it, with zero preemptions before (or at) the floors
+    let mut budget = MemoryBudget::new(full - reclaimable, 0).unwrap();
+    let events = relieve_until_fit(&mut caches, &mut pool, &mut budget, &floors);
+    assert!(events.contains(&'D'), "pages must downshift");
+    assert!(!events.contains(&'P'), "no preemption before the floors are reached");
+    assert_eq!(caches.len(), 2);
+    assert!(pool.stats.retags > 0, "sync must observe the downshifts");
+    // every sealed page of every sequence now sits at its floor
+    for (_, c) in &caches {
+        for (li, l) in c.layers.iter().enumerate() {
+            for &s in &[KvSide::Key, KvSide::Value] {
+                for p in 0..l.sealed_quant_pages(s, PT) {
+                    assert_eq!(l.quant_page_bits(s, p, PT), floors.floor(li, s));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn preemption_only_after_floors_exhausted() {
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+    let floors = Method::Kvmix(plan.clone()).pressure_floors(m.n_layers);
+    let mut caches: Vec<(u64, SeqKvCache)> = (0..2u64)
+        .map(|i| (i, filled(&m, &plan, 256, i + 10)))
+        .collect();
+    let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    for (id, c) in &caches {
+        pool.sync(*id, c);
+    }
+    let full = pool.modeled_bytes();
+    let reclaimable: usize = caches.iter()
+        .map(|(_, c)| pressure::reclaimable_bytes(c, PT, &floors))
+        .sum();
+    // budget below the two-sequence floor footprint but above one
+    // sequence's: every page must downshift first, then exactly one
+    // preemption closes the gap
+    let floor_total = full - reclaimable;
+    let mut budget = MemoryBudget::new(floor_total * 3 / 4, 0).unwrap();
+    let events = relieve_until_fit(&mut caches, &mut pool, &mut budget, &floors);
+    let first_p = events.iter().position(|&e| e == 'P').expect("preemption required");
+    assert!(events[..first_p].iter().all(|&e| e == 'D'),
+            "all downshifts must precede the first preemption: {events:?}");
+    assert_eq!(events.iter().filter(|&&e| e == 'P').count(), 1);
+    assert_eq!(caches.len(), 1);
+    // the preempted sequence's frames went back to the free lists
+    assert_eq!(pool.allocated_pages(), pool.owner_pages(0));
+    assert!(pool.stats.frees > 0);
+}
+
+#[test]
+fn fp16_pages_cannot_downshift_only_preempt() {
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::fp16(m.n_layers);
+    let floors = Method::Fp16.pressure_floors(m.n_layers);
+    let mut caches: Vec<(u64, SeqKvCache)> = (0..3u64)
+        .map(|i| (i, filled(&m, &plan, 128, i + 20)))
+        .collect();
+    let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    for (id, c) in &caches {
+        pool.sync(*id, c);
+    }
+    let one_seq = pool.modeled_bytes() / 3;
+    let mut budget = MemoryBudget::new(one_seq * 3 / 2, 0).unwrap();
+    let events = relieve_until_fit(&mut caches, &mut pool, &mut budget, &floors);
+    assert!(events.iter().all(|&e| e == 'P'), "fp16 has no downshift rungs: {events:?}");
+    assert_eq!(caches.len(), 1);
+}
+
+#[test]
+fn preempted_sequence_recomputes_to_identical_pages() {
+    // preempt-restart recomputes the cache from the same tokens: the
+    // rebuilt page layout and modeled footprint must match bit-for-bit
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+    let a = filled(&m, &plan, 192, 77);
+    let b = filled(&m, &plan, 192, 77); // same seed = same appended K/V
+    assert_eq!(a.modeled_bytes(), b.modeled_bytes());
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        for &s in &[KvSide::Key, KvSide::Value] {
+            let (ba, bb) = (la.quant_blocks(s), lb.quant_blocks(s));
+            assert_eq!(ba.len(), bb.len());
+            for (x, y) in ba.iter().zip(bb) {
+                assert_eq!(x.words, y.words, "packed words must be bit-identical");
+                assert_eq!(x.scales, y.scales);
+                assert_eq!(x.mins, y.mins);
+            }
+        }
+    }
+}

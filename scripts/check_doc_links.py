@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Markdown link + DESIGN.md section cross-reference checker.
+
+Two classes of rot this catches (run by .github/workflows/verify.yml and
+usable locally as `python3 scripts/check_doc_links.py`):
+
+1. Relative markdown links in README.md, DESIGN.md and docs/**/*.md that
+   point at files which don't exist.
+2. `DESIGN.md §<section>` references anywhere in the repo (doc comments
+   cite design sections by name, e.g. `DESIGN.md §Memory-Manager`) that
+   don't resolve to a `## §<section>` heading in DESIGN.md.
+
+Exit code 0 = clean, 1 = at least one broken reference (all are listed).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# files whose markdown links we verify
+DOC_FILES = [ROOT / "README.md", ROOT / "DESIGN.md"]
+DOC_FILES += sorted((ROOT / "docs").rglob("*.md"))
+
+# trees scanned for `DESIGN.md §...` references
+REF_TREES = ["rust/src", "rust/tests", "rust/benches", "examples", "python",
+             "docs", "scripts"]
+REF_FILES = [ROOT / "README.md", ROOT / "DESIGN.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§([A-Za-z0-9][A-Za-z0-9-]*)")
+HEADING_RE = re.compile(r"^##\s+§([A-Za-z0-9][A-Za-z0-9-]*)", re.M)
+
+# generic placeholders used when *describing* the convention itself
+# (e.g. DESIGN.md's "cite them as `DESIGN.md §N`"), not real references
+PLACEHOLDER_SECTIONS = {"N", "Name"}
+
+
+def check_links(errors: list) -> None:
+    for doc in DOC_FILES:
+        text = doc.read_text(encoding="utf-8")
+        for match in LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link -> {target}")
+
+
+def design_sections() -> set:
+    design = (ROOT / "DESIGN.md").read_text(encoding="utf-8")
+    return set(HEADING_RE.findall(design))
+
+
+def check_section_refs(errors: list) -> None:
+    sections = design_sections()
+    files = list(REF_FILES)
+    for tree in REF_TREES:
+        base = ROOT / tree
+        if base.exists():
+            for p in sorted(base.rglob("*")):
+                if p.is_file() and p.suffix in {".rs", ".py", ".md", ".sh"}:
+                    files.append(p)
+    for f in files:
+        try:
+            text = f.read_text(encoding="utf-8")
+        except UnicodeDecodeError:
+            continue
+        for match in SECTION_REF_RE.finditer(text):
+            # references are written `DESIGN.md §5` or `DESIGN.md §Name`;
+            # a trailing sentence word boundary is handled by the charset
+            section = match.group(1)
+            if section in PLACEHOLDER_SECTIONS:
+                continue
+            if section not in sections:
+                errors.append(
+                    f"{f.relative_to(ROOT)}: unresolved reference DESIGN.md §{section} "
+                    f"(known: {', '.join(sorted(sections))})")
+
+
+def main() -> int:
+    errors: list = []
+    check_links(errors)
+    check_section_refs(errors)
+    if errors:
+        print(f"doc cross-reference check FAILED ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"doc cross-reference check OK "
+          f"({len(DOC_FILES)} markdown files, sections: "
+          f"{', '.join(sorted(design_sections()))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
