@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         kv_budget: None,
         threads: 1,
         page_tokens: 0, // monolithic accounting; see DESIGN.md §Memory-Manager
+        prefix_cache: false,
     })?;
 
     // a recall-task prompt: bindings ... SEP QRY key -> the model should

@@ -1,10 +1,15 @@
-//! End-to-end serving driver (the repo's E2E validation, EXPERIMENTS.md):
+//! End-to-end serving driver (the repo's E2E validation, README.md):
 //! loads the trained reproduction model through the PJRT runtime, serves a
 //! batched mixed workload through the continuous-batching engine with the
 //! KVmix cache, and reports latency/throughput + memory vs the FP16
 //! baseline.
 //!
-//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4 --page-tokens 64]
+//! With `--prefix-cache` (which implies `--page-tokens 64` unless set)
+//! every request shares a synthetic system prompt, the shape prefix
+//! sharing deduplicates (DESIGN.md §Prefix-Sharing): the report then
+//! shows `prefix hits N (T tok reused)`.
+//!
+//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4 --page-tokens 64 --prefix-cache]
 
 use anyhow::Result;
 use kvmix::baselines::Method;
@@ -18,17 +23,28 @@ use kvmix::util::{Rng, WorkerPool};
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &[]);
+    let args = Args::parse(&raw, &["prefix-cache"]);
     let n_requests = args.usize_or("requests", 24)?;
     let batch = args.usize_or("batch", 8)?;
     let max_new = args.usize_or("max-new", 48)?;
     let threads = args.usize_or("threads", 1)?;
-    // 0 = monolithic; e.g. --page-tokens 64 enables the paged KV pool
-    let page_tokens = args.usize_or("page-tokens", 0)?;
+    let prefix_cache = args.flag("prefix-cache");
+    // 0 = monolithic; e.g. --page-tokens 64 enables the paged KV pool.
+    // --prefix-cache needs pages, so it defaults the page size on.
+    let page_tokens = match args.usize_or("page-tokens", 0)? {
+        0 if prefix_cache => 64,
+        pt => pt,
+    };
 
     let dir = default_artifacts_dir();
     let rt = Runtime::load_with(&dir, false)?;
     let plan = QuantPlan::from_importance_file(&dir.join("importance.json"))?;
+
+    // shared system prompt for the prefix-cache workload: exactly one
+    // page of tokens every request starts with (sized to --page-tokens,
+    // else a larger page size would make the prefix sub-page and unshared)
+    let mut sys_rng = Rng::new(7);
+    let (system, _) = workload::sample_mixture(&mut sys_rng, page_tokens.max(1));
 
     for method in [Method::Fp16, Method::Kvmix(plan)] {
         let name = method.name();
@@ -37,14 +53,21 @@ fn main() -> Result<()> {
         WorkerPool::scoped(threads, |pool| -> Result<()> {
             let mut engine = Engine::with_pool(&rt, EngineCfg {
                 method: method.clone(), max_batch: batch, kv_budget: None, threads,
-                page_tokens,
+                page_tokens, prefix_cache,
             }, Some(pool))?;
             let mut rng = Rng::new(42);
             for id in 0..n_requests {
                 let plen = 32 + rng.below(64);
-                let (toks, _) = workload::sample_mixture(&mut rng, plen);
+                let (tail, _) = workload::sample_mixture(&mut rng, plen);
+                let prompt = if prefix_cache {
+                    let mut p = system.clone();
+                    p.extend_from_slice(&tail);
+                    p
+                } else {
+                    tail
+                };
                 engine.submit(Request {
-                    id: id as u64, prompt: toks, max_new_tokens: max_new,
+                    id: id as u64, prompt, max_new_tokens: max_new,
                     sampler: Sampler::TopK { k: 4, temperature: 0.8 },
                     stop_token: None, submitted_ns: 0,
                 });

@@ -9,7 +9,7 @@ TPU mapping (DESIGN.md §Hardware-Adaptation): the token axis is the grid,
 each program instance holds one token tile of the hidden states plus the
 full projection weights in VMEM (for the reproduction model D=256 this is
 ~0.9 MB, far under the 16 MB VMEM budget; the analytic scaling table lives
-in EXPERIMENTS.md §Perf).  The three projections ride the MXU back-to-back
+in the bench output of rust/benches/quant_kernels.rs).  The three projections ride the MXU back-to-back
 from the same normalized activation tile, which is the fusion the paper
 implements with a CUDA kernel over shared memory.
 """

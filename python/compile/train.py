@@ -2,7 +2,7 @@
 
 Trains the tiny Llama-style decoder (model.py) on the synthetic task
 mixture (corpus.py) with hand-rolled Adam, logging the loss curve to
-``train_log.json`` (recorded in EXPERIMENTS.md).  Runs once; ``aot.py``
+``train_log.json``.  Runs once; ``aot.py``
 caches the resulting ``checkpoint.npz``.
 """
 

@@ -9,13 +9,18 @@
 //! threads=1 sweep with a per-step page-table reconcile + page-granular
 //! byte charge against a [`kvmix::kvcache::PagePool`] — i.e. they price
 //! the paged pool's accounting overhead on the decode hot path
-//! (DESIGN.md §Memory-Manager); the arithmetic is identical.
+//! (DESIGN.md §Memory-Manager); the arithmetic is identical.  The final
+//! `prefix` section times shared-system-prompt admission through the
+//! engine with `--prefix-cache` off vs on (DESIGN.md §Prefix-Sharing):
+//! generated tokens are bit-identical; the on rows skip re-quantizing
+//! the shared pages and dedup their memory.
 
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
+use kvmix::coordinator::{Engine, EngineCfg, Request};
 use kvmix::harness::workload;
 use kvmix::kvcache::PagePool;
-use kvmix::model::{DecodeScratch, Forward};
+use kvmix::model::{DecodeScratch, Forward, Sampler};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 use kvmix::util::{Rng, WorkerPool};
 
@@ -99,6 +104,45 @@ fn main() {
                      secs / steps as f64 * 1e3,
                      (steps * batch) as f64 / secs,
                      pool.allocated_pages(), charged as f64 / 1024.0);
+        }
+    }
+
+    // -- shared-prefix admission: batchfuls of common-system-prompt
+    //    requests through the engine, --prefix-cache off vs on --
+    let plan = QuantPlan::from_importance_file(&dir.join("importance.json"))
+        .unwrap_or_else(|_| QuantPlan::uniform(rt.model.n_layers, 2));
+    let eager = Method::Kvmix(plan.without_rpc());
+    println!();
+    println!("# shared-prefix admission (64-token system prompt + 32-token tails, \
+              gen 8, paged-64 — DESIGN.md §Prefix-Sharing)");
+    println!("{:<14} {:>6} {:>12} {:>8} {:>12} {:>12}",
+             "prefix-cache", "batch", "ms/request", "hits", "tok reused", "peak KiB");
+    for batch in [4usize, 8, 16] {
+        for on in [false, true] {
+            let mut engine = Engine::new(&rt, EngineCfg {
+                method: eager.clone(), max_batch: batch, kv_budget: None,
+                threads: 1, page_tokens: 64, prefix_cache: on,
+            }).expect("engine");
+            let mut rng = Rng::new(11);
+            let (system, _) = workload::sample_mixture(&mut rng, 64);
+            for id in 0..batch {
+                let (tail, _) = workload::sample_mixture(&mut rng, 32);
+                let mut prompt = system.clone();
+                prompt.extend_from_slice(&tail);
+                engine.submit(Request {
+                    id: id as u64, prompt, max_new_tokens: 8,
+                    sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0,
+                });
+            }
+            let t0 = std::time::Instant::now();
+            let done = engine.run_to_completion().expect("serve");
+            let secs = t0.elapsed().as_secs_f64();
+            assert_eq!(done.len(), batch);
+            println!("{:<14} {:>6} {:>12.3} {:>8} {:>12} {:>12.2}",
+                     if on { "on" } else { "off" }, batch,
+                     secs / batch as f64 * 1e3,
+                     engine.metrics.prefix_hits, engine.metrics.prefix_tokens_reused,
+                     engine.metrics.peak_kv_bytes as f64 / 1024.0);
         }
     }
 }

@@ -3,11 +3,14 @@
 //! paged-vs-monolithic pressure rows: under a budget that OOMs the
 //! monolithic engine at batch 4, the paged pool downshifts old pages down
 //! the bit ladder (then preempts, only past the floors) and sustains a
-//! strictly larger decode batch (DESIGN.md §Memory-Manager).
+//! strictly larger decode batch (DESIGN.md §Memory-Manager).  The
+//! trailing shared-prefix rows serve a common-system-prompt workload
+//! with `--prefix-cache` off vs on and print the page deduplication
+//! (DESIGN.md §Prefix-Sharing).
 
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
-use kvmix::harness::tables::run_serving;
+use kvmix::harness::tables::{run_serving, run_serving_prefixed};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 
 fn main() {
@@ -53,6 +56,28 @@ fn main() {
                                   s.pages_requantized, s.preemptions, s.tok_per_s),
                 Err(_) => println!("{:<12} {:>6} {:>8} {:>12} {:>14} {:>9} {:>10}",
                                    mode, b, "OOM", "-", "-", "-", "-"),
+            }
+        }
+    }
+
+    // -- shared-prefix rows: common 64-token system prompt, batch 4/8 --
+    // (eager kvmix-2bit plan so the whole prefix is page-shareable; the
+    // off/on delta is the pool-level deduplication of the shared pages)
+    let eager = Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2).without_rpc());
+    println!();
+    println!("# shared-prefix serving — 64-token system prompt + 32-token tails, \
+              paged-64 (DESIGN.md §Prefix-Sharing)");
+    println!("{:<14} {:>6} {:>12} {:>8} {:>12} {:>10}",
+             "prefix-cache", "batch", "peak KiB", "hits", "tok reused", "tok/s");
+    for b in [4usize, 8] {
+        for on in [false, true] {
+            match run_serving_prefixed(&rt, &eager, b, 64, 32, 32, None, 64, on) {
+                Ok(s) => println!("{:<14} {:>6} {:>12.2} {:>8} {:>12} {:>10.1}",
+                                  if on { "on" } else { "off" }, b,
+                                  s.peak_kv_bytes as f64 / 1024.0,
+                                  s.prefix_hits, s.prefix_tokens_reused, s.tok_per_s),
+                Err(e) => println!("{:<14} {:>6} failed: {e}",
+                                   if on { "on" } else { "off" }, b),
             }
         }
     }

@@ -56,19 +56,41 @@ impl Batcher {
 
     /// Projected KV bytes of a request at completion.
     pub fn projected_bytes(&self, req: &Request) -> usize {
-        ((req.prompt.len() + req.max_new_tokens) as f64 * self.bytes_per_token).ceil() as usize
+        self.projected_suffix_bytes(req, 0)
+    }
+
+    /// Projected KV bytes of a request at completion, discounting
+    /// `reused` prompt tokens whose quantized pages an admission would
+    /// adopt from the prefix index instead of allocating
+    /// (DESIGN.md §Prefix-Sharing) — only the *unshared* suffix is
+    /// booked against the budget.
+    pub fn projected_suffix_bytes(&self, req: &Request, reused: usize) -> usize {
+        let tokens = req.prompt.len().saturating_sub(reused) + req.max_new_tokens;
+        (tokens as f64 * self.bytes_per_token).ceil() as usize
     }
 
     /// Pop the next admissible request: the oldest of the first
     /// [`ADMIT_LOOKAHEAD`] waiting requests whose projected footprint
     /// fits the free budget, provided a batch slot is free.
     pub fn admit(&mut self, active: usize, budget: &MemoryBudget) -> Option<Request> {
+        self.admit_with_reuse(active, budget, &|_| 0)
+    }
+
+    /// [`Batcher::admit`] with a prefix-reuse probe: `reused(req)`
+    /// reports the prompt tokens whose quantized pages a prefix-cache
+    /// hit would adopt (0 without the cache), so a batchful of
+    /// same-system-prompt requests books the shared prefix once instead
+    /// of once per member.  The engine passes a read-only pool probe;
+    /// the plain [`Batcher::admit`] is the probe-less special case.
+    pub fn admit_with_reuse(&mut self, active: usize, budget: &MemoryBudget,
+                            reused: &dyn Fn(&Request) -> usize) -> Option<Request> {
         if active >= self.max_batch {
             return None;
         }
         let lim = self.queue.len().min(ADMIT_LOOKAHEAD);
         for i in 0..lim {
-            if self.projected_bytes(&self.queue[i]) <= budget.free() {
+            let r = reused(&self.queue[i]);
+            if self.projected_suffix_bytes(&self.queue[i], r) <= budget.free() {
                 return self.queue.remove(i);
             }
         }
@@ -79,8 +101,15 @@ impl Batcher {
     /// the pressure controller must free for admission to progress
     /// (`None` when the queue is empty).
     pub fn min_projected_in_lookahead(&self) -> Option<usize> {
+        self.min_projected_in_lookahead_with(&|_| 0)
+    }
+
+    /// [`Batcher::min_projected_in_lookahead`] under the same
+    /// prefix-reuse probe as [`Batcher::admit_with_reuse`].
+    pub fn min_projected_in_lookahead_with(&self, reused: &dyn Fn(&Request) -> usize)
+                                           -> Option<usize> {
         self.queue.iter().take(ADMIT_LOOKAHEAD)
-            .map(|r| self.projected_bytes(r))
+            .map(|r| self.projected_suffix_bytes(r, reused(r)))
             .min()
     }
 }
@@ -136,6 +165,23 @@ mod tests {
         assert!(b.admit(0, &budget).is_none(), "blocker itself still waits");
         assert_eq!(b.waiting(), 1);
         assert_eq!(b.min_projected_in_lookahead(), Some(200_000));
+    }
+
+    #[test]
+    fn reuse_discount_admits_shared_prefix_request() {
+        // projected 2000 bytes exclusively, but 1500 of prompt is a
+        // registered prefix: only the suffix is booked, and it fits
+        let mut b = Batcher::new(8, 100.0);
+        b.submit(req(1, 15, 5));
+        let budget = MemoryBudget::new(1_000, 0).unwrap();
+        assert!(b.admit(0, &budget).is_none(), "books 2000 > 1000 without reuse");
+        assert_eq!(b.min_projected_in_lookahead(), Some(2_000));
+        let probe = |r: &Request| if r.id == 1 { 10 } else { 0 };
+        assert_eq!(b.min_projected_in_lookahead_with(&probe), Some(1_000));
+        assert_eq!(b.admit_with_reuse(0, &budget, &probe).unwrap().id, 1);
+        // a reuse claim larger than the prompt saturates, never underflows
+        b.submit(req(2, 4, 4));
+        assert_eq!(b.projected_suffix_bytes(&b.queue[0], 100), 400);
     }
 
     #[test]

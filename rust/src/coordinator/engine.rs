@@ -14,10 +14,20 @@
 //! * **Paged** (`page_tokens > 0`): sequences map onto a global
 //!   [`PagePool`] and the budget is charged at page granularity.  Under
 //!   pressure — admission failure or simulated OOM — the engine first
-//!   requantizes the oldest out-of-window pages down the bit ladder
-//!   (bounded by the per-layer gradient-importance floors) and only when
-//!   every page sits at its floor preempts the lowest-priority (youngest)
-//!   sequence; `oom_events` then only counts the unrecoverable case.
+//!   requantizes the oldest out-of-window *unshared* pages down the bit
+//!   ladder (bounded by the per-layer gradient-importance floors), then
+//!   evicts LRU prefix-index entries, and only when both rungs are
+//!   exhausted preempts the lowest-priority (youngest) sequence;
+//!   `oom_events` then only counts the unrecoverable case.
+//!
+//! With `--prefix-cache` (paged mode only), admission additionally runs
+//! the shared-prefix path (DESIGN.md §Prefix-Sharing): hash the longest
+//! whole-page-aligned shareable prompt prefix, adopt a registered hit's
+//! quantized pages into the new sequence as refcounted read-only frames
+//! (charged once, skipping their re-quantization), prefill only the
+//! unshared suffix into the cache — the dense forward still covers the
+//! full prompt, so logits and sampled tokens stay bit-identical — and
+//! register the new sequence's own aligned prefix for later arrivals.
 
 use anyhow::Result;
 
@@ -25,7 +35,7 @@ use crate::baselines::Method;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ActiveRequest, Completion, Request};
-use crate::kvcache::{pressure, MemoryBudget, PagePool, PressureCfg};
+use crate::kvcache::{pressure, MemoryBudget, PagePool, PressureCfg, SeqKvCache};
 use crate::model::{DecodeScratch, Forward};
 use crate::runtime::Runtime;
 use crate::util::{Rng, WorkerPool};
@@ -45,6 +55,10 @@ pub struct EngineCfg {
     /// the quant group, or 0 to keep the monolithic per-sequence
     /// accounting (DESIGN.md §Memory-Manager; `--page-tokens` on the CLI).
     pub page_tokens: usize,
+    /// shared-prefix KV reuse across sequences (`--prefix-cache`;
+    /// requires `page_tokens > 0`).  Off = bit-for-bit the pre-sharing
+    /// engine (DESIGN.md §Prefix-Sharing).
+    pub prefix_cache: bool,
 }
 
 pub struct Engine<'a> {
@@ -63,6 +77,11 @@ pub struct Engine<'a> {
     pages: Option<PagePool>,
     /// per-layer requantization floors for the pressure controller
     pressure: PressureCfg,
+    /// template cache for prefix-sharing caps at admission time (None
+    /// unless `--prefix-cache`): `max_shareable_prefix` only reads the
+    /// per-layer window/representation config, so one never-filled
+    /// instance serves every projection probe
+    probe: Option<SeqKvCache>,
 }
 
 impl<'a> Engine<'a> {
@@ -88,11 +107,19 @@ impl<'a> Engine<'a> {
         // the stored cfg consistent with it so the two can't diverge
         let threads = pool.map(|p| p.threads()).unwrap_or(1);
         let pages = if cfg.page_tokens > 0 {
-            Some(PagePool::new(cfg.page_tokens, rt.model.kv_dim(), rt.model.group)?)
+            let mut pool = PagePool::new(cfg.page_tokens, rt.model.kv_dim(), rt.model.group)?;
+            if cfg.prefix_cache {
+                pool.enable_prefix_cache();
+            }
+            Some(pool)
+        } else if cfg.prefix_cache {
+            anyhow::bail!("--prefix-cache needs the paged KV pool: set --page-tokens N \
+                           (prefix sharing is page-aligned — DESIGN.md §Prefix-Sharing)");
         } else {
             None
         };
         let pressure = cfg.method.pressure_floors(rt.model.n_layers);
+        let probe = cfg.prefix_cache.then(|| cfg.method.make_cache(&rt.model));
         Ok(Engine {
             rt,
             batcher: Batcher::new(max_batch, bpt),
@@ -106,6 +133,7 @@ impl<'a> Engine<'a> {
             pool,
             pages,
             pressure,
+            probe,
         })
     }
 
@@ -133,16 +161,48 @@ impl<'a> Engine<'a> {
         // still reclaim enough by downshifting old pages to their floors,
         // requantize one page and retry (DESIGN.md §Memory-Manager).
         let mut admitted_any = false;
-        // all-floors reclaimable bound, computed at most once per step and
-        // decremented by each downshift's frame-accounting delta.  It can
-        // only underestimate as new admissions bring more pages (we break
-        // early instead of grinding too far) — conservative and cheap.
+        // all-floors reclaimable bound, computed at most once per relief
+        // phase and decremented by each downshift's frame-accounting
+        // delta.  Plain admissions can only make it underestimate (new
+        // pages arrive; we break early instead of grinding too far), but
+        // prefix-cache admissions can make it OVERestimate — adoption
+        // turns index-only frames into mapped ones and registration makes
+        // the donor's pages downshift-exempt — so any admission that ran
+        // the prefix machinery invalidates the cache (recomputed on the
+        // next relief round).
         let mut reclaim_cache: Option<usize> = None;
         loop {
-            while let Some(req) = self.batcher.admit(self.active.len(), &self.budget) {
+            while let Some(req) = {
+                // admission projects only the *unshared* suffix bytes: a
+                // read-only pool probe discounts prompt tokens whose
+                // pages a prefix hit would adopt (DESIGN.md
+                // §Prefix-Sharing; plain projection when the cache is off)
+                let (pages, probe, pt) = (&self.pages, &self.probe, self.cfg.page_tokens);
+                let reuse = move |r: &Request| reused_tokens(pages, probe, pt, r);
+                self.batcher.admit_with_reuse(self.active.len(), &self.budget, &reuse)
+            } {
                 admitted_any = true;
                 let mut cache = self.cfg.method.make_cache(&self.rt.model);
-                let logits = fwd.prefill(&req.prompt, &mut cache)?;
+                // shared-prefix lookup (DESIGN.md §Prefix-Sharing): adopt a
+                // registered whole-page prefix's quantized pages as shared
+                // read-only frames, capped by what this prompt's window
+                // policies would quantize anyway (the bit-identity bound)
+                let mut adopted = 0usize;
+                if let Some(pool) = &mut self.pages {
+                    if pool.prefix_cache_enabled() {
+                        let cap = cache.max_shareable_prefix(req.prompt.len(),
+                                                             self.cfg.page_tokens);
+                        adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
+                        if adopted > 0 {
+                            self.metrics.prefix_hits += 1;
+                            self.metrics.prefix_tokens_reused += adopted;
+                        }
+                    }
+                }
+                // the dense forward covers the full prompt either way, so
+                // these logits are bit-identical to a cold prefill; on a
+                // hit only the unshared suffix is quantized into the cache
+                let logits = fwd.prefill_from(&req.prompt, &mut cache, adopted)?;
                 self.metrics.prefill_tokens += req.prompt.len();
                 let vocab = self.rt.model.vocab;
                 let last = &logits[(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
@@ -160,13 +220,35 @@ impl<'a> Engine<'a> {
                 // shortfall).  Only the new sequence needs syncing — the
                 // rest were reconciled by the last full charge.
                 let _ = self.charge_admitted()?;
+                // register the new sequence's own aligned prefix while its
+                // pages are provably still at the plan's width (right
+                // after the post-prefill sync, before any relief round;
+                // the index reference then keeps them pristine — shared
+                // pages are downshift-exempt and copy-on-write)
+                if let Some(pool) = &mut self.pages {
+                    if pool.prefix_cache_enabled() {
+                        let a = self.active.last().expect("just pushed");
+                        let cap = a.cache.max_shareable_prefix(a.req.prompt.len(),
+                                                               self.cfg.page_tokens);
+                        pool.register_prefix(a.req.id, &a.req.prompt, cap, &a.cache);
+                        // adoption/registration shifts frames between the
+                        // reclaimable categories: stale bound must not
+                        // authorize further grinding (see reclaim_cache)
+                        reclaim_cache = None;
+                    }
+                }
             }
             if self.pages.is_none()
                 || self.active.len() >= self.batcher.max_batch
                 || self.batcher.waiting() == 0 {
                 break;
             }
-            let Some(need) = self.batcher.min_projected_in_lookahead() else { break };
+            let need = {
+                let (pages, probe, pt) = (&self.pages, &self.probe, self.cfg.page_tokens);
+                let reuse = move |r: &Request| reused_tokens(pages, probe, pt, r);
+                self.batcher.min_projected_in_lookahead_with(&reuse)
+            };
+            let Some(need) = need else { break };
             if need <= self.budget.free() {
                 break; // nothing is memory-blocked (admit stopped on slots)
             }
@@ -174,21 +256,47 @@ impl<'a> Engine<'a> {
                 Some(r) => r,
                 None => {
                     let page_tokens = self.cfg.page_tokens;
-                    let r = self.active.iter()
+                    let mut r: usize = self.active.iter()
                         .map(|a| pressure::reclaimable_bytes(&a.cache, page_tokens,
                                                             &self.pressure))
                         .sum();
+                    // plus what evicting the whole prefix index would free
+                    r += self.pages.as_ref()
+                        .map(PagePool::prefix_reclaimable_bytes)
+                        .unwrap_or(0);
                     reclaim_cache = Some(r);
                     r
                 }
             };
             if need > self.budget.free() + reclaimable {
-                break; // even all-floors downshift cannot fit it
+                break; // even all-floors downshift + index eviction cannot fit it
             }
-            let Some(delta) = self.downshift_once() else { break };
-            reclaim_cache = Some(reclaimable.saturating_sub(delta));
+            match self.downshift_once() {
+                Some(delta) => {
+                    reclaim_cache = Some(reclaimable.saturating_sub(delta));
+                }
+                // downshift exhausted: evict an LRU prefix entry — it may
+                // free index-only frames directly and it un-shares pages,
+                // so the reclaimable bound must be recomputed.  Gated on
+                // the blocked request fitting *without* its reuse
+                // discount: eviction can destroy the very prefix that
+                // discount depends on, and grinding the index for an
+                // admission that eviction itself un-fits would erode the
+                // pool for nothing (the precision-erosion invariant of
+                // DESIGN.md §Memory-Manager).
+                None => {
+                    let fits_exclusive = self.batcher.min_projected_in_lookahead()
+                        .map(|n| n <= self.budget.free() + reclaimable)
+                        .unwrap_or(false);
+                    if !fits_exclusive || self.evict_prefix_once().is_none() {
+                        break;
+                    }
+                    reclaim_cache = None;
+                }
+            }
             // recharge (O(1): downshift_once reconciled the mutated
-            // sequence's table itself), then retry admission
+            // sequence's table itself, eviction kept the pool counter
+            // consistent), then retry admission
             let _ = self.charge_current()?;
         }
 
@@ -229,8 +337,10 @@ impl<'a> Engine<'a> {
             self.metrics.decode_tokens += self.active.len();
 
             // memory charge; on simulated OOM the pressure controller
-            // first downshifts the oldest out-of-window pages down the
-            // bit ladder and only at the floors preempts the
+            // first downshifts the oldest out-of-window unshared pages
+            // down the bit ladder, then evicts LRU prefix-index entries
+            // (freeing index-only frames and un-sharing pages so the
+            // ladder can resume), and only past both rungs preempts the
             // lowest-priority (youngest) sequence (paged mode); the
             // monolithic path keeps the original evict-youngest policy,
             // counting each eviction as an oom_event.  One full page-table
@@ -241,6 +351,10 @@ impl<'a> Engine<'a> {
             let mut over = self.charge_memory()?.is_err();
             while over {
                 if self.downshift_once().is_some() {
+                    over = self.charge_current()?.is_err();
+                    continue;
+                }
+                if self.evict_prefix_once().is_some() {
                     over = self.charge_current()?.is_err();
                     continue;
                 }
@@ -327,6 +441,8 @@ impl<'a> Engine<'a> {
                 } else if let Some(a) = self.active.last() {
                     pool.sync(a.req.id, &a.cache);
                 }
+                // sync is where the pool observes copy-on-write splits
+                self.metrics.cow_splits = pool.stats.cow_splits;
                 pool.modeled_bytes()
             }
             None => self.active.iter().map(|a| a.cache.modeled_bytes()).sum(),
@@ -372,10 +488,23 @@ impl<'a> Engine<'a> {
                 // only this sequence's table changed: reconcile it alone
                 let a = &self.active[i];
                 pool.sync(a.req.id, &a.cache);
+                self.metrics.cow_splits = pool.stats.cow_splits;
                 return Some(delta);
             }
         }
         None
+    }
+
+    /// One prefix-index eviction: drop the LRU shared-prefix entry,
+    /// freeing its index-only frames and un-sharing its pages so the
+    /// downshift ladder can reach them again.  The rung between
+    /// downshift-exhausted and preemption (DESIGN.md §Prefix-Sharing).
+    /// Returns the bytes freed (possibly 0 when every frame is still
+    /// mapped by an active sequence — still progress, because the
+    /// un-shared pages become downshiftable), or `None` when the index
+    /// is empty or the prefix cache is off.
+    fn evict_prefix_once(&mut self) -> Option<usize> {
+        self.pages.as_mut()?.evict_lru_prefix()
     }
 
     fn retire(&mut self, c: Completion) -> Completion {
@@ -383,6 +512,23 @@ impl<'a> Engine<'a> {
         self.metrics.total_ms.record(c.total_ms());
         self.completions.push(c.clone());
         c
+    }
+}
+
+/// Prompt tokens of `req` a prefix-cache hit would adopt right now —
+/// the admission projection's reuse discount (0 when the cache is off).
+/// Pure read: same lookup as `PagePool::adopt_prefix`, no LRU touch.
+/// Sound because nothing can evict the probed entry between this probe
+/// and the adoption in the same admission iteration (relief rounds run
+/// between iterations, never inside one).
+fn reused_tokens(pages: &Option<PagePool>, probe: &Option<SeqKvCache>,
+                 page_tokens: usize, req: &Request) -> usize {
+    match (pages, probe) {
+        (Some(pool), Some(template)) => {
+            let cap = template.max_shareable_prefix(req.prompt.len(), page_tokens);
+            pool.probe_prefix(&req.prompt, cap)
+        }
+        _ => 0,
     }
 }
 

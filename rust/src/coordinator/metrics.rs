@@ -27,6 +27,16 @@ pub struct Metrics {
     /// sequences preempted back to the batcher queue after downshift was
     /// exhausted (paged mode; monolithic evictions count as `oom_events`)
     pub preemptions: usize,
+    /// admissions whose prompt adopted shared prefix pages from the
+    /// pool's prefix index (`--prefix-cache` — DESIGN.md §Prefix-Sharing)
+    pub prefix_hits: usize,
+    /// prompt tokens covered by adopted shared pages across all hits
+    /// (their quantized pages were mapped, not re-encoded)
+    pub prefix_tokens_reused: usize,
+    /// copy-on-write splits: downshifts that landed on a shared page and
+    /// gave the downshifting sequence a private copy instead of mutating
+    /// the shared bytes (mirrors `PoolStats::cow_splits`)
+    pub cow_splits: usize,
 }
 
 impl Default for Metrics {
@@ -35,7 +45,8 @@ impl Default for Metrics {
                   completions: 0, oom_events: 0, ttft_ms: Histogram::default(),
                   total_ms: Histogram::default(), step_us: Histogram::default(),
                   attn_us: Histogram::default(), pool_util: Histogram::default(),
-                  peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0 }
+                  peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0,
+                  prefix_hits: 0, prefix_tokens_reused: 0, cow_splits: 0 }
     }
 }
 
@@ -78,15 +89,22 @@ impl Metrics {
             format!(" | requant {} pages | preempt {}",
                     self.pages_requantized, self.preemptions)
         };
+        let prefix = if self.prefix_hits == 0 && self.cow_splits == 0 {
+            String::new()
+        } else {
+            format!(" | prefix hits {} ({} tok reused) | cow {}",
+                    self.prefix_hits, self.prefix_tokens_reused, self.cow_splits)
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
              ttft p50 {:.1} ms p95 {:.1} ms | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             attn p50 {:.0} µs{} | peak kv {:.2} MiB | oom {}{}",
+             attn p50 {:.0} µs{} | peak kv {:.2} MiB | oom {}{}{}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
             self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
             self.attn_us.quantile(0.5), util,
-            self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure)
+            self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure,
+            prefix)
     }
 }
 
@@ -163,6 +181,18 @@ mod tests {
         m.step_us.record(1_500_000.0);
         m.step_us.record(500_000.0);
         assert!((m.throughput() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_includes_prefix_line_only_when_active() {
+        let mut m = Metrics::default();
+        assert!(!m.report().contains("prefix hits"));
+        m.prefix_hits = 2;
+        m.prefix_tokens_reused = 128;
+        m.cow_splits = 1;
+        let r = m.report();
+        assert!(r.contains("prefix hits 2 (128 tok reused)"), "{r}");
+        assert!(r.contains("cow 1"), "{r}");
     }
 
     #[test]

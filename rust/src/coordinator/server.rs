@@ -37,7 +37,8 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
              max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     let paging = if cfg.page_tokens > 0 {
-        format!(", {}-token KV pages", cfg.page_tokens)
+        let prefix = if cfg.prefix_cache { " + prefix cache" } else { "" };
+        format!(", {}-token KV pages{prefix}", cfg.page_tokens)
     } else {
         String::new()
     };
@@ -173,5 +174,37 @@ mod tests {
         assert!(parse_gen_line("GEN x 1").is_err());
         assert!(parse_gen_line("GEN 5").is_err());
         assert!(parse_gen_line("GEN 5 1,a").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_prompt_forms() {
+        // a bare command, a trailing space, and a lone comma all decode
+        // to an empty/invalid prompt, never a zero-length request
+        assert!(parse_gen_line("").is_err());
+        assert!(parse_gen_line("GEN").is_err());
+        assert!(parse_gen_line("GEN 5 ").is_err());
+        assert!(parse_gen_line("GEN 5 ,").is_err());
+        assert!(parse_gen_line("GEN 5 1,").is_err());
+        assert!(parse_gen_line("GEN 5 ,1").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_ids() {
+        assert!(parse_gen_line("GEN 8 1,,2").is_err());
+        assert!(parse_gen_line("GEN 8 1.5,2").is_err());
+        assert!(parse_gen_line("GEN 8 0x1f").is_err());
+        assert!(parse_gen_line("GEN 8 9999999999999").is_err(), "i32 overflow");
+        assert!(parse_gen_line("GEN -1 1,2").is_err(), "negative max_new");
+    }
+
+    #[test]
+    fn rejects_trailing_junk() {
+        // the third splitn field is the whole remainder: junk after the
+        // token list must fail the i32 parse, not be silently dropped
+        assert!(parse_gen_line("GEN 8 1,2,3 junk").is_err());
+        assert!(parse_gen_line("GEN 8 1,2,3;DROP").is_err());
+        // interior whitespace around commas is tolerated by design
+        let (n, p) = parse_gen_line("GEN 8 1, 2 ,3").unwrap();
+        assert_eq!((n, p), (8, vec![1, 2, 3]));
     }
 }

@@ -431,7 +431,7 @@ pub fn headline(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
 // shared serving runners
 // ---------------------------------------------------------------------------
 
-/// Outcome of one [`run_serving`] pass.
+/// Outcome of one [`run_serving`] / [`run_serving_prefixed`] pass.
 #[derive(Debug, Clone, Copy)]
 pub struct ServingStats {
     /// peak KV footprint — page-granular when `page_tokens > 0`
@@ -441,6 +441,12 @@ pub struct ServingStats {
     pub pages_requantized: usize,
     /// preemptions after the downshift floors were exhausted (paged mode)
     pub preemptions: usize,
+    /// prefix-cache adoptions (`--prefix-cache` runs only)
+    pub prefix_hits: usize,
+    /// prompt tokens whose quantized pages were adopted, not re-encoded
+    pub prefix_tokens_reused: usize,
+    /// copy-on-write splits on shared pages
+    pub cow_splits: usize,
 }
 
 /// Serve `batch` synthetic requests to completion and report peak
@@ -450,22 +456,52 @@ pub struct ServingStats {
 pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usize,
                    gen: usize, kv_budget: Option<usize>, page_tokens: usize)
                    -> Result<ServingStats> {
+    let mut rng = Rng::new(123);
+    let reqs = (0..batch).map(|id| {
+        let (toks, _) = workload::sample_mixture(&mut rng, prompt_len);
+        Request { id: id as u64, prompt: toks, max_new_tokens: gen,
+                  sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+    }).collect();
+    serve_requests(rt, method, batch, reqs, kv_budget, page_tokens, false)
+}
+
+/// [`run_serving`] over a workload whose prompts all share one
+/// `shared_len`-token prefix (a common system prompt) followed by a
+/// per-request `suffix_len`-token tail — the shared-prefix serving shape
+/// (DESIGN.md §Prefix-Sharing).  `prefix_cache` toggles `--prefix-cache`
+/// so on/off rows measure the deduplication directly.
+pub fn run_serving_prefixed(rt: &Runtime, method: &Method, batch: usize,
+                            shared_len: usize, suffix_len: usize, gen: usize,
+                            kv_budget: Option<usize>, page_tokens: usize,
+                            prefix_cache: bool) -> Result<ServingStats> {
+    let mut rng = Rng::new(123);
+    let (system, _) = workload::sample_mixture(&mut rng, shared_len);
+    let reqs = (0..batch).map(|id| {
+        let (tail, _) = workload::sample_mixture(&mut rng, suffix_len);
+        let mut prompt = system.clone();
+        prompt.extend_from_slice(&tail);
+        Request { id: id as u64, prompt, max_new_tokens: gen,
+                  sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+    }).collect();
+    serve_requests(rt, method, batch, reqs, kv_budget, page_tokens, prefix_cache)
+}
+
+fn serve_requests(rt: &Runtime, method: &Method, batch: usize, reqs: Vec<Request>,
+                  kv_budget: Option<usize>, page_tokens: usize,
+                  prefix_cache: bool) -> Result<ServingStats> {
     let mut engine = Engine::new(rt, EngineCfg {
         method: method.clone(), max_batch: batch, kv_budget, threads: 1, page_tokens,
+        prefix_cache,
     })?;
-    let mut rng = Rng::new(123);
-    for id in 0..batch {
-        let (toks, _) = workload::sample_mixture(&mut rng, prompt_len);
-        engine.submit(Request {
-            id: id as u64, prompt: toks, max_new_tokens: gen,
-            sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0,
-        });
+    let n = reqs.len();
+    for req in reqs {
+        engine.submit(req);
     }
     let t0 = std::time::Instant::now();
     let done = engine.run_to_completion()?;
     let secs = t0.elapsed().as_secs_f64();
-    if done.len() < batch || engine.metrics.oom_events > 0 {
-        anyhow::bail!("OOM: {}/{} completed, {} oom events", done.len(), batch,
+    if done.len() < n || engine.metrics.oom_events > 0 {
+        anyhow::bail!("OOM: {}/{} completed, {} oom events", done.len(), n,
                       engine.metrics.oom_events);
     }
     let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
@@ -474,6 +510,9 @@ pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usiz
         tok_per_s: tokens as f64 / secs,
         pages_requantized: engine.metrics.pages_requantized,
         preemptions: engine.metrics.preemptions,
+        prefix_hits: engine.metrics.prefix_hits,
+        prefix_tokens_reused: engine.metrics.prefix_tokens_reused,
+        cow_splits: engine.metrics.cow_splits,
     })
 }
 

@@ -14,9 +14,17 @@
 //!
 //! Threading (DESIGN.md §Threading-Model): one `LayerKvCache` belongs to
 //! one sequence, so the batched decode fan-out hands disjoint `&mut
-//! LayerKvCache` lanes to different pool workers.  Everything in here is
-//! owned `Vec` state — `Send` holds structurally and is asserted at
-//! compile time below; nothing is (or needs to be) `Sync`-shared.
+//! LayerKvCache` lanes to different pool workers.  History blocks are
+//! `Arc<PackedBlock>`: normally refcount 1 (plain owned state), but
+//! prefix sharing (DESIGN.md §Prefix-Sharing) lets the same quantized
+//! prefix blocks appear in several sequences' caches and in the pool's
+//! prefix index.  Shared blocks are **read-only by convention** — the
+//! decode fan-out only reads them — and the one mutation path,
+//! [`LayerKvCache::requant_page`], goes through `Arc::make_mut`, which
+//! copy-on-writes when the block is shared so another owner's bytes are
+//! never touched.  `Send` is asserted at compile time below.
+
+use std::sync::Arc;
 
 use crate::quant::{key_scores_fused, value_accum_fused, FusedScratch, PackedBlock};
 
@@ -73,9 +81,10 @@ pub struct LayerKvCache {
     /// independently so each keeps its own buffer.
     k_fp: Vec<f32>,
     v_fp: Vec<f32>,
-    /// quantized history
-    pub k_blocks: Vec<PackedBlock>,
-    pub v_blocks: Vec<PackedBlock>,
+    /// quantized history; `Arc` so whole pages can be shared with other
+    /// sequences / the prefix index (refcount 1 = plain exclusive state)
+    pub k_blocks: Vec<Arc<PackedBlock>>,
+    pub v_blocks: Vec<Arc<PackedBlock>>,
     /// QJL store (when cfg.key == SignJl)
     pub k_jl: Option<SignJlKeys>,
     jl_proj: Option<JlProjector>,
@@ -187,13 +196,13 @@ impl LayerKvCache {
                 } else {
                     block.quantize_into(&self.tscratch, bits, g, &mut self.qscratch);
                 }
-                self.k_blocks.push(block);
+                self.k_blocks.push(Arc::new(block));
             }
             KeyRepr::PerToken { bits } => {
                 // token-major stream, groups of `group` channels
                 let mut block = PackedBlock::default();
                 block.quantize_into(rows, bits, self.cfg.group, &mut self.qscratch);
-                self.k_blocks.push(block);
+                self.k_blocks.push(Arc::new(block));
             }
             KeyRepr::SignJl { jl_dim } => {
                 let store = self.k_jl.as_mut().unwrap();
@@ -232,7 +241,7 @@ impl LayerKvCache {
                     block.quantize_into(&self.v_fp[..rows_len], bits, self.cfg.group,
                                         &mut self.qscratch);
                 }
-                self.v_blocks.push(block);
+                self.v_blocks.push(Arc::new(block));
             }
         }
         self.v_fp.drain(..rows_len);
@@ -269,10 +278,97 @@ impl LayerKvCache {
     // block's width.
 
     /// Quantized history blocks of one side.
-    pub fn quant_blocks(&self, side: KvSide) -> &[PackedBlock] {
+    pub fn quant_blocks(&self, side: KvSide) -> &[Arc<PackedBlock>] {
         match side {
             KvSide::Key => &self.k_blocks,
             KvSide::Value => &self.v_blocks,
+        }
+    }
+
+    /// Whether any block of quantized page `page` is shared (mapped by
+    /// another sequence or pinned by the pool's prefix index).  Shared
+    /// pages are downshift-exempt until sole-owner
+    /// (DESIGN.md §Prefix-Sharing); `requant_page` on one copy-on-writes.
+    pub fn quant_page_shared(&self, side: KvSide, page: usize, page_tokens: usize) -> bool {
+        let bpp = page_tokens / self.cfg.group;
+        let blocks = self.quant_blocks(side);
+        let b1 = ((page + 1) * bpp).min(blocks.len());
+        blocks[page * bpp..b1].iter().any(|b| Arc::strong_count(b) > 1)
+    }
+
+    /// Adopt shared quantized blocks as this side's *oldest* history
+    /// (prefix sharing, DESIGN.md §Prefix-Sharing).  Must run on a fresh
+    /// cache, before the first append; the blocks stay refcounted — the
+    /// attention path reads them in place, and any later downshift goes
+    /// through the `Arc::make_mut` copy-on-write in [`Self::requant_page`].
+    pub fn adopt_shared_blocks(&mut self, side: KvSide, blocks: &[Arc<PackedBlock>]) {
+        match side {
+            KvSide::Key => {
+                debug_assert!(self.k_blocks.is_empty() && self.k_fp.is_empty(),
+                              "prefix adoption requires an empty K side");
+                self.k_blocks.extend(blocks.iter().cloned());
+                self.k_hist += blocks.len() * self.cfg.group;
+            }
+            KvSide::Value => {
+                debug_assert!(self.v_blocks.is_empty() && self.v_fp.is_empty(),
+                              "prefix adoption requires an empty V side");
+                self.v_blocks.extend(blocks.iter().cloned());
+                self.v_hist += blocks.len() * self.cfg.group;
+            }
+        }
+    }
+
+    /// Append the *unshared suffix* of a prefill whose first `adopted`
+    /// tokens arrived as shared quantized pages: window decisions are
+    /// computed as if all `adopted + n` tokens had been appended in one
+    /// [`Self::append`] call, so the resulting cache state is
+    /// bit-identical to a cold full-prompt prefill (pinned by
+    /// `rust/tests/prefix.rs`).  `adopted` must be group-aligned and at
+    /// most what the window policy would quantize for a prompt of
+    /// `adopted + n` tokens — the engine's admission cap
+    /// (`SeqKvCache::max_shareable_prefix`) guarantees both.
+    ///
+    /// `adopted == 0` is exactly [`Self::append`] (the `--prefix-cache`
+    /// off path goes through here with 0).
+    pub fn append_prefill_suffix(&mut self, k: &[f32], v: &[f32], n: usize,
+                                 adopted: usize) {
+        if adopted == 0 {
+            return self.append(k, v, n);
+        }
+        let kv = self.cfg.kv_dim;
+        let group = self.cfg.group;
+        debug_assert_eq!(k.len(), n * kv);
+        debug_assert_eq!(v.len(), n * kv);
+        debug_assert_eq!(adopted % group, 0);
+        debug_assert_eq!(self.k_hist, adopted, "suffix append must follow adoption");
+        debug_assert_eq!(self.v_hist, adopted);
+        debug_assert!(self.k_fp.is_empty() && self.v_fp.is_empty());
+        self.k_fp.extend_from_slice(k);
+        self.v_fp.extend_from_slice(v);
+        let adopted_blocks = adopted / group;
+        let k_quantize = match self.cfg.key {
+            KeyRepr::Fp => 0,
+            _ => {
+                let full = self.cfg.k_window.blocks_to_quantize(adopted + n, group);
+                debug_assert!(adopted_blocks <= full,
+                              "adopted K prefix exceeds the window's quantizable run");
+                full - adopted_blocks
+            }
+        };
+        for _ in 0..k_quantize {
+            self.quantize_oldest_k_block();
+        }
+        let v_quantize = match self.cfg.value {
+            ValueRepr::Fp => 0,
+            _ => {
+                let full = self.cfg.v_window.blocks_to_quantize(adopted + n, group);
+                debug_assert!(adopted_blocks <= full,
+                              "adopted V prefix exceeds the window's quantizable run");
+                full - adopted_blocks
+            }
+        };
+        for _ in 0..v_quantize {
+            self.quantize_oldest_v_block();
         }
     }
 
@@ -309,9 +405,15 @@ impl LayerKvCache {
         self.quant_blocks(side)[page * bpp].bits
     }
 
-    /// Requantize quantized page `page` of `side` in place to `to_bits`
-    /// — the pressure controller's downshift, reusing the groupq packing
-    /// via [`PackedBlock::requantize`].  Returns modeled bytes saved.
+    /// Requantize quantized page `page` of `side` to `to_bits` — the
+    /// pressure controller's downshift, reusing the groupq packing via
+    /// [`PackedBlock::requantize`].  Returns modeled bytes saved.
+    ///
+    /// When the page's blocks are shared (prefix sharing),
+    /// `Arc::make_mut` copy-on-writes: this cache gets a private
+    /// downshifted copy and the shared bytes — still read by the other
+    /// owners and/or the prefix index — are untouched.  The page pool
+    /// observes the split at the next `sync` (DESIGN.md §Prefix-Sharing).
     pub fn requant_page(&mut self, side: KvSide, page: usize, page_tokens: usize,
                         to_bits: u8) -> usize {
         let bpp = page_tokens / self.cfg.group;
@@ -322,7 +424,11 @@ impl LayerKvCache {
         let b1 = ((page + 1) * bpp).min(blocks.len());
         let mut saved = 0;
         for b in &mut blocks[page * bpp..b1] {
-            saved += b.requantize(to_bits, &mut self.tscratch, &mut self.qscratch);
+            if to_bits >= b.bits {
+                continue; // no-op rung: don't unshare via make_mut for nothing
+            }
+            saved += Arc::make_mut(b)
+                .requantize(to_bits, &mut self.tscratch, &mut self.qscratch);
         }
         saved
     }
@@ -498,13 +604,19 @@ pub struct AttnScratch {
 }
 
 // The decode fan-out sends per-lane caches and per-worker scratches to
-// scoped pool workers; every field is owned Vec/Option state, so `Send`
-// must (and does) hold for all of these.
+// scoped pool workers; every field is owned Vec/Option/Arc state, so
+// `Send` must (and does) hold for all of these.  Shared history blocks
+// additionally need `Sync`: with prefix sharing the *same*
+// `Arc<PackedBlock>` can sit in two lanes attended by two workers at
+// once (read-only — the engine-thread pressure controller is the only
+// mutator, via copy-on-write).
 const _: () = {
     const fn assert_send<T: Send>() {}
+    const fn assert_sync<T: Sync>() {}
     assert_send::<LayerKvCache>();
     assert_send::<AttnScratch>();
     assert_send::<PackedBlock>();
+    assert_sync::<PackedBlock>();
     assert_send::<super::jl::JlProjector>();
     assert_send::<super::jl::SignJlKeys>();
 };
@@ -637,6 +749,75 @@ mod tests {
         cache.attend(&q, 4, &mut o2, &mut s);
         let drift = o2.iter().zip(&o4).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
         assert!(drift > 0.0 && drift < 1.0, "drift {drift}");
+    }
+
+    #[test]
+    fn adopted_suffix_append_matches_full_append() {
+        // prefix sharing's core bit-identity claim at the layer level:
+        // adopt page 0's blocks + append the suffix == one full append,
+        // for both the eager and the dynamic-RPC window
+        for (kw, vw) in [(WindowPolicy::None, WindowPolicy::None),
+                         (WindowPolicy::Rpc { ratio: 0.1 }, WindowPolicy::Rpc { ratio: 0.2 })] {
+            let c = cfg(KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+                        kw, vw);
+            let mut rng = Rng::new(21);
+            let n_tok = 192;
+            let pt = 64; // one adopted page = 2 blocks
+            let ks = rng.normal_vec(n_tok * 64);
+            let vs = rng.normal_vec(n_tok * 64);
+
+            let mut full = LayerKvCache::new(c);
+            full.append(&ks, &vs, n_tok);
+            assert!(full.k_hist >= pt && full.v_hist >= pt, "prefix must be quantized");
+
+            let mut adopted = LayerKvCache::new(c);
+            let bpp = pt / 32;
+            adopted.adopt_shared_blocks(KvSide::Key, &full.k_blocks[..bpp]);
+            adopted.adopt_shared_blocks(KvSide::Value, &full.v_blocks[..bpp]);
+            adopted.append_prefill_suffix(&ks[pt * 64..], &vs[pt * 64..], n_tok - pt, pt);
+
+            assert_eq!(adopted.len(), full.len());
+            assert_eq!(adopted.k_hist, full.k_hist);
+            assert_eq!(adopted.v_hist, full.v_hist);
+            assert_eq!(adopted.k_fp(), full.k_fp(), "fp K window must match");
+            assert_eq!(adopted.v_fp(), full.v_fp(), "fp V window must match");
+            assert_eq!(adopted.k_blocks.len(), full.k_blocks.len());
+            for (a, b) in adopted.k_blocks.iter().zip(&full.k_blocks)
+                .chain(adopted.v_blocks.iter().zip(&full.v_blocks)) {
+                assert_eq!(a.words, b.words, "packed words must be bit-identical");
+                assert_eq!(a.scales, b.scales);
+                assert_eq!(a.mins, b.mins);
+                assert_eq!(a.bits, b.bits);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_page_requant_copy_on_writes() {
+        let c = cfg(KeyRepr::PerChannel { bits: 4 }, ValueRepr::PerToken { bits: 4 },
+                    WindowPolicy::None, WindowPolicy::None);
+        let mut rng = Rng::new(22);
+        let pt = 64;
+        let mut donor = LayerKvCache::new(c);
+        let ks = rng.normal_vec(128 * 64);
+        let vs = rng.normal_vec(128 * 64);
+        donor.append(&ks, &vs, 128);
+
+        let mut other = LayerKvCache::new(c);
+        other.adopt_shared_blocks(KvSide::Key, &donor.k_blocks[..2]);
+        other.adopt_shared_blocks(KvSide::Value, &donor.v_blocks[..2]);
+        assert!(donor.quant_page_shared(KvSide::Key, 0, pt));
+        assert!(other.quant_page_shared(KvSide::Key, 0, pt));
+        assert!(!donor.quant_page_shared(KvSide::Key, 1, pt), "page 1 is private");
+
+        let donor_words = donor.k_blocks[0].words.clone();
+        let saved = other.requant_page(KvSide::Key, 0, pt, 2);
+        assert!(saved > 0);
+        assert_eq!(other.quant_page_bits(KvSide::Key, 0, pt), 2);
+        // CoW split: the donor's shared bytes are untouched and unshared now
+        assert_eq!(donor.quant_page_bits(KvSide::Key, 0, pt), 4);
+        assert_eq!(donor.k_blocks[0].words, donor_words);
+        assert!(!other.quant_page_shared(KvSide::Key, 0, pt), "split made it private");
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Mixed-precision KV cache: packed history blocks + dynamic
 //! full-precision windows (RPC), per-layer representations, memory
 //! accounting, the HBM budget simulator, and the paged KV pool with its
-//! pressure controller (DESIGN.md §Memory-Manager).
+//! pressure controller and copy-on-write prefix sharing
+//! (DESIGN.md §Memory-Manager, §Prefix-Sharing).
 
 pub mod cache;
 pub mod jl;
@@ -12,8 +13,8 @@ pub mod window;
 
 pub use cache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr};
 pub use memory::{fp16_kv_bytes, MemoryBudget};
-pub use pages::{KvSide, PageId, PagePool, PoolStats, DEFAULT_PAGE_TOKENS};
-pub use pressure::PressureCfg;
+pub use pages::{KvSide, PageId, PagePool, PoolStats, DEFAULT_PAGE_TOKENS, KV_SIDES};
+pub use pressure::{PressureCfg, SharedDownshift};
 pub use window::WindowPolicy;
 
 use crate::config::{ModelConfig, QuantPlan};
@@ -73,6 +74,35 @@ impl SeqKvCache {
 
     pub fn resident_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.resident_bytes()).sum()
+    }
+
+    /// Longest whole-page prompt prefix eligible for shared-page adoption
+    /// (prefix sharing, DESIGN.md §Prefix-Sharing): the page-aligned token
+    /// count that a single `prompt_len`-token prefill would leave
+    /// *quantized at the plan's width* on **every** layer and side — the
+    /// precondition for adopting shared quantized pages while staying
+    /// bit-identical to a cold prefill.  Returns 0 when any layer cannot
+    /// share (fp16 or sign-JL representations, which produce no packed
+    /// page blocks) or when the window policies keep the candidate prefix
+    /// full-precision.
+    pub fn max_shareable_prefix(&self, prompt_len: usize, page_tokens: usize) -> usize {
+        if self.layers.is_empty() || page_tokens == 0 {
+            return 0;
+        }
+        let mut cap = usize::MAX;
+        for l in &self.layers {
+            let shareable_k = matches!(l.cfg.key,
+                                       KeyRepr::PerChannel { .. } | KeyRepr::PerToken { .. });
+            let shareable_v = matches!(l.cfg.value, ValueRepr::PerToken { .. });
+            if !shareable_k || !shareable_v {
+                return 0;
+            }
+            let g = l.cfg.group;
+            let kq = l.cfg.k_window.blocks_to_quantize(prompt_len, g) * g;
+            let vq = l.cfg.v_window.blocks_to_quantize(prompt_len, g) * g;
+            cap = cap.min(kq).min(vq);
+        }
+        cap / page_tokens * page_tokens
     }
 }
 
@@ -134,5 +164,23 @@ mod tests {
         }
         assert_eq!(c.len(), 4);
         assert!(c.modeled_bytes() > 0);
+    }
+
+    #[test]
+    fn shareable_prefix_caps() {
+        let m = ModelConfig::test_small();
+        let pt = 64;
+        // eager plan: everything group-aligned quantizes -> page-aligned cap
+        let eager = SeqKvCache::new(&m, &QuantPlan::uniform(m.n_layers, 2).without_rpc());
+        assert_eq!(eager.max_shareable_prefix(192, pt), 192);
+        assert_eq!(eager.max_shareable_prefix(130, pt), 128);
+        assert_eq!(eager.max_shareable_prefix(63, pt), 0, "sub-page prompt");
+        // RPC window: the kept fp tail shrinks the quantizable run
+        let rpc = SeqKvCache::new(&m, &QuantPlan::uniform(m.n_layers, 2));
+        let cap = rpc.max_shareable_prefix(192, pt);
+        assert!(cap <= 128 && cap % pt == 0, "cap {cap} must exclude the fp tail");
+        // fp16 has no packed pages to share
+        let fp = SeqKvCache::new(&m, &QuantPlan::fp16(m.n_layers));
+        assert_eq!(fp.max_shareable_prefix(512, pt), 0);
     }
 }

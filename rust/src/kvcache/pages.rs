@@ -1,4 +1,5 @@
-//! The global paged KV pool (DESIGN.md §Memory-Manager).
+//! The global paged KV pool (DESIGN.md §Memory-Manager) and its
+//! shared-prefix index (DESIGN.md §Prefix-Sharing).
 //!
 //! Fixed `page_tokens`-token page frames, per-layer per-precision free
 //! lists, and per-sequence page tables mapping each sequence's cache onto
@@ -25,16 +26,29 @@
 //! list and are reused before the pool grows — observable via
 //! [`PoolStats::reuses`].
 //!
+//! **Frame ownership is refcounted**, not exclusive: with the prefix
+//! cache enabled ([`PagePool::enable_prefix_cache`]) the same quantized
+//! prefix frame can be mapped by several sequences' page tables *and*
+//! pinned by the prefix index, and [`PagePool::modeled_bytes`] charges it
+//! **once** — that deduplication is the whole point.  A frame is freed
+//! only when its last reference is released.  The data-plane counterpart
+//! of a shared frame is an `Arc<PackedBlock>` with refcount > 1; the one
+//! mutation path (a pressure downshift) copy-on-writes at the cache level
+//! and [`PagePool::sync`] observes the split here, swapping the
+//! sequence's mapping from the shared frame to a private one
+//! ([`PoolStats::cow_splits`]).
+//!
 //! Not paged (charged by the monolithic path only, noted here so the
 //! accounting difference is explicit): QJL's sign-bit JL key store, and
 //! KVQuant's per-element outlier list.  Both are baseline-only details;
 //! the KVmix policies the pool exists for use neither.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::quant::words_for;
+use crate::quant::{words_for, PackedBlock};
 
 use super::cache::LayerKvCache;
 use super::SeqKvCache;
@@ -62,8 +76,10 @@ pub struct Frame {
     pub side: KvSide,
     /// precision class: 16 = fp16 window page, else packed bit width
     pub bits: u8,
-    /// request id of the mapping sequence
-    pub owner: u64,
+    /// mappings holding this frame: owning page tables + the prefix
+    /// index.  1 = exclusively owned (the pre-prefix-sharing invariant);
+    /// freed only when the count reaches 0.
+    pub refs: u32,
 }
 
 /// Allocation / lifecycle counters.
@@ -76,6 +92,16 @@ pub struct PoolStats {
     /// precision-class changes observed at sync time (pressure-driven
     /// requantization moved a page down the bit ladder)
     pub retags: usize,
+    /// copy-on-write splits observed at sync time: a sequence downshifted
+    /// a *shared* page, so its mapping moved from the shared frame to a
+    /// private frame at the new class (DESIGN.md §Prefix-Sharing)
+    pub cow_splits: usize,
+    /// prefix-index lookups that adopted shared pages
+    pub prefix_hits: usize,
+    /// prefixes registered into the index
+    pub prefix_insertions: usize,
+    /// LRU prefix entries evicted under memory pressure
+    pub prefix_evictions: usize,
 }
 
 /// One layer's slice of a sequence's page table.
@@ -106,7 +132,24 @@ impl SeqPageTable {
     }
 }
 
-/// The global page allocator + per-sequence page tables.
+/// One registered shareable prefix (DESIGN.md §Prefix-Sharing): the
+/// quantized pages of a whole-page-aligned prompt prefix, pinned by the
+/// index so later admissions can map them without re-quantizing.  The
+/// entry holds both the frame references (accounting) and the
+/// `Arc<PackedBlock>` handles (data) — dropping the entry releases both,
+/// which is what makes index eviction a memory-relief rung.
+struct PrefixEntry {
+    /// frames in scan order: layer-major, all K pages then all V pages
+    frames: Vec<PageId>,
+    /// shared blocks per layer: (K blocks, V blocks), `pages·bpp` each
+    blocks: Vec<(Vec<Arc<PackedBlock>>, Vec<Arc<PackedBlock>>)>,
+    /// prefix length in tokens (== key length)
+    tokens: usize,
+    /// logical tick of the last registration/hit — LRU eviction order
+    last_used: u64,
+}
+
+/// The global page allocator + per-sequence page tables + prefix index.
 pub struct PagePool {
     /// tokens per page frame (a multiple of the quant group)
     pub page_tokens: usize,
@@ -117,9 +160,17 @@ pub struct PagePool {
     /// free lists keyed by (layer, precision class)
     free: BTreeMap<(u16, u8), Vec<PageId>>,
     tables: BTreeMap<u64, SeqPageTable>,
-    /// running page-granular byte total of all live frames — maintained
-    /// by alloc/release/retag so [`PagePool::modeled_bytes`] is O(1)
-    /// (the engine charges it once per admission and per relief round)
+    /// shared-prefix index keyed by the exact prefix token ids (collision
+    /// proof by construction); `None` = prefix cache disabled, in which
+    /// case every prefix entry point below is a no-op — the
+    /// `--prefix-cache`-off bit-compatibility guarantee
+    prefix: Option<BTreeMap<Vec<i32>, PrefixEntry>>,
+    /// logical clock for prefix LRU ordering
+    tick: u64,
+    /// running byte total of all live frames, each counted ONCE however
+    /// many references it has — maintained by alloc/release/retag so
+    /// [`PagePool::modeled_bytes`] is O(1) (the engine charges it once
+    /// per admission and per relief round)
     bytes: usize,
     pub stats: PoolStats,
 }
@@ -137,9 +188,30 @@ impl PagePool {
             frames: Vec::new(),
             free: BTreeMap::new(),
             tables: BTreeMap::new(),
+            prefix: None,
+            tick: 0,
             bytes: 0,
             stats: PoolStats::default(),
         })
+    }
+
+    /// Turn on the shared-prefix index (`--prefix-cache`).  Off by
+    /// default: without this call `adopt_prefix` / `register_prefix` /
+    /// `evict_lru_prefix` are inert and the pool behaves exactly as the
+    /// exclusive-ownership PR 3 allocator.
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(BTreeMap::new());
+        }
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Registered prefix entries currently pinned by the index.
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.as_ref().map(BTreeMap::len).unwrap_or(0)
     }
 
     /// Modeled bytes of one page frame at precision class `bits`.
@@ -147,7 +219,8 @@ impl PagePool {
         page_frame_bytes(self.page_tokens, self.kv_dim, self.group, bits)
     }
 
-    /// Frames currently mapped by some sequence.
+    /// Frames currently live (mapped by a sequence or pinned by the
+    /// prefix index) — each counted once regardless of reference count.
     pub fn allocated_pages(&self) -> usize {
         self.frames.iter().filter(|f| f.is_some()).count()
     }
@@ -158,8 +231,9 @@ impl PagePool {
         self.frames.len()
     }
 
-    /// Page-granular modeled KV bytes of everything currently mapped —
-    /// what the engine charges against the memory budget.  O(1): a
+    /// Page-granular modeled KV bytes of everything currently live —
+    /// what the engine charges against the memory budget.  Shared frames
+    /// count **once** (the prefix-sharing deduplication).  O(1): a
     /// running counter maintained by every alloc/release/retag (debug
     /// builds cross-check it against a full frame scan).
     pub fn modeled_bytes(&self) -> usize {
@@ -170,15 +244,18 @@ impl PagePool {
         self.bytes
     }
 
-    /// Frames mapped by one sequence (0 if it has no table).
+    /// Frames mapped by one sequence (0 if it has no table).  Shared
+    /// frames count toward every mapping sequence here — this is the
+    /// *exclusive-cost* view; `modeled_bytes` is the deduplicated one.
     pub fn owner_pages(&self, owner: u64) -> usize {
         self.tables.get(&owner).map(SeqPageTable::pages).unwrap_or(0)
     }
 
     /// Reconcile `owner`'s page table with the current contents of its
     /// cache: grow/shrink fp-window pages, append quantized pages as
-    /// blocks overflow the window, and retag pages whose blocks a
-    /// pressure downshift moved to a narrower precision class.
+    /// blocks overflow the window, retag pages whose blocks a pressure
+    /// downshift moved to a narrower precision class, and split mappings
+    /// whose shared page the cache copy-on-wrote.
     ///
     /// Engine-thread only (the data plane mutates during the decode
     /// fan-out; the table catches up here, after the step).
@@ -191,21 +268,21 @@ impl PagePool {
             // move the id vecs out so `self` stays free for alloc/release
             let mut lp = std::mem::take(&mut table.layers[li]);
             let pt = self.page_tokens;
-            self.sync_fp(&mut lp.k_fp, li as u16, KvSide::Key, owner,
+            self.sync_fp(&mut lp.k_fp, li as u16, KvSide::Key,
                          layer.fp_pages(KvSide::Key, pt));
-            self.sync_fp(&mut lp.v_fp, li as u16, KvSide::Value, owner,
+            self.sync_fp(&mut lp.v_fp, li as u16, KvSide::Value,
                          layer.fp_pages(KvSide::Value, pt));
-            self.sync_quant(&mut lp.k_q, li as u16, KvSide::Key, owner, layer);
-            self.sync_quant(&mut lp.v_q, li as u16, KvSide::Value, owner, layer);
+            self.sync_quant(&mut lp.k_q, li as u16, KvSide::Key, layer);
+            self.sync_quant(&mut lp.v_q, li as u16, KvSide::Value, layer);
             table.layers[li] = lp;
         }
         self.tables.insert(owner, table);
     }
 
     fn sync_fp(&mut self, ids: &mut Vec<PageId>, layer: u16, side: KvSide,
-               owner: u64, n_pages: usize) {
+               n_pages: usize) {
         while ids.len() < n_pages {
-            ids.push(self.alloc(layer, side, 16, owner));
+            ids.push(self.alloc(layer, side, 16));
         }
         while ids.len() > n_pages {
             let id = ids.pop().unwrap();
@@ -214,22 +291,33 @@ impl PagePool {
     }
 
     fn sync_quant(&mut self, ids: &mut Vec<PageId>, layer: u16, side: KvSide,
-                  owner: u64, cache: &LayerKvCache) {
+                  cache: &LayerKvCache) {
         let n = cache.quant_pages(side, self.page_tokens);
         for j in 0..n {
             let bits = cache.quant_page_bits(side, j, self.page_tokens);
             if let Some(&id) = ids.get(j) {
-                let old = self.frames[id as usize].as_ref().expect("live frame").bits;
-                if old != bits {
+                let f = self.frames[id as usize].as_ref().expect("live frame");
+                if f.bits == bits {
+                    continue;
+                }
+                if f.refs > 1 {
+                    // the cache copy-on-wrote this shared page (shared
+                    // frames are never mutated in place): drop this
+                    // sequence's reference to the shared frame and map a
+                    // private frame at the new class instead
+                    self.release(id);
+                    ids[j] = self.alloc(layer, side, bits);
+                    self.stats.cow_splits += 1;
+                } else {
                     // precision-class change (pressure downshift): retag
                     // the frame and move the byte counter between classes
-                    let (ob, nb) = (self.page_bytes(old), self.page_bytes(bits));
+                    let (ob, nb) = (self.page_bytes(f.bits), self.page_bytes(bits));
                     self.frames[id as usize].as_mut().unwrap().bits = bits;
                     self.bytes = self.bytes - ob + nb;
                     self.stats.retags += 1;
                 }
             } else {
-                ids.push(self.alloc(layer, side, bits, owner));
+                ids.push(self.alloc(layer, side, bits));
             }
         }
         while ids.len() > n {
@@ -239,6 +327,9 @@ impl PagePool {
     }
 
     /// Release every frame mapped by `owner` (retire or preemption).
+    /// Frames shared with the prefix index or other sequences only lose
+    /// one reference and stay live — preemption must not free shared
+    /// frames (DESIGN.md §Prefix-Sharing).
     pub fn free_owner(&mut self, owner: u64) {
         let Some(table) = self.tables.remove(&owner) else { return };
         for lp in table.layers {
@@ -248,10 +339,189 @@ impl PagePool {
         }
     }
 
-    fn alloc(&mut self, layer: u16, side: KvSide, bits: u8, owner: u64) -> PageId {
+    // ----------------- shared-prefix index -----------------
+
+    /// Longest registered whole-page prefix of `prompt` (at most
+    /// `cap_tokens`), in tokens — the read-only probe the batcher's
+    /// admission projection uses to book only unshared suffix bytes.
+    /// No LRU touch, no adoption; 0 = miss or disabled.
+    pub fn probe_prefix(&self, prompt: &[i32], cap_tokens: usize) -> usize {
+        let Some(index) = self.prefix.as_ref() else { return 0 };
+        let pt = self.page_tokens;
+        for pages in (1..=cap_tokens.min(prompt.len()) / pt).rev() {
+            if index.contains_key(&prompt[..pages * pt]) {
+                return pages * pt;
+            }
+        }
+        0
+    }
+
+    /// Adopt the longest registered whole-page prefix of `prompt` (at
+    /// most `cap_tokens`, the caller's `SeqKvCache::max_shareable_prefix`
+    /// bound): clone the entry's shared blocks into `cache` as its oldest
+    /// quantized history and map the shared frames into `owner`'s page
+    /// table.  Returns the adopted token count (0 = miss or disabled).
+    ///
+    /// Must run on a fresh cache before prefill; the caller then prefills
+    /// only the unshared suffix via `append_prefill_suffix`.
+    pub fn adopt_prefix(&mut self, owner: u64, prompt: &[i32], cap_tokens: usize,
+                        cache: &mut SeqKvCache) -> usize {
+        let hit = self.probe_prefix(prompt, cap_tokens);
+        if hit == 0 {
+            return 0;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let (frames, hit) = {
+            let entry = self.prefix.as_mut().unwrap().get_mut(&prompt[..hit]).unwrap();
+            entry.last_used = tick;
+            for (li, (kb, vb)) in entry.blocks.iter().enumerate() {
+                cache.layers[li].adopt_shared_blocks(KvSide::Key, kb);
+                cache.layers[li].adopt_shared_blocks(KvSide::Value, vb);
+            }
+            (entry.frames.clone(), entry.tokens)
+        };
+        // map the shared frames into the owner's (fresh) page table, in
+        // the entry's layer-major K-before-V page order
+        let pages = hit / self.page_tokens;
+        let n_layers = cache.layers.len();
+        debug_assert_eq!(frames.len(), n_layers * 2 * pages);
+        let mut table = self.tables.remove(&owner).unwrap_or_default();
+        debug_assert_eq!(table.pages(), 0, "prefix adoption needs a fresh table");
+        table.layers.resize_with(n_layers, LayerPages::default);
+        for li in 0..n_layers {
+            let base = li * 2 * pages;
+            table.layers[li].k_q.extend_from_slice(&frames[base..base + pages]);
+            table.layers[li].v_q.extend_from_slice(&frames[base + pages..base + 2 * pages]);
+        }
+        self.tables.insert(owner, table);
+        for id in frames {
+            self.retain(id);
+        }
+        self.stats.prefix_hits += 1;
+        hit
+    }
+
+    /// Register `owner`'s whole-page-aligned prompt prefixes (at most
+    /// `cap_tokens`) into the index, pinning their quantized pages: each
+    /// entry clones the cache's block `Arc`s and takes a reference on
+    /// each frame.  **Every** page-aligned sub-prefix gets an entry, not
+    /// just the longest — a later request sharing only the system-prompt
+    /// head must hit even when this donor's private tail crosses a page
+    /// boundary.  Nested entries share the same frames/`Arc`s (extra
+    /// references, no extra pages), at O(pages²) handle cost per donor —
+    /// fine at system-prompt scale, and each sub-prefix is independently
+    /// LRU-evictable.
+    ///
+    /// Must run right after the owner's post-prefill [`PagePool::sync`]
+    /// — at that point every donated page is still at the plan's width,
+    /// and the index references then keep it pristine (shared pages are
+    /// downshift-exempt and copy-on-write).  Returns `false` on complete
+    /// no-op (disabled, sub-page prefix, or everything already
+    /// registered — which refreshes those entries' LRU stamps).
+    pub fn register_prefix(&mut self, owner: u64, prompt: &[i32], cap_tokens: usize,
+                           cache: &SeqKvCache) -> bool {
+        if self.prefix.is_none() {
+            return false;
+        }
+        let pt = self.page_tokens;
+        let max_pages = cap_tokens.min(prompt.len()) / pt;
+        let mut inserted = false;
+        for pages in 1..=max_pages {
+            inserted |= self.register_one_prefix(owner, prompt, pages, cache);
+        }
+        inserted
+    }
+
+    /// Register the exact `pages`-page prefix of `prompt` (one entry).
+    fn register_one_prefix(&mut self, owner: u64, prompt: &[i32], pages: usize,
+                           cache: &SeqKvCache) -> bool {
+        let pt = self.page_tokens;
+        let aligned = pages * pt;
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(entry) = self.prefix.as_mut().unwrap().get_mut(&prompt[..aligned]) {
+            entry.last_used = tick;
+            return false;
+        }
+        let bpp = pt / self.group;
+        let mut blocks = Vec::with_capacity(cache.layers.len());
+        for l in &cache.layers {
+            let (kb, vb) = (l.quant_blocks(KvSide::Key), l.quant_blocks(KvSide::Value));
+            if kb.len() < pages * bpp || vb.len() < pages * bpp {
+                return false; // cap should prevent this; stay safe
+            }
+            blocks.push((kb[..pages * bpp].to_vec(), vb[..pages * bpp].to_vec()));
+        }
+        let frames: Vec<PageId> = {
+            let Some(table) = self.tables.get(&owner) else { return false };
+            if table.layers.len() < cache.layers.len() {
+                return false; // owner not synced yet
+            }
+            let mut frames = Vec::with_capacity(cache.layers.len() * 2 * pages);
+            for li in 0..cache.layers.len() {
+                let lp = &table.layers[li];
+                if lp.k_q.len() < pages || lp.v_q.len() < pages {
+                    return false;
+                }
+                frames.extend_from_slice(&lp.k_q[..pages]);
+                frames.extend_from_slice(&lp.v_q[..pages]);
+            }
+            frames
+        };
+        for &id in &frames {
+            self.retain(id);
+        }
+        self.prefix.as_mut().unwrap().insert(
+            prompt[..aligned].to_vec(),
+            PrefixEntry { frames, blocks, tokens: aligned, last_used: tick });
+        self.stats.prefix_insertions += 1;
+        true
+    }
+
+    /// Evict the least-recently-used prefix entry, releasing its frame
+    /// references and dropping its block `Arc`s (which may turn the
+    /// surviving holders into sole owners, making those pages
+    /// downshiftable again).  Returns the bytes actually freed (0 when
+    /// every frame is still mapped by an active sequence), or `None`
+    /// when the index is empty/disabled.
+    pub fn evict_lru_prefix(&mut self) -> Option<usize> {
+        let index = self.prefix.as_mut()?;
+        let key = index.iter().min_by_key(|(_, e)| e.last_used)?.0.clone();
+        let entry = index.remove(&key).unwrap();
+        let before = self.bytes;
+        for id in entry.frames {
+            self.release(id);
+        }
+        self.stats.prefix_evictions += 1;
+        Some(before - self.bytes)
+    }
+
+    /// Bytes the index could free if *every* entry were evicted: frames
+    /// whose only references come from prefix entries.  The engine adds
+    /// this to the downshift bound when gating admission-time relief.
+    pub fn prefix_reclaimable_bytes(&self) -> usize {
+        let Some(index) = self.prefix.as_ref() else { return 0 };
+        let mut index_refs: BTreeMap<PageId, u32> = BTreeMap::new();
+        for entry in index.values() {
+            for &id in &entry.frames {
+                *index_refs.entry(id).or_default() += 1;
+            }
+        }
+        index_refs.iter()
+            .filter_map(|(&id, &n)| {
+                let f = self.frames[id as usize].as_ref()?;
+                (f.refs == n).then(|| self.page_bytes(f.bits))
+            })
+            .sum()
+    }
+
+    // ----------------- frame lifecycle -----------------
+
+    fn alloc(&mut self, layer: u16, side: KvSide, bits: u8) -> PageId {
         self.stats.allocs += 1;
         self.bytes += self.page_bytes(bits);
-        let frame = Frame { layer, side, bits, owner };
+        let frame = Frame { layer, side, bits, refs: 1 };
         if let Some(id) = self.free.get_mut(&(layer, bits)).and_then(Vec::pop) {
             self.stats.reuses += 1;
             self.frames[id as usize] = Some(frame);
@@ -262,8 +532,18 @@ impl PagePool {
         id
     }
 
+    fn retain(&mut self, id: PageId) {
+        self.frames[id as usize].as_mut().expect("retain of dead frame").refs += 1;
+    }
+
     fn release(&mut self, id: PageId) {
-        let f = self.frames[id as usize].take().expect("double free of page frame");
+        let f = self.frames[id as usize].as_mut().expect("release of dead frame");
+        debug_assert!(f.refs > 0);
+        f.refs -= 1;
+        if f.refs > 0 {
+            return; // still mapped elsewhere (prefix sharing)
+        }
+        let f = self.frames[id as usize].take().unwrap();
         self.bytes -= self.page_bytes(f.bits);
         self.stats.frees += 1;
         self.free.entry((f.layer, f.bits)).or_default().push(id);
@@ -380,6 +660,7 @@ mod tests {
         assert!(saved > 0);
         pool.sync(0, &c);
         assert_eq!(pool.stats.retags, 1);
+        assert_eq!(pool.stats.cow_splits, 0);
         assert_eq!(pool.modeled_bytes(),
                    before - (pool.page_bytes(4) - pool.page_bytes(2)));
     }
@@ -395,5 +676,134 @@ mod tests {
         assert!(page_frame_bytes(64, 16, 32, 2) < page_frame_bytes(64, 16, 32, 4));
         assert!(page_frame_bytes(64, 16, 32, 4) < page_frame_bytes(64, 16, 32, 8));
         assert!(page_frame_bytes(64, 16, 32, 8) < page_frame_bytes(64, 16, 32, 16));
+    }
+
+    // ----------------- prefix-sharing lifecycle -----------------
+
+    /// Donor prefill + register, then a recipient adopt + suffix append,
+    /// mirroring the engine's admission sequence at the pool level.
+    fn share_fixture(m: &ModelConfig, plan: &QuantPlan, pool: &mut PagePool,
+                     prompt: &[i32], shared_tokens: usize)
+                     -> (SeqKvCache, SeqKvCache) {
+        let kv = m.kv_dim();
+        let total = prompt.len();
+        let mut rng = Rng::new(0xF00D);
+        let k = rng.normal_vec(total * kv);
+        let v = rng.normal_vec(total * kv);
+
+        let mut donor = SeqKvCache::new(m, plan);
+        for l in &mut donor.layers {
+            l.append(&k, &v, total);
+        }
+        pool.sync(10, &donor);
+        let cap = donor.max_shareable_prefix(total, pool.page_tokens);
+        assert!(cap >= shared_tokens);
+        assert!(pool.register_prefix(10, prompt, shared_tokens, &donor));
+
+        let mut rec = SeqKvCache::new(m, plan);
+        let adopted = pool.adopt_prefix(11, prompt, shared_tokens, &mut rec);
+        assert_eq!(adopted, shared_tokens);
+        for l in &mut rec.layers {
+            l.append_prefill_suffix(&k[shared_tokens * kv..], &v[shared_tokens * kv..],
+                                    total - shared_tokens, shared_tokens);
+        }
+        pool.sync(11, &rec);
+        (donor, rec)
+    }
+
+    #[test]
+    fn shared_pages_charge_once() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let prompt: Vec<i32> = (0..192).collect();
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.enable_prefix_cache();
+        let (donor, rec) = share_fixture(&m, &plan, &mut pool, &prompt, 128);
+        assert_eq!(pool.stats.prefix_hits, 1);
+        // recipient state is bit-identical to an exclusive build
+        assert_eq!(donor.modeled_bytes(), rec.modeled_bytes());
+        // 128 shared tokens = 2 pages/side/layer charged once, not twice:
+        // pool bytes < the exclusive sum by exactly the shared frames
+        let shared_frames = m.n_layers * 2 * (128 / PT);
+        let exclusive = 2 * pool.owner_pages(10) * pool.page_bytes(2);
+        assert_eq!(pool.owner_pages(10), pool.owner_pages(11));
+        assert_eq!(pool.modeled_bytes(),
+                   exclusive - shared_frames * pool.page_bytes(2));
+    }
+
+    #[test]
+    fn prefix_survives_donor_retirement_until_evicted() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let prompt: Vec<i32> = (100..292).collect();
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.enable_prefix_cache();
+        let (_donor, _rec) = share_fixture(&m, &plan, &mut pool, &prompt, 128);
+        let shared_frames = m.n_layers * 2 * (128 / PT);
+
+        // donor retires: shared frames stay (index + recipient hold refs)
+        pool.free_owner(10);
+        let after_donor = pool.modeled_bytes();
+        assert!(after_donor >= shared_frames * pool.page_bytes(2));
+        // recipient retires too: only index-pinned frames remain (the
+        // 128-token registration created nested 64- and 128-token
+        // entries; frames shared between them still count once)
+        pool.free_owner(11);
+        assert_eq!(pool.modeled_bytes(), shared_frames * pool.page_bytes(2));
+        assert_eq!(pool.prefix_reclaimable_bytes(), pool.modeled_bytes());
+        assert_eq!(pool.prefix_entries(), 2, "nested sub-prefixes both register");
+        // evicting the whole index frees everything, one LRU entry at a
+        // time (the first eviction can free 0: the longer entry still
+        // pins the shared head)
+        let mut freed = 0usize;
+        while let Some(f) = pool.evict_lru_prefix() {
+            freed += f;
+        }
+        assert_eq!(freed, shared_frames * pool.page_bytes(2));
+        assert_eq!(pool.modeled_bytes(), 0);
+        assert_eq!(pool.prefix_entries(), 0);
+        assert!(pool.evict_lru_prefix().is_none());
+    }
+
+    #[test]
+    fn sync_observes_cow_split_on_shared_page() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let prompt: Vec<i32> = (0..128).collect();
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.enable_prefix_cache();
+        let (donor, mut rec) = share_fixture(&m, &plan, &mut pool, &prompt, 64);
+        let before = pool.modeled_bytes();
+        let donor_words = donor.layers[0].quant_blocks(KvSide::Key)[0].words.clone();
+
+        // recipient downshifts its copy of the shared page -> CoW
+        assert!(rec.layers[0].quant_page_shared(KvSide::Key, 0, PT));
+        let saved = rec.layers[0].requant_page(KvSide::Key, 0, PT, 2);
+        assert!(saved > 0);
+        pool.sync(11, &rec);
+        assert_eq!(pool.stats.cow_splits, 1);
+        assert_eq!(pool.stats.retags, 0);
+        // the donor's bytes are untouched, and the pool now carries the
+        // shared 4-bit frame PLUS the recipient's private 2-bit frame
+        assert_eq!(donor.layers[0].quant_blocks(KvSide::Key)[0].words, donor_words);
+        assert_eq!(pool.modeled_bytes(), before + pool.page_bytes(2));
+    }
+
+    #[test]
+    fn disabled_prefix_cache_is_inert() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let prompt: Vec<i32> = (0..128).collect();
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        assert!(!pool.prefix_cache_enabled());
+        let donor = filled(&m, &plan, 128, 9);
+        pool.sync(10, &donor);
+        assert!(!pool.register_prefix(10, &prompt, 128, &donor));
+        let mut rec = SeqKvCache::new(&m, &plan);
+        assert_eq!(pool.adopt_prefix(11, &prompt, 128, &mut rec), 0);
+        assert!(rec.is_empty(), "miss must leave the cache untouched");
+        assert!(pool.evict_lru_prefix().is_none());
+        assert_eq!(pool.prefix_reclaimable_bytes(), 0);
+        assert_eq!(pool.stats.prefix_hits + pool.stats.prefix_insertions, 0);
     }
 }

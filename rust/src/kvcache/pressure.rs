@@ -14,6 +14,16 @@
 //! Everything here runs on the engine thread between decode steps; the
 //! decode fan-out never sees a page mid-downshift
 //! (DESIGN.md §Threading-Model).
+//!
+//! **Shared pages** (prefix sharing, DESIGN.md §Prefix-Sharing) are
+//! *exempt* from the ladder until they become sole-owned: mutating them
+//! in place is forbidden, and downshifting through a copy-on-write split
+//! *adds* a private frame instead of reclaiming one, so the controller
+//! skips them ([`SharedDownshift::Exempt`]) and the engine instead evicts
+//! prefix-index entries between the downshift and preempt rungs.  The
+//! CoW path ([`SharedDownshift::CowSplit`]) exists as an explicit
+//! de-sharing mechanism and is pinned never to mutate the other owner's
+//! bytes (`rust/tests/prefix.rs`).
 
 use crate::config::QuantPlan;
 
@@ -71,6 +81,23 @@ pub fn ladder_down(bits: u8) -> u8 {
     }
 }
 
+/// How the downshift scan treats pages whose blocks are shared with the
+/// prefix index or another sequence (DESIGN.md §Prefix-Sharing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedDownshift {
+    /// Skip shared pages entirely — the engine's policy: shared bytes
+    /// must stay pristine for the other owners, and a copy-on-write
+    /// split *adds* a frame, so the ladder cannot reclaim bytes here.
+    /// Shared pages become eligible again the moment they are sole-owned
+    /// (prefix-entry eviction, co-owner retirement).
+    Exempt,
+    /// Downshift shared pages too, through the cache-level copy-on-write
+    /// split: this sequence gets a private downshifted copy, the shared
+    /// bytes are untouched.  Net pool bytes go *up* by one frame —
+    /// explicit de-sharing, not memory relief.
+    CowSplit,
+}
+
 /// A single pressure-controller downshift.
 #[derive(Debug, Clone, Copy)]
 pub struct Downshift {
@@ -80,15 +107,25 @@ pub struct Downshift {
     pub from_bits: u8,
     pub to_bits: u8,
     pub bytes_saved: usize,
+    /// the page was shared and this downshift copy-on-write split it
+    pub cow: bool,
 }
 
 /// Requantize the oldest sealed page still above its floor, one ladder
-/// rung down.  Scan order is oldest-page-first, then layer order, K
-/// before V — so the most recent context keeps its precision for as long
-/// as possible.  Returns `None` when every sealed page sits at its floor
-/// (the caller's cue to move on to preemption).
+/// rung down, skipping shared pages ([`SharedDownshift::Exempt`]).  Scan
+/// order is oldest-page-first, then layer order, K before V — so the
+/// most recent context keeps its precision for as long as possible.
+/// Returns `None` when every eligible sealed page sits at its floor (the
+/// caller's cue to move on to prefix-entry eviction, then preemption).
 pub fn downshift_one(cache: &mut SeqKvCache, page_tokens: usize,
                      cfg: &PressureCfg) -> Option<Downshift> {
+    downshift_one_with(cache, page_tokens, cfg, SharedDownshift::Exempt)
+}
+
+/// [`downshift_one`] with an explicit shared-page policy.
+pub fn downshift_one_with(cache: &mut SeqKvCache, page_tokens: usize,
+                          cfg: &PressureCfg, shared: SharedDownshift)
+                          -> Option<Downshift> {
     let max_pages = cache.layers.iter()
         .flat_map(|l| KV_SIDES.iter().map(move |&s| l.sealed_quant_pages(s, page_tokens)))
         .max()
@@ -108,9 +145,14 @@ pub fn downshift_one(cache: &mut SeqKvCache, page_tokens: usize,
                 if to >= bits {
                     continue;
                 }
+                let is_shared = layer.quant_page_shared(side, page, page_tokens);
+                if is_shared && shared == SharedDownshift::Exempt {
+                    continue;
+                }
                 let bytes_saved = layer.requant_page(side, page, page_tokens, to);
                 return Some(Downshift {
                     layer: li, side, page, from_bits: bits, to_bits: to, bytes_saved,
+                    cow: is_shared,
                 });
             }
         }
@@ -119,9 +161,12 @@ pub fn downshift_one(cache: &mut SeqKvCache, page_tokens: usize,
 }
 
 /// Upper bound on page-accounting bytes the controller could still
-/// reclaim from `cache` by downshifting every sealed page to its floor —
-/// the engine's gate for admission-time relief (don't grind pages for a
-/// request that can't fit even then).
+/// reclaim from `cache` by downshifting every *eligible* (unshared)
+/// sealed page to its floor — the engine's gate for admission-time
+/// relief (don't grind pages for a request that can't fit even then).
+/// Shared pages are excluded: the ladder exempts them
+/// (DESIGN.md §Prefix-Sharing); the engine adds
+/// `PagePool::prefix_reclaimable_bytes` for the index-eviction rung.
 pub fn reclaimable_bytes(cache: &SeqKvCache, page_tokens: usize,
                          cfg: &PressureCfg) -> usize {
     let mut total = 0usize;
@@ -134,7 +179,7 @@ pub fn reclaimable_bytes(cache: &SeqKvCache, page_tokens: usize,
             }
             for page in 0..layer.sealed_quant_pages(side, page_tokens) {
                 let bits = layer.quant_page_bits(side, page, page_tokens);
-                if bits > floor {
+                if bits > floor && !layer.quant_page_shared(side, page, page_tokens) {
                     total += page_frame_bytes(page_tokens, kv_dim, group, bits)
                         .saturating_sub(page_frame_bytes(page_tokens, kv_dim, group, floor));
                 }
@@ -227,6 +272,32 @@ mod tests {
         let per_page = page_frame_bytes(PT, m.kv_dim(), m.group, 4)
             - page_frame_bytes(PT, m.kv_dim(), m.group, 2);
         assert_eq!(claim, actual * per_page);
+    }
+
+    #[test]
+    fn shared_pages_are_exempt_until_sole_owner() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let cfg = PressureCfg::from_plan(&plan);
+        let mut cache = filled(&m, &plan, 64, 5); // exactly one page per side
+        // pin every page as shared, the way the prefix index does
+        let held: Vec<_> = cache.layers.iter()
+            .flat_map(|l| KV_SIDES.iter()
+                .flat_map(move |&s| l.quant_blocks(s).iter().cloned()))
+            .collect();
+        assert!(downshift_one(&mut cache, PT, &cfg).is_none(),
+                "every page is shared: the exempt scan must find nothing");
+        assert_eq!(reclaimable_bytes(&cache, PT, &cfg), 0);
+        // the CoW policy still downshifts, without touching the shared bytes
+        let words_before = held[0].words.clone();
+        let d = downshift_one_with(&mut cache, PT, &cfg, SharedDownshift::CowSplit)
+            .expect("CowSplit must proceed");
+        assert!(d.cow && d.bytes_saved > 0);
+        assert_eq!(held[0].words, words_before, "shared bytes must be untouched");
+        // dropping the index's handles makes the rest sole-owned again
+        drop(held);
+        assert!(downshift_one(&mut cache, PT, &cfg).is_some());
+        assert!(reclaimable_bytes(&cache, PT, &cfg) > 0);
     }
 
     #[test]

@@ -8,10 +8,18 @@
 //! keep)/group)*group`.
 //!
 //! Window policies only decide when tokens *leave* the fp tail.  What
-//! happens to already-quantized history under memory pressure — the
-//! bit-ladder downshift of the oldest out-of-window pages — is the
-//! pressure controller's job (`kvcache/pressure.rs`,
-//! DESIGN.md §Memory-Manager).
+//! happens to already-quantized history afterwards is split between two
+//! other mechanisms: under memory pressure the bit-ladder downshift of
+//! the oldest out-of-window pages is the pressure controller's job
+//! (`kvcache/pressure.rs`, DESIGN.md §Memory-Manager) — with
+//! shared-prefix pages *exempt* from that ladder until they are
+//! sole-owned, and copy-on-write split otherwise — and the cross-sequence
+//! reuse of quantized prefix pages is the pool's prefix index
+//! (`kvcache/pages.rs`, DESIGN.md §Prefix-Sharing).  Prefix sharing also
+//! leans on this module's arithmetic: `blocks_to_quantize(prompt_len)`
+//! bounds the adoptable prefix (`SeqKvCache::max_shareable_prefix`), so
+//! the rounding pinned by the tests below is part of the bit-identity
+//! contract.
 
 /// How the full-precision tail is managed.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -74,5 +82,51 @@ mod tests {
     fn none_quantizes_full_blocks() {
         assert_eq!(WindowPolicy::None.blocks_to_quantize(70, 32), 2);
         assert_eq!(WindowPolicy::All.blocks_to_quantize(1000, 32), 0);
+    }
+
+    #[test]
+    fn rpc_keep_zero_rounding() {
+        // ratio*current < 1 floors keep to 0: the whole window is then
+        // quantizable in group granularity, exactly like ::None
+        let p = WindowPolicy::Rpc { ratio: 0.01 };
+        for current in [1usize, 31, 32, 63, 64, 99] {
+            assert_eq!(p.keep(current), 0, "keep({current})");
+            assert_eq!(p.blocks_to_quantize(current, 32),
+                       WindowPolicy::None.blocks_to_quantize(current, 32),
+                       "current={current}");
+        }
+        // first current where keep becomes nonzero: 1/0.01 = 100
+        assert_eq!(p.keep(100), 1);
+        assert_eq!(p.blocks_to_quantize(100, 32), 3);
+    }
+
+    #[test]
+    fn sub_group_window_never_quantizes() {
+        // current < group can never form a whole block, for any policy
+        for current in 0..32 {
+            for p in [WindowPolicy::None, WindowPolicy::Rpc { ratio: 0.5 },
+                      WindowPolicy::FixedResidual { tokens: 0 }] {
+                assert_eq!(p.blocks_to_quantize(current, 32), 0,
+                           "{p:?} current={current}");
+            }
+        }
+    }
+
+    #[test]
+    fn rpc_group_boundary_rounding() {
+        // exactly at a group boundary the overflow rounds down, one token
+        // past it a fresh block seals — the boundary arithmetic
+        // `max_shareable_prefix` builds on
+        let p = WindowPolicy::Rpc { ratio: 0.1 };
+        // current=64: keep 6 -> overflow 58 -> 1 block
+        assert_eq!(p.blocks_to_quantize(64, 32), 1);
+        // current=70: keep 7 -> overflow 63 -> still 1 block
+        assert_eq!(p.blocks_to_quantize(70, 32), 1);
+        // current=71: keep 7 -> overflow 64 -> 2 blocks
+        assert_eq!(p.blocks_to_quantize(71, 32), 2);
+        // keep is clamped to current (ratio >= 1 keeps everything)
+        let all = WindowPolicy::Rpc { ratio: 1.0 };
+        assert_eq!(all.keep(50), 50);
+        assert_eq!(all.blocks_to_quantize(50, 32), 0);
     }
 }

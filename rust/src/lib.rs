@@ -16,8 +16,8 @@
 //! * [`quant`]     — bit packing (incl. the paper's 3-bit 11-per-u32
 //!   scheme) + group-wise asymmetric quantization + fused kernels
 //! * [`kvcache`]   — packed per-layer caches, RPC windows, memory
-//!   accounting, and the paged KV pool + pressure controller
-//!   (DESIGN.md §Memory-Manager)
+//!   accounting, and the paged KV pool + pressure controller +
+//!   shared-prefix index (DESIGN.md §Memory-Manager, §Prefix-Sharing)
 //! * [`attention`] — decode/prefill attention over the mixed cache
 //! * [`model`]     — per-layer orchestration through the XLA executables
 //! * [`profiler`]  — gradient-norm importance analysis + bit allocation

@@ -2,9 +2,10 @@
 //!
 //! Subcommands:
 //!   generate  --prompt 1,2,3 --max-new 32 [--method kvmix|fp16|kivi|...]
-//!             [--threads N] [--page-tokens N]
+//!             [--threads N] [--page-tokens N] [--prefix-cache]
 //!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
 //!             [--kv-budget-kib K] [--threads N] [--page-tokens N]
+//!             [--prefix-cache]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
 //!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
 //!   inspect                                       artifact + weight summary
@@ -16,6 +17,10 @@
 //! multiple of the quant group; 0 = monolithic accounting, the default)
 //! and with it the downshift-then-preempt pressure controller
 //! (DESIGN.md §Memory-Manager).
+//! --prefix-cache (requires --page-tokens) deduplicates whole-page
+//! prompt prefixes across sequences as refcounted copy-on-write frames;
+//! generated tokens stay bit-identical on hits
+//! (DESIGN.md §Prefix-Sharing).
 
 use anyhow::{anyhow, bail, Result};
 use kvmix::baselines::Method;
@@ -43,7 +48,7 @@ fn usage() -> ! {
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["fast", "no-profiler", "help"]);
+    let args = Args::parse(&raw, &["fast", "no-profiler", "help", "prefix-cache"]);
     if args.flag("help") || args.positional.is_empty() {
         usage();
     }
@@ -85,9 +90,11 @@ fn run() -> Result<()> {
             let max_new = args.usize_or("max-new", 32)?;
             let threads = args.usize_or("threads", 1)?;
             let page_tokens = args.usize_or("page-tokens", 0)?;
+            let prefix_cache = args.flag("prefix-cache");
             WorkerPool::scoped(threads, |pool| {
                 let mut engine = Engine::with_pool(&rt, EngineCfg {
                     method, max_batch: 1, kv_budget: None, threads, page_tokens,
+                    prefix_cache,
                 }, Some(pool))?;
                 engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
                                         sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
@@ -105,11 +112,12 @@ fn run() -> Result<()> {
             let max_batch = args.usize_or("max-batch", 16)?;
             let threads = args.usize_or("threads", 1)?;
             let page_tokens = args.usize_or("page-tokens", 0)?;
+            let prefix_cache = args.flag("prefix-cache");
             let kv_budget = args.get("kv-budget-kib")
                 .map(|v| v.parse::<usize>().map(|k| k * 1024))
                 .transpose()?;
             server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads,
-                                           page_tokens },
+                                           page_tokens, prefix_cache },
                           &addr, None)
         }
         "repro" => {
@@ -168,6 +176,11 @@ fn parse_method(rt: &Runtime, args: &Args) -> Result<Method> {
         "fp16" => Method::Fp16,
         "kvmix-2bit" => Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2)),
         "kvmix-4bit" => Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 4)),
+        // eager variant (no RPC window): every full group quantizes at
+        // append, which maximizes the page-shareable prompt prefix —
+        // the README prefix-cache walkthrough uses this
+        "kvmix-2bit-eager" =>
+            Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2).without_rpc()),
         "kivi" => Method::Kivi { bits: 2, residual: 64 },
         "kvquant" => Method::KvQuant { bits: 3, outlier_frac: 0.01 },
         "qjl" => Method::Qjl { jl_dim_mult: 4, v_bits: 3 },

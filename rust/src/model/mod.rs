@@ -46,9 +46,26 @@ impl<'a> Forward<'a> {
     /// cache are quantized per the cache's policy as the windows overflow
     /// (paper Fig. 4 prefill phase).
     pub fn prefill(&self, tokens: &[i32], cache: &mut SeqKvCache) -> Result<Vec<f32>> {
+        self.prefill_from(tokens, cache, 0)
+    }
+
+    /// Prefill with the first `adopted` tokens' quantized pages already
+    /// adopted from the pool's prefix index (DESIGN.md §Prefix-Sharing).
+    /// The dense forward and the fp prompt attention still cover the
+    /// **full** prompt — so the returned logits, and with them the first
+    /// sampled token, are bit-identical to a cold prefill — but the
+    /// cache append skips re-quantizing the adopted prefix and writes
+    /// only the unshared suffix (`LayerKvCache::append_prefill_suffix`).
+    /// `adopted` must be group-aligned and within the window policies'
+    /// quantizable run; the engine's `SeqKvCache::max_shareable_prefix`
+    /// cap guarantees both.  `adopted == 0` is exactly [`Self::prefill`].
+    pub fn prefill_from(&self, tokens: &[i32], cache: &mut SeqKvCache,
+                        adopted: usize) -> Result<Vec<f32>> {
         let m = &self.rt.model;
         let t = tokens.len();
-        debug_assert!(cache.is_empty());
+        let kvd = m.kv_dim();
+        debug_assert!(adopted <= t);
+        debug_assert_eq!(cache.len(), adopted, "cache must hold exactly the adopted prefix");
         let mut h = self.rt.embed(tokens)?;
         let pos: Vec<i32> = (0..t as i32).collect();
         for layer in 0..m.n_layers {
@@ -56,7 +73,9 @@ impl<'a> Forward<'a> {
             let attn = prefill_attention_with(&q, &k, &v, t, m.n_heads, m.n_kv_heads,
                                               m.head_dim, self.pool);
             h = self.rt.post(layer, &attn, &h, t)?;
-            cache.layers[layer].append(&k, &v, t);
+            cache.layers[layer].append_prefill_suffix(&k[adopted * kvd..],
+                                                      &v[adopted * kvd..],
+                                                      t - adopted, adopted);
         }
         self.rt.logits(&h, t)
     }

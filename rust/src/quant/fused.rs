@@ -27,7 +27,12 @@ use super::pack::unpack_stream;
 /// currently staged in `ints`.  The uid is refreshed on every
 /// (re)quantization, so a pressure-controller downshift that rewrites a
 /// block in place — or a new block whose buffers reuse a freed
-/// allocation — can never match a stale unpack.  The cache only elides
+/// allocation — can never match a stale unpack.  Prefix sharing
+/// (DESIGN.md §Prefix-Sharing) preserves the invariant from the other
+/// direction: a shared block's `Arc` clones keep its uid, and a
+/// copy-on-write clone is always requantized (fresh uid) before anyone
+/// reads it — identical uid therefore always means identical bytes,
+/// even across lanes that share a block.  The cache only elides
 /// re-unpacking, never changes results.
 #[derive(Default)]
 pub struct FusedScratch {

@@ -106,7 +106,7 @@ fn engine_serves_batch_with_budget() {
         &default_artifacts_dir().join("importance.json")).unwrap();
     let mut engine = Engine::new(&rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: Some(64 << 20),
-        threads: 1, page_tokens: 0,
+        threads: 1, page_tokens: 0, prefix_cache: false,
     }).unwrap();
     let mut rng = Rng::new(3);
     for id in 0..6 {
@@ -133,6 +133,7 @@ fn engine_oom_eviction_still_completes() {
     let budget = (bpt * 140.0) as usize; // fits ~1 seq of 40+24 comfortably
     let mut engine = Engine::new(&rt, EngineCfg {
         method, max_batch: 4, kv_budget: Some(budget), threads: 1, page_tokens: 0,
+        prefix_cache: false,
     }).unwrap();
     let mut rng = Rng::new(4);
     for id in 0..3 {
@@ -168,7 +169,7 @@ fn paged_preemption_resumes_bit_identically() {
     let run = |kv_budget: Option<usize>| {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Fp16, max_batch: 4, kv_budget, threads: 1,
-            page_tokens: 64,
+            page_tokens: 64, prefix_cache: false,
         }).unwrap();
         let mut rng = Rng::new(4);
         for id in 0..3 {
@@ -207,7 +208,7 @@ fn paged_pressure_downshifts_under_budget() {
     let run = |kv_budget: Option<usize>| {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: method.clone(), max_batch: 4, kv_budget, threads: 1,
-            page_tokens: 64,
+            page_tokens: 64, prefix_cache: false,
         }).unwrap();
         let mut rng = Rng::new(6);
         for id in 0..4 {
@@ -232,7 +233,7 @@ fn paged_pressure_downshifts_under_budget() {
 fn generation_above_chance_on_tasks() {
     // E2E sanity: trained model + kvmix cache predicts task answers far
     // above chance.  chain is fully learned (~99% at build time); recall
-    // only partially (see EXPERIMENTS.md) so it is scored by log-prob.
+    // only partially (see DESIGN.md §3's corpus notes) so it is scored by log-prob.
     let Some(rt) = runtime() else { return };
     let plan = QuantPlan::from_importance_file(
         &default_artifacts_dir().join("importance.json")).unwrap();

@@ -1,0 +1,398 @@
+//! Copy-on-write prefix sharing (DESIGN.md §Prefix-Sharing), pinned at
+//! two levels:
+//!
+//! * pure-Rust pool/cache tests (no PJRT needed) prove the acceptance
+//!   invariants — adopted state is bit-identical to an exclusive build,
+//!   shared pages are charged once, a pressure downshift on a shared
+//!   page copy-on-writes and never mutates the other owner, preemption
+//!   and retirement never free shared frames, and the whole machinery is
+//!   inert when the prefix cache is off;
+//! * artifact-gated engine tests prove the end-to-end claim: two
+//!   sequences sharing a ≥ 1-page prompt prefix generate **bit-identical
+//!   tokens** with `--prefix-cache` on vs off, while the pool reuses the
+//!   prefix pages (skip with a notice when `make artifacts` hasn't run).
+
+use kvmix::baselines::Method;
+use kvmix::config::{ModelConfig, QuantPlan};
+use kvmix::coordinator::{Engine, EngineCfg, Request};
+use kvmix::kvcache::{pressure, KvSide, PagePool, SeqKvCache, SharedDownshift, KV_SIDES};
+use kvmix::model::Sampler;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::Rng;
+
+const PT: usize = 64;
+
+/// Deterministic K/V rows for a `tokens`-long prompt: the shared-prefix
+/// analog of what a prefill writes (same seed ⇒ same prefix rows).
+fn kv_rows(m: &ModelConfig, tokens: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (rng.normal_vec(tokens * m.kv_dim()), rng.normal_vec(tokens * m.kv_dim()))
+}
+
+fn filled(m: &ModelConfig, plan: &QuantPlan, tokens: usize, seed: u64) -> SeqKvCache {
+    let (k, v) = kv_rows(m, tokens, seed);
+    let mut c = SeqKvCache::new(m, plan);
+    for l in &mut c.layers {
+        l.append(&k, &v, tokens);
+    }
+    c
+}
+
+/// Engine-admission sequence at the pool level: donor prefill + sync +
+/// register, then recipient adopt + suffix append + sync.  The donor and
+/// recipient share the first `shared` tokens of the same `total`-token
+/// prompt (seeded rows stand in for the deterministic forward pass).
+fn donor_and_recipient(m: &ModelConfig, plan: &QuantPlan, pool: &mut PagePool,
+                       prompt: &[i32], shared: usize, seed: u64)
+                       -> (SeqKvCache, SeqKvCache) {
+    let total = prompt.len();
+    let (k, v) = kv_rows(m, total, seed);
+    let mut donor = SeqKvCache::new(m, plan);
+    for l in &mut donor.layers {
+        l.append(&k, &v, total);
+    }
+    pool.sync(1, &donor);
+    let cap = donor.max_shareable_prefix(total, PT);
+    assert!(cap >= shared, "fixture prefix {shared} must be adoptable (cap {cap})");
+    pool.register_prefix(1, prompt, shared, &donor);
+
+    let mut rec = SeqKvCache::new(m, plan);
+    let adopted = pool.adopt_prefix(2, prompt, shared, &mut rec);
+    assert_eq!(adopted, shared, "registered prefix must hit");
+    let kvd = m.kv_dim();
+    for l in &mut rec.layers {
+        l.append_prefill_suffix(&k[shared * kvd..], &v[shared * kvd..],
+                                total - shared, shared);
+    }
+    pool.sync(2, &rec);
+    (donor, rec)
+}
+
+#[test]
+fn adopted_state_bit_identical_to_exclusive_build() {
+    // acceptance (a), cache half: the adopt+suffix path must land in the
+    // exact cache state a cold full prefill produces — for the eager plan
+    // and for the dynamic-RPC plan whose fp tail bounds the adoptable cap
+    let m = ModelConfig::test_small();
+    for plan in [QuantPlan::uniform(m.n_layers, 2).without_rpc(),
+                 QuantPlan::uniform(m.n_layers, 2)] {
+        let prompt: Vec<i32> = (0..192).collect();
+        let probe = SeqKvCache::new(&m, &plan);
+        let shared = probe.max_shareable_prefix(prompt.len(), PT);
+        assert!(shared >= PT, "plan {} must share at least one page", plan.name);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.enable_prefix_cache();
+        let (_donor, rec) = donor_and_recipient(&m, &plan, &mut pool, &prompt,
+                                                shared, 42);
+        let exclusive = filled(&m, &plan, 192, 42);
+        assert_eq!(rec.len(), exclusive.len());
+        assert_eq!(rec.modeled_bytes(), exclusive.modeled_bytes());
+        for (lr, le) in rec.layers.iter().zip(&exclusive.layers) {
+            assert_eq!(lr.k_fp(), le.k_fp());
+            assert_eq!(lr.v_fp(), le.v_fp());
+            for &s in &KV_SIDES {
+                let (br, be) = (lr.quant_blocks(s), le.quant_blocks(s));
+                assert_eq!(br.len(), be.len());
+                for (x, y) in br.iter().zip(be) {
+                    assert_eq!(x.words, y.words, "packed words must be bit-identical");
+                    assert_eq!(x.scales, y.scales);
+                    assert_eq!(x.mins, y.mins);
+                    assert_eq!(x.bits, y.bits);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_pool_bytes_below_exclusive_sum() {
+    // acceptance (b): pool bytes with sharing < the sum of exclusive costs
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+    let prompt: Vec<i32> = (7..199).collect(); // 192 tokens, 128 shared
+    let mut shared_pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    shared_pool.enable_prefix_cache();
+    let (donor, rec) = donor_and_recipient(&m, &plan, &mut shared_pool, &prompt,
+                                           128, 9);
+
+    let mut exclusive_pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    exclusive_pool.sync(1, &donor);
+    exclusive_pool.sync(2, &rec);
+    // the recipient maps the same number of pages either way...
+    assert_eq!(shared_pool.owner_pages(2), exclusive_pool.owner_pages(2));
+    // ...but the shared pool charges each shared frame once
+    let shared_frames = m.n_layers * 2 * (128 / PT);
+    assert_eq!(shared_pool.modeled_bytes(),
+               exclusive_pool.modeled_bytes() - shared_frames * shared_pool.page_bytes(2));
+    assert!(shared_pool.modeled_bytes() < exclusive_pool.modeled_bytes());
+    assert_eq!(shared_pool.stats.prefix_hits, 1);
+}
+
+#[test]
+fn downshift_on_shared_page_cow_splits_and_preserves_owner() {
+    // acceptance (c): a pressure downshift landing on a shared frame must
+    // split, never mutate the other owner's bytes; the pool observes the
+    // split at sync and the exempt policy refuses to pick shared pages
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+    let floors = Method::Kvmix(plan.clone()).pressure_floors(m.n_layers);
+    let prompt: Vec<i32> = (0..128).collect();
+    let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    pool.enable_prefix_cache();
+    let (donor, mut rec) = donor_and_recipient(&m, &plan, &mut pool, &prompt, 128, 5);
+
+    // every sealed page of the recipient is shared: the engine's policy
+    // (Exempt) must find nothing to grind
+    assert!(pressure::downshift_one(&mut rec, PT, &floors).is_none(),
+            "shared pages are downshift-exempt");
+    assert_eq!(pressure::reclaimable_bytes(&rec, PT, &floors), 0);
+
+    // snapshot the donor, then force the split path
+    let donor_words: Vec<Vec<u32>> = donor.layers.iter()
+        .flat_map(|l| KV_SIDES.iter().flat_map(move |&s| {
+            l.quant_blocks(s).iter().map(|b| b.words.clone())
+        }))
+        .collect();
+    let bytes_before = pool.modeled_bytes();
+    let d = pressure::downshift_one_with(&mut rec, PT, &floors, SharedDownshift::CowSplit)
+        .expect("CowSplit must downshift");
+    assert!(d.cow);
+    assert_eq!((d.layer, d.side, d.page), (0, KvSide::Key, 0));
+    assert_eq!((d.from_bits, d.to_bits), (4, 2));
+
+    // donor bytes bit-identical, donor still at plan width
+    let donor_words_after: Vec<Vec<u32>> = donor.layers.iter()
+        .flat_map(|l| KV_SIDES.iter().flat_map(move |&s| {
+            l.quant_blocks(s).iter().map(|b| b.words.clone())
+        }))
+        .collect();
+    assert_eq!(donor_words, donor_words_after, "other owner must be untouched");
+    assert_eq!(donor.layers[0].quant_page_bits(KvSide::Key, 0, PT), 4);
+    assert_eq!(rec.layers[0].quant_page_bits(KvSide::Key, 0, PT), 2);
+
+    // the pool swaps the recipient's mapping to a private frame and the
+    // split costs one extra (narrower) frame — CoW is de-sharing, not
+    // memory relief, which is exactly why the ladder exempts shared pages
+    pool.sync(2, &rec);
+    assert_eq!(pool.stats.cow_splits, 1);
+    assert_eq!(pool.modeled_bytes(), bytes_before + pool.page_bytes(2));
+}
+
+#[test]
+fn retirement_and_preemption_never_free_shared_frames() {
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+    let prompt: Vec<i32> = (0..128).collect();
+    let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    pool.enable_prefix_cache();
+    let (_donor, _rec) = donor_and_recipient(&m, &plan, &mut pool, &prompt, 64, 3);
+    let shared_frames = m.n_layers * 2 * (64 / PT);
+
+    // preempt the recipient (free_owner is what the engine calls): the
+    // shared frames must survive via the donor's and the index's refs
+    pool.free_owner(2);
+    assert_eq!(pool.owner_pages(2), 0);
+    let donor_only = pool.modeled_bytes();
+    assert_eq!(donor_only, pool.owner_pages(1) * pool.page_bytes(2));
+
+    // donor retires too: the index alone keeps the prefix warm
+    pool.free_owner(1);
+    assert_eq!(pool.modeled_bytes(), shared_frames * pool.page_bytes(2));
+    assert_eq!(pool.prefix_entries(), 1);
+
+    // a re-admission of the same prompt still hits, donor gone and all
+    let mut back = SeqKvCache::new(&m, &plan);
+    assert_eq!(pool.adopt_prefix(9, &prompt, 64, &mut back), 64);
+    assert_eq!(back.len(), 64);
+    pool.free_owner(9);
+
+    // eviction is the only way those frames die
+    assert!(pool.evict_lru_prefix().unwrap() > 0);
+    assert_eq!(pool.modeled_bytes(), 0);
+
+    // and with the entry gone, the pages of a surviving holder would be
+    // sole-owned again — which is what re-arms the downshift ladder.
+    // (one-page prompt: the recipient's cache is entirely shared)
+    let plan4 = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+    let (donor2, mut rec2) = donor_and_recipient(&m, &plan4, &mut pool,
+                                                 &prompt[..64], 64, 4);
+    let floors = Method::Kvmix(plan4).pressure_floors(m.n_layers);
+    assert!(pressure::downshift_one(&mut rec2, PT, &floors).is_none(),
+            "fully shared cache: exempt scan finds nothing");
+    pool.free_owner(1);
+    drop(donor2);
+    assert!(pool.evict_lru_prefix().is_some());
+    assert!(pressure::downshift_one(&mut rec2, PT, &floors).is_some(),
+            "sole-owned pages must be downshiftable again");
+}
+
+#[test]
+fn prefix_cache_off_is_byte_identical_to_paged_baseline() {
+    // acceptance (d), pool half: with the prefix cache off every sharing
+    // entry point is a no-op and the allocator behaves exactly as the
+    // exclusive-ownership pool — same frames, same bytes, same stats
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+    let a = filled(&m, &plan, 192, 11);
+    let b = filled(&m, &plan, 192, 12);
+
+    let mut off = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    assert!(!off.prefix_cache_enabled());
+    let prompt: Vec<i32> = (0..192).collect();
+    off.sync(1, &a);
+    assert!(!off.register_prefix(1, &prompt, 192, &a));
+    let mut c = SeqKvCache::new(&m, &plan);
+    assert_eq!(off.adopt_prefix(2, &prompt, 192, &mut c), 0);
+    assert!(c.is_empty());
+    assert!(off.evict_lru_prefix().is_none());
+    off.sync(2, &b);
+
+    let mut plain = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+    plain.sync(1, &a);
+    plain.sync(2, &b);
+    assert_eq!(off.modeled_bytes(), plain.modeled_bytes());
+    assert_eq!(off.allocated_pages(), plain.allocated_pages());
+    assert_eq!(off.stats.allocs, plain.stats.allocs);
+    assert_eq!(off.stats.prefix_hits + off.stats.prefix_insertions
+               + off.stats.cow_splits + off.stats.prefix_evictions, 0);
+}
+
+#[test]
+fn suffix_append_with_zero_adopted_is_plain_append() {
+    // acceptance (d), cache half: the shared code path the off-engine
+    // runs (`append_prefill_suffix(.., 0)`) is byte-for-byte `append`
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 2); // RPC window, the subtle case
+    let (k, v) = kv_rows(&m, 160, 33);
+    let mut plain = SeqKvCache::new(&m, &plan);
+    let mut zero = SeqKvCache::new(&m, &plan);
+    for l in &mut plain.layers {
+        l.append(&k, &v, 160);
+    }
+    for l in &mut zero.layers {
+        l.append_prefill_suffix(&k, &v, 160, 0);
+    }
+    assert_eq!(plain.modeled_bytes(), zero.modeled_bytes());
+    for (lp, lz) in plain.layers.iter().zip(&zero.layers) {
+        assert_eq!(lp.k_fp(), lz.k_fp());
+        assert_eq!(lp.v_fp(), lz.v_fp());
+        for &s in &KV_SIDES {
+            for (x, y) in lp.quant_blocks(s).iter().zip(lz.quant_blocks(s)) {
+                assert_eq!(x.words, y.words);
+                assert_eq!(x.scales, y.scales);
+                assert_eq!(x.mins, y.mins);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated engine tests (skip with a notice pre-`make artifacts`)
+// ---------------------------------------------------------------------------
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+/// Two requests sharing a one-page (64-token) system prefix + distinct
+/// 32-token tails, served under `prefix_cache` on/off.
+fn serve_shared_pair(rt: &Runtime, prefix_cache: bool)
+                     -> (Vec<kvmix::coordinator::Completion>, Engine<'_>) {
+    let plan = QuantPlan::uniform(rt.model.n_layers, 2).without_rpc();
+    let mut engine = Engine::new(rt, EngineCfg {
+        method: Method::Kvmix(plan), max_batch: 4, kv_budget: None, threads: 1,
+        page_tokens: PT, prefix_cache,
+    }).unwrap();
+    let mut rng = Rng::new(8);
+    let (system, _) = kvmix::harness::workload::sample_mixture(&mut rng, PT);
+    for id in 0..2u64 {
+        let (tail, _) = kvmix::harness::workload::sample_mixture(&mut rng, 32);
+        let mut prompt = system.clone();
+        prompt.extend_from_slice(&tail);
+        engine.submit(Request { id, prompt, max_new_tokens: 16,
+                                sampler: Sampler::Greedy, stop_token: None,
+                                submitted_ns: 0 });
+    }
+    let mut done = engine.run_to_completion().unwrap();
+    done.sort_by_key(|c| c.id);
+    (done, engine)
+}
+
+#[test]
+fn engine_prefix_hit_generates_bit_identical_tokens() {
+    // acceptance (a), end to end: --prefix-cache on vs off, same two
+    // shared-prefix requests, bit-identical generations — and the on-run
+    // actually reused the prefix (hits + tokens + fewer pool bytes)
+    let Some(rt) = runtime() else { return };
+    let (off, off_engine) = serve_shared_pair(&rt, false);
+    let (on, on_engine) = serve_shared_pair(&rt, true);
+    assert_eq!(off.len(), 2);
+    assert_eq!(on.len(), 2);
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens,
+                   "request {} must generate bit-identically on a prefix hit", a.id);
+    }
+    assert_eq!(off_engine.metrics.prefix_hits, 0);
+    assert_eq!(on_engine.metrics.prefix_hits, 1, "second request must hit");
+    assert_eq!(on_engine.metrics.prefix_tokens_reused, PT);
+    assert_eq!(on_engine.metrics.cow_splits, 0, "no pressure, no splits");
+    // acceptance (b) at the serving level: the shared page is charged once
+    assert!(on_engine.metrics.peak_kv_bytes < off_engine.metrics.peak_kv_bytes,
+            "peak {} (on) must undercut {} (off)",
+            on_engine.metrics.peak_kv_bytes, off_engine.metrics.peak_kv_bytes);
+    let pool = on_engine.page_pool().expect("paged");
+    // both prompts align to the same 64-token system prefix: one entry,
+    // registered by the first admission and refreshed by the second
+    assert_eq!(pool.stats.prefix_insertions, 1);
+    assert_eq!(pool.prefix_entries(), 1);
+}
+
+#[test]
+fn engine_prefix_cache_on_without_sharing_matches_off() {
+    // --prefix-cache with disjoint prompts: zero hits, and byte-identical
+    // behavior to the off engine (acceptance (d) behaviorally)
+    let Some(rt) = runtime() else { return };
+    let plan = QuantPlan::uniform(rt.model.n_layers, 2).without_rpc();
+    let run = |prefix_cache: bool| {
+        let mut engine = Engine::new(&rt, EngineCfg {
+            method: Method::Kvmix(plan.clone()), max_batch: 4, kv_budget: None,
+            threads: 1, page_tokens: PT, prefix_cache,
+        }).unwrap();
+        let mut rng = Rng::new(17);
+        for id in 0..3u64 {
+            let (toks, _) = kvmix::harness::workload::sample_mixture(&mut rng, 48);
+            engine.submit(Request { id, prompt: toks, max_new_tokens: 12,
+                                    sampler: Sampler::Greedy, stop_token: None,
+                                    submitted_ns: 0 });
+        }
+        let mut done = engine.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        let hits = engine.metrics.prefix_hits;
+        let peak = engine.metrics.peak_kv_bytes;
+        (done, hits, peak)
+    };
+    let (off, off_hits, off_peak) = run(false);
+    let (on, on_hits, on_peak) = run(true);
+    assert_eq!(off_hits, 0);
+    assert_eq!(on_hits, 0, "48-token prompts are sub-page: no sharing");
+    assert_eq!(on_peak, off_peak, "no sharing -> identical page charges");
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a.tokens, b.tokens);
+    }
+}
+
+#[test]
+fn engine_rejects_prefix_cache_without_pages() {
+    let Some(rt) = runtime() else { return };
+    let err = Engine::new(&rt, EngineCfg {
+        method: Method::Fp16, max_batch: 1, kv_budget: None, threads: 1,
+        page_tokens: 0, prefix_cache: true,
+    });
+    assert!(err.is_err(), "--prefix-cache without --page-tokens must be rejected");
+}

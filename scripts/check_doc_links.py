@@ -1,14 +1,20 @@
 #!/usr/bin/env python3
-"""Markdown link + DESIGN.md section cross-reference checker.
+"""Markdown link + DESIGN.md section + path cross-reference checker.
 
-Two classes of rot this catches (run by .github/workflows/verify.yml and
-usable locally as `python3 scripts/check_doc_links.py`):
+Three classes of rot this catches (run by .github/workflows/verify.yml
+and usable locally as `python3 scripts/check_doc_links.py`):
 
 1. Relative markdown links in README.md, DESIGN.md and docs/**/*.md that
    point at files which don't exist.
-2. `DESIGN.md §<section>` references anywhere in the repo (doc comments
-   cite design sections by name, e.g. `DESIGN.md §Memory-Manager`) that
-   don't resolve to a `## §<section>` heading in DESIGN.md.
+2. `DESIGN.md §<section>` references anywhere in the repo — markdown
+   *and* rustdoc/source comments under rust/, examples/, python/,
+   scripts/ (doc comments cite design sections by name, e.g.
+   `DESIGN.md §Memory-Manager`) — that don't resolve to a
+   `## §<section>` heading in DESIGN.md.
+3. Repo-relative *path* citations in the same trees — rustdoc lines like
+   `see rust/tests/prefix.rs` or `docs/adr/003-prefix-sharing.md`, and
+   top-level doc names like `README.md` — that point at files which
+   don't exist (how a renamed test or ADR would otherwise rot silently).
 
 Exit code 0 = clean, 1 = at least one broken reference (all are listed).
 """
@@ -23,7 +29,7 @@ ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = [ROOT / "README.md", ROOT / "DESIGN.md"]
 DOC_FILES += sorted((ROOT / "docs").rglob("*.md"))
 
-# trees scanned for `DESIGN.md §...` references
+# trees scanned for `DESIGN.md §...` and path references
 REF_TREES = ["rust/src", "rust/tests", "rust/benches", "examples", "python",
              "docs", "scripts"]
 REF_FILES = [ROOT / "README.md", ROOT / "DESIGN.md"]
@@ -31,6 +37,15 @@ REF_FILES = [ROOT / "README.md", ROOT / "DESIGN.md"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§([A-Za-z0-9][A-Za-z0-9-]*)")
 HEADING_RE = re.compile(r"^##\s+§([A-Za-z0-9][A-Za-z0-9-]*)", re.M)
+
+# repo-relative path citations: a known top-level tree + extension, or an
+# ALL-CAPS top-level markdown name (README.md, DESIGN.md, ROADMAP.md...)
+PATH_REF_RE = re.compile(
+    r"(?<![\w/.-])"
+    r"((?:docs|scripts|examples|python|rust)/[A-Za-z0-9_./-]+"
+    r"\.(?:md|py|rs|sh|yml|toml)"
+    r"|[A-Z][A-Z0-9_]+\.md)"
+    r"(?![\w/-])")
 
 # generic placeholders used when *describing* the convention itself
 # (e.g. DESIGN.md's "cite them as `DESIGN.md §N`"), not real references
@@ -57,8 +72,7 @@ def design_sections() -> set:
     return set(HEADING_RE.findall(design))
 
 
-def check_section_refs(errors: list) -> None:
-    sections = design_sections()
+def ref_scanned_files() -> list:
     files = list(REF_FILES)
     for tree in REF_TREES:
         base = ROOT / tree
@@ -66,7 +80,12 @@ def check_section_refs(errors: list) -> None:
             for p in sorted(base.rglob("*")):
                 if p.is_file() and p.suffix in {".rs", ".py", ".md", ".sh"}:
                     files.append(p)
-    for f in files:
+    return files
+
+
+def check_section_refs(errors: list) -> None:
+    sections = design_sections()
+    for f in ref_scanned_files():
         try:
             text = f.read_text(encoding="utf-8")
         except UnicodeDecodeError:
@@ -83,10 +102,24 @@ def check_section_refs(errors: list) -> None:
                     f"(known: {', '.join(sorted(sections))})")
 
 
+def check_path_refs(errors: list) -> None:
+    for f in ref_scanned_files():
+        try:
+            text = f.read_text(encoding="utf-8")
+        except UnicodeDecodeError:
+            continue
+        for match in PATH_REF_RE.finditer(text):
+            path = match.group(1)
+            if not (ROOT / path).exists():
+                errors.append(
+                    f"{f.relative_to(ROOT)}: cited path does not exist -> {path}")
+
+
 def main() -> int:
     errors: list = []
     check_links(errors)
     check_section_refs(errors)
+    check_path_refs(errors)
     if errors:
         print(f"doc cross-reference check FAILED ({len(errors)} problem(s)):")
         for e in errors:
