@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         threads: 1,
         page_tokens: 0, // monolithic accounting; see DESIGN.md §Memory-Manager
         prefix_cache: false,
+        step_tokens: 0, // legacy whole-prefill scheduling; see DESIGN.md §Scheduler
     })?;
 
     // a recall-task prompt: bindings ... SEP QRY key -> the model should

@@ -35,6 +35,9 @@ fn main() -> Result<()> {
         0 if prefix_cache => 64,
         pt => pt,
     };
+    // 0 = legacy whole-prefill scheduling; e.g. --step-tokens 64 chunks
+    // prompt prefill across steps (DESIGN.md §Scheduler)
+    let step_tokens = args.usize_or("step-tokens", 0)?;
 
     let dir = default_artifacts_dir();
     let rt = Runtime::load_with(&dir, false)?;
@@ -53,7 +56,7 @@ fn main() -> Result<()> {
         WorkerPool::scoped(threads, |pool| -> Result<()> {
             let mut engine = Engine::with_pool(&rt, EngineCfg {
                 method: method.clone(), max_batch: batch, kv_budget: None, threads,
-                page_tokens, prefix_cache,
+                page_tokens, prefix_cache, step_tokens,
             }, Some(pool))?;
             let mut rng = Rng::new(42);
             for id in 0..n_requests {

@@ -1,4 +1,5 @@
-//! Continuous batcher: admission control for the decode batch.
+//! Continuous batcher: the waiting-request FIFO and its admission
+//! mechanics (slots, memory projections, bounded lookahead).
 //!
 //! Waiting requests join the running batch whenever (a) a batch slot is
 //! free (`max_batch`, bounded by the largest compiled bucket) and (b) the
@@ -9,6 +10,12 @@
 //!
 //! Admission scans a bounded lookahead of the queue ([`ADMIT_LOOKAHEAD`])
 //! so one huge projected request cannot starve small ones behind it.
+//!
+//! Admission *policy* — when the engine asks for the next request, and
+//! how the per-step token budget gates it — lives in the iteration-level
+//! scheduler (`coordinator/scheduler.rs`, DESIGN.md §Scheduler), which
+//! calls [`Batcher::admit_with_reuse`] for the slot/memory/lookahead
+//! mechanics here.
 
 use std::collections::VecDeque;
 

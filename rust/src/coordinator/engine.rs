@@ -1,9 +1,17 @@
 //! The serving engine: continuous-batching loop over the PJRT-backed
 //! forward pass and the mixed-precision caches.
 //!
-//! One `step()` = admit waiting requests (prefill them) + one batched
-//! decode step for every active request + retire completions.  Memory is
-//! charged against the [`MemoryBudget`] after each step.
+//! One `step()` is a **plan → execute → charge/relieve → retire**
+//! pipeline (DESIGN.md §Scheduler): the iteration-level
+//! [`Scheduler`] builds a [`StepPlan`] — one decode token per decoding
+//! sequence, the remaining `--step-tokens` budget as group-aligned
+//! prefill chunks to the oldest mid-prompt request, then fresh
+//! admissions — the engine executes the planned forward passes, charges
+//! the memory budget (running the pressure ladder on overflow), and
+//! retires completions.  `--step-tokens 0` disables the budget and keeps
+//! the legacy shape bit-for-bit: an admission prefills its whole prompt
+//! inline before the decode batch runs (`rust/tests/scheduler.rs` pins
+//! the identity).
 //!
 //! Two memory regimes (DESIGN.md §Memory-Manager):
 //!
@@ -27,14 +35,23 @@
 //! (charged once, skipping their re-quantization), prefill only the
 //! unshared suffix into the cache — the dense forward still covers the
 //! full prompt, so logits and sampled tokens stay bit-identical — and
-//! register the new sequence's own aligned prefix for later arrivals.
+//! register the new sequence's own aligned prefix once its prefill
+//! completes.  Chunked prefills compose: adopted pages count as already-
+//! prefilled tokens and the first chunk resumes at the (page- hence
+//! group-aligned) adoption boundary.
+//!
+//! A request whose projected footprint can *never* be admitted no longer
+//! tears the engine down: it is popped into [`Engine::take_rejections`]
+//! (the server maps it to one `ERR` line) and stepping continues for
+//! everyone else.
 
 use anyhow::Result;
 
 use crate::baselines::Method;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ActiveRequest, Completion, Request};
+use crate::coordinator::request::{ActiveRequest, Completion, Lifecycle, Rejection, Request};
+use crate::coordinator::scheduler::{ChunkGrant, Scheduler, StepPlan};
 use crate::kvcache::{pressure, MemoryBudget, PagePool, PressureCfg, SeqKvCache};
 use crate::model::{DecodeScratch, Forward};
 use crate::runtime::Runtime;
@@ -59,6 +76,11 @@ pub struct EngineCfg {
     /// requires `page_tokens > 0`).  Off = bit-for-bit the pre-sharing
     /// engine (DESIGN.md §Prefix-Sharing).
     pub prefix_cache: bool,
+    /// iteration-level scheduler step budget in tokens (`--step-tokens`;
+    /// DESIGN.md §Scheduler).  0 = the legacy whole-prefill-at-admission
+    /// behavior, bit-for-bit; N > 0 bounds each step to ~N tokens by
+    /// splitting prompts into group-aligned chunks (decode-first).
+    pub step_tokens: usize,
 }
 
 pub struct Engine<'a> {
@@ -69,6 +91,14 @@ pub struct Engine<'a> {
     pub budget: MemoryBudget,
     pub metrics: Metrics,
     pub completions: Vec<Completion>,
+    /// requests the engine determined can never be admitted; drained by
+    /// [`Engine::take_rejections`] (the serve loop answers them with ERR
+    /// and keeps going)
+    pub rejections: Vec<Rejection>,
+    scheduler: Scheduler,
+    /// largest compiled bucket — the longest prompt the legacy
+    /// whole-prefill path can execute (chunked mode is unbounded)
+    max_prefill: usize,
     scratch: DecodeScratch,
     rng: Rng,
     /// attention fan-out workers (None = sequential decode)
@@ -118,6 +148,7 @@ impl<'a> Engine<'a> {
         } else {
             None
         };
+        let scheduler = Scheduler::new(cfg.step_tokens, rt.model.group, max_bucket)?;
         let pressure = cfg.method.pressure_floors(rt.model.n_layers);
         let probe = cfg.prefix_cache.then(|| cfg.method.make_cache(&rt.model));
         Ok(Engine {
@@ -128,6 +159,9 @@ impl<'a> Engine<'a> {
             budget: MemoryBudget::new(capacity, 0)?,
             metrics: Metrics::default(),
             completions: Vec::new(),
+            rejections: Vec::new(),
+            scheduler,
+            max_prefill: max_bucket,
             scratch: DecodeScratch::default(),
             rng: Rng::new(0xE161),
             pool,
@@ -143,6 +177,21 @@ impl<'a> Engine<'a> {
 
     pub fn submit(&mut self, mut req: Request) {
         req.submitted_ns = self.metrics.now_ns();
+        // legacy prefill runs the whole prompt through one bucketized
+        // executable: a prompt beyond the largest bucket would error out
+        // of `Runtime::bucket_for` mid-step and (pre-PR 5) tear down the
+        // serve loop.  Screen it here as a per-request rejection instead;
+        // chunked mode has no such limit (chunks clamp to the bucket).
+        if !self.scheduler.chunked() && req.prompt.len() > self.max_prefill {
+            self.rejections.push(Rejection {
+                id: req.id,
+                reason: format!(
+                    "cannot admit: prompt of {} tokens exceeds the largest compiled \
+                     bucket ({}) — unservable without --step-tokens chunking",
+                    req.prompt.len(), self.max_prefill),
+            });
+            return;
+        }
         self.batcher.submit(req);
     }
 
@@ -150,16 +199,46 @@ impl<'a> Engine<'a> {
         self.active.is_empty() && self.batcher.waiting() == 0
     }
 
-    /// One scheduler iteration; returns completions retired this step.
+    /// Drain the requests rejected as never-admittable.  Stall-path
+    /// rejections (projected footprint beyond what relief could free)
+    /// are counted as `oom_events`; submit-time over-bucket rejections
+    /// are not memory events and only appear here.  The serve loop
+    /// answers each with an `ERR` line; [`Engine::run_to_completion`]
+    /// turns the first one into an error so one-shot harnesses keep
+    /// their OOM semantics.
+    pub fn take_rejections(&mut self) -> Vec<Rejection> {
+        std::mem::take(&mut self.rejections)
+    }
+
+    /// One scheduler iteration — plan, execute, charge/relieve, retire;
+    /// returns completions retired this step.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         let t0 = std::time::Instant::now();
         let fwd = Forward::with_pool(self.rt, self.pool);
 
-        // ---- admission + prefill ----
-        // Paged mode interleaves admission with pressure relief: when a
-        // waiting request is blocked on memory alone and the pool can
-        // still reclaim enough by downshifting old pages to their floors,
-        // requantize one page and retry (DESIGN.md §Memory-Manager).
+        // ---- plan + prefill execution ----
+        let decoding = self.active.iter().filter(|a| a.is_decoding()).count();
+        let mut plan = self.scheduler.begin_step(decoding);
+        self.admit_and_prefill(&fwd, &mut plan)?;
+
+        // ---- one batched decode step + charge/relieve ----
+        self.decode_and_relieve(&fwd)?;
+
+        // ---- retire ----
+        let done = self.retire_done()?;
+        if let Some(u) = self.scheduler.utilization(&plan) {
+            self.metrics.budget_util.record(u);
+        }
+        self.metrics.step_us.record(t0.elapsed().as_micros() as f64);
+        Ok(done)
+    }
+
+    /// Admission + prefill execution under the step plan.  Paged mode
+    /// interleaves admission with pressure relief: when a waiting request
+    /// is blocked on memory alone and the pool can still reclaim enough
+    /// by downshifting old pages to their floors, requantize one page and
+    /// retry (DESIGN.md §Memory-Manager).
+    fn admit_and_prefill(&mut self, fwd: &Forward, plan: &mut StepPlan) -> Result<()> {
         let mut admitted_any = false;
         // all-floors reclaimable bound, computed at most once per relief
         // phase and decremented by each downshift's frame-accounting
@@ -171,6 +250,26 @@ impl<'a> Engine<'a> {
         // the prefix machinery invalidates the cache (recomputed on the
         // next relief round).
         let mut reclaim_cache: Option<usize> = None;
+
+        // chunked mode: the budget serves carried-over prefills first,
+        // oldest admitted lane first (decode-first already reserved its
+        // tokens in `begin_step`)
+        if self.scheduler.chunked() {
+            for lane in 0..self.active.len() {
+                if self.active[lane].is_decoding() {
+                    continue;
+                }
+                let remaining = self.active[lane].prompt_remaining();
+                debug_assert!(remaining > 0, "a fully-prefilled lane must be Decoding");
+                let Some(grant) = self.scheduler.grant_chunk(plan, remaining) else {
+                    continue; // budget-blocked; a smaller remainder may still fit
+                };
+                if self.execute_chunk(fwd, lane, grant)? {
+                    reclaim_cache = None;
+                }
+            }
+        }
+
         loop {
             while let Some(req) = {
                 // admission projects only the *unshared* suffix bytes: a
@@ -178,74 +277,44 @@ impl<'a> Engine<'a> {
                 // pages a prefix hit would adopt (DESIGN.md
                 // §Prefix-Sharing; plain projection when the cache is off)
                 let (pages, probe, pt) = (&self.pages, &self.probe, self.cfg.page_tokens);
-                let reuse = move |r: &Request| reused_tokens(pages, probe, pt, r);
-                self.batcher.admit_with_reuse(self.active.len(), &self.budget, &reuse)
+                let chunked = self.scheduler.chunked();
+                let reuse = move |r: &Request| reused_tokens(pages, probe, pt, chunked, r);
+                self.scheduler.admit(plan, &mut self.batcher, self.active.len(),
+                                     &self.budget, &reuse)
             } {
                 admitted_any = true;
-                let mut cache = self.cfg.method.make_cache(&self.rt.model);
-                // shared-prefix lookup (DESIGN.md §Prefix-Sharing): adopt a
-                // registered whole-page prefix's quantized pages as shared
-                // read-only frames, capped by what this prompt's window
-                // policies would quantize anyway (the bit-identity bound)
-                let mut adopted = 0usize;
-                if let Some(pool) = &mut self.pages {
-                    if pool.prefix_cache_enabled() {
-                        let cap = cache.max_shareable_prefix(req.prompt.len(),
-                                                             self.cfg.page_tokens);
-                        adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
-                        if adopted > 0 {
-                            self.metrics.prefix_hits += 1;
-                            self.metrics.prefix_tokens_reused += adopted;
+                let prefix_ran = if self.scheduler.chunked() {
+                    let ran = self.admit_chunked(req)?;
+                    let lane = self.active.len() - 1;
+                    let remaining = self.active[lane].prompt_remaining();
+                    if remaining > 0 {
+                        if let Some(grant) = self.scheduler.grant_chunk(plan, remaining) {
+                            if self.execute_chunk(fwd, lane, grant)? {
+                                reclaim_cache = None;
+                            }
                         }
                     }
-                }
-                // the dense forward covers the full prompt either way, so
-                // these logits are bit-identical to a cold prefill; on a
-                // hit only the unshared suffix is quantized into the cache
-                let logits = fwd.prefill_from(&req.prompt, &mut cache, adopted)?;
-                self.metrics.prefill_tokens += req.prompt.len();
-                let vocab = self.rt.model.vocab;
-                let last = &logits[(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
-                let first_tok = req.sampler.sample(last, &mut self.rng) as i32;
-                let now = self.metrics.now_ns();
-                let ar = ActiveRequest {
-                    req, cache, generated: vec![first_tok], next_input: first_tok,
-                    prefilled_ns: now, first_token_ns: Some(now),
+                    ran
+                } else {
+                    self.admit_legacy(fwd, plan, req)?
                 };
-                self.metrics.decode_tokens += 1;
-                self.metrics.ttft_ms.record((now - ar.req.submitted_ns) as f64 / 1e6);
-                self.active.push(ar);
-                // post-prefill memory charge (admission already projected
-                // it; the decode-step pressure loop handles any
-                // shortfall).  Only the new sequence needs syncing — the
-                // rest were reconciled by the last full charge.
-                let _ = self.charge_admitted()?;
-                // register the new sequence's own aligned prefix while its
-                // pages are provably still at the plan's width (right
-                // after the post-prefill sync, before any relief round;
-                // the index reference then keeps them pristine — shared
-                // pages are downshift-exempt and copy-on-write)
-                if let Some(pool) = &mut self.pages {
-                    if pool.prefix_cache_enabled() {
-                        let a = self.active.last().expect("just pushed");
-                        let cap = a.cache.max_shareable_prefix(a.req.prompt.len(),
-                                                               self.cfg.page_tokens);
-                        pool.register_prefix(a.req.id, &a.req.prompt, cap, &a.cache);
-                        // adoption/registration shifts frames between the
-                        // reclaimable categories: stale bound must not
-                        // authorize further grinding (see reclaim_cache)
-                        reclaim_cache = None;
-                    }
+                if prefix_ran {
+                    // adoption/registration shifts frames between the
+                    // reclaimable categories: stale bound must not
+                    // authorize further grinding (see reclaim_cache)
+                    reclaim_cache = None;
                 }
             }
             if self.pages.is_none()
                 || self.active.len() >= self.batcher.max_batch
-                || self.batcher.waiting() == 0 {
+                || self.batcher.waiting() == 0
+                || !self.scheduler.can_admit(plan) {
                 break;
             }
             let need = {
                 let (pages, probe, pt) = (&self.pages, &self.probe, self.cfg.page_tokens);
-                let reuse = move |r: &Request| reused_tokens(pages, probe, pt, r);
+                let chunked = self.scheduler.chunked();
+                let reuse = move |r: &Request| reused_tokens(pages, probe, pt, chunked, r);
                 self.batcher.min_projected_in_lookahead_with(&reuse)
             };
             let Some(need) = need else { break };
@@ -301,24 +370,202 @@ impl<'a> Engine<'a> {
         }
 
         // stall detection: nothing running and no waiting request can
-        // ever be admitted -> surface the simulated OOM instead of
-        // spinning
+        // ever be admitted -> reject the head request (its projection
+        // exceeds what relief could ever free) instead of spinning or
+        // tearing the engine down.  The rest of the queue gets its chance
+        // next step.
         if !admitted_any && self.active.is_empty() && self.batcher.waiting() > 0 {
             self.metrics.oom_events += 1;
-            let need = self.batcher.min_projected_in_lookahead().unwrap_or(0);
-            anyhow::bail!(
-                "no waiting request can be admitted: smallest projected footprint \
-                 {} bytes > {} free (capacity {})",
-                need, self.budget.free(), self.budget.capacity);
+            let req = self.batcher.queue.pop_front().expect("waiting > 0");
+            let need = self.batcher.projected_bytes(&req);
+            self.rejections.push(Rejection {
+                id: req.id,
+                reason: format!(
+                    "cannot admit: projected footprint {} bytes > {} free (capacity {})",
+                    need, self.budget.free(), self.budget.capacity),
+            });
         }
+        Ok(())
+    }
 
-        // ---- one batched decode step ----
-        if !self.active.is_empty() {
-            let inputs: Vec<i32> = self.active.iter().map(|a| a.next_input).collect();
-            let mut caches: Vec<&mut crate::kvcache::SeqKvCache> =
-                self.active.iter_mut().map(|a| &mut a.cache).collect();
+    /// Legacy (`--step-tokens 0`) admission: adopt any shared prefix,
+    /// prefill the **whole** prompt inline via the dense
+    /// [`Forward::prefill_from`] replay, sample the first token, and join
+    /// the decode batch — bit-for-bit the pre-scheduler engine.  Returns
+    /// whether the prefix machinery ran (reclaim-bound invalidation).
+    fn admit_legacy(&mut self, fwd: &Forward, plan: &mut StepPlan,
+                    req: Request) -> Result<bool> {
+        // plan bookkeeping only: legacy grants are always whole-prompt
+        let _ = self.scheduler.grant_chunk(plan, req.prompt.len());
+        let mut cache = self.cfg.method.make_cache(&self.rt.model);
+        // shared-prefix lookup (DESIGN.md §Prefix-Sharing): adopt a
+        // registered whole-page prefix's quantized pages as shared
+        // read-only frames, capped by what this prompt's window
+        // policies would quantize anyway (the bit-identity bound)
+        let mut adopted = 0usize;
+        if let Some(pool) = &mut self.pages {
+            if pool.prefix_cache_enabled() {
+                let cap = cache.max_shareable_prefix(req.prompt.len(),
+                                                     self.cfg.page_tokens);
+                adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
+                if adopted > 0 {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_tokens_reused += adopted;
+                }
+            }
+        }
+        // the dense forward covers the full prompt either way, so
+        // these logits are bit-identical to a cold prefill; on a
+        // hit only the unshared suffix is quantized into the cache
+        let logits = fwd.prefill_from(&req.prompt, &mut cache, adopted)?;
+        self.metrics.prefill_tokens += req.prompt.len();
+        let vocab = self.rt.model.vocab;
+        let last = &logits[(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
+        let first_tok = req.sampler.sample(last, &mut self.rng) as i32;
+        let now = self.metrics.now_ns();
+        let ar = ActiveRequest {
+            req, cache, state: Lifecycle::Decoding,
+            generated: vec![first_tok], next_input: first_tok,
+            prefilled_ns: now, first_token_ns: Some(now), last_token_ns: now,
+        };
+        self.metrics.decode_tokens += 1;
+        self.metrics.ttft_ms.record((now - ar.req.submitted_ns) as f64 / 1e6);
+        self.active.push(ar);
+        // post-prefill memory charge (admission already projected
+        // it; the decode-step pressure loop handles any
+        // shortfall).  Only the new sequence needs syncing — the
+        // rest were reconciled by the last full charge.
+        let _ = self.charge_lane(self.active.len() - 1)?;
+        // register the new sequence's own aligned prefix while its
+        // pages are provably still at the plan's width (right
+        // after the post-prefill sync, before any relief round;
+        // the index reference then keeps them pristine — shared
+        // pages are downshift-exempt and copy-on-write)
+        let mut prefix_ran = false;
+        if let Some(pool) = &mut self.pages {
+            if pool.prefix_cache_enabled() {
+                let a = self.active.last().expect("just pushed");
+                let cap = a.cache.max_shareable_prefix(a.req.prompt.len(),
+                                                       self.cfg.page_tokens);
+                pool.register_prefix(a.req.id, &a.req.prompt, cap, &a.cache);
+                prefix_ran = true;
+            }
+        }
+        Ok(prefix_ran)
+    }
+
+    /// Chunked admission: adopt any shared prefix (clamped strictly below
+    /// the prompt length — the final token must run through a chunk so
+    /// its logits exist to sample the first output), then enter the batch
+    /// as `Prefilling { done: adopted }`.  No forward pass here; chunks
+    /// are granted by the step plan.  Returns whether the prefix
+    /// machinery ran.
+    fn admit_chunked(&mut self, req: Request) -> Result<bool> {
+        let mut cache = self.cfg.method.make_cache(&self.rt.model);
+        let mut adopted = 0usize;
+        let mut prefix_ran = false;
+        if let Some(pool) = &mut self.pages {
+            if pool.prefix_cache_enabled() {
+                // never adopt the whole prompt: leave >= 1 token for the
+                // first chunk's forward pass (reused_tokens projects with
+                // this same clamp)
+                let cap = cache.max_shareable_prefix(req.prompt.len(),
+                                                     self.cfg.page_tokens)
+                    .min(req.prompt.len().saturating_sub(1) / self.cfg.page_tokens
+                         * self.cfg.page_tokens);
+                adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
+                if adopted > 0 {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_tokens_reused += adopted;
+                }
+                prefix_ran = true;
+            }
+        }
+        self.active.push(ActiveRequest {
+            req, cache, state: Lifecycle::Prefilling { done: adopted },
+            generated: Vec::new(), next_input: 0,
+            prefilled_ns: 0, first_token_ns: None, last_token_ns: 0,
+        });
+        let _ = self.charge_lane(self.active.len() - 1)?;
+        Ok(prefix_ran)
+    }
+
+    /// Run one granted prefill chunk on `lane` (chunked mode only): the
+    /// chunk attends over the lane's live cache ([`Forward::prefill_chunk`]),
+    /// and a completing grant samples the first token, promotes the lane
+    /// to `Decoding` (it joins this same step's decode batch — the token
+    /// the grant reserved), and registers its shareable prefix.  Returns
+    /// whether the prefix machinery ran.
+    fn execute_chunk(&mut self, fwd: &Forward, lane: usize,
+                     grant: ChunkGrant) -> Result<bool> {
+        let Lifecycle::Prefilling { done } = self.active[lane].state else {
+            unreachable!("chunk granted to a non-prefilling lane");
+        };
+        let a = &mut self.active[lane];
+        debug_assert!(done + grant.tokens <= a.req.prompt.len());
+        let chunk = &a.req.prompt[done..done + grant.tokens];
+        let logits = fwd.prefill_chunk(chunk, done, &mut a.cache, &mut self.scratch)?;
+        self.metrics.prefill_tokens += grant.tokens;
+        // chunk attention time is NOT recorded into attn_us: that
+        // histogram measures the batched decode fan-out (its rustdoc and
+        // the e2e_decode threads rows depend on the unit staying pure);
+        // chunk cost shows up in step_us and the TTFT it serializes
+        if grant.completes {
+            let vocab = self.rt.model.vocab;
+            let last = &logits[(grant.tokens - 1) * vocab..grant.tokens * vocab];
+            let first_tok = a.req.sampler.sample(last, &mut self.rng) as i32;
+            let now = self.metrics.now_ns();
+            a.generated.push(first_tok);
+            a.next_input = first_tok;
+            a.state = Lifecycle::Decoding;
+            a.prefilled_ns = now;
+            a.first_token_ns = Some(now);
+            a.last_token_ns = now;
+            let submitted = a.req.submitted_ns;
+            self.metrics.decode_tokens += 1;
+            self.metrics.ttft_ms.record((now - submitted) as f64 / 1e6);
+        } else {
+            a.state = Lifecycle::Prefilling { done: done + grant.tokens };
+        }
+        // the chunk's appends changed this lane's footprint; keep the
+        // pool reconciled so the relief rounds' O(1) recharges stay valid
+        let _ = self.charge_lane(lane)?;
+        let mut prefix_ran = false;
+        if grant.completes {
+            if let Some(pool) = &mut self.pages {
+                if pool.prefix_cache_enabled() {
+                    let a = &self.active[lane];
+                    let cap = a.cache.max_shareable_prefix(a.req.prompt.len(),
+                                                           self.cfg.page_tokens);
+                    pool.register_prefix(a.req.id, &a.req.prompt, cap, &a.cache);
+                    prefix_ran = true;
+                }
+            }
+        }
+        Ok(prefix_ran)
+    }
+
+    /// One batched decode step over every `Decoding` lane, then the
+    /// memory charge with the downshift → prefix-evict → preempt ladder
+    /// on overflow (paged mode; the monolithic path keeps the original
+    /// evict-youngest policy, counting each eviction as an oom_event).
+    fn decode_and_relieve(&mut self, fwd: &Forward) -> Result<()> {
+        let decoding: Vec<usize> = self.active.iter().enumerate()
+            .filter(|(_, a)| a.is_decoding())
+            .map(|(i, _)| i)
+            .collect();
+        if !decoding.is_empty() {
+            let inputs: Vec<i32> = decoding.iter()
+                .map(|&i| self.active[i].next_input)
+                .collect();
             let busy0 = self.pool.map(|p| p.busy_ns()).unwrap_or(0);
-            let logits = fwd.decode_step(&inputs, &mut caches, &mut self.scratch)?;
+            let logits = {
+                let mut caches: Vec<&mut SeqKvCache> = self.active.iter_mut()
+                    .filter(|a| a.is_decoding())
+                    .map(|a| &mut a.cache)
+                    .collect();
+                fwd.decode_step(&inputs, &mut caches, &mut self.scratch)?
+            };
             self.metrics.attn_us.record(self.scratch.attn_ns as f64 / 1e3);
             if let Some(p) = self.pool {
                 if p.threads() > 1 && self.scratch.attn_ns > 0 {
@@ -328,26 +575,34 @@ impl<'a> Engine<'a> {
                 }
             }
             let vocab = self.rt.model.vocab;
-            for (b, ar) in self.active.iter_mut().enumerate() {
+            let now = self.metrics.now_ns();
+            for (b, &i) in decoding.iter().enumerate() {
+                let ar = &mut self.active[i];
                 let row = &logits[b * vocab..(b + 1) * vocab];
                 let tok = ar.req.sampler.sample(row, &mut self.rng) as i32;
                 ar.generated.push(tok);
                 ar.next_input = tok;
+                // time-between-tokens: gap since this lane's previous
+                // token (the first decode token measures from TTFT)
+                self.metrics.tbt_ms.record((now - ar.last_token_ns) as f64 / 1e6);
+                ar.last_token_ns = now;
             }
-            self.metrics.decode_tokens += self.active.len();
+            self.metrics.decode_tokens += decoding.len();
+        }
 
+        if !self.active.is_empty() {
             // memory charge; on simulated OOM the pressure controller
             // first downshifts the oldest out-of-window unshared pages
             // down the bit ladder, then evicts LRU prefix-index entries
             // (freeing index-only frames and un-sharing pages so the
             // ladder can resume), and only past both rungs preempts the
-            // lowest-priority (youngest) sequence (paged mode); the
-            // monolithic path keeps the original evict-youngest policy,
-            // counting each eviction as an oom_event.  One full page-table
-            // reconcile after the decode mutations; the relief rounds keep
-            // the pool consistent themselves (targeted sync in
-            // downshift_once, free_owner on preempt) so each retry charge
-            // is the O(1) counter, not a rescan of every sequence.
+            // lowest-priority (youngest) sequence — which may be a
+            // mid-prompt `Prefilling` lane; preempt-restart discards its
+            // chunk progress.  One full page-table reconcile after the
+            // decode/chunk mutations; the relief rounds keep the pool
+            // consistent themselves (targeted sync in downshift_once,
+            // free_owner on preempt) so each retry charge is the O(1)
+            // counter, not a rescan of every sequence.
             let mut over = self.charge_memory()?.is_err();
             while over {
                 if self.downshift_once().is_some() {
@@ -377,8 +632,10 @@ impl<'a> Engine<'a> {
                 over = self.charge_current()?.is_err();
             }
         }
+        Ok(())
+    }
 
-        // ---- retire ----
+    fn retire_done(&mut self) -> Result<Vec<Completion>> {
         let now = self.metrics.now_ns();
         let mut done = Vec::new();
         let mut i = 0;
@@ -397,17 +654,29 @@ impl<'a> Engine<'a> {
             // release retired caches' memory so waiting requests can admit
             let _ = self.charge_memory()?;
         }
-        self.metrics.step_us.record(t0.elapsed().as_micros() as f64);
         Ok(done)
     }
 
     /// Run until all submitted requests complete; returns all completions.
+    /// A rejected (never-admittable) request surfaces as an error here —
+    /// including one left over from a caller-driven [`Engine::step`] that
+    /// was never drained — preserving the one-shot harnesses' OOM
+    /// semantics; the serve loop instead drains
+    /// [`Engine::take_rejections`] and keeps stepping.
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
         let mut all = Vec::new();
-        while !self.idle() {
+        loop {
+            if !self.rejections.is_empty() {
+                // consume the rejection while surfacing it — a stale,
+                // already-reported entry must not poison later calls
+                let r = self.rejections.remove(0);
+                anyhow::bail!("request {} rejected: {}", r.id, r.reason);
+            }
+            if self.idle() {
+                return Ok(all);
+            }
             all.extend(self.step()?);
         }
-        Ok(all)
     }
 
     /// Read-only view of the paged pool (None in monolithic mode) —
@@ -421,25 +690,31 @@ impl<'a> Engine<'a> {
     /// here, on the engine thread — the decode fan-out never touches the
     /// pool), else the exact summed modeled bytes.
     fn charge_memory(&mut self) -> Result<std::result::Result<(), ()>> {
-        self.charge(true)
+        self.charge_sync(None)
     }
 
-    /// Cheaper variant for the admission loop: only the just-admitted
-    /// (last) sequence's table needs reconciling — everyone else was
-    /// synced by the previous full charge and hasn't decoded since.
-    fn charge_admitted(&mut self) -> Result<std::result::Result<(), ()>> {
-        self.charge(false)
+    /// Cheaper variant for admission/chunk execution: only `lane`'s table
+    /// needs reconciling — everyone else was synced by the previous full
+    /// charge and hasn't mutated since.
+    fn charge_lane(&mut self, lane: usize) -> Result<std::result::Result<(), ()>> {
+        self.charge_sync(Some(lane))
     }
 
-    fn charge(&mut self, full_sync: bool) -> Result<std::result::Result<(), ()>> {
+    /// Shared charge body: reconcile `lane`'s page table (or every
+    /// lane's, for `None`), then charge the modeled bytes.
+    fn charge_sync(&mut self, lane: Option<usize>) -> Result<std::result::Result<(), ()>> {
         let kv = match &mut self.pages {
             Some(pool) => {
-                if full_sync {
-                    for a in &self.active {
+                match lane {
+                    None => {
+                        for a in &self.active {
+                            pool.sync(a.req.id, &a.cache);
+                        }
+                    }
+                    Some(i) => {
+                        let a = &self.active[i];
                         pool.sync(a.req.id, &a.cache);
                     }
-                } else if let Some(a) = self.active.last() {
-                    pool.sync(a.req.id, &a.cache);
                 }
                 // sync is where the pool observes copy-on-write splits
                 self.metrics.cow_splits = pool.stats.cow_splits;
@@ -521,11 +796,21 @@ impl<'a> Engine<'a> {
 /// Sound because nothing can evict the probed entry between this probe
 /// and the adoption in the same admission iteration (relief rounds run
 /// between iterations, never inside one).
+///
+/// `chunked` must mirror the engine's mode: chunked admission clamps
+/// adoption strictly below the prompt (the final token must forward
+/// through a chunk), so the projection applies the same clamp — else a
+/// fully-registered page-aligned prompt would be under-projected by the
+/// one page `admit_chunked` declines to adopt.
 fn reused_tokens(pages: &Option<PagePool>, probe: &Option<SeqKvCache>,
-                 page_tokens: usize, req: &Request) -> usize {
+                 page_tokens: usize, chunked: bool, req: &Request) -> usize {
     match (pages, probe) {
         (Some(pool), Some(template)) => {
-            let cap = template.max_shareable_prefix(req.prompt.len(), page_tokens);
+            let mut cap = template.max_shareable_prefix(req.prompt.len(), page_tokens);
+            if chunked && page_tokens > 0 {
+                cap = cap.min(req.prompt.len().saturating_sub(1)
+                              / page_tokens * page_tokens);
+            }
             pool.probe_prefix(&req.prompt, cap)
         }
         _ => 0,

@@ -11,8 +11,18 @@ pub struct Metrics {
     pub completions: usize,
     pub oom_events: usize,
     pub ttft_ms: Histogram,
+    /// time between consecutive tokens of the same sequence (ms): one
+    /// sample per decode token, measured on the engine clock.  The
+    /// serving-latency metric chunked prefill exists to protect — an
+    /// inline whole-prompt prefill shows up here as a p99 spike
+    /// (DESIGN.md §Scheduler)
+    pub tbt_ms: Histogram,
     pub total_ms: Histogram,
     pub step_us: Histogram,
+    /// per-step fraction of the `--step-tokens` budget actually planned
+    /// (decode + chunk tokens) — recorded only in chunked mode; values
+    /// over 1.0 mean decode lanes alone exceeded the budget
+    pub budget_util: Histogram,
     /// per-step wall time of the decode attention fan-out (append+attend
     /// summed over layers), in microseconds
     pub attn_us: Histogram,
@@ -43,7 +53,8 @@ impl Default for Metrics {
     fn default() -> Self {
         Metrics { started: Instant::now(), prefill_tokens: 0, decode_tokens: 0,
                   completions: 0, oom_events: 0, ttft_ms: Histogram::default(),
-                  total_ms: Histogram::default(), step_us: Histogram::default(),
+                  tbt_ms: Histogram::default(), total_ms: Histogram::default(),
+                  step_us: Histogram::default(), budget_util: Histogram::default(),
                   attn_us: Histogram::default(), pool_util: Histogram::default(),
                   peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0,
                   prefix_hits: 0, prefix_tokens_reused: 0, cow_splits: 0 }
@@ -95,14 +106,25 @@ impl Metrics {
             format!(" | prefix hits {} ({} tok reused) | cow {}",
                     self.prefix_hits, self.prefix_tokens_reused, self.cow_splits)
         };
+        let tbt = if self.tbt_ms.is_empty() {
+            String::new()
+        } else {
+            format!(" | tbt p50 {:.1} ms p99 {:.1} ms",
+                    self.tbt_ms.quantile(0.5), self.tbt_ms.quantile(0.99))
+        };
+        let budget = if self.budget_util.is_empty() {
+            String::new()
+        } else {
+            format!(" | step budget util {:.0}%", self.budget_util.mean() * 100.0)
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
-             ttft p50 {:.1} ms p95 {:.1} ms | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             attn p50 {:.0} µs{} | peak kv {:.2} MiB | oom {}{}{}",
+             ttft p50 {:.1} ms p95 {:.1} ms{} | e2e p50 {:.1} ms | step p50 {:.0} µs | \
+             attn p50 {:.0} µs{}{} | peak kv {:.2} MiB | oom {}{}{}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
-            self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
-            self.attn_us.quantile(0.5), util,
+            tbt, self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
+            self.attn_us.quantile(0.5), util, budget,
             self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure,
             prefix)
     }
@@ -193,6 +215,22 @@ mod tests {
         let r = m.report();
         assert!(r.contains("prefix hits 2 (128 tok reused)"), "{r}");
         assert!(r.contains("cow 1"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_tbt_and_budget_lines_only_when_active() {
+        let mut m = Metrics::default();
+        let r = m.report();
+        assert!(!r.contains("tbt p50"), "{r}");
+        assert!(!r.contains("step budget util"), "{r}");
+        m.tbt_ms.record(4.0);
+        m.tbt_ms.record(4.0);
+        m.tbt_ms.record(8.0);
+        m.budget_util.record(0.5);
+        m.budget_util.record(1.0);
+        let r = m.report();
+        assert!(r.contains("tbt p50 4.0 ms p99 8.0 ms"), "{r}");
+        assert!(r.contains("step budget util 75%"), "{r}");
     }
 
     #[test]

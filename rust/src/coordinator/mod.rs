@@ -1,23 +1,27 @@
 //! L3 serving coordinator: request router, continuous batcher,
-//! prefill/decode scheduling, engine loop, metrics, TCP server.
+//! iteration-level scheduler, engine loop, metrics, TCP server.
 //!
 //! The paper is a serving-side contribution, so the coordinator follows
-//! the vLLM-router shape: requests enter a FIFO, the batcher admits them
-//! into the running batch under a (simulated-HBM) memory budget computed
-//! from the cache policy's modeled bytes/token (with a bounded admission
-//! lookahead against head-of-line blocking), and the engine interleaves
-//! prefill with one batched decode step per iteration.  Under memory
-//! pressure the paged pool first requantizes old pages down the bit
-//! ladder and then preempts the youngest request (monolithic mode keeps
-//! the plain evict-youngest-on-OOM policy) — DESIGN.md §Memory-Manager.
+//! the vLLM-router shape: requests enter a FIFO, the scheduler plans
+//! each step — one decode token per running sequence first, then the
+//! remaining `--step-tokens` budget as group-aligned prefill chunks and
+//! fresh admissions through the batcher's bounded lookahead
+//! (DESIGN.md §Scheduler) — and the engine executes the plan, charges
+//! the (simulated-HBM) memory budget and retires completions.  Under
+//! memory pressure the paged pool first requantizes old pages down the
+//! bit ladder and then preempts the youngest request (monolithic mode
+//! keeps the plain evict-youngest-on-OOM policy) —
+//! DESIGN.md §Memory-Manager.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::Batcher;
 pub use engine::{estimate_bytes_per_token, Engine, EngineCfg};
 pub use metrics::{Histogram, Metrics};
-pub use request::{ActiveRequest, Completion, Request, RequestId};
+pub use request::{ActiveRequest, Completion, Lifecycle, Rejection, Request, RequestId};
+pub use scheduler::{ChunkGrant, Scheduler, StepPlan};

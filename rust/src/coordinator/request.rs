@@ -1,4 +1,6 @@
-//! Request types flowing through the serving coordinator.
+//! Request types flowing through the serving coordinator, including the
+//! explicit per-request lifecycle the iteration-level scheduler drives
+//! (DESIGN.md §Scheduler).
 
 use crate::kvcache::SeqKvCache;
 use crate::model::Sampler;
@@ -18,19 +20,69 @@ pub struct Request {
     pub submitted_ns: u64,
 }
 
+/// Where a request sits in the scheduler's state machine
+/// (DESIGN.md §Scheduler).  `Waiting` lives implicitly in the batcher
+/// queue; the variants below describe an [`ActiveRequest`].  A preempted
+/// request is requeued (back to `Waiting`) and restarted from scratch —
+/// the preempt-restart policy — so `Preempted` is a transition, not a
+/// resident state.
+///
+/// ```text
+/// Waiting ──admit──▶ Prefilling{done} ──chunks──▶ Decoding ──▶ Done
+///    ▲                    │                          │
+///    └──────(preempt-restart: requeue front)─────────┘
+/// ```
+///
+/// With `--step-tokens 0` (the legacy whole-prefill path) an admission
+/// jumps straight from `Waiting` to `Decoding`: the full prompt is
+/// prefilled inline and `Prefilling` is never observable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// mid-prompt: `done` prompt tokens are already in the cache
+    /// (prefix-adopted pages count as done); the scheduler grants this
+    /// request group-aligned chunks until the prompt completes
+    Prefilling { done: usize },
+    /// prompt fully prefilled; one decode token per step
+    Decoding,
+}
+
 /// A request admitted into the running batch.
 pub struct ActiveRequest {
     pub req: Request,
     pub cache: SeqKvCache,
+    pub state: Lifecycle,
     pub generated: Vec<i32>,
-    /// next input token for the decode step
+    /// next input token for the decode step (meaningful once `Decoding`)
     pub next_input: i32,
     pub prefilled_ns: u64,
     pub first_token_ns: Option<u64>,
+    /// when this request's latest token was emitted (feeds the
+    /// time-between-tokens histogram, `Metrics::tbt_ms`)
+    pub last_token_ns: u64,
 }
 
 impl ActiveRequest {
+    /// Prompt tokens already resident in the cache.
+    pub fn prefilled(&self) -> usize {
+        match self.state {
+            Lifecycle::Prefilling { done } => done,
+            Lifecycle::Decoding => self.req.prompt.len(),
+        }
+    }
+
+    /// Prompt tokens still to prefill (0 once decoding).
+    pub fn prompt_remaining(&self) -> usize {
+        self.req.prompt.len() - self.prefilled()
+    }
+
+    pub fn is_decoding(&self) -> bool {
+        self.state == Lifecycle::Decoding
+    }
+
     pub fn is_done(&self) -> bool {
+        if !self.is_decoding() {
+            return false;
+        }
         if self.generated.len() >= self.req.max_new_tokens {
             return true;
         }
@@ -39,6 +91,16 @@ impl ActiveRequest {
         }
         false
     }
+}
+
+/// A request the engine determined can never be admitted (its projected
+/// footprint exceeds what the budget could ever free).  The server maps
+/// this to an `ERR` line for the one offending client; the engine keeps
+/// stepping for everyone else.
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub id: RequestId,
+    pub reason: String,
 }
 
 /// A finished request with its generation and timing.

@@ -1,0 +1,384 @@
+//! Iteration-level scheduler: the per-step token budget and the
+//! chunked-prefill planner (DESIGN.md §Scheduler).
+//!
+//! Each [`Engine::step`](crate::coordinator::Engine::step) asks the
+//! scheduler to build a [`StepPlan`]: **one decode token per decoding
+//! sequence** (decode-first, so time-between-tokens stays flat no matter
+//! what arrives), then the remaining budget goes to prefill — group-
+//! aligned chunks granted to the *oldest* partially-prefilled request
+//! first, then to fresh admissions popped through the batcher's bounded
+//! lookahead.  The scheduler owns every admission decision; the engine
+//! owns execution (forward passes, memory charges, the pressure ladder).
+//!
+//! Budget semantics (`--step-tokens N`):
+//!
+//! * `N == 0` — **legacy mode, bit-for-bit**: no budget; an admission
+//!   prefills its whole prompt inline (the pre-scheduler engine).  Every
+//!   grant is a full-prompt completing grant.
+//! * `N > 0` — **chunked**: planned work per step never exceeds `N`
+//!   tokens, *except* that decode is never skipped — when the decoding
+//!   lane count alone exceeds `N`, the step runs those lanes and grants
+//!   no prefill.  A completing grant reserves one extra token for the
+//!   promoted lane's same-step decode, so the invariant is exact:
+//!   `prefill + decode ≤ max(N, decoding lanes at plan time)`.
+//!   Sizing rule: `N ≥ max_batch + group + 1` guarantees the oldest
+//!   prefill progresses every step — including the final group-sized
+//!   remainder plus its reserved promotion token — even with a full
+//!   decode batch; smaller budgets only progress as decoders retire.
+//!
+//! Chunk alignment: a request's prefill boundary always lands on a
+//! quant-group boundary — partial grants are group multiples (adopted
+//! prefix pages are page- hence group-aligned, so resumed chunks stay
+//! aligned) — and only the final, completing grant may carry the
+//! sub-group remainder.  This keeps every sealed page bit-uniform and
+//! composes with the prefix-cache adoption path
+//! (DESIGN.md §Prefix-Sharing).  Grants are additionally clamped to the
+//! largest compiled bucket (`max_chunk`), which is what lets a chunked
+//! engine prefill prompts *longer* than any bucket — the legacy path
+//! cannot.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::request::Request;
+use crate::kvcache::MemoryBudget;
+
+/// The per-step budget policy.  Stateless between steps: all mutable
+/// bookkeeping lives in the [`StepPlan`] the engine threads through one
+/// `step()` call.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduler {
+    /// per-step token budget (0 = legacy whole-prefill mode)
+    step_tokens: usize,
+    /// quant group size — the chunk alignment unit
+    group: usize,
+    /// largest prefill chunk the runtime can execute (largest compiled
+    /// bucket, rounded down to a group multiple)
+    max_chunk: usize,
+}
+
+/// What one engine step planned and executed, in tokens.  Built
+/// incrementally: `begin_step` seeds the decode lanes, each admission and
+/// chunk grant accumulates, and the engine reads the totals for the
+/// budget-utilization gauge (`Metrics::budget_util`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepPlan {
+    /// decode tokens: one per lane decoding at plan time, plus one per
+    /// completing grant (the promoted lane decodes this same step)
+    pub decode_tokens: usize,
+    /// prompt tokens granted to prefill chunks this step
+    pub prefill_tokens: usize,
+    /// requests admitted from the queue this step
+    pub admissions: usize,
+    /// chunk grants issued this step
+    pub chunks: usize,
+}
+
+impl StepPlan {
+    /// Total tokens this step will run.
+    pub fn total_tokens(&self) -> usize {
+        self.decode_tokens + self.prefill_tokens
+    }
+}
+
+/// One prefill grant for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkGrant {
+    /// prompt tokens to prefill now (a group multiple unless `completes`)
+    pub tokens: usize,
+    /// this grant reaches the end of the prompt: sample the first token
+    /// and promote the lane to `Decoding`
+    pub completes: bool,
+}
+
+impl Scheduler {
+    /// `step_tokens == 0` keeps the legacy whole-prefill behavior;
+    /// otherwise the budget must *exceed* one quant group: a completing
+    /// grant for a group-sized final remainder costs `group + 1` tokens
+    /// (the remainder plus the reserved promotion decode), so a budget
+    /// of exactly `group` could admit a group-aligned prompt it can
+    /// never finish.  `max_chunk` is the largest row count the
+    /// runtime's compiled buckets admit.
+    pub fn new(step_tokens: usize, group: usize, max_chunk: usize) -> Result<Self> {
+        if group == 0 {
+            bail!("scheduler needs a positive quant group");
+        }
+        if step_tokens > 0 && step_tokens <= group {
+            bail!("--step-tokens {step_tokens} must exceed the quant group {group}: \
+                   a group-sized final remainder needs {} tokens (remainder + its \
+                   promotion decode) to ever complete \
+                   (use 0 for the unbudgeted legacy mode)", group + 1);
+        }
+        let max_chunk = max_chunk / group * group;
+        if step_tokens > 0 && max_chunk == 0 {
+            bail!("largest compiled bucket is smaller than the quant group {group}: \
+                   no group-aligned chunk is executable (--step-tokens needs 0 here)");
+        }
+        Ok(Scheduler { step_tokens, group, max_chunk })
+    }
+
+    /// Chunked-prefill mode (`--step-tokens > 0`)?
+    pub fn chunked(&self) -> bool {
+        self.step_tokens > 0
+    }
+
+    /// Open a step's plan: decode-first, one token per decoding lane.
+    pub fn begin_step(&self, decoding_lanes: usize) -> StepPlan {
+        StepPlan { decode_tokens: decoding_lanes, ..StepPlan::default() }
+    }
+
+    /// Unspent budget available to prefill (`usize::MAX` in legacy mode —
+    /// the legacy engine admits on slots and memory alone).
+    pub fn remaining(&self, plan: &StepPlan) -> usize {
+        if !self.chunked() {
+            return usize::MAX;
+        }
+        self.step_tokens.saturating_sub(plan.total_tokens())
+    }
+
+    /// May the engine pop another admission this step?  Slots and memory
+    /// are the batcher's business; the scheduler refuses unless the
+    /// remaining budget guarantees the admitted request an immediate
+    /// non-empty grant — an admission that received no chunk would hold
+    /// a batch slot (and any adopted prefix pages) without progressing,
+    /// when it should have stayed in the Waiting queue.
+    ///
+    /// `remaining > group` is exactly that guarantee: a remainder under
+    /// one group completes within `group + 1` tokens (sub-group tokens
+    /// plus the reserved promotion decode), and any larger remainder
+    /// yields a partial grant of at least one group.
+    pub fn can_admit(&self, plan: &StepPlan) -> bool {
+        !self.chunked() || self.remaining(plan) > self.group
+    }
+
+    /// Pop the next admissible request through the batcher's bounded
+    /// lookahead — the scheduler-owned admission decision.  `reuse`
+    /// is the prefix-cache discount probe (DESIGN.md §Prefix-Sharing).
+    pub fn admit(&self, plan: &mut StepPlan, batcher: &mut Batcher, active: usize,
+                 budget: &MemoryBudget, reuse: &dyn Fn(&Request) -> usize)
+                 -> Option<Request> {
+        if !self.can_admit(plan) {
+            return None;
+        }
+        let req = batcher.admit_with_reuse(active, budget, reuse)?;
+        plan.admissions += 1;
+        Some(req)
+    }
+
+    /// Grant the next prefill chunk to a request with `remaining_prompt`
+    /// unprefilled tokens.  Legacy mode always grants the whole prompt.
+    /// Chunked mode grants, in order of preference:
+    ///
+    /// 1. a **completing** grant — the whole remainder plus one reserved
+    ///    decode token for the promotion, when both fit the budget and
+    ///    the remainder fits one bucket;
+    /// 2. a **partial** grant — the largest group multiple that fits the
+    ///    remaining budget, the bucket clamp, and is strictly smaller
+    ///    than the remainder (so completion always goes through rule 1
+    ///    and its reserved decode token);
+    /// 3. `None` — not even one group fits; the request stays
+    ///    `Prefilling` and the next step's budget serves it first.
+    pub fn grant_chunk(&self, plan: &mut StepPlan, remaining_prompt: usize)
+                       -> Option<ChunkGrant> {
+        debug_assert!(remaining_prompt > 0, "nothing left to prefill");
+        if !self.chunked() {
+            plan.prefill_tokens += remaining_prompt;
+            plan.decode_tokens += 1;
+            plan.chunks += 1;
+            return Some(ChunkGrant { tokens: remaining_prompt, completes: true });
+        }
+        let rem = self.remaining(plan);
+        if remaining_prompt <= self.max_chunk && remaining_prompt + 1 <= rem {
+            plan.prefill_tokens += remaining_prompt;
+            plan.decode_tokens += 1;
+            plan.chunks += 1;
+            return Some(ChunkGrant { tokens: remaining_prompt, completes: true });
+        }
+        // partial: group-aligned, under budget and bucket, strictly short
+        // of the remainder
+        let cap = rem.min(self.max_chunk).min(remaining_prompt.saturating_sub(1));
+        let tokens = cap / self.group * self.group;
+        if tokens == 0 {
+            return None;
+        }
+        plan.prefill_tokens += tokens;
+        plan.chunks += 1;
+        Some(ChunkGrant { tokens, completes: false })
+    }
+
+    /// Fraction of the step budget actually planned (`None` in legacy
+    /// mode).  Can exceed 1.0 when decode lanes alone exceed the budget —
+    /// the overload signal the gauge exists to surface.
+    pub fn utilization(&self, plan: &StepPlan) -> Option<f64> {
+        self.chunked()
+            .then(|| plan.total_tokens() as f64 / self.step_tokens as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const G: usize = 32;
+
+    fn sched(step: usize) -> Scheduler {
+        Scheduler::new(step, G, 256).unwrap()
+    }
+
+    #[test]
+    fn rejects_sub_group_budget() {
+        assert!(Scheduler::new(16, 32, 256).is_err());
+        assert!(Scheduler::new(0, 32, 256).is_ok(), "0 = legacy mode");
+        assert!(Scheduler::new(32, 32, 256).is_err(),
+                "group-sized budget can never complete a group-aligned prompt");
+        assert!(Scheduler::new(33, 32, 256).is_ok(), "group + 1 is the floor");
+        assert!(Scheduler::new(64, 32, 16).is_err(), "bucket below group");
+        assert!(Scheduler::new(0, 32, 16).is_ok(),
+                "legacy mode never executes chunks, so the bucket is moot");
+    }
+
+    #[test]
+    fn admission_gate_requires_a_grantable_budget() {
+        let s = sched(64);
+        // the gate opens only when the remaining budget guarantees the
+        // admitted request an immediate non-empty grant (> one group)
+        assert!(s.can_admit(&s.begin_step(0)));
+        assert!(s.can_admit(&s.begin_step(31)), "remaining 33 > group");
+        assert!(!s.can_admit(&s.begin_step(32)),
+                "remaining 32 == group: a group-sized remainder could not be granted");
+        assert!(!s.can_admit(&s.begin_step(64)));
+        // legacy mode never gates
+        assert!(sched(0).can_admit(&sched(0).begin_step(10_000)));
+    }
+
+    #[test]
+    fn legacy_mode_grants_whole_prompt() {
+        let s = sched(0);
+        assert!(!s.chunked());
+        let mut plan = s.begin_step(3);
+        let g = s.grant_chunk(&mut plan, 517).unwrap();
+        assert!(g.completes);
+        assert_eq!(g.tokens, 517);
+        assert_eq!(plan.decode_tokens, 4, "promotion decodes this step");
+        assert!(s.can_admit(&plan));
+        assert_eq!(s.utilization(&plan), None);
+    }
+
+    #[test]
+    fn decode_first_prefill_gets_the_remainder() {
+        let s = sched(100);
+        let mut plan = s.begin_step(90);
+        // 10 tokens left: one 32-token group does not fit -> no grant
+        assert!(s.grant_chunk(&mut plan, 512).is_none());
+        // a tiny completing remainder does fit (4 + 1 promotion <= 10)
+        let g = s.grant_chunk(&mut plan, 4).unwrap();
+        assert!(g.completes);
+        assert_eq!(plan.total_tokens(), 95);
+    }
+
+    #[test]
+    fn partial_grants_are_group_aligned_and_strictly_short() {
+        let s = sched(128);
+        let mut plan = s.begin_step(2);
+        // remainder exactly fills the budget: must stay partial (no room
+        // for the promotion token) and round down to a group multiple
+        let g = s.grant_chunk(&mut plan, 126).unwrap();
+        assert!(!g.completes);
+        assert_eq!(g.tokens % G, 0);
+        assert!(g.tokens < 126);
+        assert_eq!(g.tokens, 96);
+    }
+
+    #[test]
+    fn completing_grant_reserves_promotion_token() {
+        let s = sched(64);
+        let mut plan = s.begin_step(0);
+        // 64 left, budget 64: 64+1 > 64 -> partial 32, not a completion
+        let g = s.grant_chunk(&mut plan, 64).unwrap();
+        assert!(!g.completes);
+        assert_eq!(g.tokens, 32);
+        // 63 left, budget still 32: 63 <= bucket but 63+1 > 32 -> partial
+        let g2 = s.grant_chunk(&mut plan, 63).unwrap();
+        assert!(!g2.completes);
+        assert_eq!(g2.tokens, 32);
+        assert_eq!(plan.total_tokens(), 64);
+        assert_eq!(s.remaining(&plan), 0);
+        assert!(!s.can_admit(&plan));
+    }
+
+    #[test]
+    fn grants_clamp_to_the_bucket() {
+        let s = Scheduler::new(4096, G, 200).unwrap(); // max_chunk -> 192
+        let mut plan = s.begin_step(0);
+        let g = s.grant_chunk(&mut plan, 4000).unwrap();
+        assert!(!g.completes);
+        assert_eq!(g.tokens, 192);
+        // a remainder over the bucket can never complete in one grant
+        let g2 = s.grant_chunk(&mut plan, 193).unwrap();
+        assert!(!g2.completes);
+    }
+
+    #[test]
+    fn budget_never_exceeded_randomized() {
+        let mut rng = Rng::new(0x5CED);
+        for case in 0..200 {
+            let budget = G * rng.range(1, 9) + 1; // 33..257, always > group
+            let s = Scheduler::new(budget, G, G * rng.range(1, 9)).unwrap();
+            let d0 = rng.range(0, 2 * budget);
+            let mut plan = s.begin_step(d0);
+            let mut boundary = 0usize; // simulated prefill boundary
+            for _ in 0..rng.range(1, 8) {
+                let remaining = rng.range(1, 600);
+                if let Some(g) = s.grant_chunk(&mut plan, remaining) {
+                    assert!(g.tokens <= remaining, "case {case}");
+                    if g.completes {
+                        boundary = 0;
+                    } else {
+                        assert_eq!(g.tokens % G, 0, "case {case}: unaligned chunk");
+                        boundary += g.tokens;
+                        assert_eq!(boundary % G, 0, "case {case}");
+                    }
+                }
+                assert!(plan.total_tokens() <= budget.max(d0),
+                        "case {case}: {} tokens over budget {budget} (d0 {d0})",
+                        plan.total_tokens());
+            }
+            if let Some(u) = s.utilization(&plan) {
+                assert!(u <= (budget.max(d0) as f64 / budget as f64) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn no_starvation_under_sustained_decode_load() {
+        // 4 decoders hold 4 budget tokens every step; the prefill still
+        // receives (budget - decode) rounded to groups each step and a
+        // 512-token prompt completes within the arithmetic bound
+        let s = sched(4 + 2 * G);
+        let mut remaining = 512usize;
+        let mut steps = 0;
+        while remaining > 0 {
+            let mut plan = s.begin_step(4);
+            if let Some(g) = s.grant_chunk(&mut plan, remaining) {
+                remaining -= g.tokens;
+            }
+            steps += 1;
+            assert!(steps <= 512 / G + 2, "prefill starved: {remaining} left");
+        }
+        assert!(steps >= 512 / (2 * G), "completed implausibly fast");
+    }
+
+    #[test]
+    fn oldest_prefill_first_is_engine_ordering() {
+        // the scheduler grants to whatever lane the engine offers first;
+        // the engine offers lanes in admission order — pin the plan-level
+        // consequence: a second prefill sees only what the first left
+        let s = sched(128);
+        let mut plan = s.begin_step(0);
+        let g1 = s.grant_chunk(&mut plan, 512).unwrap(); // oldest
+        assert_eq!(g1.tokens, 128, "oldest prefill takes the whole budget");
+        assert!(s.grant_chunk(&mut plan, 512).is_none(),
+                "a younger prefill gets nothing once the budget is spent");
+    }
+}

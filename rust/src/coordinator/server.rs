@@ -8,6 +8,11 @@
 //! A client thread parses requests into the shared queue; the engine
 //! thread runs the continuous-batching loop and routes completions back
 //! over per-request channels.
+//!
+//! A request the engine can *never* admit (projected footprint beyond
+//! the KV budget) is answered with an `ERR` line on its own connection —
+//! the engine keeps stepping and every other client is unaffected
+//! ([`Engine::take_rejections`]).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -23,8 +28,11 @@ use crate::model::Sampler;
 use crate::runtime::Runtime;
 use crate::util::pool::{resolve_threads, WorkerPool};
 
+/// Per-request outcome routed back to the owning client thread.
+type Outcome = std::result::Result<Completion, String>;
+
 enum Msg {
-    New(Request, Sender<Completion>),
+    New(Request, Sender<Outcome>),
     Shutdown,
 }
 
@@ -65,7 +73,7 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
     let threads = cfg.threads;
     WorkerPool::scoped(threads, |pool| {
         let mut engine = Engine::with_pool(rt, cfg, Some(pool))?;
-        let mut pending: HashMap<u64, Sender<Completion>> = HashMap::new();
+        let mut pending: HashMap<u64, Sender<Outcome>> = HashMap::new();
         let mut served = 0usize;
         loop {
             // drain incoming
@@ -77,6 +85,17 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
                     }
                     Msg::Shutdown => return Ok(()),
                 }
+            }
+            // a never-admittable request fails alone: ERR to its own
+            // client, the engine keeps stepping for everyone else.
+            // Drained BEFORE the idle check — submit-time rejections
+            // (over-bucket prompts) can leave the engine idle, and
+            // step-produced ones land here on the next loop pass.
+            for r in engine.take_rejections() {
+                if let Some(done_tx) = pending.remove(&r.id) {
+                    let _ = done_tx.send(Err(r.reason));
+                }
+                served += 1;
             }
             if engine.idle() {
                 std::thread::sleep(std::time::Duration::from_millis(2));
@@ -92,7 +111,7 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
             }
             for c in engine.step()? {
                 if let Some(done_tx) = pending.remove(&c.id) {
-                    let _ = done_tx.send(c);
+                    let _ = done_tx.send(Ok(c));
                 }
                 served += 1;
             }
@@ -127,10 +146,11 @@ fn handle_client(stream: TcpStream, tx: Sender<Msg>,
                                     submitted_ns: 0 };
                 tx.send(Msg::New(req, done_tx)).map_err(|_| anyhow!("engine gone"))?;
                 match done_rx.recv() {
-                    Ok(c) => {
+                    Ok(Ok(c)) => {
                         let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
                         writeln!(out, "OK {}", toks.join(","))?;
                     }
+                    Ok(Err(reason)) => writeln!(out, "ERR {reason}")?,
                     Err(_) => writeln!(out, "ERR engine dropped request from {peer}")?,
                 }
             }

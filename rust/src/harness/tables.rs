@@ -197,7 +197,9 @@ pub fn fig6(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
 pub fn fig7(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     println!("# Fig 7 — peak KV memory during inference (batch=4, prompt 64, gen 192)");
     let (_, plan) = profiled_plan(rt, cfg)?;
-    println!("{:<22} {:>12} {:>12} {:>10}", "method", "peak_kv_KiB", "vs FP16", "tok/s");
+    println!("{:<22} {:>12} {:>12} {:>10} {:>9} {:>9} {:>9} {:>9}",
+             "method", "peak_kv_KiB", "vs FP16", "tok/s",
+             "ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99");
     let mut fp16_peak = 0f64;
     for method in Method::comparison_set(&plan) {
         let s = run_serving(rt, &method, 4, 64, 192, None, 0)?;
@@ -205,9 +207,20 @@ pub fn fig7(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
         if matches!(method, Method::Fp16) {
             fp16_peak = kib;
         }
-        println!("{:<22} {:>12.2} {:>11.2}x {:>10.1}", method.name(), kib,
-                 fp16_peak / kib.max(1e-9), s.tok_per_s);
+        println!("{:<22} {:>12.2} {:>11.2}x {:>10.1} {:>9.1} {:>9.1} {:>9.2} {:>9.2}",
+                 method.name(), kib, fp16_peak / kib.max(1e-9), s.tok_per_s,
+                 s.ttft_p50_ms, s.ttft_p99_ms, s.tbt_p50_ms, s.tbt_p99_ms);
     }
+    // iteration-level scheduling row (DESIGN.md §Scheduler): the same
+    // kvmix workload under a chunked step budget — memory is unchanged,
+    // the serving-latency columns are what move (late admissions stop
+    // waiting behind whole-batch inline prefills)
+    let step = 2 * rt.model.group;
+    let s = run_serving_chunked(rt, &Method::Kvmix(plan), 4, 64, 192, None, 0, step)?;
+    let kib = s.peak_kv_bytes as f64 / 1024.0;
+    println!("{:<22} {:>12.2} {:>11.2}x {:>10.1} {:>9.1} {:>9.1} {:>9.2} {:>9.2}",
+             format!("kvmix +step{step}"), kib, fp16_peak / kib.max(1e-9),
+             s.tok_per_s, s.ttft_p50_ms, s.ttft_p99_ms, s.tbt_p50_ms, s.tbt_p99_ms);
     Ok(())
 }
 
@@ -437,6 +450,13 @@ pub struct ServingStats {
     /// peak KV footprint — page-granular when `page_tokens > 0`
     pub peak_kv_bytes: usize,
     pub tok_per_s: f64,
+    /// time-to-first-token quantiles over the run (ms)
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// time-between-tokens quantiles over the run (ms) — the serving
+    /// latency chunked prefill protects (DESIGN.md §Scheduler)
+    pub tbt_p50_ms: f64,
+    pub tbt_p99_ms: f64,
     /// pressure-controller downshifts (paged mode only)
     pub pages_requantized: usize,
     /// preemptions after the downshift floors were exhausted (paged mode)
@@ -456,13 +476,26 @@ pub struct ServingStats {
 pub fn run_serving(rt: &Runtime, method: &Method, batch: usize, prompt_len: usize,
                    gen: usize, kv_budget: Option<usize>, page_tokens: usize)
                    -> Result<ServingStats> {
+    run_serving_chunked(rt, method, batch, prompt_len, gen, kv_budget, page_tokens, 0)
+}
+
+/// [`run_serving`] under an iteration-level `--step-tokens` budget
+/// (DESIGN.md §Scheduler): prompts prefill in group-aligned chunks
+/// interleaved with decode instead of whole-prompt-at-admission.
+/// `step_tokens == 0` is exactly [`run_serving`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_serving_chunked(rt: &Runtime, method: &Method, batch: usize,
+                           prompt_len: usize, gen: usize, kv_budget: Option<usize>,
+                           page_tokens: usize, step_tokens: usize)
+                           -> Result<ServingStats> {
     let mut rng = Rng::new(123);
     let reqs = (0..batch).map(|id| {
         let (toks, _) = workload::sample_mixture(&mut rng, prompt_len);
         Request { id: id as u64, prompt: toks, max_new_tokens: gen,
                   sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
     }).collect();
-    serve_requests(rt, method, batch, reqs, kv_budget, page_tokens, false)
+    serve_requests_scheduled(rt, method, batch, reqs, kv_budget, page_tokens,
+                             false, step_tokens)
 }
 
 /// [`run_serving`] over a workload whose prompts all share one
@@ -489,9 +522,22 @@ pub fn run_serving_prefixed(rt: &Runtime, method: &Method, batch: usize,
 fn serve_requests(rt: &Runtime, method: &Method, batch: usize, reqs: Vec<Request>,
                   kv_budget: Option<usize>, page_tokens: usize,
                   prefix_cache: bool) -> Result<ServingStats> {
+    serve_requests_scheduled(rt, method, batch, reqs, kv_budget, page_tokens,
+                             prefix_cache, 0)
+}
+
+/// [`serve_requests`] with an explicit `--step-tokens` budget — the
+/// chunked-prefill serving runner (DESIGN.md §Scheduler).  All requests
+/// are submitted up front; mid-stream arrival staging lives in the
+/// long-prompt-interference bench (`rust/benches/e2e_decode.rs`).
+#[allow(clippy::too_many_arguments)]
+fn serve_requests_scheduled(rt: &Runtime, method: &Method, batch: usize,
+                            reqs: Vec<Request>, kv_budget: Option<usize>,
+                            page_tokens: usize, prefix_cache: bool,
+                            step_tokens: usize) -> Result<ServingStats> {
     let mut engine = Engine::new(rt, EngineCfg {
         method: method.clone(), max_batch: batch, kv_budget, threads: 1, page_tokens,
-        prefix_cache,
+        prefix_cache, step_tokens,
     })?;
     let n = reqs.len();
     for req in reqs {
@@ -508,6 +554,10 @@ fn serve_requests(rt: &Runtime, method: &Method, batch: usize, reqs: Vec<Request
     Ok(ServingStats {
         peak_kv_bytes: engine.metrics.peak_kv_bytes,
         tok_per_s: tokens as f64 / secs,
+        ttft_p50_ms: engine.metrics.ttft_ms.quantile(0.5),
+        ttft_p99_ms: engine.metrics.ttft_ms.quantile(0.99),
+        tbt_p50_ms: engine.metrics.tbt_ms.quantile(0.5),
+        tbt_p99_ms: engine.metrics.tbt_ms.quantile(0.99),
         pages_requantized: engine.metrics.pages_requantized,
         preemptions: engine.metrics.preemptions,
         prefix_hits: engine.metrics.prefix_hits,

@@ -158,6 +158,26 @@ pub fn gen_recall(rng: &mut Rng, seq_len: usize, query_offset: Option<usize>,
     pad(toks, mask, seq_len)
 }
 
+/// Long-prompt-interference workload (DESIGN.md §Scheduler): `n_short`
+/// short prompts that decode steadily, plus one `long_len`-token prompt
+/// meant to arrive mid-stream.  Returns `(short_prompts, long_prompt)`;
+/// the caller stages the arrival (submit the shorts, run a few engine
+/// steps, then submit the long one — see the `interference` section of
+/// `rust/benches/e2e_decode.rs`).  Under the legacy whole-prefill
+/// engine the long arrival stalls every short decoder for its entire
+/// prefill (a TBT spike); under `--step-tokens` it is chunked.
+/// Deterministic in the seed.
+pub fn interference_prompts(rng: &mut Rng, n_short: usize, short_len: usize,
+                            long_len: usize) -> (Vec<Vec<i32>>, Vec<i32>) {
+    let shorts = (0..n_short)
+        .map(|_| sample_mixture(rng, short_len).0)
+        .collect();
+    // the LM task pads/extends to any length, so it makes the long
+    // context; recall/chain budgets are tuned for short sequences
+    let (long, _) = gen_lm(rng, long_len);
+    (shorts, long)
+}
+
 /// Exact-state selection (corpus.gen_chain): `n1 n2 n3 EQL max(n1,n2,n3)`.
 pub fn gen_chain(rng: &mut Rng, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
     let mut toks = vec![BOS];
@@ -237,6 +257,17 @@ mod tests {
                 assert_eq!(toks[t + 1], m);
             }
         }
+    }
+
+    #[test]
+    fn interference_prompts_shapes() {
+        let (shorts, long) = interference_prompts(&mut Rng::new(9), 4, 32, 256);
+        assert_eq!(shorts.len(), 4);
+        assert!(shorts.iter().all(|p| p.len() == 32));
+        assert_eq!(long.len(), 256);
+        assert!(long.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
+        let (again, long2) = interference_prompts(&mut Rng::new(9), 4, 32, 256);
+        assert_eq!((shorts, long), (again, long2), "seed-deterministic");
     }
 
     #[test]

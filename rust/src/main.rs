@@ -3,9 +3,10 @@
 //! Subcommands:
 //!   generate  --prompt 1,2,3 --max-new 32 [--method kvmix|fp16|kivi|...]
 //!             [--threads N] [--page-tokens N] [--prefix-cache]
+//!             [--step-tokens N]
 //!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
 //!             [--kv-budget-kib K] [--threads N] [--page-tokens N]
-//!             [--prefix-cache]
+//!             [--prefix-cache] [--step-tokens N]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
 //!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
 //!   inspect                                       artifact + weight summary
@@ -21,6 +22,11 @@
 //! prompt prefixes across sequences as refcounted copy-on-write frames;
 //! generated tokens stay bit-identical on hits
 //! (DESIGN.md §Prefix-Sharing).
+//! --step-tokens N enables the iteration-level scheduler's per-step
+//! token budget: prompts prefill in group-aligned chunks interleaved
+//! with decode (decode-first), so one long arrival cannot stall running
+//! sequences (DESIGN.md §Scheduler).  0 (the default) keeps the legacy
+//! whole-prefill-at-admission behavior bit-for-bit.
 
 use anyhow::{anyhow, bail, Result};
 use kvmix::baselines::Method;
@@ -91,10 +97,11 @@ fn run() -> Result<()> {
             let threads = args.usize_or("threads", 1)?;
             let page_tokens = args.usize_or("page-tokens", 0)?;
             let prefix_cache = args.flag("prefix-cache");
+            let step_tokens = args.usize_or("step-tokens", 0)?;
             WorkerPool::scoped(threads, |pool| {
                 let mut engine = Engine::with_pool(&rt, EngineCfg {
                     method, max_batch: 1, kv_budget: None, threads, page_tokens,
-                    prefix_cache,
+                    prefix_cache, step_tokens,
                 }, Some(pool))?;
                 engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
                                         sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
@@ -113,11 +120,12 @@ fn run() -> Result<()> {
             let threads = args.usize_or("threads", 1)?;
             let page_tokens = args.usize_or("page-tokens", 0)?;
             let prefix_cache = args.flag("prefix-cache");
+            let step_tokens = args.usize_or("step-tokens", 0)?;
             let kv_budget = args.get("kv-budget-kib")
                 .map(|v| v.parse::<usize>().map(|k| k * 1024))
                 .transpose()?;
             server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads,
-                                           page_tokens, prefix_cache },
+                                           page_tokens, prefix_cache, step_tokens },
                           &addr, None)
         }
         "repro" => {

@@ -80,6 +80,67 @@ impl<'a> Forward<'a> {
         self.rt.logits(&h, t)
     }
 
+    /// Prefill one **chunk** of a prompt against a cache that already
+    /// holds the `start` earlier prompt tokens (chunked prefill,
+    /// DESIGN.md §Scheduler): returns the chunk's `[t][vocab]` logits.
+    ///
+    /// Unlike [`Self::prefill_from`], which replays the *whole* prompt
+    /// densely, a chunk attends over the live cache — quantized history
+    /// blocks, fp windows, and any prefix-adopted pages — exactly as a
+    /// decode step would: per token, append its K/V (window policies
+    /// quantize overflowing groups as usual) then attend causally over
+    /// everything cached so far.  That is what bounds the step's work to
+    /// the chunk size, and it is also why chunked generations are **not**
+    /// bit-identical to the legacy dense prefill: earlier chunks are read
+    /// back through their quantized representation
+    /// (docs/adr/004-iteration-level-scheduling.md weighs this trade).
+    ///
+    /// `start` must be group-aligned (the scheduler's chunk grants
+    /// guarantee it) so sealed pages stay bit-uniform; `tokens.len()`
+    /// must fit a compiled bucket.  A chunk with `start == 0` on an empty
+    /// cache is a complete-prompt prefill in one call — still through
+    /// the cache-attention path, not the dense one.
+    ///
+    /// The attached worker pool is deliberately NOT used here: the pool
+    /// fans decode attention out across *lanes*, and a chunk is a single
+    /// lane whose tokens attend sequentially (token `i+1` needs token
+    /// `i` appended first).  Head-parallel cache attention inside one
+    /// lane would need an `attend` that takes a head sub-range (GQA
+    /// indexing is absolute) — future work, tracked in
+    /// docs/adr/004-iteration-level-scheduling.md.
+    pub fn prefill_chunk(&self, tokens: &[i32], start: usize, cache: &mut SeqKvCache,
+                         scratch: &mut DecodeScratch) -> Result<Vec<f32>> {
+        let m = &self.rt.model;
+        let t = tokens.len();
+        let qd = m.q_dim();
+        let kvd = m.kv_dim();
+        debug_assert!(t > 0);
+        debug_assert_eq!(cache.len(), start, "chunk must resume at the cache boundary");
+        let mut h = self.rt.embed(tokens)?;
+        let pos: Vec<i32> = (start..start + t).map(|p| p as i32).collect();
+        scratch.attn.resize(t * qd, 0.0);
+        scratch.attn_ns = 0;
+        if scratch.lanes.is_empty() {
+            scratch.lanes.push(AttnScratch::default());
+        }
+        for layer in 0..m.n_layers {
+            let (q, k, v) = self.rt.pre(layer, &h, &pos, t)?;
+            let t0 = Instant::now();
+            let lc = &mut cache.layers[layer];
+            let ws = &mut scratch.lanes[0];
+            // append-then-attend per token: token i sees cached tokens
+            // 0..start+i plus itself, never a later chunk token (causal)
+            for i in 0..t {
+                lc.append(&k[i * kvd..(i + 1) * kvd], &v[i * kvd..(i + 1) * kvd], 1);
+                lc.attend(&q[i * qd..(i + 1) * qd], m.n_heads,
+                          &mut scratch.attn[i * qd..(i + 1) * qd], ws);
+            }
+            scratch.attn_ns += t0.elapsed().as_nanos() as u64;
+            h = self.rt.post(layer, &scratch.attn[..t * qd], &h, t)?;
+        }
+        self.rt.logits(&h, t)
+    }
+
     /// One batched decode step: `tokens[b]` is the next input token of
     /// sequence `b`, `caches[b]` its cache.  Returns `[b][vocab]` logits.
     ///

@@ -106,7 +106,7 @@ fn engine_serves_batch_with_budget() {
         &default_artifacts_dir().join("importance.json")).unwrap();
     let mut engine = Engine::new(&rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: Some(64 << 20),
-        threads: 1, page_tokens: 0, prefix_cache: false,
+        threads: 1, page_tokens: 0, prefix_cache: false, step_tokens: 0,
     }).unwrap();
     let mut rng = Rng::new(3);
     for id in 0..6 {
@@ -133,7 +133,7 @@ fn engine_oom_eviction_still_completes() {
     let budget = (bpt * 140.0) as usize; // fits ~1 seq of 40+24 comfortably
     let mut engine = Engine::new(&rt, EngineCfg {
         method, max_batch: 4, kv_budget: Some(budget), threads: 1, page_tokens: 0,
-        prefix_cache: false,
+        prefix_cache: false, step_tokens: 0,
     }).unwrap();
     let mut rng = Rng::new(4);
     for id in 0..3 {
@@ -169,7 +169,7 @@ fn paged_preemption_resumes_bit_identically() {
     let run = |kv_budget: Option<usize>| {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Fp16, max_batch: 4, kv_budget, threads: 1,
-            page_tokens: 64, prefix_cache: false,
+            page_tokens: 64, prefix_cache: false, step_tokens: 0,
         }).unwrap();
         let mut rng = Rng::new(4);
         for id in 0..3 {
@@ -208,7 +208,7 @@ fn paged_pressure_downshifts_under_budget() {
     let run = |kv_budget: Option<usize>| {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: method.clone(), max_batch: 4, kv_budget, threads: 1,
-            page_tokens: 64, prefix_cache: false,
+            page_tokens: 64, prefix_cache: false, step_tokens: 0,
         }).unwrap();
         let mut rng = Rng::new(6);
         for id in 0..4 {

@@ -306,7 +306,7 @@ fn serve_shared_pair(rt: &Runtime, prefix_cache: bool)
     let plan = QuantPlan::uniform(rt.model.n_layers, 2).without_rpc();
     let mut engine = Engine::new(rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: None, threads: 1,
-        page_tokens: PT, prefix_cache,
+        page_tokens: PT, prefix_cache, step_tokens: 0,
     }).unwrap();
     let mut rng = Rng::new(8);
     let (system, _) = kvmix::harness::workload::sample_mixture(&mut rng, PT);
@@ -362,7 +362,7 @@ fn engine_prefix_cache_on_without_sharing_matches_off() {
     let run = |prefix_cache: bool| {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Kvmix(plan.clone()), max_batch: 4, kv_budget: None,
-            threads: 1, page_tokens: PT, prefix_cache,
+            threads: 1, page_tokens: PT, prefix_cache, step_tokens: 0,
         }).unwrap();
         let mut rng = Rng::new(17);
         for id in 0..3u64 {
@@ -392,7 +392,7 @@ fn engine_rejects_prefix_cache_without_pages() {
     let Some(rt) = runtime() else { return };
     let err = Engine::new(&rt, EngineCfg {
         method: Method::Fp16, max_batch: 1, kv_budget: None, threads: 1,
-        page_tokens: 0, prefix_cache: true,
+        page_tokens: 0, prefix_cache: true, step_tokens: 0,
     });
     assert!(err.is_err(), "--prefix-cache without --page-tokens must be rejected");
 }
