@@ -6,7 +6,7 @@
 
 use kvmix::attention::prefill_attention_with;
 use kvmix::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
-use kvmix::util::bench::{bench, black_box};
+use kvmix::util::bench::{bench, black_box, JsonSink};
 use kvmix::util::{Rng, WorkerPool};
 
 fn build_cache(key: KeyRepr, value: ValueRepr, window: WindowPolicy,
@@ -23,6 +23,7 @@ fn build_cache(key: KeyRepr, value: ValueRepr, window: WindowPolicy,
 }
 
 fn main() {
+    let mut sink = JsonSink::from_env("attention");
     println!("# decode attention over the mixed cache (4 heads, kv_dim 64)");
     let kv_dim = 64;
     let mut rng = Rng::new(1);
@@ -38,6 +39,7 @@ fn main() {
             black_box(&out);
         });
         println!("{}  ({:.1} Mtok/s)", s.line(), s.throughput(ctx as f64) / 1e6);
+        sink.record(&s, Some(ctx as f64));
 
         for bits in [2u8, 3, 4] {
             let cache = build_cache(KeyRepr::PerChannel { bits },
@@ -49,6 +51,7 @@ fn main() {
             });
             println!("{}  ({:.1} Mtok/s, {} fp tokens)",
                      s.line(), s.throughput(ctx as f64) / 1e6, cache.k_fp_tokens());
+            sink.record(&s, Some(ctx as f64));
         }
     }
 
@@ -86,6 +89,7 @@ fn main() {
                 });
                 println!("{}  ({:.1} Mtok/s over all lanes)",
                          s.line(), s.throughput((bsz * 512) as f64) / 1e6);
+                sink.record(&s, Some((bsz * 512) as f64));
             });
         }
     }
@@ -105,6 +109,7 @@ fn main() {
                     black_box(&o);
                 });
                 println!("{}  ({:.2} Mtok/s)", s.line(), s.throughput(t as f64) / 1e6);
+                sink.record(&s, Some(t as f64));
             });
         }
     }
@@ -121,5 +126,8 @@ fn main() {
             cache.append(black_box(&k1), black_box(&v1), 1);
         });
         println!("{}", s.line());
+        sink.record(&s, None);
     }
+
+    sink.finish();
 }

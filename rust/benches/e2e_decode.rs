@@ -27,12 +27,15 @@ use kvmix::harness::workload;
 use kvmix::kvcache::PagePool;
 use kvmix::model::{DecodeScratch, Forward, Sampler};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::bench::JsonSink;
 use kvmix::util::{Rng, WorkerPool};
 
 fn main() {
+    let mut sink = JsonSink::from_env("e2e_decode");
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         println!("SKIP e2e_decode: artifacts not built");
+        sink.finish(); // empty-entry file: ran but skipped
         return;
     }
     let rt = Runtime::load_with(&dir, false).expect("runtime");
@@ -72,6 +75,10 @@ fn main() {
                              method.name(), batch, threads,
                              secs / steps as f64 * 1e3,
                              (steps * batch) as f64 / secs);
+                    sink.record_value(
+                        &format!("decode/{}/batch{batch}/threads{threads}", method.name()),
+                        secs / steps as f64 * 1e9,
+                        Some((steps * batch) as f64 / secs));
                 });
             }
             // paged accounting overhead: identical decode, plus per-step
@@ -109,6 +116,10 @@ fn main() {
                      secs / steps as f64 * 1e3,
                      (steps * batch) as f64 / secs,
                      pool.allocated_pages(), charged as f64 / 1024.0);
+            sink.record_value(
+                &format!("decode/{}+paged64/batch{batch}/threads1", method.name()),
+                secs / steps as f64 * 1e9,
+                Some((steps * batch) as f64 / secs));
         }
     }
 
@@ -148,6 +159,10 @@ fn main() {
                      secs / batch as f64 * 1e3,
                      engine.metrics.prefix_hits, engine.metrics.prefix_tokens_reused,
                      engine.metrics.peak_kv_bytes as f64 / 1024.0);
+            sink.record_value(
+                &format!("prefix/{}/batch{batch}", if on { "on" } else { "off" }),
+                secs / batch as f64 * 1e9,
+                Some(batch as f64 / secs));
         }
     }
 
@@ -201,7 +216,16 @@ fn main() {
                  engine.metrics.tbt_ms.quantile(0.5),
                  engine.metrics.tbt_ms.quantile(0.99),
                  tokens as f64 / secs, util);
+        sink.record_value(
+            &format!("interference/step_tokens{step_tokens}/long_ttft"),
+            long_ttft * 1e6, None);
+        sink.record_value(
+            &format!("interference/step_tokens{step_tokens}/tbt_p99"),
+            engine.metrics.tbt_ms.quantile(0.99) * 1e6,
+            Some(tokens as f64 / secs));
     }
     println!("(tbt quantiles cover all lanes; the p99 spike at step-tokens 0 \
               is the short cohort stalling behind the inline long prefill)");
+
+    sink.finish();
 }

@@ -1,13 +1,23 @@
 //! Microbenchmarks for the quantization hot path: pack/unpack at every
-//! bit width, group quantization, and fused vs unfused dequant·matvec —
-//! the paper's kernel-fusion claim (§CUDA Implementation) measured on the
-//! Rust analogs.
+//! bit width, group quantization, and the decode kernel tiers — the
+//! integer-domain **packed** kernels vs the unpack-based **fused**
+//! reference vs the dequantize-then-matvec **unfused** baseline
+//! (DESIGN.md §Quantized-Kernels).
+//!
+//! The `*_fused` rows invalidate the unpack cache every call: that is the
+//! per-(block, lane) cache-miss cost the decode loop pays whenever the
+//! context holds more blocks than the scratch can cache (i.e. always,
+//! beyond one block).  The `*_fused_hot` rows keep the cache warm — the
+//! best case the old path ever achieved, amortized across a block's
+//! heads.  The headline multiple recorded in `BENCH_kernels.json`
+//! (`scripts/bench_to_json.py --check`) is packed vs cold fused.
 
 use kvmix::quant::{fused, pack_stream, qmax_at, unpack_stream, FusedScratch, PackedBlock};
-use kvmix::util::bench::{bench, black_box};
+use kvmix::util::bench::{bench, black_box, JsonSink};
 use kvmix::util::Rng;
 
 fn main() {
+    let mut sink = JsonSink::from_env("quant_kernels");
     println!("# quant kernel microbenchmarks (4096-element blocks, group 32)");
     let mut rng = Rng::new(1);
     let n = 4096;
@@ -25,64 +35,118 @@ fn main() {
             black_box(&w);
         });
         println!("{}  ({:.2} Gelem/s)", s.line(), s.throughput(n as f64) / 1e9);
+        sink.record(&s, Some(n as f64));
 
         let s = bench(&format!("unpack_stream/{bits}bit"), 60, || {
             unpack_stream(black_box(&words), bits, n, &mut out);
             black_box(&out);
         });
         println!("{}  ({:.2} Gelem/s)", s.line(), s.throughput(n as f64) / 1e9);
+        sink.record(&s, Some(n as f64));
 
         let s = bench(&format!("quantize_block/{bits}bit"), 60, || {
             black_box(PackedBlock::quantize(black_box(&data), bits, 32));
         });
         println!("{}  ({:.2} Gelem/s)", s.line(), s.throughput(n as f64) / 1e9);
+        sink.record(&s, Some(n as f64));
     }
 
-    // fused vs unfused key scores (the paper's dequant+matvec fusion)
-    println!("\n# fused dequant·matvec vs dequantize-then-matvec (K block 64ch x 32tok)");
+    // key kernels: packed (integer-domain) vs fused (unpack-based,
+    // cold + hot) vs unfused (dequantize-then-matvec)
+    println!("\n# key scores: packed vs fused(cold/hot) vs unfused (K block 64ch x 32tok, 1 head)");
     let kv_dim = 64;
     let tokens = 32;
     let kdata = rng.normal_vec(kv_dim * tokens);
     let q32 = rng.normal_vec(32);
-    for bits in [2u8, 3, 4] {
+    for bits in [1u8, 2, 3, 4] {
         let block = PackedBlock::quantize(&kdata, bits, tokens);
         let mut scores = vec![0f32; tokens];
         let mut scratch = FusedScratch::default();
+        // 3-bit has no word-aligned packed layout: the dispatch row
+        // honestly measures its fused fallback (DESIGN.md §Quantized-Kernels)
+        let s_p = bench(&format!("key_scores_packed/{bits}bit"), 40, || {
+            scores.fill(0.0);
+            fused::key_scores_dispatch(black_box(&q32), &block, tokens, 0,
+                                       &mut scratch, &mut scores);
+            black_box(&scores);
+        });
+        let mut scratch_cold = FusedScratch::default();
         let s_f = bench(&format!("key_scores_fused/{bits}bit"), 40, || {
             scores.fill(0.0);
-            fused::key_scores_fused(black_box(&q32), &block, tokens, 0, &mut scratch, &mut scores);
+            scratch_cold.invalidate(); // per-block cache miss, the decode norm
+            fused::key_scores_fused(black_box(&q32), &block, tokens, 0,
+                                    &mut scratch_cold, &mut scores);
+            black_box(&scores);
+        });
+        let mut scratch_hot = FusedScratch::default();
+        let s_h = bench(&format!("key_scores_fused_hot/{bits}bit"), 40, || {
+            scores.fill(0.0);
+            fused::key_scores_fused(black_box(&q32), &block, tokens, 0,
+                                    &mut scratch_hot, &mut scores);
             black_box(&scores);
         });
         let s_u = bench(&format!("key_scores_unfused/{bits}bit"), 40, || {
             scores.fill(0.0);
-            fused::unfused::key_scores(black_box(&q32), &block, tokens, 0, &mut scratch, &mut scores);
+            fused::unfused::key_scores(black_box(&q32), &block, tokens, 0,
+                                       &mut scratch, &mut scores);
             black_box(&scores);
         });
+        println!("{}", s_p.line());
         println!("{}", s_f.line());
+        println!("{}", s_h.line());
         println!("{}", s_u.line());
-        println!("  fusion speedup: {:.2}x", s_u.mean / s_f.mean);
+        println!("  packed vs fused(cold): {:.2}x   vs fused(hot): {:.2}x   fused vs unfused: {:.2}x",
+                 s_f.mean / s_p.mean, s_h.mean / s_p.mean, s_u.mean / s_f.mean);
+        for s in [&s_p, &s_f, &s_h, &s_u] {
+            sink.record(s, Some(tokens as f64));
+        }
     }
 
     // value side
-    println!("\n# fused weighted-value (V block 32tok x 64ch)");
+    println!("\n# weighted values: packed vs fused(cold/hot) vs unfused (V block 32tok x 64ch)");
     let vdata = rng.normal_vec(tokens * kv_dim);
     let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
-    for bits in [2u8, 4] {
+    for bits in [1u8, 2, 3, 4] {
         let block = PackedBlock::quantize(&vdata, bits, 32);
         let mut out = vec![0f32; 32];
         let mut scratch = FusedScratch::default();
+        let s_p = bench(&format!("value_accum_packed/{bits}bit"), 40, || {
+            out.fill(0.0);
+            fused::value_accum_dispatch(black_box(&p), &block, kv_dim, 0, 32,
+                                        &mut scratch, &mut out);
+            black_box(&out);
+        });
+        let mut scratch_cold = FusedScratch::default();
         let s_f = bench(&format!("value_accum_fused/{bits}bit"), 40, || {
             out.fill(0.0);
-            fused::value_accum_fused(black_box(&p), &block, kv_dim, 0, 32, &mut scratch, &mut out);
+            scratch_cold.invalidate();
+            fused::value_accum_fused(black_box(&p), &block, kv_dim, 0, 32,
+                                     &mut scratch_cold, &mut out);
+            black_box(&out);
+        });
+        let mut scratch_hot = FusedScratch::default();
+        let s_h = bench(&format!("value_accum_fused_hot/{bits}bit"), 40, || {
+            out.fill(0.0);
+            fused::value_accum_fused(black_box(&p), &block, kv_dim, 0, 32,
+                                     &mut scratch_hot, &mut out);
             black_box(&out);
         });
         let s_u = bench(&format!("value_accum_unfused/{bits}bit"), 40, || {
             out.fill(0.0);
-            fused::unfused::value_accum(black_box(&p), &block, kv_dim, 0, 32, &mut scratch, &mut out);
+            fused::unfused::value_accum(black_box(&p), &block, kv_dim, 0, 32,
+                                        &mut scratch, &mut out);
             black_box(&out);
         });
+        println!("{}", s_p.line());
         println!("{}", s_f.line());
+        println!("{}", s_h.line());
         println!("{}", s_u.line());
-        println!("  fusion speedup: {:.2}x", s_u.mean / s_f.mean);
+        println!("  packed vs fused(cold): {:.2}x   vs fused(hot): {:.2}x   fused vs unfused: {:.2}x",
+                 s_f.mean / s_p.mean, s_h.mean / s_p.mean, s_u.mean / s_f.mean);
+        for s in [&s_p, &s_f, &s_h, &s_u] {
+            sink.record(s, Some(tokens as f64));
+        }
     }
+
+    sink.finish();
 }

@@ -26,7 +26,7 @@
 
 use std::sync::Arc;
 
-use crate::quant::{key_scores_fused, value_accum_fused, FusedScratch, PackedBlock};
+use crate::quant::{key_scores_dispatch, value_accum_dispatch, FusedScratch, PackedBlock};
 
 use super::jl::{JlProjector, SignJlKeys};
 use super::pages::KvSide;
@@ -476,12 +476,16 @@ impl LayerKvCache {
                 }
             }
             KeyRepr::PerChannel { .. } => {
+                // per-block width dispatch (the pressure ladder mixes
+                // widths): uniform widths run the integer-domain packed
+                // kernel, 3-bit blocks fall back to the unpack-based
+                // fused path through the per-thread scratch
                 for (bi, block) in self.k_blocks.iter().enumerate() {
                     for h in 0..n_heads {
                         let kvh = h / rep;
                         let qh = &q[h * hd..(h + 1) * hd];
                         let row = &mut scratch.scores[h * total + bi * g..h * total + (bi + 1) * g];
-                        key_scores_fused(qh, block, g, kvh * hd, &mut scratch.fused, row);
+                        key_scores_dispatch(qh, block, g, kvh * hd, &mut scratch.fused, row);
                     }
                 }
             }
@@ -538,7 +542,7 @@ impl LayerKvCache {
                         let kvh = h / rep;
                         let p = &scratch.scores[h * total + bi * g..h * total + (bi + 1) * g];
                         let o = &mut out[h * hd..(h + 1) * hd];
-                        value_accum_fused(p, block, kv, kvh * hd, hd, &mut scratch.fused, o);
+                        value_accum_dispatch(p, block, kv, kvh * hd, hd, &mut scratch.fused, o);
                     }
                 }
             }
@@ -594,7 +598,11 @@ fn token_major_key_scores(block: &PackedBlock, q: &[f32], n_heads: usize,
 ///
 /// Not shared between threads: the decode fan-out keeps one `AttnScratch`
 /// per pool worker (`DecodeScratch::lanes`), sized once and reused every
-/// step so the steady-state path does not allocate.
+/// step so the steady-state path does not allocate.  The `fused` unpack
+/// scratch is a fallback-only buffer since the integer-domain packed
+/// kernels took over the uniform widths (DESIGN.md §Quantized-Kernels):
+/// its `ints` staging never allocates unless a 3-bit block or the
+/// per-token key ablation path runs on this worker.
 #[derive(Default)]
 pub struct AttnScratch {
     pub scores: Vec<f32>,

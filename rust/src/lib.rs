@@ -1,3 +1,7 @@
+// `--features simd` vectorizes the packed decode kernels via
+// `std::simd` (portable-simd, nightly only — DESIGN.md
+// §Quantized-Kernels); the default build is stable scalar.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # KVmix — layer importance-aware mixed-precision KV-cache quantization
 //!
 //! Rust L3 coordinator of the three-layer reproduction of *KVmix:

@@ -1,10 +1,26 @@
-//! Fused dequantize·matvec kernels — the Rust analog of the paper's CUDA
-//! contribution (§CUDA Implementation ②③).
+//! Decode-attention kernels over packed KV blocks — the Rust analog of
+//! the paper's CUDA contribution (§CUDA Implementation ②③), in two tiers
+//! (DESIGN.md §Quantized-Kernels):
 //!
-//! Never materializes a dequantized f32 cache block.  Each call unpacks a
-//! block's integer stream into a reusable scratch (the "shared memory"
-//! staging of the CUDA version), then folds the affine dequantization into
-//! the dot products algebraically:
+//! * **Packed (integer-domain, unpack-free)** — [`key_scores_packed`] /
+//!   [`value_accum_packed`]: dot products computed directly on the packed
+//!   `u32` words for uniform widths (1/2/4/8-bit).  One word at a time,
+//!   `elems_per_word` fields are extracted with shift/mask — into
+//!   `std::simd` lanes behind the `simd` cargo feature, or a
+//!   word-at-a-time scalar loop otherwise — and each group's affine
+//!   `(scale, min)` is folded into the accumulator once per group.  No
+//!   `u32` scratch is ever materialized; outliers are applied through
+//!   [`PackedBlock::dequant_at`] on a binary-searched sparse side path.
+//!
+//! * **Fused (unpack-based reference)** — [`key_scores_fused`] /
+//!   [`value_accum_fused`]: unpack the block's integer stream into a
+//!   reusable scratch, then fold the dequantization into the dot products
+//!   algebraically.  This is the execution path for 3-bit blocks (the
+//!   11-per-word Eq. 12 layout has no aligned word view) and the oracle
+//!   the packed kernels are pinned bit-exact against
+//!   (`rust/tests/packed_kernels.rs`).
+//!
+//! Both tiers share the same algebra:
 //!
 //!   Key  (per-channel groups): score[t] = Σ_c q[c]·(Q[c,t]·s_c + m_c)
 //!        = Σ_c (q[c]·s_c)·Q[c,t]  +  Σ_c q[c]·m_c
@@ -15,13 +31,27 @@
 //!   Value (per-token groups):  out[c] += Σ_t p[t]·(Q[t,c]·s_{t,g} + m_{t,g})
 //!        = Σ_t (p[t]·s_{t,g})·Q[t,c]  +  bias_g(c∈g)
 //!     — token-outer/channel-inner, again contiguous in the stream.
+//!
+//! [`key_scores_dispatch`] / [`value_accum_dispatch`] pick the tier per
+//! block width; `kvcache/cache.rs::attend` routes through them, so the
+//! per-thread unpack scratch only ever fills for 3-bit blocks.
 
 use super::groupq::PackedBlock;
-use super::pack::unpack_stream;
+use super::pack::{elems_per_word, field_range, unpack_stream};
 
-/// Reusable scratch buffers for the fused kernels (one per worker thread:
-/// the decode fan-out carries a `FusedScratch` inside each worker's
-/// `AttnScratch`, never sharing one across threads).
+/// True if `bits` has the word-aligned uniform field layout the packed
+/// (unpack-free) kernels handle.  3-bit's 11-per-word layout stays on the
+/// unpack-based fused path (DESIGN.md §Quantized-Kernels).
+#[inline]
+pub const fn packed_dot_supported(bits: u8) -> bool {
+    bits != 0 && bits != 3 && bits <= 16 && 32 % bits as usize == 0
+}
+
+/// Reusable scratch buffers for the unpack-based fused kernels (one per
+/// worker thread: the decode fan-out carries a `FusedScratch` inside each
+/// worker's `AttnScratch`, never sharing one across threads).  The packed
+/// kernels take no scratch at all, so on plans without 3-bit layers the
+/// `ints` buffer never allocates.
 ///
 /// The unpack-cache `tag` stores the [`PackedBlock::uid`] of the block
 /// currently staged in `ints`.  The uid is refreshed on every
@@ -50,7 +80,311 @@ impl FusedScratch {
     }
 }
 
-/// Attention scores of one query head against a **Key block**.
+/// Sorted-outlier invariant the binary-searched side paths rely on
+/// (established by `PackedBlock::quantize_outliers_into`).
+#[inline]
+fn debug_assert_outliers_sorted(block: &PackedBlock) {
+    debug_assert!(block.outliers.windows(2).all(|w| w[0].0 < w[1].0),
+                  "outliers must be sorted by stream index");
+}
+
+// ---------------------------------------------------------------------------
+// Packed (integer-domain, unpack-free) kernels
+// ---------------------------------------------------------------------------
+
+/// Attention scores of one query head against a **Key block**, computed
+/// directly on the packed words — no unpacked stream is ever
+/// materialized.  Bit-exact with [`key_scores_fused`] (pinned by
+/// `rust/tests/packed_kernels.rs`).
+///
+/// * `q` — the query slice for this KV head (`head_dim` f32s, RoPE'd).
+/// * `block` — channel-major Key block (stream index `c*tokens + t`),
+///   width must satisfy [`packed_dot_supported`].
+/// * `tokens` — tokens in the block (= the per-channel group size).
+/// * `out[t] +=` raw (unscaled) dot products — caller applies 1/sqrt(hd).
+pub fn key_scores_packed(q: &[f32], block: &PackedBlock, tokens: usize,
+                         chan_offset: usize, out: &mut [f32]) {
+    debug_assert_eq!(block.group, tokens);
+    debug_assert!(out.len() >= tokens);
+    debug_assert!(chan_offset + q.len() <= block.scales.len());
+    debug_assert!(packed_dot_supported(block.bits));
+    debug_assert_outliers_sorted(block);
+    let bits = block.bits;
+    let per = elems_per_word(bits);
+    let out = &mut out[..tokens];
+
+    let mut bias = 0f32;
+    if tokens % per == 0 {
+        // every channel row starts word-aligned: word-per-lane-group path
+        let wpr = tokens / per; // words per row
+        for (d, &qd) in q.iter().enumerate() {
+            let c = chan_offset + d;
+            let qs = qd * block.scales[c];
+            bias += qd * block.mins[c];
+            dot_row_aligned(&block.words[c * wpr..(c + 1) * wpr], bits, qs, out);
+        }
+    } else {
+        // rows straddle word boundaries: word-at-a-time view
+        for (d, &qd) in q.iter().enumerate() {
+            let c = chan_offset + d;
+            let qs = qd * block.scales[c];
+            bias += qd * block.mins[c];
+            dot_row_unaligned(&block.words, bits, c * tokens, qs, out);
+        }
+    }
+    for s in out.iter_mut() {
+        *s += bias;
+    }
+    // outlier corrections: the head's channels are the contiguous stream
+    // range [chan_offset·tokens, (chan_offset+hd)·tokens), binary-searched
+    // in the index-sorted list instead of scanning every outlier per head
+    let lo = block.outliers.partition_point(|&(i, _)| (i as usize) < chan_offset * tokens);
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < (chan_offset + q.len()) * tokens);
+    for &(i, v) in &block.outliers[lo..hi] {
+        let c = i as usize / tokens;
+        let t = i as usize % tokens;
+        out[t] += q[c - chan_offset] * (v - block.dequant_at(i as usize));
+    }
+}
+
+/// Weighted-value accumulation of one head's probabilities against a
+/// **Value block**, computed directly on the packed words.  Bit-exact
+/// with [`value_accum_fused`].
+///
+/// * `p[t]` — softmax probabilities for this block's tokens.
+/// * `block` — token-major Value block (stream index `t*kv_dim + c`),
+///   width must satisfy [`packed_dot_supported`].
+/// * `kv_dim` — full channel count per token; `chan_offset` selects this
+///   head's `head_dim` channels (must be group-aligned).
+/// * `out[d] +=` accumulated weighted values for d in 0..head_dim.
+pub fn value_accum_packed(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                          chan_offset: usize, head_dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(chan_offset % block.group, 0);
+    debug_assert_eq!(head_dim % block.group, 0);
+    debug_assert!(chan_offset + head_dim <= kv_dim);
+    debug_assert!((chan_offset + head_dim).div_ceil(block.group) <= block.scales.len());
+    debug_assert!(packed_dot_supported(block.bits));
+    debug_assert_outliers_sorted(block);
+    let bits = block.bits;
+    let per = elems_per_word(bits);
+    let tokens = block.n / kv_dim;
+    let groups_per_token = kv_dim / block.group;
+    let g0 = chan_offset / block.group;
+    let gn = head_dim / block.group;
+    // every token row is word-aligned iff a group spans whole words and
+    // token strides land on word boundaries (true for the standard
+    // group=32 layouts at 1/2/4/8-bit)
+    let aligned = block.group % per == 0 && kv_dim % per == 0 && chan_offset % per == 0;
+    let wpg = if aligned { block.group / per } else { 0 }; // words per group
+
+    for (t, &pt) in p.iter().enumerate().take(tokens) {
+        if pt == 0.0 {
+            continue;
+        }
+        let base = t * kv_dim + chan_offset;
+        for g in 0..gn {
+            let gi = t * groups_per_token + g0 + g;
+            let ps = pt * block.scales[gi];
+            let pm = pt * block.mins[gi];
+            let o = &mut out[g * block.group..(g + 1) * block.group];
+            let e0 = base + g * block.group;
+            if aligned {
+                let w0 = e0 / per;
+                accum_row_aligned(&block.words[w0..w0 + wpg], bits, ps, pm, o);
+            } else {
+                accum_row_unaligned(&block.words, bits, e0, ps, pm, o);
+            }
+        }
+    }
+    // outlier corrections: index-sorted, so the scan is bounded to the
+    // tokens `p` covers; the head's channels are strided per token, so
+    // membership stays a predicate inside the bounded range
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < p.len().min(tokens) * kv_dim);
+    for &(i, v) in &block.outliers[..hi] {
+        let t = i as usize / kv_dim;
+        let c = i as usize % kv_dim;
+        if c >= chan_offset && c < chan_offset + head_dim && p[t] != 0.0 {
+            out[c - chan_offset] += p[t] * (v - block.dequant_at(i as usize));
+        }
+    }
+}
+
+/// Width-dispatching key kernel: integer-domain packed path for uniform
+/// widths, unpack-based fused fallback for 3-bit.  Same contract as
+/// [`key_scores_fused`]; `scratch` is only touched on the fallback.
+#[inline]
+pub fn key_scores_dispatch(q: &[f32], block: &PackedBlock, tokens: usize,
+                           chan_offset: usize, scratch: &mut FusedScratch,
+                           out: &mut [f32]) {
+    if packed_dot_supported(block.bits) {
+        key_scores_packed(q, block, tokens, chan_offset, out);
+    } else {
+        key_scores_fused(q, block, tokens, chan_offset, scratch, out);
+    }
+}
+
+/// Width-dispatching value kernel — see [`key_scores_dispatch`].
+#[inline]
+pub fn value_accum_dispatch(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                            chan_offset: usize, head_dim: usize,
+                            scratch: &mut FusedScratch, out: &mut [f32]) {
+    if packed_dot_supported(block.bits) {
+        value_accum_packed(p, block, kv_dim, chan_offset, head_dim, out);
+    } else {
+        value_accum_fused(p, block, kv_dim, chan_offset, head_dim, scratch, out);
+    }
+}
+
+/// `out[i] += qs * field[i]` over one word-aligned row.
+#[inline]
+fn dot_row_aligned(row_words: &[u32], bits: u8, qs: f32, out: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    if simd::dot_row(row_words, bits, qs, out) {
+        return;
+    }
+    let per = elems_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let b = bits as usize;
+    for (w, o) in row_words.iter().zip(out.chunks_exact_mut(per)) {
+        for (i, slot) in o.iter_mut().enumerate() {
+            *slot += qs * ((w >> (b * i)) & mask) as f32;
+        }
+    }
+}
+
+/// `out[i] += qs * field[start+i]` over a row that straddles words.
+#[inline]
+fn dot_row_unaligned(words: &[u32], bits: u8, start: usize, qs: f32, out: &mut [f32]) {
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for (w, f0, n) in field_range(words, bits, start, out.len()) {
+        for (j, slot) in out[t..t + n].iter_mut().enumerate() {
+            *slot += qs * ((w >> (b * (f0 + j))) & mask) as f32;
+        }
+        t += n;
+    }
+}
+
+/// `out[i] += ps * field[i] + pm` over one word-aligned group row.
+#[inline]
+fn accum_row_aligned(row_words: &[u32], bits: u8, ps: f32, pm: f32, out: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    if simd::accum_row(row_words, bits, ps, pm, out) {
+        return;
+    }
+    let per = elems_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let b = bits as usize;
+    for (w, o) in row_words.iter().zip(out.chunks_exact_mut(per)) {
+        for (i, slot) in o.iter_mut().enumerate() {
+            *slot += ps * ((w >> (b * i)) & mask) as f32 + pm;
+        }
+    }
+}
+
+/// `out[i] += ps * field[start+i] + pm` over a word-straddling group row.
+#[inline]
+fn accum_row_unaligned(words: &[u32], bits: u8, start: usize, ps: f32, pm: f32,
+                       out: &mut [f32]) {
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for (w, f0, n) in field_range(words, bits, start, out.len()) {
+        for (j, slot) in out[t..t + n].iter_mut().enumerate() {
+            *slot += ps * ((w >> (b * (f0 + j))) & mask) as f32 + pm;
+        }
+        t += n;
+    }
+}
+
+/// `std::simd` lanes for the aligned word rows (`--features simd`,
+/// nightly only — `portable_simd`).  Each packed word's fields are
+/// extracted with a per-lane shift/mask into a `u32` vector, cast to
+/// f32 lanes, and multiply-added into the accumulator slice.  Lane
+/// arithmetic is plain mul-then-add (no FMA contraction), so every lane
+/// computes exactly the scalar path's `acc + qs*field` — the feature
+/// changes wall time, never results (DESIGN.md §Quantized-Kernels).
+#[cfg(feature = "simd")]
+mod simd {
+    use std::simd::prelude::*;
+    use std::simd::{LaneCount, SupportedLaneCount};
+
+    #[inline]
+    fn dot_word<const N: usize>(w: u32, bits: u32, qs: f32, out: &mut [f32])
+    where
+        LaneCount<N>: SupportedLaneCount,
+    {
+        let shifts = Simd::<u32, N>::from_array(std::array::from_fn(|i| i as u32 * bits));
+        let mask = Simd::splat((1u32 << bits) - 1);
+        let f = ((Simd::splat(w) >> shifts) & mask).cast::<f32>();
+        let acc = Simd::<f32, N>::from_slice(out) + Simd::splat(qs) * f;
+        acc.copy_to_slice(out);
+    }
+
+    #[inline]
+    fn accum_word<const N: usize>(w: u32, bits: u32, ps: f32, pm: f32, out: &mut [f32])
+    where
+        LaneCount<N>: SupportedLaneCount,
+    {
+        let shifts = Simd::<u32, N>::from_array(std::array::from_fn(|i| i as u32 * bits));
+        let mask = Simd::splat((1u32 << bits) - 1);
+        let f = ((Simd::splat(w) >> shifts) & mask).cast::<f32>();
+        let acc = Simd::<f32, N>::from_slice(out) + (Simd::splat(ps) * f + Simd::splat(pm));
+        acc.copy_to_slice(out);
+    }
+
+    /// Returns false when no lane count fits this width (caller falls
+    /// back to the scalar word loop).
+    pub fn dot_row(row_words: &[u32], bits: u8, qs: f32, out: &mut [f32]) -> bool {
+        macro_rules! rows {
+            ($n:literal) => {
+                for (i, &w) in row_words.iter().enumerate() {
+                    dot_word::<$n>(w, bits as u32, qs, &mut out[i * $n..(i + 1) * $n]);
+                }
+            };
+        }
+        match 32 / bits as usize {
+            32 => rows!(32),
+            16 => rows!(16),
+            8 => rows!(8),
+            4 => rows!(4),
+            _ => return false,
+        }
+        true
+    }
+
+    pub fn accum_row(row_words: &[u32], bits: u8, ps: f32, pm: f32, out: &mut [f32]) -> bool {
+        macro_rules! rows {
+            ($n:literal) => {
+                for (i, &w) in row_words.iter().enumerate() {
+                    accum_word::<$n>(w, bits as u32, ps, pm, &mut out[i * $n..(i + 1) * $n]);
+                }
+            };
+        }
+        if out.len() % (32 / bits as usize) != 0 {
+            return false; // group narrower than a word: scalar handles it
+        }
+        match 32 / bits as usize {
+            32 => rows!(32),
+            16 => rows!(16),
+            8 => rows!(8),
+            4 => rows!(4),
+            _ => return false,
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused (unpack-based) reference kernels — the 3-bit execution path and
+// the oracle the packed kernels are pinned against
+// ---------------------------------------------------------------------------
+
+/// Attention scores of one query head against a **Key block**, via the
+/// unpack-based fused path (see module docs for when this runs).
 ///
 /// * `q` — the query slice for this KV head (`head_dim` f32s, RoPE'd).
 /// * `block` — channel-major Key block: stream index `c*tokens + t`,
@@ -63,7 +397,8 @@ pub fn key_scores_fused(q: &[f32], block: &PackedBlock, tokens: usize,
                         out: &mut [f32]) {
     debug_assert_eq!(block.group, tokens);
     debug_assert!(out.len() >= tokens);
-    let hd = q.len();
+    debug_assert!(chan_offset + q.len() <= block.scales.len());
+    debug_assert_outliers_sorted(block);
     // Unpack just once per (block); callers iterating heads pass the same
     // scratch so `ensure_unpacked` skips redundant work.
     ensure_unpacked(block, scratch);
@@ -81,23 +416,24 @@ pub fn key_scores_fused(q: &[f32], block: &PackedBlock, tokens: usize,
             out[t] += qs * row[t] as f32;
         }
     }
-    let _ = hd;
     for t in 0..tokens {
         out[t] += bias;
     }
     // outlier corrections (KVQuant baseline): exact value replaces the
-    // packed approximation for its (channel, token) element
-    for &(i, v) in &block.outliers {
+    // packed approximation for its (channel, token) element; the head's
+    // channels are a contiguous stream range in the index-sorted list
+    let lo = block.outliers.partition_point(|&(i, _)| (i as usize) < chan_offset * tokens);
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < (chan_offset + q.len()) * tokens);
+    for &(i, v) in &block.outliers[lo..hi] {
         let c = i as usize / tokens;
-        if c >= chan_offset && c < chan_offset + q.len() {
-            let t = i as usize % tokens;
-            out[t] += q[c - chan_offset] * (v - block.dequant_one(i as usize, ints));
-        }
+        let t = i as usize % tokens;
+        out[t] += q[c - chan_offset] * (v - block.dequant_one(i as usize, ints));
     }
 }
 
 /// Weighted-value accumulation of one head's probabilities against a
-/// **Value block**.
+/// **Value block**, via the unpack-based fused path.
 ///
 /// * `p[t]` — softmax probabilities for this block's tokens.
 /// * `block` — token-major Value block: stream index `t*kv_dim + c`,
@@ -110,6 +446,9 @@ pub fn value_accum_fused(p: &[f32], block: &PackedBlock, kv_dim: usize,
                          scratch: &mut FusedScratch, out: &mut [f32]) {
     debug_assert_eq!(chan_offset % block.group, 0);
     debug_assert_eq!(head_dim % block.group, 0);
+    debug_assert!(chan_offset + head_dim <= kv_dim);
+    debug_assert!((chan_offset + head_dim).div_ceil(block.group) <= block.scales.len());
+    debug_assert_outliers_sorted(block);
     ensure_unpacked(block, scratch);
     let ints = &scratch.ints;
     let tokens = block.n / kv_dim;
@@ -134,11 +473,14 @@ pub fn value_accum_fused(p: &[f32], block: &PackedBlock, kv_dim: usize,
             }
         }
     }
-    // outlier corrections for this head's channel range
-    for &(i, v) in &block.outliers {
+    // outlier corrections for this head's channel range, bounded to the
+    // tokens `p` covers via the index-sorted invariant
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < p.len().min(tokens) * kv_dim);
+    for &(i, v) in &block.outliers[..hi] {
         let t = i as usize / kv_dim;
         let c = i as usize % kv_dim;
-        if c >= chan_offset && c < chan_offset + head_dim && t < p.len() && p[t] != 0.0 {
+        if c >= chan_offset && c < chan_offset + head_dim && p[t] != 0.0 {
             out[c - chan_offset] += p[t] * (v - block.dequant_one(i as usize, ints));
         }
     }
@@ -243,6 +585,60 @@ mod tests {
     }
 
     #[test]
+    fn packed_key_matches_fused_bitwise() {
+        // quick in-module smoke of the exactness contract; the full
+        // property sweep lives in rust/tests/packed_kernels.rs
+        let mut rng = Rng::new(31);
+        for bits in [1u8, 2, 4, 8] {
+            let (_, block) = key_block(&mut rng, 64, 32, bits);
+            let q = rng.normal_vec(32);
+            let mut a = vec![0f32; 32];
+            let mut b = vec![0f32; 32];
+            key_scores_packed(&q, &block, 32, 16, &mut a);
+            key_scores_fused(&q, &block, 32, 16, &mut FusedScratch::default(), &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bits={bits}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_value_matches_fused_bitwise() {
+        let mut rng = Rng::new(32);
+        for bits in [1u8, 2, 4, 8] {
+            let kv_dim = 64;
+            let tokens = 32;
+            let data = rng.normal_vec(tokens * kv_dim);
+            let block = PackedBlock::quantize(&data, bits, 32);
+            let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+            let mut a = vec![0f32; 32];
+            let mut b = vec![0f32; 32];
+            value_accum_packed(&p, &block, kv_dim, 32, 32, &mut a);
+            value_accum_fused(&p, &block, kv_dim, 32, 32, &mut FusedScratch::default(), &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bits={bits}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_routes_3bit_to_fused() {
+        assert!(!packed_dot_supported(3));
+        assert!(packed_dot_supported(1) && packed_dot_supported(2)
+                && packed_dot_supported(4) && packed_dot_supported(8));
+        let mut rng = Rng::new(33);
+        let (_, block) = key_block(&mut rng, 32, 32, 3);
+        let q = rng.normal_vec(32);
+        let mut a = vec![0f32; 32];
+        let mut b = vec![0f32; 32];
+        let mut s = FusedScratch::default();
+        key_scores_dispatch(&q, &block, 32, 0, &mut s, &mut a);
+        key_scores_fused(&q, &block, 32, 0, &mut FusedScratch::default(), &mut b);
+        assert_eq!(a, b);
+        assert!(!s.ints.is_empty(), "3-bit fallback stages the unpack scratch");
+    }
+
+    #[test]
     fn unpack_cache_tracks_inplace_requantization() {
         // an in-place downshift must invalidate a scratch that still
         // holds the block's old integers (uid-keyed cache)
@@ -275,6 +671,30 @@ mod tests {
         key_scores_fused(&q, &block, 32, 0, &mut s, &mut twice);
         for (x, y) in once.iter().zip(&twice) {
             assert!((2.0 * x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn packed_outlier_side_path_is_binary_searched_range() {
+        // an outlier-carrying block: packed and fused must agree exactly
+        // for heads at every chan_offset (the partition_point range must
+        // select precisely the head's outliers)
+        let mut rng = Rng::new(34);
+        let (kv_dim, tokens) = (64usize, 32usize);
+        let data = rng.normal_vec(kv_dim * tokens);
+        let mut block = PackedBlock::default();
+        block.quantize_outliers_into(&data, 2, tokens, 0.05, &mut Vec::new());
+        assert!(!block.outliers.is_empty());
+        let q = rng.normal_vec(32);
+        for chan_offset in [0usize, 32] {
+            let mut a = vec![0f32; tokens];
+            let mut b = vec![0f32; tokens];
+            key_scores_packed(&q, &block, tokens, chan_offset, &mut a);
+            key_scores_fused(&q, &block, tokens, chan_offset,
+                             &mut FusedScratch::default(), &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "chan_offset={chan_offset}");
+            }
         }
     }
 }

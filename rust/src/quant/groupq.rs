@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::pack::{pack_stream, qmax, qmax_at, unpack_stream, words_for};
+use super::pack::{get_at, pack_stream, qmax, qmax_at, unpack_stream, words_for};
 
 pub const EPS: f32 = 1e-6;
 
@@ -40,6 +40,11 @@ pub struct PackedBlock {
     pub words: Vec<u32>,
     pub scales: Vec<f32>,
     pub mins: Vec<f32>,
+    /// KVQuant-style exact exceptions, **sorted by stream index** — an
+    /// invariant established at (re)quantize time and relied on by the
+    /// kernels' binary-searched outlier side path (quant/fused.rs): a
+    /// head's contiguous stream range is located with `partition_point`
+    /// instead of scanning every outlier per head per block.
     pub outliers: Vec<(u32, f32)>,
     /// Identity of the current packed contents, refreshed on every
     /// (re)quantization.  The fused kernels' unpack cache keys on this,
@@ -116,6 +121,7 @@ impl PackedBlock {
         });
         let mut keep: Vec<(u32, f32)> =
             idx[..n_out].iter().map(|&i| (i, data[i as usize])).collect();
+        // sorted by stream index: the kernels binary-search a head's range
         keep.sort_unstable_by_key(|&(i, _)| i);
         // neutralize outliers: replace with the mean of their group's
         // remaining elements so stats tighten around the inliers
@@ -133,12 +139,21 @@ impl PackedBlock {
         self.outliers = keep;
     }
 
-    /// Dequantized value of a single stream element (slow path — used for
-    /// outlier corrections in the fused kernels).
+    /// Dequantized value of a single stream element given the unpacked
+    /// integer stream (the unpack-based fused kernels' outlier path).
     #[inline]
     pub fn dequant_one(&self, idx: usize, ints: &[u32]) -> f32 {
         let g = idx / self.group;
         ints[idx] as f32 * self.scales[g] + self.mins[g]
+    }
+
+    /// Dequantized value of a single stream element straight from the
+    /// packed words — no unpacked stream required (the packed kernels'
+    /// outlier path).  Bit-identical to [`Self::dequant_one`].
+    #[inline]
+    pub fn dequant_at(&self, idx: usize) -> f32 {
+        let g = idx / self.group;
+        get_at(&self.words, self.bits, idx) as f32 * self.scales[g] + self.mins[g]
     }
 
     /// Dequantize the full stream into `out[..n]`.
@@ -336,6 +351,26 @@ mod tests {
         // still decodes to something finite and sane
         let e = quant_error(&block, &data);
         assert!(e.mse.is_finite() && e.max_abs.is_finite());
+    }
+
+    #[test]
+    fn dequant_at_matches_dequant_one() {
+        // the packed kernels' outlier path must agree bit-for-bit with
+        // the unpack-based one at every width and stream index
+        // 360 elements: ragged final word at 1-bit (360 % 32) and 3-bit
+        // (360 % 11), group 24 keeps every group whole
+        let mut rng = Rng::new(17);
+        let data = rng.normal_vec(360);
+        for bits in [1u8, 2, 3, 4, 8] {
+            let block = PackedBlock::quantize(&data, bits, 24);
+            let mut ints = vec![0u32; block.n];
+            crate::quant::unpack_stream(&block.words, bits, block.n, &mut ints);
+            for idx in 0..block.n {
+                assert_eq!(block.dequant_at(idx).to_bits(),
+                           block.dequant_one(idx, &ints).to_bits(),
+                           "bits {bits} idx {idx}");
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,16 @@
-//! Low-bit quantization: packing, group-wise asymmetric quant, fused
-//! dequantize·matvec kernels (the paper's CUDA-kernel contribution mapped
-//! to CPU — see DESIGN.md §Hardware-Adaptation).
+//! Low-bit quantization: packing, group-wise asymmetric quant, and the
+//! decode-attention kernels over packed blocks — integer-domain
+//! (unpack-free) for uniform widths, unpack-based fused for 3-bit (the
+//! paper's CUDA-kernel contribution mapped to CPU — see DESIGN.md
+//! §Hardware-Adaptation and §Quantized-Kernels).
 
 pub mod fused;
 pub mod groupq;
 pub mod pack;
 
-pub use fused::{key_scores_fused, value_accum_fused, FusedScratch};
+pub use fused::{key_scores_dispatch, key_scores_fused, key_scores_packed,
+                packed_dot_supported, value_accum_dispatch, value_accum_fused,
+                value_accum_packed, FusedScratch};
 pub use groupq::{quant_error, PackedBlock, QuantError};
-pub use pack::{elems_per_word, pack_stream, qmax, qmax_at, unpack_stream, words_for};
+pub use pack::{elems_per_word, field_range, get_at, pack_stream, qmax, qmax_at,
+               unpack_stream, words_for, FieldRange};

@@ -118,6 +118,69 @@ pub fn unpack_stream(words: &[u32], bits: u8, n: usize, out: &mut [u32]) {
     }
 }
 
+/// Extract one field from a packed stream without unpacking anything
+/// else — the sparse outlier side path of the packed kernels
+/// (quant/fused.rs) dequantizes single elements through this.
+#[inline]
+pub fn get_at(words: &[u32], bits: u8, idx: usize) -> u32 {
+    match bits {
+        3 => {
+            let w = words[idx / 11];
+            match idx % 11 {
+                10 => (w >> 30) & 0x3,
+                i => (w >> (3 * i)) & 0x7,
+            }
+        }
+        b => {
+            let per = elems_per_word(b);
+            (words[idx / per] >> (b as usize * (idx % per))) & ((1u32 << b) - 1)
+        }
+    }
+}
+
+/// Word-at-a-time view of the contiguous field range `[start, start+len)`
+/// of a **uniform-width** packed stream (`32 % bits == 0`; 3-bit's
+/// 11-per-word layout has no aligned word view and stays on the unpack
+/// path — DESIGN.md §Quantized-Kernels).
+///
+/// Yields one `(word, first_field, n_fields)` triple per `u32` the range
+/// overlaps: the raw packed word, the field index of the range's next
+/// element within it, and how many of its fields belong to the range.
+/// The packed kernels walk unaligned rows through this without ever
+/// materializing the unpacked stream.
+pub struct FieldRange<'a> {
+    words: &'a [u32],
+    per: usize,
+    /// absolute field index of the next element
+    next: usize,
+    end: usize,
+}
+
+/// View `[start, start+len)` of a uniform-width stream (see [`FieldRange`]).
+#[inline]
+pub fn field_range(words: &[u32], bits: u8, start: usize, len: usize) -> FieldRange<'_> {
+    debug_assert!(bits != 3 && 32 % bits as usize == 0, "uniform widths only");
+    let per = elems_per_word(bits);
+    debug_assert!(start + len <= words.len() * per);
+    FieldRange { words, per, next: start, end: start + len }
+}
+
+impl Iterator for FieldRange<'_> {
+    type Item = (u32, usize, usize);
+
+    #[inline]
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.end {
+            return None;
+        }
+        let w = self.words[self.next / self.per];
+        let f0 = self.next % self.per;
+        let n = (self.per - f0).min(self.end - self.next);
+        self.next += n;
+        Some((w, f0, n))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +217,44 @@ mod tests {
                 let mut out = vec![0u32; n];
                 unpack_stream(&words, bits, n, &mut out);
                 assert_eq!(out, q, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn get_at_matches_unpack() {
+        let mut rng = Rng::new(2);
+        for bits in [1u8, 2, 3, 4, 8] {
+            let n = 353; // word-tail at every width
+            let q: Vec<u32> =
+                (0..n).map(|i| rng.below(qmax_at(bits, i) as usize + 1) as u32).collect();
+            let mut words = Vec::new();
+            pack_stream(&q, bits, &mut words);
+            for (i, &want) in q.iter().enumerate() {
+                assert_eq!(get_at(&words, bits, i), want, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn field_range_covers_unaligned_rows() {
+        let mut rng = Rng::new(3);
+        for bits in [1u8, 2, 4, 8] {
+            let n = 352;
+            let q: Vec<u32> =
+                (0..n).map(|i| rng.below(qmax_at(bits, i) as usize + 1) as u32).collect();
+            let mut words = Vec::new();
+            pack_stream(&q, bits, &mut words);
+            let mask = (1u32 << bits) - 1;
+            // unaligned starts and lengths, including word-straddling rows
+            for (start, len) in [(0usize, n), (1, 33), (7, 40), (31, 64), (333, 19)] {
+                let mut got = Vec::new();
+                for (w, f0, k) in field_range(&words, bits, start, len) {
+                    for f in f0..f0 + k {
+                        got.push((w >> (bits as usize * f)) & mask);
+                    }
+                }
+                assert_eq!(got, q[start..start + len], "bits={bits} start={start} len={len}");
             }
         }
     }

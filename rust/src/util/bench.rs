@@ -3,7 +3,20 @@
 //! `cargo bench` runs the harness=false binaries under rust/benches/, each
 //! of which uses [`bench`] / [`Stats`] for warmup + repeated timing and
 //! prints criterion-style lines.
+//!
+//! Two environment knobs make the binaries CI-friendly (README.md
+//! §Benchmarks, `.github/workflows/verify.yml` bench-smoke):
+//!
+//! * `KVMIX_BENCH_BUDGET_MS` — overrides every [`bench`] call's per-name
+//!   sample budget, so a smoke run finishes in seconds.
+//! * `KVMIX_BENCH_JSON` — a directory; each bench binary's [`JsonSink`]
+//!   writes `<dir>/<bench>.json` with one entry per recorded [`Stats`].
+//!   `scripts/bench_to_json.py` merges these into the tracked
+//!   `BENCH_kernels.json` baseline and gates the packed-vs-fused
+//!   speedup, so the perf trajectory survives ROADMAP re-anchors.
 
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -48,7 +61,13 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 /// Time `f`, auto-scaling iteration count to fill ~`budget_ms` per sample.
+/// `KVMIX_BENCH_BUDGET_MS` overrides the budget (CI smoke runs set it to
+/// 1 so every bench binary completes in seconds).
 pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Stats {
+    let budget_ms = std::env::var("KVMIX_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(budget_ms);
     // warmup + calibration
     let t0 = Instant::now();
     f();
@@ -81,4 +100,125 @@ pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Stats {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Collects [`Stats`] rows and, when `KVMIX_BENCH_JSON=<dir>` is set,
+/// writes them as `<dir>/<bench>.json`:
+///
+/// ```json
+/// {"schema": 1, "bench": "quant_kernels", "entries": [
+///   {"name": "...", "mean_ns": ..., "p50_ns": ..., "p95_ns": ...,
+///    "min_ns": ..., "iters": ..., "per_s": ... | null}, ...]}
+/// ```
+///
+/// `scripts/bench_to_json.py merge` folds these per-bench files into the
+/// committed `BENCH_kernels.json` baseline; `--check` validates the
+/// result and asserts the packed-vs-fused speedup multiple.  With the
+/// env var unset the sink is a no-op, so the human-readable output is
+/// unchanged.
+pub struct JsonSink {
+    bench: &'static str,
+    path: Option<PathBuf>,
+    rows: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonSink {
+    /// `bench` names the output file (`<KVMIX_BENCH_JSON>/<bench>.json`).
+    pub fn from_env(bench: &'static str) -> Self {
+        let path = std::env::var_os("KVMIX_BENCH_JSON")
+            .map(|dir| PathBuf::from(dir).join(format!("{bench}.json")));
+        JsonSink { bench, path, rows: Vec::new() }
+    }
+
+    /// Record one timed result; `items_per_iter` adds a derived
+    /// items-per-second rate (tokens, elements, ... — whatever the
+    /// bench's human-readable line reports).
+    pub fn record(&mut self, s: &Stats, items_per_iter: Option<f64>) {
+        let per_s = items_per_iter
+            .map(|n| json_num(s.throughput(n)))
+            .unwrap_or_else(|| "null".to_string());
+        self.rows.push(format!(
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\
+             \"min_ns\":{},\"iters\":{},\"per_s\":{}}}",
+            json_escape(&s.name), json_num(s.mean), json_num(s.p50), json_num(s.p95),
+            json_num(s.min), s.iters, per_s));
+    }
+
+    /// Record an externally-timed row (the e2e bench's step loops time
+    /// themselves rather than going through [`bench`]).
+    pub fn record_value(&mut self, name: &str, mean_ns: f64, per_s: Option<f64>) {
+        self.rows.push(format!(
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"p50_ns\":null,\"p95_ns\":null,\
+             \"min_ns\":null,\"iters\":null,\"per_s\":{}}}",
+            json_escape(name), json_num(mean_ns),
+            per_s.map(json_num).unwrap_or_else(|| "null".to_string())));
+    }
+
+    /// Write the file (no-op when `KVMIX_BENCH_JSON` is unset).  An
+    /// empty-entry file is still written so a skipped bench (e.g.
+    /// e2e_decode without artifacts) is distinguishable from one that
+    /// never ran.
+    pub fn finish(&self) {
+        let Some(path) = &self.path else { return };
+        let body = format!("{{\"schema\":1,\"bench\":\"{}\",\"entries\":[\n{}\n]}}\n",
+                           self.bench, self.rows.join(",\n"));
+        let write = || -> std::io::Result<()> {
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let mut f = std::fs::File::create(path)?;
+            f.write_all(body.as_bytes())
+        };
+        match write() {
+            Ok(()) => eprintln!("bench json -> {}", path.display()),
+            Err(e) => eprintln!("bench json write failed ({}): {e}", path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_rows_are_valid_json_fragments() {
+        let mut sink = JsonSink { bench: "t", path: None, rows: Vec::new() };
+        let s = Stats { name: "key\"x/2bit".into(), mean: 12.345678, p50: 12.0,
+                        p95: 13.0, min: 11.0, iters: 100 };
+        sink.record(&s, Some(32.0));
+        sink.record_value("e2e/decode", 1.5e6, None);
+        assert!(sink.rows[0].contains("\\\""), "name must be escaped");
+        assert!(sink.rows[0].contains("\"mean_ns\":12.346"));
+        assert!(sink.rows[1].contains("\"per_s\":null"));
+        // crude balance check on the assembled document shape
+        let doc = format!("{{\"schema\":1,\"bench\":\"t\",\"entries\":[\n{}\n]}}",
+                          sink.rows.join(",\n"));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+    }
+
+    #[test]
+    fn empty_entries_render_when_no_rows() {
+        let sink = JsonSink { bench: "t", path: None, rows: Vec::new() };
+        assert!(sink.rows.is_empty());
+        sink.finish(); // no path: must not panic or write
+    }
 }

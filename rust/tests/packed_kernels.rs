@@ -1,0 +1,160 @@
+//! Bit-exactness pins for the integer-domain packed decode kernels
+//! (DESIGN.md §Quantized-Kernels): `key_scores_packed` /
+//! `value_accum_packed` must produce outputs whose f32 bit patterns are
+//! **identical** to the unpack-based fused reference — not merely within
+//! an epsilon — across every supported width, unaligned token counts,
+//! nonzero channel offsets, outlier-carrying blocks and pre-accumulated
+//! outputs.  The same assertions hold with and without the `simd` cargo
+//! feature (the SIMD lanes use strict mul-then-add, never FMA), so
+//! `cargo test` and `cargo +nightly test --features simd` pin the same
+//! contract.  Hand-rolled generator loop as in rust/tests/props.rs.
+
+use kvmix::quant::{fused, packed_dot_supported, FusedScratch, PackedBlock};
+use kvmix::util::Rng;
+
+fn for_cases(n: usize, seed0: u64, mut f: impl FnMut(u64, &mut Rng)) {
+    for i in 0..n {
+        let seed = seed0.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Channel-major Key block (stream `c*tokens + t`, group = tokens).
+fn key_block(rng: &mut Rng, kv_dim: usize, tokens: usize, bits: u8,
+             outlier_frac: f32) -> PackedBlock {
+    let data = rng.normal_vec(kv_dim * tokens);
+    let mut block = PackedBlock::default();
+    block.quantize_outliers_into(&data, bits, tokens, outlier_frac, &mut Vec::new());
+    block
+}
+
+/// Token-major Value block (stream `t*kv_dim + c`, group = channel group).
+fn value_block(rng: &mut Rng, kv_dim: usize, tokens: usize, group: usize,
+               bits: u8, outlier_frac: f32) -> PackedBlock {
+    let data = rng.normal_vec(tokens * kv_dim);
+    let mut block = PackedBlock::default();
+    block.quantize_outliers_into(&data, bits, group, outlier_frac, &mut Vec::new());
+    block
+}
+
+/// Both kernels accumulate (`+=`): seed the two outputs with the *same*
+/// nonzero garbage so the exactness check also pins the accumulation
+/// semantics, then compare bit patterns.
+fn assert_bit_identical(a: &[f32], b: &[f32], ctx: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{ctx}: out[{i}] packed {x:?} != fused {y:?}");
+    }
+}
+
+#[test]
+fn packed_key_bit_exact_across_shapes() {
+    // every supported width x unaligned/word-aligned token counts x
+    // zero and nonzero chan_offset x with/without outliers
+    let kv_dim = 64;
+    for_cases(60, 101, |seed, rng| {
+        let bits = [1u8, 2, 4, 8][rng.below(4)];
+        let tokens = [32usize, 33, 40, 352][rng.below(4)];
+        let chan_offset = [0usize, 32][rng.below(2)];
+        let head_dim = 32;
+        let frac = [0.0f32, 0.05][rng.below(2)];
+        assert!(packed_dot_supported(bits));
+        let block = key_block(rng, kv_dim, tokens, bits, frac);
+        let q = rng.normal_vec(head_dim);
+        let seeded: Vec<f32> = (0..tokens).map(|_| rng.normal_f32()).collect();
+
+        let mut out_p = seeded.clone();
+        fused::key_scores_packed(&q, &block, tokens, chan_offset, &mut out_p);
+
+        let mut out_f = seeded.clone();
+        let mut scratch = FusedScratch::default();
+        fused::key_scores_fused(&q, &block, tokens, chan_offset, &mut scratch, &mut out_f);
+
+        assert_bit_identical(&out_p, &out_f,
+            &format!("seed {seed} key bits {bits} tokens {tokens} \
+                      off {chan_offset} frac {frac}"));
+    });
+}
+
+#[test]
+fn packed_value_bit_exact_across_shapes() {
+    // configs include group-unaligned widths (group 12 is not a multiple
+    // of any elems-per-word) and partial last tokens via p.len() < tokens
+    for_cases(60, 202, |seed, rng| {
+        let bits = [1u8, 2, 4, 8][rng.below(4)];
+        // (kv_dim, group, head_dim, chan_offset)
+        let (kv_dim, group, head_dim, chan_offset) =
+            [(64usize, 32usize, 32usize, 0usize), (64, 32, 32, 32),
+             (48, 12, 24, 0), (48, 12, 24, 12)][rng.below(4)];
+        let tokens = [32usize, 33][rng.below(2)];
+        let frac = [0.0f32, 0.05][rng.below(2)];
+        let block = value_block(rng, kv_dim, tokens, group, bits, frac);
+        let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+        let seeded: Vec<f32> = (0..head_dim).map(|_| rng.normal_f32()).collect();
+
+        let mut out_p = seeded.clone();
+        fused::value_accum_packed(&p, &block, kv_dim, chan_offset, head_dim, &mut out_p);
+
+        let mut out_f = seeded.clone();
+        let mut scratch = FusedScratch::default();
+        fused::value_accum_fused(&p, &block, kv_dim, chan_offset, head_dim,
+                                 &mut scratch, &mut out_f);
+
+        assert_bit_identical(&out_p, &out_f,
+            &format!("seed {seed} value bits {bits} kv_dim {kv_dim} \
+                      group {group} off {chan_offset} tokens {tokens} frac {frac}"));
+    });
+}
+
+#[test]
+fn dispatch_bit_exact_at_every_ladder_width() {
+    // the dispatcher must be a pure router: packed where supported,
+    // fused at 3-bit (Eq. 12's 11-per-word layout has no aligned words)
+    let (kv_dim, tokens, head_dim) = (64usize, 33usize, 32usize);
+    for_cases(40, 303, |seed, rng| {
+        let bits = [1u8, 2, 3, 4][rng.below(4)];
+        let kblock = key_block(rng, kv_dim, tokens, bits, 0.05);
+        let q = rng.normal_vec(head_dim);
+
+        let mut out_d = vec![0f32; tokens];
+        let mut sd = FusedScratch::default();
+        fused::key_scores_dispatch(&q, &kblock, tokens, 0, &mut sd, &mut out_d);
+        let mut out_f = vec![0f32; tokens];
+        let mut sf = FusedScratch::default();
+        fused::key_scores_fused(&q, &kblock, tokens, 0, &mut sf, &mut out_f);
+        assert_bit_identical(&out_d, &out_f, &format!("seed {seed} key bits {bits}"));
+        if packed_dot_supported(bits) {
+            assert!(sd.ints.is_empty(),
+                    "packed dispatch must not touch the unpack scratch");
+        }
+
+        let vblock = value_block(rng, kv_dim, tokens, 32, bits, 0.05);
+        let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+        let mut out_d = vec![0f32; head_dim];
+        let mut sd = FusedScratch::default();
+        fused::value_accum_dispatch(&p, &vblock, kv_dim, 0, head_dim, &mut sd, &mut out_d);
+        let mut out_f = vec![0f32; head_dim];
+        let mut sf = FusedScratch::default();
+        fused::value_accum_fused(&p, &vblock, kv_dim, 0, head_dim, &mut sf, &mut out_f);
+        assert_bit_identical(&out_d, &out_f, &format!("seed {seed} value bits {bits}"));
+    });
+}
+
+#[test]
+fn packed_key_repeated_calls_keep_accumulating() {
+    // three stacked calls == fused's three stacked calls, bit for bit —
+    // the decode loop relies on += across heads sharing an out row
+    let (kv_dim, tokens) = (64usize, 40usize);
+    let mut rng = Rng::new(7);
+    let block = key_block(&mut rng, kv_dim, tokens, 2, 0.0);
+    let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(32)).collect();
+    let mut out_p = vec![0f32; tokens];
+    let mut out_f = vec![0f32; tokens];
+    let mut scratch = FusedScratch::default();
+    for q in &qs {
+        fused::key_scores_packed(q, &block, tokens, 0, &mut out_p);
+        fused::key_scores_fused(q, &block, tokens, 0, &mut scratch, &mut out_f);
+    }
+    assert_bit_identical(&out_p, &out_f, "stacked accumulation");
+}

@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Merge per-bench JSON emissions into the tracked BENCH_kernels.json
+baseline, and validate/gate that baseline.
+
+The Rust bench binaries (rust/benches/*.rs) write one JSON file each when
+`KVMIX_BENCH_JSON=<dir>` is set (see rust/src/util/bench.rs `JsonSink`).
+This script folds those files into the committed baseline and checks it:
+
+    # regenerate the baseline after a bench run
+    KVMIX_BENCH_JSON=/tmp/bench-json cargo bench
+    python3 scripts/bench_to_json.py merge --json-dir /tmp/bench-json \
+        --out BENCH_kernels.json
+
+    # structural validation (parse + schema + canonical formatting)
+    python3 scripts/bench_to_json.py --check BENCH_kernels.json
+
+    # additionally gate the packed-vs-fused speedup (CI bench-smoke)
+    python3 scripts/bench_to_json.py --check BENCH_kernels.json \
+        --require-speedup 1.5
+
+The speedup gate compares, inside the `quant_kernels` bench, the
+cold-cache fused reference against the integer-domain packed kernel:
+`mean_ns(key_scores_fused/{w}bit) / mean_ns(key_scores_packed/{w}bit)`
+and the same for `value_accum_*`, at w in {2, 4} (the pressure ladder's
+sub-byte widths with word-aligned layouts; 3-bit dispatches to the fused
+fallback by design — DESIGN.md §Quantized-Kernels).  Plain `--check`
+reports the ratios when both sides are measured but only fails on
+structural problems; `--require-speedup` turns unmeasured or missing
+pairs, and ratios below the threshold, into failures.
+
+The committed baseline may carry `null` means (placeholder rows written
+in an environment without a Rust toolchain); CI's bench-smoke step
+regenerates a measured file and gates on that, so the tracked schema and
+row names stay authoritative even when the numbers do not.
+
+Exit code 0 = ok, 1 = check failure / bad input.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = 1
+
+# (family, width) pairs the --require-speedup gate must find measured
+GATED_PAIRS = [(family, w) for family in ("key_scores", "value_accum")
+               for w in (2, 4)]
+
+ENTRY_KEYS = {"name", "mean_ns", "p50_ns", "p95_ns", "min_ns", "iters", "per_s"}
+
+
+def fail(msg):
+    print(f"bench_to_json: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def canonical(doc):
+    return json.dumps(doc, indent=2, sort_keys=True) + "\n"
+
+
+def load_baseline(path):
+    try:
+        doc = json.loads(path.read_text())
+    except FileNotFoundError:
+        fail(f"{path}: not found")
+    except json.JSONDecodeError as e:
+        fail(f"{path}: invalid JSON: {e}")
+    return doc
+
+
+def validate(doc, path):
+    errors = []
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema must be {SCHEMA}, got {doc.get('schema')!r}")
+    benches = doc.get("benches")
+    if not isinstance(benches, dict) or not benches:
+        errors.append("missing or empty 'benches' object")
+        return errors
+    for bench, section in sorted(benches.items()):
+        entries = section.get("entries")
+        if not isinstance(entries, list):
+            errors.append(f"benches.{bench}: 'entries' must be a list")
+            continue
+        seen = set()
+        for i, e in enumerate(entries):
+            where = f"benches.{bench}.entries[{i}]"
+            if not isinstance(e, dict):
+                errors.append(f"{where}: not an object")
+                continue
+            if set(e) != ENTRY_KEYS:
+                errors.append(f"{where}: keys {sorted(e)} != {sorted(ENTRY_KEYS)}")
+                continue
+            if not isinstance(e["name"], str) or not e["name"]:
+                errors.append(f"{where}: bad name {e['name']!r}")
+                continue
+            if e["name"] in seen:
+                errors.append(f"{where}: duplicate name {e['name']!r}")
+            seen.add(e["name"])
+            for k in ("mean_ns", "p50_ns", "p95_ns", "min_ns", "per_s"):
+                v = e[k]
+                if v is not None and not isinstance(v, (int, float)):
+                    errors.append(f"{where}.{k}: {v!r} is not a number or null")
+            if e["iters"] is not None and not isinstance(e["iters"], int):
+                errors.append(f"{where}.iters: {e['iters']!r} is not an int or null")
+    return errors
+
+
+def mean_ns(doc, bench, name):
+    section = doc.get("benches", {}).get(bench)
+    if section is None:
+        return None, f"bench section {bench!r} missing"
+    for e in section.get("entries", []):
+        if isinstance(e, dict) and e.get("name") == name:
+            v = e.get("mean_ns")
+            if isinstance(v, (int, float)) and v > 0:
+                return float(v), None
+            return None, f"{bench}:{name} is unmeasured (mean_ns={v!r})"
+    return None, f"{bench}:{name} row missing"
+
+
+def check_speedups(doc, threshold, required):
+    """Report fused-vs-packed ratios; return error strings."""
+    errors = []
+    for family, w in GATED_PAIRS:
+        fused_name = f"{family}_fused/{w}bit"
+        packed_name = f"{family}_packed/{w}bit"
+        fused, ferr = mean_ns(doc, "quant_kernels", fused_name)
+        packed, perr = mean_ns(doc, "quant_kernels", packed_name)
+        problem = ferr or perr
+        if problem:
+            if required:
+                errors.append(f"speedup gate: {problem}")
+            else:
+                print(f"  {packed_name}: {problem} (not gated)")
+            continue
+        ratio = fused / packed
+        verdict = "ok" if ratio >= threshold else "BELOW THRESHOLD"
+        print(f"  {packed_name}: {ratio:.2f}x vs cold fused "
+              f"(>= {threshold:.2f}x required: {verdict})")
+        if required and ratio < threshold:
+            errors.append(
+                f"speedup gate: {packed_name} only {ratio:.2f}x vs "
+                f"{fused_name} (need >= {threshold:.2f}x)")
+    return errors
+
+
+def cmd_check(path, threshold, required):
+    doc = load_baseline(path)
+    errors = validate(doc, path)
+    text = path.read_text()
+    if not errors and text != canonical(doc):
+        errors.append(
+            "not in canonical format; rewrite with "
+            f"`python3 scripts/bench_to_json.py merge --out {path.name}`")
+    print(f"{path}: {sum(len(s.get('entries', [])) for s in doc.get('benches', {}).values() if isinstance(s, dict))} entries")
+    errors += check_speedups(doc, threshold, required)
+    if errors:
+        for e in errors:
+            print(f"bench_to_json: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"{path}: ok")
+
+
+def cmd_merge(json_dir, out, note):
+    if out.exists():
+        doc = load_baseline(out)
+        if validate(doc, out):
+            fail(f"{out}: existing baseline is invalid; fix or delete it first")
+    else:
+        doc = {"schema": SCHEMA, "benches": {}}
+    if note is not None:
+        doc["note"] = note
+    merged = 0
+    for f in sorted(json_dir.glob("*.json")):
+        try:
+            emitted = json.loads(f.read_text())
+        except json.JSONDecodeError as e:
+            fail(f"{f}: invalid JSON from bench run: {e}")
+        if emitted.get("schema") != SCHEMA or "bench" not in emitted:
+            fail(f"{f}: not a JsonSink emission (schema/bench missing)")
+        bench = emitted["bench"]
+        entries = emitted.get("entries", [])
+        if not entries:
+            print(f"  {f.name}: empty (bench skipped), keeping prior rows")
+            doc["benches"].setdefault(bench, {"entries": []})
+            continue
+        doc["benches"][bench] = {"entries": entries}
+        merged += 1
+        print(f"  {f.name}: {len(entries)} entries -> benches.{bench}")
+    if merged == 0 and not doc["benches"]:
+        fail(f"{json_dir}: no bench emissions found")
+    errors = validate(doc, out)
+    if errors:
+        for e in errors:
+            print(f"bench_to_json: {e}", file=sys.stderr)
+        fail("merged document failed validation; not writing")
+    out.write_text(canonical(doc))
+    print(f"{out}: wrote {merged} merged bench section(s)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("command", nargs="?", choices=["merge"],
+                    help="merge per-bench JSON files into the baseline")
+    ap.add_argument("--check", metavar="BASELINE", type=Path,
+                    help="validate a baseline file (canonical format, schema)")
+    ap.add_argument("--require-speedup", type=float, metavar="X",
+                    help="with --check: fail unless packed kernels beat the "
+                         "cold fused reference by Xx at 2/4-bit (missing or "
+                         "unmeasured rows also fail)")
+    ap.add_argument("--json-dir", type=Path,
+                    help="merge: directory of JsonSink emissions "
+                         "(the KVMIX_BENCH_JSON dir)")
+    ap.add_argument("--out", type=Path, default=Path("BENCH_kernels.json"),
+                    help="merge: baseline file to update (default "
+                         "BENCH_kernels.json)")
+    ap.add_argument("--note", help="merge: replace the baseline's note field")
+    args = ap.parse_args()
+
+    if args.command == "merge":
+        if args.json_dir is None:
+            ap.error("merge requires --json-dir")
+        if not args.json_dir.is_dir():
+            fail(f"{args.json_dir}: not a directory")
+        cmd_merge(args.json_dir, args.out, args.note)
+    elif args.check is not None:
+        threshold = args.require_speedup if args.require_speedup is not None else 1.5
+        cmd_check(args.check, threshold, args.require_speedup is not None)
+    else:
+        ap.error("nothing to do: pass `merge` or --check")
+
+
+if __name__ == "__main__":
+    main()
