@@ -44,7 +44,8 @@ fn main() -> Result<()> {
 
     engine.submit(Request {
         id: 1, prompt, max_new_tokens: 8,
-        sampler: Sampler::Greedy, stop_token: Some(workload::EOS), submitted_ns: 0,
+        sampler: Sampler::Greedy, stop_token: Some(workload::EOS),
+        priority: 0, deadline_ms: None, submitted_ns: 0,
     });
     let done = engine.run_to_completion()?;
     println!("generated: {:?}", done[0].tokens);

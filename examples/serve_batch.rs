@@ -9,12 +9,20 @@
 //! sharing deduplicates (DESIGN.md §Prefix-Sharing): the report then
 //! shows `prefix hits N (T tok reused)`.
 //!
-//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4 --page-tokens 64 --prefix-cache]
+//! With `--deadline-ms N` every request carries a per-request deadline:
+//! the engine's sweep retires late requests with `finish: "deadline"`,
+//! and the finish-reason breakdown below shows the split — the same
+//! lifecycle the NDJSON serving protocol streams to clients
+//! (DESIGN.md §Serving-Protocol).
+//!
+//!     cargo run --release --example serve_batch [-- --requests 24 --batch 8 --threads 4 --page-tokens 64 --prefix-cache --deadline-ms 0]
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
-use kvmix::coordinator::{Engine, EngineCfg, Request};
+use kvmix::coordinator::{proto, Engine, EngineCfg, Request};
 use kvmix::harness::workload;
 use kvmix::model::Sampler;
 use kvmix::runtime::{default_artifacts_dir, Runtime};
@@ -38,6 +46,12 @@ fn main() -> Result<()> {
     // 0 = legacy whole-prefill scheduling; e.g. --step-tokens 64 chunks
     // prompt prefill across steps (DESIGN.md §Scheduler)
     let step_tokens = args.usize_or("step-tokens", 0)?;
+    // 0 = no deadline; otherwise every request must finish within N ms
+    // of submission or the engine retires it early (finish: "deadline")
+    let deadline_ms = match args.usize_or("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(ms as u64),
+    };
 
     let dir = default_artifacts_dir();
     let rt = Runtime::load_with(&dir, false)?;
@@ -72,7 +86,8 @@ fn main() -> Result<()> {
                 engine.submit(Request {
                     id: id as u64, prompt, max_new_tokens: max_new,
                     sampler: Sampler::TopK { k: 4, temperature: 0.8 },
-                    stop_token: None, submitted_ns: 0,
+                    stop_token: None, priority: 0, deadline_ms,
+                    submitted_ns: 0,
                 });
             }
             let t0 = std::time::Instant::now();
@@ -83,6 +98,18 @@ fn main() -> Result<()> {
             println!("  {} requests, batch {}, {:.2}s wall", done.len(), batch, secs);
             println!("  decode throughput: {:.1} tok/s ({gen_tokens} tokens)",
                      gen_tokens as f64 / secs);
+            let mut by_finish: BTreeMap<&'static str, usize> = BTreeMap::new();
+            for c in &done {
+                *by_finish.entry(c.finish.as_str()).or_default() += 1;
+            }
+            let breakdown: Vec<String> =
+                by_finish.iter().map(|(k, v)| format!("{k} {v}")).collect();
+            println!("  finish reasons: {}", breakdown.join(", "));
+            // what a streaming client would see as this request's final
+            // frame on the NDJSON wire (DESIGN.md §Serving-Protocol)
+            if let Some(c) = done.first() {
+                println!("  sample final frame: {}", proto::final_frame(c.id, c));
+            }
             println!("  {}", engine.metrics.report());
             Ok(())
         })?;

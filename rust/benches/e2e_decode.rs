@@ -147,7 +147,8 @@ fn main() {
                 prompt.extend_from_slice(&tail);
                 engine.submit(Request {
                     id: id as u64, prompt, max_new_tokens: 8,
-                    sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0,
+                    sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                    deadline_ms: None, submitted_ns: 0,
                 });
             }
             let t0 = std::time::Instant::now();
@@ -188,8 +189,8 @@ fn main() {
                                                             32, long_len);
         for (id, prompt) in shorts.into_iter().enumerate() {
             engine.submit(Request { id: id as u64, prompt, max_new_tokens: 96,
-                                    sampler: Sampler::Greedy, stop_token: None,
-                                    submitted_ns: 0 });
+                                    sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                    deadline_ms: None, submitted_ns: 0 });
         }
         // let the short cohort reach steady-state decode, then land the
         // long prompt mid-stream
@@ -199,8 +200,8 @@ fn main() {
             done.extend(engine.step().expect("step"));
         }
         engine.submit(Request { id: 99, prompt: long, max_new_tokens: 16,
-                                sampler: Sampler::Greedy, stop_token: None,
-                                submitted_ns: 0 });
+                                sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                deadline_ms: None, submitted_ns: 0 });
         done.extend(engine.run_to_completion().expect("serve"));
         let secs = t0.elapsed().as_secs_f64();
         assert_eq!(done.len(), n_short + 1);

@@ -1,5 +1,6 @@
-//! Continuous batcher: the waiting-request FIFO and its admission
-//! mechanics (slots, memory projections, bounded lookahead).
+//! Continuous batcher: the waiting-request queue (priority bands, FIFO
+//! within a band — see [`Batcher::submit`]) and its admission mechanics
+//! (slots, memory projections, bounded lookahead).
 //!
 //! Waiting requests join the running batch whenever (a) a batch slot is
 //! free (`max_batch`, bounded by the largest compiled bucket) and (b) the
@@ -53,8 +54,25 @@ impl Batcher {
         Batcher { queue: VecDeque::new(), max_batch, bytes_per_token }
     }
 
+    /// Enqueue by priority: a request lands *behind* every waiting request
+    /// of equal-or-higher priority and *ahead* of strictly lower ones, so
+    /// equal priorities keep FIFO order and the default priority 0 is
+    /// bit-for-bit the old pure FIFO.  Preempt-restart requeues bypass
+    /// this on purpose (`queue.push_front` in the engine): a preempted
+    /// victim resumes at the head regardless of priority, preserving the
+    /// restart-fairness the scheduler tests pin.
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+        let pos = self.queue.iter().position(|q| q.priority < req.priority)
+            .unwrap_or(self.queue.len());
+        self.queue.insert(pos, req);
+    }
+
+    /// Remove a waiting request by id (the cancellation path for requests
+    /// that never reached the running batch).  `None` if `id` is not
+    /// queued — already admitted, finished, or unknown.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.queue.iter().position(|q| q.id == id)?;
+        self.queue.remove(pos)
     }
 
     pub fn waiting(&self) -> usize {
@@ -128,7 +146,8 @@ mod tests {
 
     fn req(id: u64, prompt: usize, new: usize) -> Request {
         Request { id, prompt: vec![1; prompt], max_new_tokens: new,
-                  sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+                  sampler: Sampler::Greedy, stop_token: None,
+                  priority: 0, deadline_ms: None, submitted_ns: 0 }
     }
 
     #[test]
@@ -189,6 +208,34 @@ mod tests {
         // a reuse claim larger than the prompt saturates, never underflows
         b.submit(req(2, 4, 4));
         assert_eq!(b.projected_suffix_bytes(&b.queue[0], 100), 400);
+    }
+
+    #[test]
+    fn priority_orders_queue_equal_keeps_fifo() {
+        let mut b = Batcher::new(8, 1.0);
+        let mut p = |id, pri| {
+            let mut r = req(id, 1, 1);
+            r.priority = pri;
+            b.submit(r);
+        };
+        p(1, 0);
+        p(2, 0);
+        p(3, 5);  // overtakes both priority-0 entries
+        p(4, 5);  // equal priority: behind 3, still ahead of 1 and 2
+        p(5, -1); // below default: joins the tail
+        let order: Vec<u64> = b.queue.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![3, 4, 1, 2, 5]);
+    }
+
+    #[test]
+    fn remove_pops_by_id_only_when_waiting() {
+        let mut b = Batcher::new(8, 1.0);
+        b.submit(req(1, 1, 1));
+        b.submit(req(2, 1, 1));
+        assert_eq!(b.remove(2).unwrap().id, 2);
+        assert!(b.remove(2).is_none(), "already removed");
+        assert!(b.remove(99).is_none(), "never queued");
+        assert_eq!(b.waiting(), 1);
     }
 
     #[test]

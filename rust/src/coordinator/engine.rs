@@ -42,15 +42,25 @@
 //!
 //! A request whose projected footprint can *never* be admitted no longer
 //! tears the engine down: it is popped into [`Engine::take_rejections`]
-//! (the server maps it to one `ERR` line) and stepping continues for
-//! everyone else.
+//! (the server maps it to one terminal rejection frame) and stepping
+//! continues for everyone else.
+//!
+//! Two early-retirement paths ride the same step loop (DESIGN.md
+//! §Serving-Protocol): a **deadline sweep** at the top of [`Engine::step`]
+//! retires every request whose `deadline_ms` expired — waiting or active —
+//! before the scheduler plans (an expired lane gets no decode
+//! reservation), and [`Engine::cancel`] retires one request by id
+//! *between* steps (the serve loop calls it for client cancel frames and
+//! disconnects).  Both free the sequence's pool pages immediately and
+//! neither counts as a completion in the metrics.
 
 use anyhow::Result;
 
 use crate::baselines::Method;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ActiveRequest, Completion, Lifecycle, Rejection, Request};
+use crate::coordinator::request::{ActiveRequest, Completion, FinishReason, Lifecycle,
+                                  Rejection, Request, RequestId};
 use crate::coordinator::scheduler::{ChunkGrant, Scheduler, StepPlan};
 use crate::kvcache::{pressure, MemoryBudget, PagePool, PressureCfg, SeqKvCache};
 use crate::model::{DecodeScratch, Forward};
@@ -203,18 +213,24 @@ impl<'a> Engine<'a> {
     /// rejections (projected footprint beyond what relief could free)
     /// are counted as `oom_events`; submit-time over-bucket rejections
     /// are not memory events and only appear here.  The serve loop
-    /// answers each with an `ERR` line; [`Engine::run_to_completion`]
-    /// turns the first one into an error so one-shot harnesses keep
-    /// their OOM semantics.
+    /// answers each with a terminal rejection frame;
+    /// [`Engine::run_to_completion`] turns the first one into an error so
+    /// one-shot harnesses keep their OOM semantics.
     pub fn take_rejections(&mut self) -> Vec<Rejection> {
         std::mem::take(&mut self.rejections)
     }
 
-    /// One scheduler iteration — plan, execute, charge/relieve, retire;
-    /// returns completions retired this step.
+    /// One scheduler iteration — deadline sweep, then plan, execute,
+    /// charge/relieve, retire; returns every request retired this step
+    /// (normal completions *and* deadline expiries, distinguishable by
+    /// [`Completion::finish`]).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         let t0 = std::time::Instant::now();
         let fwd = Forward::with_pool(self.rt, self.pool);
+
+        // ---- deadline sweep (before planning: an expired lane must not
+        //      receive a decode reservation or prefill chunk) ----
+        let mut done = self.sweep_deadlines()?;
 
         // ---- plan + prefill execution ----
         let decoding = self.active.iter().filter(|a| a.is_decoding()).count();
@@ -225,12 +241,93 @@ impl<'a> Engine<'a> {
         self.decode_and_relieve(&fwd)?;
 
         // ---- retire ----
-        let done = self.retire_done()?;
+        done.extend(self.retire_done()?);
         if let Some(u) = self.scheduler.utilization(&plan) {
             self.metrics.budget_util.record(u);
         }
         self.metrics.step_us.record(t0.elapsed().as_micros() as f64);
         Ok(done)
+    }
+
+    /// Retire every request whose `deadline_ms` has expired: waiting
+    /// requests leave the queue with zero tokens, active lanes leave the
+    /// batch with their partial generation, and both free their pool
+    /// pages.  Runs at the top of each step so expired lanes never plan
+    /// (DESIGN.md §Serving-Protocol).
+    fn sweep_deadlines(&mut self) -> Result<Vec<Completion>> {
+        let now = self.metrics.now_ns();
+        let expired = |r: &Request| match r.deadline_ms {
+            Some(ms) => now.saturating_sub(r.submitted_ns) >= ms.saturating_mul(1_000_000),
+            None => false,
+        };
+        let mut done = Vec::new();
+        let waiting: Vec<RequestId> = self.batcher.queue.iter()
+            .filter(|r| expired(r))
+            .map(|r| r.id)
+            .collect();
+        for id in waiting {
+            let req = self.batcher.remove(id).expect("id taken from the queue");
+            self.metrics.deadline_hits += 1;
+            done.push(Completion {
+                id, prompt_len: req.prompt.len(), tokens: Vec::new(),
+                finish: FinishReason::Deadline,
+                submitted_ns: req.submitted_ns, first_token_ns: now, finished_ns: now,
+            });
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if expired(&self.active[i].req) {
+                let mut ar = self.active.remove(i);
+                if let Some(pool) = &mut self.pages {
+                    pool.free_owner(ar.req.id);
+                }
+                self.metrics.deadline_hits += 1;
+                done.push(ar_into_completion(&mut ar, now, FinishReason::Deadline));
+            } else {
+                i += 1;
+            }
+        }
+        if !done.is_empty() {
+            // freed lanes kept the pool counter consistent (free_owner);
+            // monolithic mode just re-sums the survivors
+            let _ = self.charge_current()?;
+        }
+        Ok(done)
+    }
+
+    /// Retire one request by id *between* steps — the serving protocol's
+    /// cancellation hook (client `{"cancel":id}` frames and disconnects;
+    /// DESIGN.md §Serving-Protocol).  A waiting request leaves the queue
+    /// with zero tokens; an active lane leaves the batch with its partial
+    /// generation and its pool pages freed before the next step charges.
+    /// Returns `None` when `id` is neither waiting nor active (already
+    /// finished, or never submitted) — cancellation is then a no-op and
+    /// nothing is counted.
+    ///
+    /// The completion is returned to the caller but *not* pushed onto
+    /// [`Engine::completions`] and not counted in `metrics.completions`:
+    /// a cancelled request is not a served one (it lands in
+    /// `metrics.cancellations` instead), and harness transcripts stay
+    /// clean of partial generations.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Completion> {
+        let now = self.metrics.now_ns();
+        if let Some(req) = self.batcher.remove(id) {
+            self.metrics.cancellations += 1;
+            return Some(Completion {
+                id, prompt_len: req.prompt.len(), tokens: Vec::new(),
+                finish: FinishReason::Cancelled,
+                submitted_ns: req.submitted_ns, first_token_ns: now, finished_ns: now,
+            });
+        }
+        let lane = self.active.iter().position(|a| a.req.id == id)?;
+        let mut ar = self.active.remove(lane);
+        if let Some(pool) = &mut self.pages {
+            pool.free_owner(ar.req.id);
+        }
+        self.metrics.cancellations += 1;
+        let c = ar_into_completion(&mut ar, now, FinishReason::Cancelled);
+        let _ = self.charge_current();
+        Some(c)
     }
 
     /// Admission + prefill execution under the step plan.  Paged mode
@@ -645,7 +742,14 @@ impl<'a> Engine<'a> {
                 if let Some(pool) = &mut self.pages {
                     pool.free_owner(ar.req.id);
                 }
-                done.push(self.retire(ar_into_completion(&mut ar, now)));
+                // is_done() fires on length or stop-token; length wins
+                // the (length-cap AND stop-token) tie by convention
+                let finish = if ar.generated.len() >= ar.req.max_new_tokens {
+                    FinishReason::Length
+                } else {
+                    FinishReason::Stop
+                };
+                done.push(self.retire(ar_into_completion(&mut ar, now, finish)));
             } else {
                 i += 1;
             }
@@ -817,11 +921,13 @@ fn reused_tokens(pages: &Option<PagePool>, probe: &Option<SeqKvCache>,
     }
 }
 
-fn ar_into_completion(ar: &mut ActiveRequest, now: u64) -> Completion {
+fn ar_into_completion(ar: &mut ActiveRequest, now: u64,
+                      finish: FinishReason) -> Completion {
     Completion {
         id: ar.req.id,
         prompt_len: ar.req.prompt.len(),
         tokens: std::mem::take(&mut ar.generated),
+        finish,
         submitted_ns: ar.req.submitted_ns,
         first_token_ns: ar.first_token_ns.unwrap_or(now),
         finished_ns: now,

@@ -47,6 +47,13 @@ pub struct Metrics {
     /// gave the downshifting sequence a private copy instead of mutating
     /// the shared bytes (mirrors `PoolStats::cow_splits`)
     pub cow_splits: usize,
+    /// requests retired early by a client cancel frame or disconnect
+    /// (`Engine::cancel` — DESIGN.md §Serving-Protocol); not counted in
+    /// `completions`
+    pub cancellations: usize,
+    /// requests retired by the engine's deadline sweep (`deadline_ms`
+    /// exceeded while waiting or mid-decode); not counted in `completions`
+    pub deadline_hits: usize,
 }
 
 impl Default for Metrics {
@@ -57,7 +64,8 @@ impl Default for Metrics {
                   step_us: Histogram::default(), budget_util: Histogram::default(),
                   attn_us: Histogram::default(), pool_util: Histogram::default(),
                   peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0,
-                  prefix_hits: 0, prefix_tokens_reused: 0, cow_splits: 0 }
+                  prefix_hits: 0, prefix_tokens_reused: 0, cow_splits: 0,
+                  cancellations: 0, deadline_hits: 0 }
     }
 }
 
@@ -117,16 +125,22 @@ impl Metrics {
         } else {
             format!(" | step budget util {:.0}%", self.budget_util.mean() * 100.0)
         };
+        let early = if self.cancellations == 0 && self.deadline_hits == 0 {
+            String::new()
+        } else {
+            format!(" | cancelled {} | deadline {}",
+                    self.cancellations, self.deadline_hits)
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
              ttft p50 {:.1} ms p95 {:.1} ms{} | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             attn p50 {:.0} µs{}{} | peak kv {:.2} MiB | oom {}{}{}",
+             attn p50 {:.0} µs{}{} | peak kv {:.2} MiB | oom {}{}{}{}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
             tbt, self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
             self.attn_us.quantile(0.5), util, budget,
             self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure,
-            prefix)
+            prefix, early)
     }
 }
 
@@ -231,6 +245,17 @@ mod tests {
         let r = m.report();
         assert!(r.contains("tbt p50 4.0 ms p99 8.0 ms"), "{r}");
         assert!(r.contains("step budget util 75%"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_early_retirements_only_when_active() {
+        let mut m = Metrics::default();
+        assert!(!m.report().contains("cancelled"));
+        m.cancellations = 3;
+        m.deadline_hits = 1;
+        let r = m.report();
+        assert!(r.contains("cancelled 3"), "{r}");
+        assert!(r.contains("deadline 1"), "{r}");
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! iteration-level scheduler, engine loop, metrics, TCP server.
 //!
 //! The paper is a serving-side contribution, so the coordinator follows
-//! the vLLM-router shape: requests enter a FIFO, the scheduler plans
+//! the vLLM-router shape: requests enter a priority-banded FIFO, the
+scheduler plans
 //! each step — one decode token per running sequence first, then the
 //! remaining `--step-tokens` budget as group-aligned prefill chunks and
 //! fresh admissions through the batcher's bounded lookahead
@@ -16,6 +17,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod proto;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -23,5 +25,7 @@ pub mod server;
 pub use batcher::Batcher;
 pub use engine::{estimate_bytes_per_token, Engine, EngineCfg};
 pub use metrics::{Histogram, Metrics};
-pub use request::{ActiveRequest, Completion, Lifecycle, Rejection, Request, RequestId};
+pub use request::{ActiveRequest, Completion, FinishReason, Lifecycle, Rejection,
+                  Request, RequestId};
 pub use scheduler::{ChunkGrant, Scheduler, StepPlan};
+pub use server::ServeCfg;

@@ -1,0 +1,721 @@
+//! NDJSON serving-protocol frames + the zero-copy lazy scanner over
+//! request bytes (DESIGN.md §Serving-Protocol,
+//! docs/adr/006-streaming-json-protocol.md).
+//!
+//! One frame per line.  Client → server:
+//!
+//! ```text
+//! {"id":7,"prompt":[1,2,3],"max_new":16,
+//!  "priority":0,"deadline_ms":500,"temperature":0.8,"top_k":4,"stop":2}
+//! {"cancel":7}
+//! {"stats":true}
+//! ```
+//!
+//! Server → client (encoders below; every frame is one line of JSON):
+//!
+//! ```text
+//! {"id":7,"delta":[481,1292]}                       per engine step
+//! {"id":7,"done":true,"finish":"length","n":16,
+//!  "ttft_ms":41.3,"tbt_ms":5.2}                     terminal
+//! {"id":8,"error":"admission queue full","retry_after_ms":120}
+//! {"error":"parse error at byte 14: expected ':' after key"}
+//! {"stats":{"queue_depth":3, …}}
+//! ```
+//!
+//! The scanner is deliberately *not* a JSON-tree parser: it walks the
+//! line bytes once, extracts only the keys a client frame can carry, and
+//! validates-but-skips everything else (unknown keys forward-compatibly
+//! ignored, depth-capped).  No allocation happens until a known key's
+//! value is materialized (the prompt vector is the only unbounded one,
+//! capped at [`MAX_PROMPT_TOKENS`]).  Acceptance is a strict subset of
+//! [`crate::util::json::parse`] — anything the scanner admits, the tree
+//! parser admits too (`rust/tests/proto.rs` pins this differentially,
+//! plus the round-trip and byte-mutation properties).
+//!
+//! Errors are structured ([`ProtoError`]: byte offset + static message)
+//! and never panic — the server answers them with an `{"error":…}` frame
+//! and keeps the connection alive, resynchronizing on the next newline.
+
+use std::fmt;
+use std::fmt::Write as _;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Completion;
+use crate::util::json::{self, Json};
+
+/// Hard per-line byte cap.  The server reads at most this many bytes of
+/// a frame before load-shedding the line (`{"error":…}` + resync to the
+/// next newline), so a client cannot balloon the reader's buffer.
+pub const MAX_FRAME_BYTES: usize = 4 << 20;
+
+/// Longest accepted `"prompt"` array (tokens).
+pub const MAX_PROMPT_TOKENS: usize = 1 << 18;
+
+/// Largest accepted `"max_new"` / `"top_k"` value.
+pub const MAX_NEW_TOKENS: usize = 1 << 20;
+
+/// Nesting cap while skipping unknown values: deeper frames are rejected
+/// (recursion must stay bounded on adversarial input).
+const MAX_DEPTH: usize = 32;
+
+/// Structured scan failure: byte offset into the frame + static message.
+/// `at` is always `<= line.len()` — the mutation harness in
+/// `rust/tests/proto.rs` pins that no input moves it out of bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProtoError {
+    pub at: usize,
+    pub msg: &'static str,
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// A parsed generation request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenReq {
+    /// client-chosen id, echoed on every response frame for this request
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// admission priority (default 0; higher admits sooner)
+    pub priority: i32,
+    /// serving deadline relative to submission (ms)
+    pub deadline_ms: Option<u64>,
+    /// `top_k`/`temperature` absent → greedy sampling
+    pub temperature: Option<f64>,
+    pub top_k: Option<usize>,
+    /// stop token id
+    pub stop: Option<i32>,
+}
+
+impl GenReq {
+    /// Canonical NDJSON encoding (no trailing newline) — the round-trip
+    /// partner of [`scan_client_frame`]: optional fields at their
+    /// defaults are omitted, so `scan(encode(g)) == Gen(g)` exactly.
+    pub fn encode(&self) -> String {
+        let mut s = String::with_capacity(48 + self.prompt.len() * 6);
+        let _ = write!(s, "{{\"id\":{},\"prompt\":[", self.id);
+        for (i, t) in self.prompt.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{t}");
+        }
+        let _ = write!(s, "],\"max_new\":{}", self.max_new);
+        if self.priority != 0 {
+            let _ = write!(s, ",\"priority\":{}", self.priority);
+        }
+        if let Some(d) = self.deadline_ms {
+            let _ = write!(s, ",\"deadline_ms\":{d}");
+        }
+        if let Some(t) = self.temperature {
+            let _ = write!(s, ",\"temperature\":{t}");
+        }
+        if let Some(k) = self.top_k {
+            let _ = write!(s, ",\"top_k\":{k}");
+        }
+        if let Some(t) = self.stop {
+            let _ = write!(s, ",\"stop\":{t}");
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// One client frame: generation request, cancellation, or stats query.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientFrame {
+    Gen(GenReq),
+    /// `{"cancel":<id>}` — retire the named request (client-scoped id)
+    Cancel { id: u64 },
+    /// `{"stats":true}` — answer with a `{"stats":{…}}` snapshot
+    Stats,
+}
+
+/// Scan one frame (a line *without* its terminating newline; a stray
+/// `\r` or surrounding whitespace is tolerated).  Single pass, no tree.
+pub fn scan_client_frame(line: &[u8]) -> Result<ClientFrame, ProtoError> {
+    let mut s = Scan { b: line, i: 0 };
+    let mut id: Option<u64> = None;
+    let mut prompt: Option<Vec<i32>> = None;
+    let mut max_new: Option<u64> = None;
+    let mut priority: Option<i32> = None;
+    let mut deadline_ms: Option<u64> = None;
+    let mut temperature: Option<f64> = None;
+    let mut top_k: Option<u64> = None;
+    let mut stop: Option<i32> = None;
+    let mut cancel: Option<u64> = None;
+    let mut stats_seen = false;
+
+    s.ws();
+    s.expect(b'{', "expected '{'")?;
+    s.ws();
+    if s.peek() == Some(b'}') {
+        s.i += 1;
+    } else {
+        loop {
+            s.ws();
+            let (ks, ke) = s.string_span()?;
+            s.ws();
+            s.expect(b':', "expected ':' after key")?;
+            s.ws();
+            match &s.b[ks..ke] {
+                b"id" => put(&mut id, s.u64_value()?, ks)?,
+                b"prompt" => put(&mut prompt, s.i32_array(MAX_PROMPT_TOKENS)?, ks)?,
+                b"max_new" => put(&mut max_new, s.u64_value()?, ks)?,
+                b"priority" => put(&mut priority, s.i32_value()?, ks)?,
+                b"deadline_ms" => put(&mut deadline_ms, s.u64_value()?, ks)?,
+                b"temperature" => put(&mut temperature, s.f64_value()?, ks)?,
+                b"top_k" => put(&mut top_k, s.u64_value()?, ks)?,
+                b"stop" => put(&mut stop, s.i32_value()?, ks)?,
+                b"cancel" => put(&mut cancel, s.u64_value()?, ks)?,
+                b"stats" => {
+                    if stats_seen {
+                        return Err(ProtoError { at: ks, msg: "duplicate key" });
+                    }
+                    stats_seen = true;
+                    s.lit(b"true", "\"stats\" must be true")?;
+                }
+                // forward compatibility: validate-and-skip unknown values
+                _ => s.skip_value(0)?,
+            }
+            s.ws();
+            match s.peek() {
+                Some(b',') => s.i += 1,
+                Some(b'}') => {
+                    s.i += 1;
+                    break;
+                }
+                _ => return Err(s.err("expected ',' or '}'")),
+            }
+        }
+    }
+    s.ws();
+    if s.i != s.b.len() {
+        return Err(s.err("trailing bytes after frame"));
+    }
+
+    // ---- classification: the three frame kinds must not blend ----
+    let gen_keys = id.is_some() || prompt.is_some() || max_new.is_some()
+        || priority.is_some() || deadline_ms.is_some() || temperature.is_some()
+        || top_k.is_some() || stop.is_some();
+    if let Some(cid) = cancel {
+        if gen_keys || stats_seen {
+            return Err(ProtoError { at: 0, msg: "cancel frame mixes other keys" });
+        }
+        return Ok(ClientFrame::Cancel { id: cid });
+    }
+    if stats_seen {
+        if gen_keys {
+            return Err(ProtoError { at: 0, msg: "stats frame mixes other keys" });
+        }
+        return Ok(ClientFrame::Stats);
+    }
+    let id = id.ok_or(ProtoError { at: 0, msg: "missing \"id\"" })?;
+    let prompt = prompt.ok_or(ProtoError { at: 0, msg: "missing \"prompt\"" })?;
+    if prompt.is_empty() {
+        return Err(ProtoError { at: 0, msg: "empty prompt" });
+    }
+    let max_new = max_new.ok_or(ProtoError { at: 0, msg: "missing \"max_new\"" })?;
+    if max_new == 0 {
+        return Err(ProtoError { at: 0, msg: "max_new must be >= 1" });
+    }
+    if max_new > MAX_NEW_TOKENS as u64 {
+        return Err(ProtoError { at: 0, msg: "max_new exceeds limit" });
+    }
+    if let Some(t) = temperature {
+        if t <= 0.0 {
+            return Err(ProtoError { at: 0, msg: "temperature must be > 0" });
+        }
+    }
+    if let Some(k) = top_k {
+        if k == 0 || k > MAX_NEW_TOKENS as u64 {
+            return Err(ProtoError { at: 0, msg: "top_k out of range" });
+        }
+    }
+    Ok(ClientFrame::Gen(GenReq {
+        id,
+        prompt,
+        max_new: max_new as usize,
+        priority: priority.unwrap_or(0),
+        deadline_ms,
+        temperature,
+        top_k: top_k.map(|k| k as usize),
+        stop,
+    }))
+}
+
+/// Duplicate-key guard for the known-key slots.
+fn put<T>(slot: &mut Option<T>, v: T, at: usize) -> Result<(), ProtoError> {
+    if slot.is_some() {
+        return Err(ProtoError { at, msg: "duplicate key" });
+    }
+    *slot = Some(v);
+    Ok(())
+}
+
+// ---------------- server-side frame encoders ----------------
+
+/// Per-step token delta for one streaming request.
+pub fn delta_frame(id: u64, delta: &[i32]) -> String {
+    let mut s = String::with_capacity(24 + delta.len() * 6);
+    let _ = write!(s, "{{\"id\":{id},\"delta\":[");
+    for (i, t) in delta.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{t}");
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Terminal frame: finish reason + per-request TTFT / mean-TBT stats.
+/// `id` is the client-scoped id (the completion carries the engine's
+/// global one); `ttft_ms`/`tbt_ms` are omitted when no token was ever
+/// produced (cancelled or deadline-expired while still waiting).
+pub fn final_frame(id: u64, c: &Completion) -> String {
+    let mut s = String::with_capacity(80);
+    let _ = write!(s, "{{\"id\":{id},\"done\":true,\"finish\":\"{}\",\"n\":{}",
+                   c.finish.as_str(), c.tokens.len());
+    if !c.tokens.is_empty() {
+        let _ = write!(s, ",\"ttft_ms\":{:.3}", c.ttft_ms());
+    }
+    if let Some(t) = c.tbt_ms() {
+        let _ = write!(s, ",\"tbt_ms\":{t:.3}");
+    }
+    s.push('}');
+    s
+}
+
+/// Rejection / error frame.  With `retry_after_ms` it is a load-shed
+/// (come back later); without, the rejection is terminal for that
+/// request.  `error` is escaped, so arbitrary reason text cannot break
+/// the NDJSON framing.
+pub fn reject_frame(id: Option<u64>, error: &str, retry_after_ms: Option<u64>) -> String {
+    let mut s = String::from("{");
+    if let Some(id) = id {
+        let _ = write!(s, "\"id\":{id},");
+    }
+    let _ = write!(s, "\"error\":{}", json::escape_str(error));
+    if let Some(ra) = retry_after_ms {
+        let _ = write!(s, ",\"retry_after_ms\":{ra}");
+    }
+    s.push('}');
+    s
+}
+
+/// Connection-scoped error frame (no request id — e.g. a parse failure).
+pub fn error_frame(msg: &str) -> String {
+    reject_frame(None, msg, None)
+}
+
+/// Client-side encoder for `{"cancel":<id>}` (tests and examples).
+pub fn cancel_frame(id: u64) -> String {
+    format!("{{\"cancel\":{id}}}")
+}
+
+/// Client-side encoder for `{"stats":true}` (tests and examples).
+pub fn stats_request_frame() -> String {
+    "{\"stats\":true}".to_string()
+}
+
+/// `{"stats":{…}}` snapshot of the metrics registry plus the live serve
+/// state the registry cannot see (queue depth, running lanes, load-sheds).
+pub fn stats_frame(m: &mut Metrics, queue_depth: usize, active: usize,
+                   shed: usize) -> String {
+    let u = |x: usize| Json::Num(x as f64);
+    let inner = Json::obj(vec![
+        ("queue_depth", u(queue_depth)),
+        ("active", u(active)),
+        ("shed", u(shed)),
+        ("completions", u(m.completions)),
+        ("cancellations", u(m.cancellations)),
+        ("deadline_hits", u(m.deadline_hits)),
+        ("oom_events", u(m.oom_events)),
+        ("preemptions", u(m.preemptions)),
+        ("pages_requantized", u(m.pages_requantized)),
+        ("prefix_hits", u(m.prefix_hits)),
+        ("prefix_tokens_reused", u(m.prefix_tokens_reused)),
+        ("cow_splits", u(m.cow_splits)),
+        ("prefill_tokens", u(m.prefill_tokens)),
+        ("decode_tokens", u(m.decode_tokens)),
+        ("peak_kv_bytes", u(m.peak_kv_bytes)),
+        ("throughput_tok_s", Json::Num(m.throughput())),
+        ("ttft_p50_ms", Json::Num(m.ttft_ms.quantile(0.5))),
+        ("ttft_p95_ms", Json::Num(m.ttft_ms.quantile(0.95))),
+        ("tbt_p50_ms", Json::Num(m.tbt_ms.quantile(0.5))),
+        ("tbt_p99_ms", Json::Num(m.tbt_ms.quantile(0.99))),
+    ]);
+    Json::obj(vec![("stats", inner)]).to_string()
+}
+
+// ---------------- the scanner ----------------
+
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err(&self, msg: &'static str) -> ProtoError {
+        ProtoError { at: self.i.min(self.b.len()), msg }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8, msg: &'static str) -> Result<(), ProtoError> {
+        if self.peek() != Some(c) {
+            return Err(self.err(msg));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &'static [u8], msg: &'static str) -> Result<(), ProtoError> {
+        if self.b.len() - self.i >= word.len()
+            && &self.b[self.i..self.i + word.len()] == word
+        {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// Validate a JSON string and return the raw inner byte span (no
+    /// unescaping — known keys are matched on their literal spelling, so
+    /// an escaped spelling of a known key lands in the skip path).
+    fn string_span(&mut self) -> Result<(usize, usize), ProtoError> {
+        self.expect(b'"', "expected string")?;
+        let start = self.i;
+        loop {
+            let Some(c) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.i += 1;
+            match c {
+                b'"' => {
+                    let end = self.i - 1;
+                    if std::str::from_utf8(&self.b[start..end]).is_err() {
+                        return Err(ProtoError { at: start, msg: "invalid utf-8 in string" });
+                    }
+                    return Ok((start, end));
+                }
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("truncated escape"));
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f' => {}
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            for _ in 0..4 {
+                                if !self.b[self.i].is_ascii_hexdigit() {
+                                    return Err(self.err("bad \\u escape"));
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Strict unsigned integer: digits only (no sign, fraction, exponent).
+    fn u64_value(&mut self) -> Result<u64, ProtoError> {
+        let start = self.i;
+        let mut v: u64 = 0;
+        let mut any = false;
+        while let Some(c @ b'0'..=b'9') = self.peek() {
+            any = true;
+            v = v.checked_mul(10)
+                .and_then(|v| v.checked_add((c - b'0') as u64))
+                .ok_or(ProtoError { at: start, msg: "integer out of range" })?;
+            self.i += 1;
+        }
+        if !any {
+            return Err(self.err("expected unsigned integer"));
+        }
+        if matches!(self.peek(), Some(b'.' | b'e' | b'E')) {
+            return Err(self.err("expected integer, found float"));
+        }
+        Ok(v)
+    }
+
+    /// Strict signed integer in i32 range.
+    fn i32_value(&mut self) -> Result<i32, ProtoError> {
+        let at = self.i;
+        let neg = self.peek() == Some(b'-');
+        if neg {
+            self.i += 1;
+        }
+        let mag = self.u64_value()? as i128;
+        let v = if neg { -mag } else { mag };
+        i32::try_from(v).map_err(|_| ProtoError { at, msg: "integer out of i32 range" })
+    }
+
+    /// Finite JSON number as f64.
+    fn f64_value(&mut self) -> Result<f64, ProtoError> {
+        let start = self.i;
+        while matches!(self.peek(),
+                       Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.i += 1;
+        }
+        let raw = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| ProtoError { at: start, msg: "bad number" })?;
+        let v: f64 = raw.parse()
+            .map_err(|_| ProtoError { at: start, msg: "bad number" })?;
+        if !v.is_finite() {
+            return Err(ProtoError { at: start, msg: "non-finite number" });
+        }
+        Ok(v)
+    }
+
+    /// `[i32, …]` with a length cap — the only unbounded allocation a
+    /// frame can request, so the cap is enforced mid-scan.
+    fn i32_array(&mut self, cap: usize) -> Result<Vec<i32>, ProtoError> {
+        self.expect(b'[', "expected array")?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            self.ws();
+            out.push(self.i32_value()?);
+            if out.len() > cap {
+                return Err(self.err("prompt exceeds MAX_PROMPT_TOKENS"));
+            }
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    /// Unknown-number skip: same acceptance as the tree parser (consume
+    /// the JSON number alphabet, then the f64 grammar decides).
+    fn skip_number(&mut self) -> Result<(), ProtoError> {
+        let start = self.i;
+        while matches!(self.peek(),
+                       Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.i += 1;
+        }
+        let raw = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| ProtoError { at: start, msg: "bad number" })?;
+        if raw.parse::<f64>().is_err() {
+            return Err(ProtoError { at: start, msg: "bad number" });
+        }
+        Ok(())
+    }
+
+    /// Validate-and-discard an arbitrary JSON value (unknown keys).
+    /// Depth-capped so adversarial nesting cannot blow the stack.
+    fn skip_value(&mut self, depth: usize) -> Result<(), ProtoError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.string_span()?;
+                    self.ws();
+                    self.expect(b':', "expected ':' after key")?;
+                    self.ws();
+                    self.skip_value(depth + 1)?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or '}'")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value(depth + 1)?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b'"') => self.string_span().map(|_| ()),
+            Some(b't') => self.lit(b"true", "invalid literal"),
+            Some(b'f') => self.lit(b"false", "invalid literal"),
+            Some(b'n') => self.lit(b"null", "invalid literal"),
+            Some(_) => self.skip_number(),
+            None => Err(self.err("unexpected end of frame")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    fn gen(line: &str) -> GenReq {
+        match scan_client_frame(line.as_bytes()).unwrap() {
+            ClientFrame::Gen(g) => g,
+            other => panic!("expected Gen, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scans_minimal_gen_frame() {
+        let g = gen(r#"{"id":7,"prompt":[1,2,3],"max_new":16}"#);
+        assert_eq!(g.id, 7);
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert_eq!(g.max_new, 16);
+        assert_eq!(g.priority, 0);
+        assert_eq!((g.deadline_ms, g.temperature, g.top_k, g.stop),
+                   (None, None, None, None));
+    }
+
+    #[test]
+    fn scans_full_gen_frame_any_key_order() {
+        let g = gen(concat!(
+            r#" { "temperature" : 0.8 , "prompt":[ -5 , 0 ,7 ], "stop": 2,"#,
+            r#" "top_k":4, "deadline_ms": 250, "max_new":8, "priority":-3,"#,
+            r#" "id": 9 } "#));
+        assert_eq!(g.id, 9);
+        assert_eq!(g.prompt, vec![-5, 0, 7]);
+        assert_eq!((g.max_new, g.priority), (8, -3));
+        assert_eq!(g.deadline_ms, Some(250));
+        assert_eq!(g.temperature, Some(0.8));
+        assert_eq!((g.top_k, g.stop), (Some(4), Some(2)));
+    }
+
+    #[test]
+    fn unknown_keys_are_validated_and_skipped() {
+        let g = gen(concat!(
+            r#"{"id":1,"x":{"deep":[1,"s",null,{"y":true}]},"prompt":[4],"#,
+            r#""future_knob":-1.5e3,"max_new":2}"#));
+        assert_eq!((g.id, g.max_new), (1, 2));
+        // …but a malformed unknown value still fails the whole frame
+        let bad = r#"{"id":1,"x":[1,,2],"prompt":[4],"max_new":2}"#;
+        assert!(scan_client_frame(bad.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn scans_cancel_and_stats_frames() {
+        assert_eq!(scan_client_frame(br#"{"cancel":12}"#).unwrap(),
+                   ClientFrame::Cancel { id: 12 });
+        assert_eq!(scan_client_frame(br#"{"stats":true}"#).unwrap(),
+                   ClientFrame::Stats);
+        // frame kinds must not blend
+        assert!(scan_client_frame(br#"{"cancel":12,"id":3}"#).is_err());
+        assert!(scan_client_frame(br#"{"stats":true,"prompt":[1]}"#).is_err());
+        assert!(scan_client_frame(br#"{"stats":false}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_structural_garbage_with_offsets() {
+        for (line, _why) in [
+            ("", "empty"),
+            ("GEN 8 1,2,3", "legacy line"),
+            ("{", "unterminated"),
+            (r#"{"id":1"#, "no close"),
+            (r#"{"id":1,}"#, "trailing comma"),
+            (r#"{"id":1} x"#, "trailing bytes"),
+            (r#"{"id":1,"id":2,"prompt":[1],"max_new":1}"#, "duplicate"),
+            (r#"{"id":-1,"prompt":[1],"max_new":1}"#, "negative id"),
+            (r#"{"id":1.5,"prompt":[1],"max_new":1}"#, "float id"),
+            (r#"{"id":1,"prompt":[],"max_new":1}"#, "empty prompt"),
+            (r#"{"id":1,"prompt":[1],"max_new":0}"#, "zero max_new"),
+            (r#"{"id":1,"prompt":[99999999999],"max_new":1}"#, "i32 overflow"),
+            (r#"{"id":1,"prompt":[1],"max_new":1,"temperature":0}"#, "temp 0"),
+            (r#"{"id":1,"prompt":[1],"max_new":1,"top_k":0}"#, "top_k 0"),
+            (r#"{"prompt":[1],"max_new":1}"#, "missing id"),
+        ] {
+            let e = scan_client_frame(line.as_bytes()).unwrap_err();
+            assert!(e.at <= line.len(), "offset {} out of bounds for {line:?}", e.at);
+        }
+    }
+
+    #[test]
+    fn depth_cap_rejects_adversarial_nesting() {
+        let mut line = String::from(r#"{"id":1,"x":"#);
+        for _ in 0..64 {
+            line.push('[');
+        }
+        // never closed — but the depth cap must fire before anything else
+        let e = scan_client_frame(line.as_bytes()).unwrap_err();
+        assert_eq!(e.msg, "nesting too deep");
+    }
+
+    #[test]
+    fn encoders_emit_parseable_frames() {
+        let c = Completion {
+            id: 3, prompt_len: 4, tokens: vec![5, 6, 7],
+            finish: FinishReason::Length,
+            submitted_ns: 0, first_token_ns: 1_000_000, finished_ns: 5_000_000,
+        };
+        for frame in [
+            delta_frame(9, &[1, -2, 3]),
+            final_frame(9, &c),
+            reject_frame(Some(9), "admission queue full", Some(120)),
+            error_frame("parse error at byte 3: expected '{'\nnew\"line\""),
+            cancel_frame(9),
+            stats_request_frame(),
+            stats_frame(&mut Metrics::default(), 3, 1, 2),
+        ] {
+            let v = json::parse(&frame).expect(&frame);
+            assert!(matches!(v, Json::Obj(_)), "{frame}");
+            assert!(!frame.contains('\n'), "NDJSON frames must be one line: {frame}");
+        }
+        let f = json::parse(&final_frame(9, &c)).unwrap();
+        assert_eq!(f.get("finish").unwrap().as_str().unwrap(), "length");
+        assert_eq!(f.get("n").unwrap().as_usize().unwrap(), 3);
+        assert!(f.get("tbt_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

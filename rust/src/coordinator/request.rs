@@ -16,6 +16,15 @@ pub struct Request {
     pub sampler: Sampler,
     /// stop decoding at this token (None = run to max_new_tokens)
     pub stop_token: Option<i32>,
+    /// admission priority: higher admits sooner; equal priorities keep
+    /// FIFO order, and the default 0 is bit-for-bit the pre-priority
+    /// queue (`"priority"` on the wire — DESIGN.md §Serving-Protocol)
+    pub priority: i32,
+    /// serving deadline relative to submission (`"deadline_ms"` on the
+    /// wire): the engine's deadline sweep retires the request — waiting
+    /// or mid-decode — with [`FinishReason::Deadline`] once
+    /// `now - submitted_ns` exceeds it.  None = no deadline.
+    pub deadline_ms: Option<u64>,
     /// submission timestamp (engine clock, ns)
     pub submitted_ns: u64,
 }
@@ -31,7 +40,16 @@ pub struct Request {
 /// Waiting ──admit──▶ Prefilling{done} ──chunks──▶ Decoding ──▶ Done
 ///    ▲                    │                          │
 ///    └──────(preempt-restart: requeue front)─────────┘
+///
+/// any state ──cancel / deadline──▶ retired (terminal)
 /// ```
+///
+/// Cancellation ([`crate::coordinator::Engine::cancel`]) and deadline
+/// expiry are *terminal transitions out of any state*, not resident
+/// states: the sequence is removed from the queue or the running batch
+/// between steps, its pool pages are freed, and the client receives a
+/// final frame whose finish reason is [`FinishReason::Cancelled`] /
+/// [`FinishReason::Deadline`] with whatever tokens were generated so far.
 ///
 /// With `--step-tokens 0` (the legacy whole-prefill path) an admission
 /// jumps straight from `Waiting` to `Decoding`: the full prompt is
@@ -95,20 +113,49 @@ impl ActiveRequest {
 
 /// A request the engine determined can never be admitted (its projected
 /// footprint exceeds what the budget could ever free).  The server maps
-/// this to an `ERR` line for the one offending client; the engine keeps
-/// stepping for everyone else.
+/// this to a terminal rejection frame (`{"id":…,"error":…}` — no
+/// `retry_after_ms`, retrying cannot help) for the one offending client;
+/// the engine keeps stepping for everyone else.
 #[derive(Debug, Clone)]
 pub struct Rejection {
     pub id: RequestId,
     pub reason: String,
 }
 
-/// A finished request with its generation and timing.
+/// Why a request stopped decoding — carried on every [`Completion`] and
+/// serialized verbatim into the final response frame's `"finish"` field
+/// (DESIGN.md §Serving-Protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// generated `max_new_tokens`
+    Length,
+    /// emitted the request's stop token
+    Stop,
+    /// client cancel frame or disconnect ([`crate::coordinator::Engine::cancel`])
+    Cancelled,
+    /// per-request deadline expired before completion
+    Deadline,
+}
+
+impl FinishReason {
+    /// Wire spelling for the final frame's `"finish"` field.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
+        }
+    }
+}
+
+/// A finished request with its generation, finish reason and timing.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: RequestId,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    pub finish: FinishReason,
     pub submitted_ns: u64,
     pub first_token_ns: u64,
     pub finished_ns: u64,
@@ -121,5 +168,17 @@ impl Completion {
 
     pub fn total_ms(&self) -> f64 {
         (self.finished_ns - self.submitted_ns) as f64 / 1e6
+    }
+
+    /// Mean time between tokens of this request (ms) — `None` below two
+    /// tokens, where the gap is undefined.  This per-request statistic
+    /// rides the final response frame; the cross-request distribution
+    /// (p50/p99) lives in `Metrics::tbt_ms`.
+    pub fn tbt_ms(&self) -> Option<f64> {
+        if self.tokens.len() < 2 {
+            return None;
+        }
+        let span = (self.finished_ns - self.first_token_ns) as f64 / 1e6;
+        Some(span / (self.tokens.len() - 1) as f64)
     }
 }

@@ -123,6 +123,13 @@ impl Scheduler {
     }
 
     /// Open a step's plan: decode-first, one token per decoding lane.
+    ///
+    /// Ordering contract with the engine's retire paths: the engine runs
+    /// its deadline sweep *before* calling this, so `decoding_lanes`
+    /// never counts a lane that expires this step — an expired or
+    /// cancelled sequence is retired without ever reserving decode budget
+    /// or receiving a prefill chunk (`Engine::cancel` runs between steps
+    /// for the same reason; DESIGN.md §Serving-Protocol).
     pub fn begin_step(&self, decoding_lanes: usize) -> StepPlan {
         StepPlan { decode_tokens: decoding_lanes, ..StepPlan::default() }
     }

@@ -1,96 +1,444 @@
-//! Line-protocol TCP server (std::net — tokio is unavailable offline).
+//! Streaming NDJSON TCP server (std::net — tokio is unavailable
+//! offline; DESIGN.md §Serving-Protocol,
+//! docs/adr/006-streaming-json-protocol.md).
 //!
-//! Protocol (one request per line):
-//!     GEN <max_new_tokens> <comma-separated prompt token ids>\n
-//! Response:
-//!     OK <comma-separated generated ids>\n   |   ERR <message>\n
+//! One JSON frame per line, both directions (`coordinator/proto.rs`).  A
+//! generation request streams back one `{"id":…,"delta":[…]}` frame per
+//! engine step it produced tokens in, then a terminal
+//! `{"id":…,"done":true,"finish":…,"n":…,"ttft_ms":…,"tbt_ms":…}` frame
+//! — so for any generation of ≥ 2 tokens the client observes at least
+//! one delta strictly before the final frame (`rust/tests/coordinator.rs`
+//! pins this at the socket).
 //!
-//! A client thread parses requests into the shared queue; the engine
-//! thread runs the continuous-batching loop and routes completions back
-//! over per-request channels.
+//! **Backpressure** is two bounded stages, never an unbounded channel:
+//! the reader thread `try_send`s into a `sync_channel(admit_queue)`, and
+//! the serve loop only drains it while the engine-side batcher queue
+//! holds fewer than `admit_queue` waiting requests.  A full channel
+//! load-sheds immediately on the reader thread with
+//! `{"id":…,"error":"admission queue full","retry_after_ms":…}` — the
+//! hint is the serve loop's running estimate of queue drain time.
 //!
-//! A request the engine can *never* admit (projected footprint beyond
-//! the KV budget) is answered with an `ERR` line on its own connection —
-//! the engine keeps stepping and every other client is unaffected
-//! ([`Engine::take_rejections`]).
+//! **Cancellation**: a `{"cancel":id}` frame — or the connection
+//! dropping — routes through the control channel to
+//! [`Engine::cancel`] between steps, retiring the sequence and freeing
+//! its pool pages before the next decode.  Per-request deadlines ride
+//! the request frame (`deadline_ms`) and are enforced by the engine's
+//! own sweep.  `{"stats":true}` answers with a metrics snapshot frame.
+//!
+//! The pre-PR-7 `GEN …`/`OK …` line protocol survives behind
+//! `--legacy-proto` ([`serve_legacy`]) for old harnesses, with its
+//! error leak fixed: internal failures now log server-side and answer a
+//! generic `ERR`.  It is deprecated and will be removed.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read as _, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::{Engine, EngineCfg};
+use crate::coordinator::proto::{self, ClientFrame, GenReq};
 use crate::coordinator::request::{Completion, Request};
 use crate::model::Sampler;
 use crate::runtime::Runtime;
 use crate::util::pool::{resolve_threads, WorkerPool};
 
-/// Per-request outcome routed back to the owning client thread.
-type Outcome = std::result::Result<Completion, String>;
-
-enum Msg {
-    New(Request, Sender<Outcome>),
-    Shutdown,
+/// Server-side knobs (the engine's own knobs live in [`EngineCfg`]).
+pub struct ServeCfg {
+    pub addr: String,
+    /// exit once this many requests reached a terminal outcome —
+    /// completion, rejection, cancellation, *or* load-shed (so bounded
+    /// test runs can't hang on a shed request); None = serve forever
+    pub max_requests: Option<usize>,
+    /// admission bound: capacity of the reader→engine channel AND the
+    /// engine-side waiting-queue gate (total buffering ≈ 2× this before
+    /// load-shedding starts)
+    pub admit_queue: usize,
+    /// speak the deprecated `GEN …` line protocol instead
+    /// (`--legacy-proto`)
+    pub legacy: bool,
 }
 
-/// Serve until `max_requests` have completed (None = forever).
-///
-/// `cfg.threads` sizes the decode attention worker pool (0 = one per
-/// core); the engine loop itself — and with it every PJRT call — stays on
+impl ServeCfg {
+    pub fn new(addr: &str) -> Self {
+        ServeCfg { addr: addr.to_string(), max_requests: None,
+                   admit_queue: 32, legacy: false }
+    }
+}
+
+/// A generation request travelling reader → serve loop.
+struct NewMsg {
+    conn: u64,
+    client_id: u64,
+    req: GenReq,
+    out: Sender<String>,
+}
+
+/// Control events (unbounded channel: each is O(1) and client-paced).
+enum Ctl {
+    /// client sent `{"cancel":id}` — ids are client-scoped, so the route
+    /// is (conn, client_id)
+    Cancel { conn: u64, client_id: u64 },
+    /// connection closed or write failed: cancel everything it owns
+    Gone { conn: u64 },
+    /// client sent `{"stats":true}`
+    Stats { out: Sender<String> },
+}
+
+/// Where a live request's frames go, and how many of its tokens have
+/// been streamed already.
+struct Route {
+    conn: u64,
+    client_id: u64,
+    out: Sender<String>,
+    /// delta watermark: tokens already sent.  Deliberately *not* reset
+    /// on preempt-restart — the regenerated prefix is suppressed up to
+    /// the watermark so the client never sees duplicate positions (with
+    /// non-greedy sampling the replayed tokens may differ; the stream
+    /// keeps the first emission).
+    sent: usize,
+}
+
+/// Bind `cfg.addr` and serve (see [`serve_on`]).
+pub fn serve(rt: &Runtime, cfg: EngineCfg, scfg: ServeCfg) -> Result<()> {
+    let listener = TcpListener::bind(&scfg.addr)?;
+    serve_on(rt, cfg, listener, scfg)
+}
+
+/// Serve on an already-bound listener — tests bind port 0 themselves and
+/// read the ephemeral `local_addr` back.  `cfg.threads` sizes the decode
+/// attention worker pool; the engine loop (and every PJRT call) stays on
 /// the calling thread.
-pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
-             max_requests: Option<usize>) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
+pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
+                scfg: ServeCfg) -> Result<()> {
+    if scfg.legacy {
+        return serve_legacy(rt, cfg, listener, scfg.max_requests);
+    }
     let paging = if cfg.page_tokens > 0 {
         let prefix = if cfg.prefix_cache { " + prefix cache" } else { "" };
         format!(", {}-token KV pages{prefix}", cfg.page_tokens)
     } else {
         String::new()
     };
-    println!("kvmix serving on {addr} (policy {}, {} attention worker(s){paging})",
-             cfg.method.name(), resolve_threads(cfg.threads));
-    let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-    let next_id = Arc::new(Mutex::new(0u64));
+    println!("kvmix serving NDJSON on {} (policy {}, {} attention worker(s){paging}, \
+              admit queue {})",
+             listener.local_addr()?, cfg.method.name(),
+             resolve_threads(cfg.threads), scfg.admit_queue);
 
-    // acceptor thread
-    let tx_accept = tx.clone();
-    let accept_handle = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let tx = tx_accept.clone();
-            let ids = next_id.clone();
-            std::thread::spawn(move || {
-                let _ = handle_client(stream, tx, ids);
-            });
-        }
-    });
+    let admit_cap = scfg.admit_queue.max(1);
+    let (new_tx, new_rx): (SyncSender<NewMsg>, Receiver<NewMsg>) = sync_channel(admit_cap);
+    let (ctl_tx, ctl_rx): (Sender<Ctl>, Receiver<Ctl>) = channel();
+    // reader-thread view of serve-loop state: the load-shed retry hint
+    // and the shed counter (terminal outcomes for `max_requests`)
+    let retry_hint = Arc::new(AtomicU64::new(50));
+    let shed = Arc::new(AtomicU64::new(0));
+
+    let accept = {
+        let (new_tx, ctl_tx) = (new_tx.clone(), ctl_tx.clone());
+        let (retry_hint, shed) = (retry_hint.clone(), shed.clone());
+        std::thread::spawn(move || {
+            let mut next_conn = 0u64;
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                next_conn += 1;
+                let conn = next_conn;
+                let (new_tx, ctl_tx) = (new_tx.clone(), ctl_tx.clone());
+                let (retry_hint, shed) = (retry_hint.clone(), shed.clone());
+                std::thread::spawn(move || {
+                    handle_conn(stream, conn, new_tx, ctl_tx, retry_hint, shed);
+                });
+            }
+        })
+    };
 
     // engine loop (current thread — PJRT client is not Sync-shared here;
     // only the cache attention fans out across the scoped pool)
     let threads = cfg.threads;
     WorkerPool::scoped(threads, |pool| {
         let mut engine = Engine::with_pool(rt, cfg, Some(pool))?;
+        let mut pending: HashMap<u64, Route> = HashMap::new();
+        let mut next_global: u64 = 0;
+        let mut served = 0usize;
+        loop {
+            // control first: a cancel or disconnect must beat the next step
+            while let Ok(ctl) = ctl_rx.try_recv() {
+                match ctl {
+                    Ctl::Cancel { conn, client_id } => {
+                        let gid = pending.iter()
+                            .find(|(_, r)| r.conn == conn && r.client_id == client_id)
+                            .map(|(&g, _)| g);
+                        // unknown id: already terminal (or never existed) — no-op
+                        if let Some(gid) = gid {
+                            let route = pending.remove(&gid).expect("gid from pending");
+                            if let Some(c) = engine.cancel(gid) {
+                                let _ = route.out.send(
+                                    proto::final_frame(route.client_id, &c));
+                            }
+                            served += 1;
+                        }
+                    }
+                    Ctl::Gone { conn } => {
+                        let gids: Vec<u64> = pending.iter()
+                            .filter(|(_, r)| r.conn == conn)
+                            .map(|(&g, _)| g)
+                            .collect();
+                        for gid in gids {
+                            let _ = engine.cancel(gid);
+                            pending.remove(&gid);
+                            served += 1; // terminal for this request; no frames
+                        }
+                    }
+                    Ctl::Stats { out } => {
+                        let frame = proto::stats_frame(
+                            &mut engine.metrics, engine.batcher.waiting(),
+                            engine.active.len(),
+                            shed.load(Ordering::Relaxed) as usize);
+                        let _ = out.send(frame);
+                    }
+                }
+            }
+            // admissions, gated on the engine-side queue depth — the
+            // second bounded stage of the backpressure state machine
+            while engine.batcher.waiting() < admit_cap {
+                let Ok(m) = new_rx.try_recv() else { break };
+                next_global += 1;
+                let gid = next_global;
+                pending.insert(gid, Route { conn: m.conn, client_id: m.client_id,
+                                            out: m.out, sent: 0 });
+                engine.submit(build_request(gid, m.req));
+            }
+            // submit-time rejections can leave the engine idle: drain
+            // them (terminal — no retry_after_ms) before the idle check
+            for r in engine.take_rejections() {
+                if let Some(route) = pending.remove(&r.id) {
+                    let _ = route.out.send(
+                        proto::reject_frame(Some(route.client_id), &r.reason, None));
+                }
+                served += 1;
+            }
+            retry_hint.store(retry_hint_ms(&mut engine), Ordering::Relaxed);
+            if engine.idle() {
+                if let Some(max) = scfg.max_requests {
+                    if served + shed.load(Ordering::Relaxed) as usize >= max {
+                        drop(accept);
+                        println!("{}", engine.metrics.report());
+                        return Ok(());
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            let done = engine.step()?;
+            // stream per-step deltas for still-running lanes first, so a
+            // ≥2-token generation always sees a delta before its final
+            for a in &engine.active {
+                if let Some(route) = pending.get_mut(&a.req.id) {
+                    if a.generated.len() > route.sent {
+                        let _ = route.out.send(proto::delta_frame(
+                            route.client_id, &a.generated[route.sent..]));
+                        route.sent = a.generated.len();
+                    }
+                }
+            }
+            for c in done {
+                if let Some(route) = pending.remove(&c.id) {
+                    if c.tokens.len() > route.sent {
+                        let _ = route.out.send(proto::delta_frame(
+                            route.client_id, &c.tokens[route.sent..]));
+                    }
+                    let _ = route.out.send(proto::final_frame(route.client_id, &c));
+                }
+                served += 1;
+            }
+        }
+    })
+}
+
+/// Map a scanned frame onto an engine [`Request`] under the serve loop's
+/// global id.  `top_k`/`temperature` absent → greedy; a lone
+/// `temperature` without `top_k` degenerates to top-1 (greedy).
+fn build_request(gid: u64, g: GenReq) -> Request {
+    let sampler = match (g.top_k, g.temperature) {
+        (None, None) => Sampler::Greedy,
+        (k, t) => Sampler::TopK { k: k.unwrap_or(1).max(1),
+                                  temperature: t.unwrap_or(1.0) as f32 },
+    };
+    Request { id: gid, prompt: g.prompt, max_new_tokens: g.max_new, sampler,
+              stop_token: g.stop, priority: g.priority,
+              deadline_ms: g.deadline_ms, submitted_ns: 0 }
+}
+
+/// Load-shed hint: projected queue drain time from the e2e p50, clamped
+/// to a sane band.  Cold-start (no completions yet) assumes 20 ms/request.
+fn retry_hint_ms(engine: &mut Engine) -> u64 {
+    let waiting = engine.batcher.waiting() as f64;
+    let per_req = engine.metrics.total_ms.quantile(0.5).max(20.0);
+    let lanes = engine.batcher.max_batch.max(1) as f64;
+    ((per_req * (waiting + 1.0) / lanes).ceil() as u64).clamp(25, 5_000)
+}
+
+/// Per-connection reader: parse frames, shed on a full admission
+/// channel, and report EOF / write failure as `Ctl::Gone` so the serve
+/// loop cancels everything this connection owns.  A dedicated writer
+/// thread serializes response frames — the serve loop never blocks on a
+/// slow client socket, and deltas/finals/stats interleave per line.
+fn handle_conn(stream: TcpStream, conn: u64, new_tx: SyncSender<NewMsg>,
+               ctl_tx: Sender<Ctl>, retry_hint: Arc<AtomicU64>,
+               shed: Arc<AtomicU64>) {
+    let _ = stream.set_nodelay(true);
+    let Ok(mut wr) = stream.try_clone() else {
+        let _ = ctl_tx.send(Ctl::Gone { conn });
+        return;
+    };
+    let (out_tx, out_rx): (Sender<String>, Receiver<String>) = channel();
+    let writer_ctl = ctl_tx.clone();
+    let writer = std::thread::spawn(move || {
+        for frame in out_rx {
+            if wr.write_all(frame.as_bytes())
+                .and_then(|_| wr.write_all(b"\n"))
+                .is_err()
+            {
+                let _ = writer_ctl.send(Ctl::Gone { conn });
+                break;
+            }
+        }
+    });
+
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        // bounded read: one frame may occupy at most MAX_FRAME_BYTES
+        let n = match (&mut reader)
+            .take(proto::MAX_FRAME_BYTES as u64 + 1)
+            .read_until(b'\n', &mut buf)
+        {
+            Ok(0) => break, // EOF
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if n > proto::MAX_FRAME_BYTES && buf.last() != Some(&b'\n') {
+            // overlong frame: structured shed, then resync to the next
+            // newline without buffering the remainder
+            let _ = out_tx.send(proto::error_frame("frame exceeds MAX_FRAME_BYTES"));
+            if skip_to_newline(&mut reader).is_err() {
+                break;
+            }
+            continue;
+        }
+        let line = match buf.last() {
+            Some(&b'\n') => &buf[..buf.len() - 1],
+            _ => &buf[..],
+        };
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            continue; // blank keepalive line
+        }
+        match proto::scan_client_frame(line) {
+            Err(e) => {
+                let _ = out_tx.send(proto::error_frame(&e.to_string()));
+            }
+            Ok(ClientFrame::Stats) => {
+                let _ = ctl_tx.send(Ctl::Stats { out: out_tx.clone() });
+            }
+            Ok(ClientFrame::Cancel { id }) => {
+                let _ = ctl_tx.send(Ctl::Cancel { conn, client_id: id });
+            }
+            Ok(ClientFrame::Gen(g)) => {
+                let client_id = g.id;
+                let msg = NewMsg { conn, client_id, req: g, out: out_tx.clone() };
+                match new_tx.try_send(msg) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // first backpressure stage: shed here, on the
+                        // reader thread, so the serve loop never learns
+                        // about load it could not admit
+                        shed.fetch_add(1, Ordering::Relaxed);
+                        let ra = retry_hint.load(Ordering::Relaxed);
+                        let _ = out_tx.send(proto::reject_frame(
+                            Some(client_id), "admission queue full", Some(ra)));
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        let _ = out_tx.send(proto::error_frame("server shutting down"));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    let _ = ctl_tx.send(Ctl::Gone { conn });
+    drop(out_tx);
+    let _ = writer.join();
+}
+
+/// Discard bytes up to and including the next newline using the reader's
+/// own buffer — O(1) memory even for a gigabyte-long poison line.
+fn skip_to_newline(r: &mut impl BufRead) -> std::io::Result<()> {
+    loop {
+        let (done, used) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(()); // EOF
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => (true, pos + 1),
+                None => (false, chunk.len()),
+            }
+        };
+        r.consume(used);
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+// ---------------- deprecated GEN line protocol ----------------
+
+/// Per-request outcome routed back to the owning client thread
+/// (legacy path).
+type Outcome = std::result::Result<Completion, String>;
+
+/// **Deprecated** `GEN …`/`OK …` line protocol (`--legacy-proto`): one
+/// buffered response per request, no streaming, no backpressure, no
+/// cancellation.  Kept only so pre-PR-7 harnesses keep working; new
+/// clients speak the NDJSON protocol above.  Unlike the original, an
+/// internal routing failure now logs server-side and answers a generic
+/// `ERR internal error` — engine internals never leak to the socket.
+fn serve_legacy(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
+                max_requests: Option<usize>) -> Result<()> {
+    println!("kvmix serving LEGACY line protocol on {} (policy {}) — \
+              deprecated, migrate to the NDJSON protocol \
+              (DESIGN.md §Serving-Protocol)",
+             listener.local_addr()?, cfg.method.name());
+    let (tx, rx): (Sender<(Request, Sender<Outcome>)>, Receiver<_>) = channel();
+    let next_id = Arc::new(Mutex::new(0u64));
+
+    let accept_handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            let ids = next_id.clone();
+            std::thread::spawn(move || {
+                let _ = handle_legacy_client(stream, tx, ids);
+            });
+        }
+    });
+
+    let threads = cfg.threads;
+    WorkerPool::scoped(threads, |pool| {
+        let mut engine = Engine::with_pool(rt, cfg, Some(pool))?;
         let mut pending: HashMap<u64, Sender<Outcome>> = HashMap::new();
         let mut served = 0usize;
         loop {
-            // drain incoming
-            while let Ok(msg) = rx.try_recv() {
-                match msg {
-                    Msg::New(req, done_tx) => {
-                        pending.insert(req.id, done_tx);
-                        engine.submit(req);
-                    }
-                    Msg::Shutdown => return Ok(()),
-                }
+            while let Ok((req, done_tx)) = rx.try_recv() {
+                pending.insert(req.id, done_tx);
+                engine.submit(req);
             }
-            // a never-admittable request fails alone: ERR to its own
-            // client, the engine keeps stepping for everyone else.
-            // Drained BEFORE the idle check — submit-time rejections
-            // (over-bucket prompts) can leave the engine idle, and
-            // step-produced ones land here on the next loop pass.
+            // drained BEFORE the idle check — submit-time rejections
+            // (over-bucket prompts) can leave the engine idle
             for r in engine.take_rejections() {
                 if let Some(done_tx) = pending.remove(&r.id) {
                     let _ = done_tx.send(Err(r.reason));
@@ -98,8 +446,7 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
                 served += 1;
             }
             if engine.idle() {
-                std::thread::sleep(std::time::Duration::from_millis(2));
-                // nothing to do; check for exit condition
+                std::thread::sleep(Duration::from_millis(2));
                 if let Some(max) = max_requests {
                     if served >= max {
                         drop(accept_handle);
@@ -119,8 +466,8 @@ pub fn serve(rt: &Runtime, cfg: EngineCfg, addr: &str,
     })
 }
 
-fn handle_client(stream: TcpStream, tx: Sender<Msg>,
-                 ids: Arc<Mutex<u64>>) -> Result<()> {
+fn handle_legacy_client(stream: TcpStream, tx: Sender<(Request, Sender<Outcome>)>,
+                        ids: Arc<Mutex<u64>>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -143,22 +490,29 @@ fn handle_client(stream: TcpStream, tx: Sender<Msg>,
                 let (done_tx, done_rx) = channel();
                 let req = Request { id, prompt, max_new_tokens: max_new,
                                     sampler: Sampler::Greedy, stop_token: None,
+                                    priority: 0, deadline_ms: None,
                                     submitted_ns: 0 };
-                tx.send(Msg::New(req, done_tx)).map_err(|_| anyhow!("engine gone"))?;
+                tx.send((req, done_tx)).map_err(|_| anyhow!("engine gone"))?;
                 match done_rx.recv() {
                     Ok(Ok(c)) => {
-                        let toks: Vec<String> = c.tokens.iter().map(|t| t.to_string()).collect();
+                        let toks: Vec<String> =
+                            c.tokens.iter().map(|t| t.to_string()).collect();
                         writeln!(out, "OK {}", toks.join(","))?;
                     }
                     Ok(Err(reason)) => writeln!(out, "ERR {reason}")?,
-                    Err(_) => writeln!(out, "ERR engine dropped request from {peer}")?,
+                    Err(_) => {
+                        // the leak fix: channel internals stay server-side
+                        eprintln!("legacy request {id} from {peer}: \
+                                   engine dropped the response channel");
+                        writeln!(out, "ERR internal error")?;
+                    }
                 }
             }
         }
     }
 }
 
-/// Parse "GEN <n> <t0,t1,...>".
+/// Parse "GEN <n> <t0,t1,...>" (legacy protocol only).
 pub fn parse_gen_line(line: &str) -> Result<(usize, Vec<i32>)> {
     let mut parts = line.splitn(3, ' ');
     let cmd = parts.next().unwrap_or("");
@@ -226,5 +580,28 @@ mod tests {
         // interior whitespace around commas is tolerated by design
         let (n, p) = parse_gen_line("GEN 8 1, 2 ,3").unwrap();
         assert_eq!((n, p), (8, vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn build_request_maps_sampler_and_lifecycle_fields() {
+        let g = GenReq { id: 4, prompt: vec![1, 2], max_new: 8, priority: 2,
+                         deadline_ms: Some(100), temperature: Some(0.5),
+                         top_k: Some(3), stop: Some(2) };
+        let r = build_request(99, g);
+        assert_eq!(r.id, 99, "engine id is the serve loop's global one");
+        assert_eq!(r.priority, 2);
+        assert_eq!(r.deadline_ms, Some(100));
+        assert_eq!(r.stop_token, Some(2));
+        match r.sampler {
+            Sampler::TopK { k, temperature } => {
+                assert_eq!(k, 3);
+                assert!((temperature - 0.5).abs() < 1e-6);
+            }
+            s => panic!("expected TopK, got {s:?}"),
+        }
+        let plain = GenReq { id: 4, prompt: vec![1], max_new: 1, priority: 0,
+                             deadline_ms: None, temperature: None, top_k: None,
+                             stop: None };
+        assert!(matches!(build_request(1, plain).sampler, Sampler::Greedy));
     }
 }

@@ -492,7 +492,8 @@ pub fn run_serving_chunked(rt: &Runtime, method: &Method, batch: usize,
     let reqs = (0..batch).map(|id| {
         let (toks, _) = workload::sample_mixture(&mut rng, prompt_len);
         Request { id: id as u64, prompt: toks, max_new_tokens: gen,
-                  sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+                  sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                  deadline_ms: None, submitted_ns: 0 }
     }).collect();
     serve_requests_scheduled(rt, method, batch, reqs, kv_budget, page_tokens,
                              false, step_tokens)
@@ -514,7 +515,8 @@ pub fn run_serving_prefixed(rt: &Runtime, method: &Method, batch: usize,
         let mut prompt = system.clone();
         prompt.extend_from_slice(&tail);
         Request { id: id as u64, prompt, max_new_tokens: gen,
-                  sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+                  sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                  deadline_ms: None, submitted_ns: 0 }
     }).collect();
     serve_requests(rt, method, batch, reqs, kv_budget, page_tokens, prefix_cache)
 }

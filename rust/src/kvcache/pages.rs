@@ -43,7 +43,7 @@
 //! KVQuant's per-element outlier list.  Both are baseline-only details;
 //! the KVmix policies the pool exists for use neither.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -513,6 +513,98 @@ impl PagePool {
                 let f = self.frames[id as usize].as_ref()?;
                 (f.refs == n).then(|| self.page_bytes(f.bits))
             })
+            .sum()
+    }
+
+    // ----------------- invariant checking (test support) -----------------
+
+    /// Full-scan audit of the pool's internal invariants, for property
+    /// tests (`rust/tests/props.rs`) — the O(1) counters the engine
+    /// trusts, re-derived the slow way.  Checks:
+    ///
+    /// 1. the running `bytes` counter equals a fresh frame scan;
+    /// 2. every live frame's `refs` equals its mapping count (page-table
+    ///    entries + prefix-index pins) — so refcounts can never
+    ///    underflow past a mapping, and no dead frame is still mapped;
+    /// 3. free lists hold no duplicates, only dead (`None`) slots, and
+    ///    park under the dead frame's own `(layer, bits)` key is not
+    ///    checkable (the Frame is gone) — but every parked id must be
+    ///    within the slot map.
+    ///
+    /// Returns a human-readable description of the first violation.
+    pub fn verify_accounting(&self) -> Result<(), String> {
+        let scanned: usize =
+            self.frames.iter().flatten().map(|f| self.page_bytes(f.bits)).sum();
+        if scanned != self.bytes {
+            return Err(format!("byte counter {} != frame scan {}",
+                               self.bytes, scanned));
+        }
+        let mut expected: BTreeMap<PageId, u32> = BTreeMap::new();
+        for (owner, table) in &self.tables {
+            for (li, lp) in table.layers.iter().enumerate() {
+                for id in lp.k_fp.iter()
+                    .chain(&lp.v_fp).chain(&lp.k_q).chain(&lp.v_q)
+                {
+                    if self.frames.get(*id as usize)
+                        .and_then(Option::as_ref).is_none()
+                    {
+                        return Err(format!(
+                            "owner {owner} layer {li} maps dead frame {id}"));
+                    }
+                    *expected.entry(*id).or_default() += 1;
+                }
+            }
+        }
+        for entry in self.prefix.iter().flat_map(BTreeMap::values) {
+            for &id in &entry.frames {
+                if self.frames.get(id as usize).and_then(Option::as_ref).is_none() {
+                    return Err(format!("prefix entry pins dead frame {id}"));
+                }
+                *expected.entry(id).or_default() += 1;
+            }
+        }
+        for (id, frame) in self.frames.iter().enumerate() {
+            let Some(f) = frame else { continue };
+            let want = expected.get(&(id as PageId)).copied().unwrap_or(0);
+            if f.refs != want {
+                return Err(format!(
+                    "frame {id} refs {} != {} mappings (tables + prefix pins)",
+                    f.refs, want));
+            }
+            if f.refs == 0 {
+                return Err(format!("frame {id} live with zero references"));
+            }
+        }
+        let mut parked: BTreeSet<PageId> = BTreeSet::new();
+        for (key, list) in &self.free {
+            for &id in list {
+                if !parked.insert(id) {
+                    return Err(format!("frame {id} parked on two free lists"));
+                }
+                match self.frames.get(id as usize) {
+                    None => return Err(format!(
+                        "free list {key:?} holds out-of-range id {id}")),
+                    Some(Some(_)) => return Err(format!(
+                        "free list {key:?} holds live frame {id}")),
+                    Some(None) => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes `free_owner(owner)` would actually reclaim right now: the
+    /// owner's mapped frames whose reference count is exactly 1 (frames
+    /// shared with the prefix index or other sequences survive the free
+    /// and reclaim nothing).  Test support for the cancellation
+    /// accounting property.
+    pub fn owner_exclusive_bytes(&self, owner: u64) -> usize {
+        let Some(table) = self.tables.get(&owner) else { return 0 };
+        table.layers.iter()
+            .flat_map(|lp| lp.k_fp.iter().chain(&lp.v_fp).chain(&lp.k_q).chain(&lp.v_q))
+            .filter_map(|&id| self.frames[id as usize].as_ref())
+            .filter(|f| f.refs == 1)
+            .map(|f| self.page_bytes(f.bits))
             .sum()
     }
 

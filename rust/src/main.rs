@@ -6,7 +6,8 @@
 //!             [--step-tokens N]
 //!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
 //!             [--kv-budget-kib K] [--threads N] [--page-tokens N]
-//!             [--prefix-cache] [--step-tokens N]
+//!             [--prefix-cache] [--step-tokens N] [--admit-queue N]
+//!             [--legacy-proto]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
 //!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
 //!   inspect                                       artifact + weight summary
@@ -27,6 +28,12 @@
 //! with decode (decode-first), so one long arrival cannot stall running
 //! sequences (DESIGN.md §Scheduler).  0 (the default) keeps the legacy
 //! whole-prefill-at-admission behavior bit-for-bit.
+//! --admit-queue N (serve; default 32) bounds the admission pipeline:
+//! both the socket→engine channel and the waiting-queue gate — beyond
+//! it requests are load-shed with a retry_after_ms rejection frame
+//! (DESIGN.md §Serving-Protocol).
+//! --legacy-proto (serve) speaks the deprecated pre-PR-7 `GEN`/`OK`
+//! line protocol instead of the streaming NDJSON one.
 
 use anyhow::{anyhow, bail, Result};
 use kvmix::baselines::Method;
@@ -54,7 +61,8 @@ fn usage() -> ! {
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["fast", "no-profiler", "help", "prefix-cache"]);
+    let args = Args::parse(&raw, &["fast", "no-profiler", "help", "prefix-cache",
+                                   "legacy-proto"]);
     if args.flag("help") || args.positional.is_empty() {
         usage();
     }
@@ -104,7 +112,8 @@ fn run() -> Result<()> {
                     prefix_cache, step_tokens,
                 }, Some(pool))?;
                 engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
-                                        sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 });
+                                        sampler: Sampler::Greedy, stop_token: None,
+                                        priority: 0, deadline_ms: None, submitted_ns: 0 });
                 let done = engine.run_to_completion()?;
                 println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
                 println!("generated: {:?}", done[0].tokens);
@@ -124,9 +133,12 @@ fn run() -> Result<()> {
             let kv_budget = args.get("kv-budget-kib")
                 .map(|v| v.parse::<usize>().map(|k| k * 1024))
                 .transpose()?;
+            let mut scfg = server::ServeCfg::new(&addr);
+            scfg.admit_queue = args.usize_or("admit-queue", 32)?;
+            scfg.legacy = args.flag("legacy-proto");
             server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads,
                                            page_tokens, prefix_cache, step_tokens },
-                          &addr, None)
+                          scfg)
         }
         "repro" => {
             let exp = args.positional.get(1)

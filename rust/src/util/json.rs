@@ -141,6 +141,16 @@ impl Json {
     }
 }
 
+/// Escape `s` as a quoted JSON string literal.  Shared with the serving
+/// protocol's hand-built response frames (`coordinator/proto.rs`), so
+/// arbitrary error text can be embedded in a frame without breaking the
+/// NDJSON framing (newlines become `\n`).
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    write_escaped(s, &mut out);
+    out
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {

@@ -1,17 +1,38 @@
-//! Coordinator invariants that need no PJRT runtime: batcher admission,
-//! window policies under adversarial sequences, metrics, server protocol.
+//! Coordinator invariants: batcher admission, window policies under
+//! adversarial sequences, metrics, server protocol — plus the NDJSON
+//! serving lifecycle over a real socket (delta-before-final streaming,
+//! queue-full load shedding, cancellation, deadlines, disconnects;
+//! DESIGN.md §Serving-Protocol).  The socket tests need the PJRT
+//! runtime and are gated on `make artifacts` like tests/integration.rs.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use kvmix::baselines::Method;
+use kvmix::config::QuantPlan;
 use kvmix::coordinator::batcher::Batcher;
 use kvmix::coordinator::request::Request;
-use kvmix::coordinator::server::parse_gen_line;
-use kvmix::coordinator::Histogram;
+use kvmix::coordinator::server::{parse_gen_line, serve_on};
+use kvmix::coordinator::{proto, Engine, EngineCfg, FinishReason, Histogram, ServeCfg};
 use kvmix::kvcache::{MemoryBudget, WindowPolicy};
 use kvmix::model::Sampler;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::json::{self, Json};
 use kvmix::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
 
 fn req(id: u64, prompt: usize, new: usize) -> Request {
     Request { id, prompt: vec![1; prompt], max_new_tokens: new,
-              sampler: Sampler::Greedy, stop_token: None, submitted_ns: 0 }
+              sampler: Sampler::Greedy, stop_token: None, priority: 0,
+              deadline_ms: None, submitted_ns: 0 }
 }
 
 #[test]
@@ -130,4 +151,248 @@ fn memory_budget_peak_tracking() {
     assert_eq!(m.peak, 5_000);
     assert!(m.set_kv(9_500).is_err()); // over capacity
     assert_eq!(m.peak, 10_500);        // attempted peak recorded
+}
+
+// ---------------- NDJSON serving lifecycle (socket-level) ----------------
+
+fn engine_cfg(rt: &Runtime, max_batch: usize) -> EngineCfg {
+    EngineCfg {
+        method: Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2).without_rpc()),
+        max_batch, kv_budget: None, threads: 1, page_tokens: 0,
+        prefix_cache: false, step_tokens: 0,
+    }
+}
+
+/// Bind an ephemeral port, run `serve_on` on a scoped thread, and drive
+/// it with `client`; returns after the server exits (via `max_requests`).
+fn with_server(rt: &Runtime, cfg: EngineCfg, mut scfg: ServeCfg,
+               max_requests: usize, client: impl FnOnce(TcpStream)) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    scfg.max_requests = Some(max_requests);
+    std::thread::scope(|s| {
+        let server = s.spawn(move || serve_on(rt, cfg, listener, scfg));
+        client(TcpStream::connect(addr).expect("connect"));
+        server.join().expect("server thread").expect("serve_on");
+    });
+}
+
+fn read_frame(r: &mut impl BufRead) -> Json {
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).expect("read frame") > 0,
+            "server closed the stream mid-conversation");
+    json::parse(line.trim()).expect("server emitted unparseable frame")
+}
+
+fn is_final(frame: &Json) -> bool {
+    frame.opt("done").is_some() || frame.opt("error").is_some()
+}
+
+#[test]
+fn socket_streams_deltas_strictly_before_final() {
+    // the ISSUE 7 acceptance bar: any generation of >= 2 tokens yields at
+    // least one {"delta":…} frame before the terminal frame, and a
+    // {"stats":true} query is answered from the same stream
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 4), ServeCfg::new(""), 1, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{}\n{{\"id\":7,\"prompt\":[1,2,3,4],\"max_new\":4}}\n",
+               proto::stats_request_frame()).unwrap();
+        let mut deltas: Vec<i32> = Vec::new();
+        let mut stats_seen = false;
+        let fin = loop {
+            let f = read_frame(&mut r);
+            if let Some(stats) = f.opt("stats") {
+                for key in ["queue_depth", "active", "shed", "completions",
+                            "throughput_tok_s", "ttft_p50_ms"] {
+                    assert!(stats.opt(key).is_some(), "stats missing {key}");
+                }
+                stats_seen = true;
+                continue;
+            }
+            assert_eq!(f.get("id").unwrap().as_usize().unwrap(), 7);
+            if is_final(&f) {
+                break f;
+            }
+            let d = f.get("delta").unwrap().f64_vec().unwrap();
+            assert!(!d.is_empty(), "empty delta frame");
+            deltas.extend(d.iter().map(|&x| x as i32));
+        };
+        assert!(!deltas.is_empty(),
+                "no delta frame arrived strictly before the final frame");
+        assert!(stats_seen, "stats query went unanswered");
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "length");
+        assert_eq!(fin.get("n").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(deltas.len(), 4, "deltas must cover the whole generation");
+        assert!(fin.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+    });
+}
+
+#[test]
+fn socket_sheds_load_with_retry_hint_when_admission_queue_full() {
+    // admit_queue 1 + max_batch 1 and a slow first request: the pipeline
+    // absorbs at most 1 active + 1 waiting + 1 in-channel, so of 5
+    // requests at least 2 must be shed with a retry_after_ms hint —
+    // and every request still gets exactly one terminal frame
+    let Some(rt) = runtime() else { return };
+    let mut scfg = ServeCfg::new("");
+    scfg.admit_queue = 1;
+    with_server(&rt, engine_cfg(&rt, 1), scfg, 5, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        // the head request holds the single lane for 64 decode steps
+        write!(w, "{{\"id\":1,\"prompt\":[1,2,3],\"max_new\":64}}\n").unwrap();
+        // wait for its first delta so request 1 is provably active...
+        let first = read_frame(&mut r);
+        assert!(first.opt("delta").is_some());
+        // ...then pipeline 4 more in one write: 2 absorbed, >= 2 shed
+        let mut burst = String::new();
+        for id in 2..=5u64 {
+            burst.push_str(&format!(
+                "{{\"id\":{id},\"prompt\":[1,2,3],\"max_new\":1}}\n"));
+        }
+        w.write_all(burst.as_bytes()).unwrap();
+        let (mut finals, mut sheds) = (0usize, 0usize);
+        while finals + sheds < 5 {
+            let f = read_frame(&mut r);
+            if f.opt("delta").is_some() {
+                continue;
+            }
+            if f.opt("done").is_some() {
+                finals += 1;
+            } else {
+                assert_eq!(f.get("error").unwrap().as_str().unwrap(),
+                           "admission queue full");
+                assert!(f.get("retry_after_ms").unwrap().as_f64().unwrap() >= 25.0);
+                sheds += 1;
+            }
+        }
+        assert!(sheds >= 2, "expected >= 2 load-sheds, got {sheds}");
+        assert!(finals >= 2, "expected >= 2 completions, got {finals}");
+        assert_eq!(finals + sheds, 5);
+    });
+}
+
+#[test]
+fn socket_cancel_frame_retires_mid_decode() {
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 1, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{{\"id\":3,\"prompt\":[1,2,3],\"max_new\":512}}\n").unwrap();
+        let first = read_frame(&mut r);
+        assert!(first.opt("delta").is_some(), "expected a streaming delta first");
+        write!(w, "{}\n", proto::cancel_frame(3)).unwrap();
+        let fin = loop {
+            let f = read_frame(&mut r);
+            if is_final(&f) {
+                break f;
+            }
+        };
+        assert_eq!(fin.get("id").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "cancelled");
+        let n = fin.get("n").unwrap().as_usize().unwrap();
+        assert!(n >= 1 && n < 512, "partial generation expected, got n={n}");
+    });
+}
+
+#[test]
+fn socket_deadline_retires_with_deadline_finish() {
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 1, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{{\"id\":4,\"prompt\":[1,2,3],\"max_new\":4096,\
+                   \"deadline_ms\":1}}\n").unwrap();
+        let fin = loop {
+            let f = read_frame(&mut r);
+            if is_final(&f) {
+                break f;
+            }
+        };
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "deadline");
+        assert!(fin.get("n").unwrap().as_usize().unwrap() < 4096);
+    });
+}
+
+#[test]
+fn socket_disconnect_cancels_and_server_exits() {
+    // dropping the connection mid-stream must retire the request (the
+    // reader's Gone control) and count it toward max_requests — the
+    // with_server scope only returns when serve_on does
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 1, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{{\"id\":5,\"prompt\":[1,2,3],\"max_new\":4096}}\n").unwrap();
+        let first = read_frame(&mut r);
+        assert!(first.opt("delta").is_some());
+        // both halves drop here: the server sees EOF and cancels id 5
+    });
+}
+
+#[test]
+fn socket_malformed_lines_answer_structured_errors_and_resync() {
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 1, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{{\"id\":1,\"prompt\":[1,2,\n\
+                   GEN 4 1,2,3\n\
+                   \n\
+                   {{\"id\":1,\"prompt\":[1,2],\"max_new\":2}}\n").unwrap();
+        let e1 = read_frame(&mut r);
+        assert!(e1.get("error").unwrap().as_str().unwrap()
+                    .starts_with("parse error at byte"), "{e1:?}");
+        let e2 = read_frame(&mut r);
+        assert!(e2.get("error").unwrap().as_str().unwrap()
+                    .starts_with("parse error at byte"), "{e2:?}");
+        // the blank line is a keepalive no-op; the valid frame after the
+        // garbage still serves — the connection survived resync
+        let fin = loop {
+            let f = read_frame(&mut r);
+            if is_final(&f) {
+                break f;
+            }
+        };
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "length");
+        assert_eq!(fin.get("n").unwrap().as_usize().unwrap(), 2);
+    });
+}
+
+#[test]
+fn engine_cancel_frees_exactly_the_owned_pool_pages() {
+    // ROADMAP 5b at the engine level: cancelling an active lane releases
+    // its page-table frames before the next step and the pool's audited
+    // accounting stays consistent throughout
+    let Some(rt) = runtime() else { return };
+    let mut cfg = engine_cfg(&rt, 2);
+    cfg.page_tokens = 64;
+    let mut engine = Engine::new(&rt, cfg).unwrap();
+    engine.submit(Request { id: 11, prompt: (1..=130).collect(), max_new_tokens: 64,
+                            sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                            deadline_ms: None, submitted_ns: 0 });
+    for _ in 0..3 {
+        engine.step().unwrap();
+    }
+    let pool = engine.page_pool().expect("paged mode");
+    pool.verify_accounting().unwrap();
+    assert!(pool.owner_pages(11) > 0, "decode must have mapped pages");
+    let exclusive = pool.owner_exclusive_bytes(11);
+    let before = pool.modeled_bytes();
+    assert_eq!(exclusive, before, "sole owner: every mapped page is exclusive");
+
+    let c = engine.cancel(11).expect("active lane cancels");
+    assert_eq!(c.finish, FinishReason::Cancelled);
+    assert!(!c.tokens.is_empty(), "partial generation is returned");
+    let pool = engine.page_pool().unwrap();
+    pool.verify_accounting().unwrap();
+    assert_eq!(pool.owner_pages(11), 0);
+    assert_eq!(before - pool.modeled_bytes(), exclusive,
+               "cancel must free exactly the owned pages");
+    assert!(engine.idle());
+    assert_eq!(engine.metrics.cancellations, 1);
+    assert_eq!(engine.metrics.completions, 0, "a cancel is not a completion");
+    assert!(engine.cancel(11).is_none(), "second cancel is a no-op");
 }

@@ -112,8 +112,8 @@ fn engine_serves_batch_with_budget() {
     for id in 0..6 {
         let (toks, _) = workload::sample_mixture(&mut rng, 40);
         engine.submit(Request { id, prompt: toks, max_new_tokens: 12,
-                                sampler: Sampler::Greedy, stop_token: None,
-                                submitted_ns: 0 });
+                                sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                deadline_ms: None, submitted_ns: 0 });
     }
     let done = engine.run_to_completion().unwrap();
     assert_eq!(done.len(), 6);
@@ -139,8 +139,8 @@ fn engine_oom_eviction_still_completes() {
     for id in 0..3 {
         let (toks, _) = workload::sample_mixture(&mut rng, 40);
         engine.submit(Request { id, prompt: toks, max_new_tokens: 24,
-                                sampler: Sampler::Greedy, stop_token: None,
-                                submitted_ns: 0 });
+                                sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                deadline_ms: None, submitted_ns: 0 });
     }
     let done = engine.run_to_completion().unwrap();
     assert_eq!(done.len(), 3, "all requests must eventually finish");
@@ -175,8 +175,8 @@ fn paged_preemption_resumes_bit_identically() {
         for id in 0..3 {
             let (toks, _) = workload::sample_mixture(&mut rng, 40);
             engine.submit(Request { id, prompt: toks, max_new_tokens: 40,
-                                    sampler: Sampler::Greedy, stop_token: None,
-                                    submitted_ns: 0 });
+                                    sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                    deadline_ms: None, submitted_ns: 0 });
         }
         let mut done = engine.run_to_completion().unwrap();
         done.sort_by_key(|c| c.id);
@@ -214,8 +214,8 @@ fn paged_pressure_downshifts_under_budget() {
         for id in 0..4 {
             let (toks, _) = workload::sample_mixture(&mut rng, 48);
             engine.submit(Request { id, prompt: toks, max_new_tokens: 48,
-                                    sampler: Sampler::Greedy, stop_token: None,
-                                    submitted_ns: 0 });
+                                    sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                    deadline_ms: None, submitted_ns: 0 });
         }
         let done = engine.run_to_completion().unwrap();
         (done.len(), engine.metrics.peak_kv_bytes, engine.metrics.pages_requantized,

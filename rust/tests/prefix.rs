@@ -315,8 +315,8 @@ fn serve_shared_pair(rt: &Runtime, prefix_cache: bool)
         let mut prompt = system.clone();
         prompt.extend_from_slice(&tail);
         engine.submit(Request { id, prompt, max_new_tokens: 16,
-                                sampler: Sampler::Greedy, stop_token: None,
-                                submitted_ns: 0 });
+                                sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                deadline_ms: None, submitted_ns: 0 });
     }
     let mut done = engine.run_to_completion().unwrap();
     done.sort_by_key(|c| c.id);
@@ -368,8 +368,8 @@ fn engine_prefix_cache_on_without_sharing_matches_off() {
         for id in 0..3u64 {
             let (toks, _) = kvmix::harness::workload::sample_mixture(&mut rng, 48);
             engine.submit(Request { id, prompt: toks, max_new_tokens: 12,
-                                    sampler: Sampler::Greedy, stop_token: None,
-                                    submitted_ns: 0 });
+                                    sampler: Sampler::Greedy, stop_token: None, priority: 0,
+                                    deadline_ms: None, submitted_ns: 0 });
         }
         let mut done = engine.run_to_completion().unwrap();
         done.sort_by_key(|c| c.id);

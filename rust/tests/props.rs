@@ -2,7 +2,12 @@
 //! available offline).  Each property runs a few hundred randomized cases
 //! seeded deterministically; failures print the seed for replay.
 
-use kvmix::kvcache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr, WindowPolicy};
+use kvmix::config::{ModelConfig, QuantPlan};
+use kvmix::kvcache::pressure::downshift_one;
+use kvmix::kvcache::{
+    AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, PagePool, PressureCfg,
+    SeqKvCache, ValueRepr, WindowPolicy,
+};
 use kvmix::quant::{pack_stream, qmax_at, unpack_stream, words_for, PackedBlock};
 use kvmix::util::json;
 use kvmix::util::Rng;
@@ -201,6 +206,137 @@ fn prop_json_roundtrip() {
         let j = json::Json::from_f64s(&v);
         let back = json::parse(&j.to_string()).unwrap();
         assert_eq!(back.f64_vec().unwrap(), v, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_page_pool_accounting_under_random_interleaving() {
+    // ROADMAP 5b: drive the paged pool through seeded random interleavings
+    // of admit (with prefix adoption), decode append, pressure downshift,
+    // cancel/preempt (free_owner), prefix registration, and LRU eviction
+    // — auditing after every op that the O(1) byte counter matches a full
+    // frame scan, refcounts equal their mappings (never underflow), free
+    // lists are duplicate-free, and cancellation frees exactly the bytes
+    // of the frames the request's table owned exclusively.
+    const PT: usize = 64;
+    for_cases(25, 11, |seed, rng| {
+        let m = ModelConfig::test_small();
+        // eager 4-bit plan: whole groups quantize at append (maximally
+        // shareable), with downshift headroom above the 2-bit floor
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let pcfg = PressureCfg::uniform(m.n_layers, 2);
+        let kv = m.kv_dim();
+        let mut pool = PagePool::new(PT, kv, m.group).unwrap();
+        pool.enable_prefix_cache();
+        let audit = |pool: &PagePool, op: &str| {
+            if let Err(e) = pool.verify_accounting() {
+                panic!("seed {seed} after {op}: {e}");
+            }
+        };
+        // shared head all admissions draw from, so page-aligned prefixes
+        // collide across sequences and adoption actually happens
+        let base: Vec<i32> = (0..(2 * PT) as i32)
+            .map(|i| (seed % 251) as i32 + i)
+            .collect();
+        let mut live: Vec<(u64, SeqKvCache, Vec<i32>)> = Vec::new();
+        let mut next_owner = 0u64;
+        let free_and_check = |pool: &mut PagePool, id: u64, seed: u64| {
+            let before = pool.modeled_bytes();
+            let exclusive = pool.owner_exclusive_bytes(id);
+            pool.free_owner(id);
+            assert_eq!(before - pool.modeled_bytes(), exclusive,
+                       "seed {seed}: freeing owner {id} must reclaim exactly \
+                        its exclusively-owned frames");
+            assert_eq!(pool.owner_pages(id), 0, "seed {seed}");
+        };
+        for op in 0..40 {
+            match rng.below(6) {
+                // admit a fresh sequence, adopting any registered prefix
+                0 | 1 => {
+                    next_owner += 1;
+                    let id = next_owner;
+                    let mut prompt = base[..(1 + rng.below(2)) * PT].to_vec();
+                    for j in 0..rng.below(2) * PT + rng.below(32) {
+                        prompt.push(100_000 + id as i32 * 500 + j as i32);
+                    }
+                    let total = prompt.len();
+                    let mut cache = SeqKvCache::new(&m, &plan);
+                    let cap = cache.max_shareable_prefix(total, PT);
+                    let adopted = pool.adopt_prefix(id, &prompt, cap, &mut cache);
+                    assert!(adopted <= cap && adopted % PT == 0, "seed {seed}");
+                    let k = rng.normal_vec(total * kv);
+                    let v = rng.normal_vec(total * kv);
+                    for l in &mut cache.layers {
+                        if adopted > 0 {
+                            l.append_prefill_suffix(&k[adopted * kv..],
+                                                    &v[adopted * kv..],
+                                                    total - adopted, adopted);
+                        } else {
+                            l.append(&k, &v, total);
+                        }
+                    }
+                    pool.sync(id, &cache);
+                    live.push((id, cache, prompt));
+                    audit(&pool, &format!("admit #{op}"));
+                }
+                // decode: append a few tokens and reconcile the table
+                2 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len());
+                    let n = rng.range(1, 8);
+                    let k = rng.normal_vec(n * kv);
+                    let v = rng.normal_vec(n * kv);
+                    for l in &mut live[i].1.layers {
+                        l.append(&k, &v, n);
+                    }
+                    pool.sync(live[i].0, &live[i].1);
+                    audit(&pool, &format!("decode #{op}"));
+                }
+                // pressure: one downshift rung (shared pages are exempt)
+                3 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len());
+                    let _ = downshift_one(&mut live[i].1, PT, &pcfg);
+                    pool.sync(live[i].0, &live[i].1);
+                    audit(&pool, &format!("downshift #{op}"));
+                }
+                // cancel / preempt: both retire through free_owner
+                4 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let (id, _, _) = live.remove(rng.below(live.len()));
+                    free_and_check(&mut pool, id, seed);
+                    audit(&pool, &format!("cancel #{op}"));
+                }
+                // prefix index churn: register a donor or evict the LRU
+                _ => {
+                    if rng.bool(0.6) && !live.is_empty() {
+                        let (id, cache, prompt) = &live[rng.below(live.len())];
+                        let cap = cache.max_shareable_prefix(prompt.len(), PT);
+                        let _ = pool.register_prefix(*id, prompt, cap, cache);
+                    } else {
+                        let _ = pool.evict_lru_prefix();
+                    }
+                    audit(&pool, &format!("prefix #{op}"));
+                }
+            }
+        }
+        // teardown drains to zero: every sequence retires, then the
+        // index — nothing may leak and no refcount may dangle
+        for (id, _, _) in live.drain(..) {
+            free_and_check(&mut pool, id, seed);
+            audit(&pool, "teardown free");
+        }
+        while pool.evict_lru_prefix().is_some() {
+            audit(&pool, "teardown evict");
+        }
+        assert_eq!(pool.modeled_bytes(), 0, "seed {seed}: pool must drain");
+        assert_eq!(pool.allocated_pages(), 0, "seed {seed}");
     });
 }
 

@@ -1,0 +1,224 @@
+//! Property + fuzz wall around the NDJSON serving protocol
+//! (DESIGN.md §Serving-Protocol): round-trip encode→scan for randomized
+//! valid frames, a ≥10k-case byte-mutation harness over the scanner, and
+//! the differential bound that scanner acceptance is a strict subset of
+//! the tree parser's.  Hand-rolled generator loop (proptest is not
+//! available offline); every case prints its seed on failure for replay.
+
+use kvmix::coordinator::proto::{
+    self, scan_client_frame, ClientFrame, GenReq, MAX_PROMPT_TOKENS,
+};
+use kvmix::util::json;
+use kvmix::util::Rng;
+
+fn for_cases(n: usize, seed0: u64, mut f: impl FnMut(u64, &mut Rng)) {
+    for i in 0..n {
+        let seed = seed0.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// A random *valid* generation frame (validation-range fields only).
+fn gen_req(rng: &mut Rng) -> GenReq {
+    let prompt: Vec<i32> = (0..rng.range(1, 40))
+        .map(|_| rng.below(2_000_000) as i32 - 1_000_000)
+        .collect();
+    GenReq {
+        id: rng.next_u64() >> rng.below(64),
+        prompt,
+        max_new: rng.range(1, 4096),
+        priority: rng.below(11) as i32 - 5,
+        deadline_ms: rng.bool(0.4).then(|| rng.next_u64() >> 34),
+        temperature: rng.bool(0.4).then(|| rng.uniform(0.05, 4.0)),
+        top_k: rng.bool(0.4).then(|| rng.range(1, 200)),
+        stop: rng.bool(0.3).then(|| rng.below(1_000_000) as i32 - 500_000),
+    }
+}
+
+#[test]
+fn prop_gen_roundtrip() {
+    // scan(encode(g)) == Gen(g), bit-exactly, for randomized frames —
+    // including the f64 temperature (shortest-repr Display round-trips)
+    for_cases(400, 0xA11CE, |seed, rng| {
+        let g = gen_req(rng);
+        let line = g.encode();
+        match scan_client_frame(line.as_bytes()) {
+            Ok(ClientFrame::Gen(back)) => assert_eq!(back, g, "seed {seed}"),
+            other => panic!("seed {seed}: {other:?} for {line}"),
+        }
+    });
+}
+
+#[test]
+fn prop_roundtrip_survives_reordering_whitespace_and_unknown_keys() {
+    // the canonical encoding is only one spelling: keys in any order,
+    // random inter-token whitespace, and validated-but-ignored unknown
+    // keys must scan to the same frame
+    for_cases(300, 0xB0B, |seed, rng| {
+        let g = gen_req(rng);
+        let mut fields: Vec<String> = vec![
+            format!("\"id\":{}", g.id),
+            format!("\"prompt\":[{}]",
+                    g.prompt.iter().map(|t| t.to_string())
+                        .collect::<Vec<_>>().join(",")),
+            format!("\"max_new\":{}", g.max_new),
+        ];
+        if g.priority != 0 {
+            fields.push(format!("\"priority\":{}", g.priority));
+        }
+        if let Some(d) = g.deadline_ms {
+            fields.push(format!("\"deadline_ms\":{d}"));
+        }
+        if let Some(t) = g.temperature {
+            fields.push(format!("\"temperature\":{t}"));
+        }
+        if let Some(k) = g.top_k {
+            fields.push(format!("\"top_k\":{k}"));
+        }
+        if let Some(t) = g.stop {
+            fields.push(format!("\"stop\":{t}"));
+        }
+        for _ in 0..rng.below(3) {
+            let junk = [
+                "\"x\":null", "\"meta\":{\"a\":[1,{\"b\":false}]}",
+                "\"tag\":\"g\\u00e9n\\n\"", "\"w\":[[],[1.5e3],true]",
+                "\"neg\":-0.25",
+            ][rng.below(5)];
+            fields.push(junk.to_string());
+        }
+        rng.shuffle(&mut fields);
+        let ws = |rng: &mut Rng| " \t".repeat(rng.below(2));
+        let mut line = String::from("{");
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&ws(rng));
+            line.push_str(f);
+            line.push_str(&ws(rng));
+        }
+        line.push('}');
+        match scan_client_frame(line.as_bytes()) {
+            Ok(ClientFrame::Gen(back)) => assert_eq!(back, g, "seed {seed}: {line}"),
+            other => panic!("seed {seed}: {other:?} for {line}"),
+        }
+    });
+}
+
+#[test]
+fn prop_mutation_harness_never_panics_and_errors_stay_in_bounds() {
+    // ≥10k randomized malformed inputs (ISSUE 7 acceptance bar): take a
+    // valid encoding or raw random bytes, truncate / insert / flip at a
+    // random offset, and require (a) no panic, (b) every error offset
+    // lands inside the input, (c) the differential bound below
+    let mut cases = 0usize;
+    let mut accepted = 0usize;
+    for_cases(10_500, 0xF022, |seed, rng| {
+        cases += 1;
+        let mut bytes: Vec<u8> = if rng.bool(0.7) {
+            match rng.below(3) {
+                0 => gen_req(rng).encode().into_bytes(),
+                1 => proto::cancel_frame(rng.next_u64()).into_bytes(),
+                _ => proto::stats_request_frame().into_bytes(),
+            }
+        } else {
+            (0..rng.range(0, 64)).map(|_| rng.below(256) as u8).collect()
+        };
+        for _ in 0..rng.range(1, 4) {
+            if bytes.is_empty() {
+                bytes.push(rng.below(256) as u8);
+                continue;
+            }
+            let at = rng.below(bytes.len());
+            match rng.below(3) {
+                0 => bytes.truncate(at),
+                1 => bytes.insert(at, rng.below(256) as u8),
+                _ => bytes[at] ^= 1 << rng.below(8),
+            }
+        }
+        match scan_client_frame(&bytes) {
+            Ok(_) => {
+                accepted += 1;
+                // differential property: anything the lazy scanner
+                // admits, the tree parser must admit too (the scanner
+                // may be stricter, never more lenient)
+                let s = std::str::from_utf8(&bytes)
+                    .unwrap_or_else(|e| panic!("seed {seed}: accepted non-utf8 {e}"));
+                assert!(json::parse(s).is_ok(),
+                        "seed {seed}: scanner accepted what json::parse rejects: {s}");
+            }
+            Err(e) => {
+                assert!(e.at <= bytes.len(),
+                        "seed {seed}: error offset {} beyond len {}",
+                        e.at, bytes.len());
+                assert!(!e.msg.is_empty(), "seed {seed}");
+            }
+        }
+    });
+    assert!(cases >= 10_000, "harness must run ≥10k cases, ran {cases}");
+    // sanity on the harness itself: single-bit flips leave some frames
+    // intact, so acceptance is nonzero — but most mutations must break
+    assert!(accepted > 0 && accepted < cases / 2,
+            "mutation harness degenerate: {accepted}/{cases} accepted");
+}
+
+#[test]
+fn prop_scanner_matches_tree_parser_on_random_json_like_bytes() {
+    // pure-noise differential sweep, independent of any valid seed frame
+    for_cases(4_000, 0xD1FF, |seed, rng| {
+        let alphabet = b"{}[]\",:0123456789.eE+-truefalsnl \t\\u00";
+        let bytes: Vec<u8> = (0..rng.range(0, 48))
+            .map(|_| alphabet[rng.below(alphabet.len())])
+            .collect();
+        if let Ok(frame) = scan_client_frame(&bytes) {
+            let s = std::str::from_utf8(&bytes).expect("alphabet is ascii");
+            assert!(json::parse(s).is_ok(),
+                    "seed {seed}: scanner-only acceptance of {s} -> {frame:?}");
+        }
+    });
+}
+
+#[test]
+fn scanner_enforces_protocol_limits() {
+    // over-long prompt arrays are rejected mid-scan (bounded allocation),
+    // not after materializing the whole vector
+    let mut line = String::from("{\"id\":1,\"prompt\":[");
+    for i in 0..=MAX_PROMPT_TOKENS {
+        if i > 0 {
+            line.push(',');
+        }
+        line.push('1');
+    }
+    line.push_str("],\"max_new\":4}");
+    let e = scan_client_frame(line.as_bytes()).unwrap_err();
+    assert_eq!(e.msg, "prompt exceeds MAX_PROMPT_TOKENS");
+    assert!(e.at <= line.len());
+
+    // boundary values survive
+    let ok = format!("{{\"id\":1,\"prompt\":[5],\"max_new\":{}}}",
+                     proto::MAX_NEW_TOKENS);
+    assert!(scan_client_frame(ok.as_bytes()).is_ok());
+    let over = format!("{{\"id\":1,\"prompt\":[5],\"max_new\":{}}}",
+                       proto::MAX_NEW_TOKENS + 1);
+    assert!(scan_client_frame(over.as_bytes()).is_err());
+}
+
+#[test]
+fn server_frames_are_single_line_parseable_json() {
+    // every server-side encoder emits exactly one line of JSON the tree
+    // parser accepts — streamed frames can never corrupt the NDJSON
+    // framing, whatever ends up in the error string
+    let frames = [
+        proto::delta_frame(3, &[1, -2, 3]),
+        proto::reject_frame(Some(9), "admission queue full \"now\"\n", Some(120)),
+        proto::reject_frame(None, "bad\tframe", None),
+        proto::error_frame("parse error at byte 3: expected ':' after key"),
+        proto::cancel_frame(17),
+        proto::stats_request_frame(),
+    ];
+    for f in frames {
+        assert!(!f.contains('\n'), "frame has embedded newline: {f}");
+        assert!(json::parse(&f).is_ok(), "unparseable frame: {f}");
+    }
+}

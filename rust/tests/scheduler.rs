@@ -25,7 +25,7 @@ use kvmix::util::Rng;
 
 fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
     Request { id, prompt, max_new_tokens: max_new, sampler: Sampler::Greedy,
-              stop_token: None, submitted_ns: 0 }
+              stop_token: None, priority: 0, deadline_ms: None, submitted_ns: 0 }
 }
 
 // ---------------------------------------------------------------------------
