@@ -300,34 +300,37 @@ impl<'a> Engine<'a> {
     /// DESIGN.md §Serving-Protocol).  A waiting request leaves the queue
     /// with zero tokens; an active lane leaves the batch with its partial
     /// generation and its pool pages freed before the next step charges.
-    /// Returns `None` when `id` is neither waiting nor active (already
-    /// finished, or never submitted) — cancellation is then a no-op and
-    /// nothing is counted.
+    /// Returns `Ok(None)` when `id` is neither waiting nor active
+    /// (already finished, or never submitted) — cancellation is then a
+    /// no-op and nothing is counted.  An `Err` means the post-free
+    /// budget recharge failed, exactly as in [`Engine::sweep_deadlines`].
     ///
     /// The completion is returned to the caller but *not* pushed onto
     /// [`Engine::completions`] and not counted in `metrics.completions`:
     /// a cancelled request is not a served one (it lands in
     /// `metrics.cancellations` instead), and harness transcripts stay
     /// clean of partial generations.
-    pub fn cancel(&mut self, id: RequestId) -> Option<Completion> {
+    pub fn cancel(&mut self, id: RequestId) -> Result<Option<Completion>> {
         let now = self.metrics.now_ns();
         if let Some(req) = self.batcher.remove(id) {
             self.metrics.cancellations += 1;
-            return Some(Completion {
+            return Ok(Some(Completion {
                 id, prompt_len: req.prompt.len(), tokens: Vec::new(),
                 finish: FinishReason::Cancelled,
                 submitted_ns: req.submitted_ns, first_token_ns: now, finished_ns: now,
-            });
+            }));
         }
-        let lane = self.active.iter().position(|a| a.req.id == id)?;
+        let Some(lane) = self.active.iter().position(|a| a.req.id == id) else {
+            return Ok(None);
+        };
         let mut ar = self.active.remove(lane);
         if let Some(pool) = &mut self.pages {
             pool.free_owner(ar.req.id);
         }
         self.metrics.cancellations += 1;
         let c = ar_into_completion(&mut ar, now, FinishReason::Cancelled);
-        let _ = self.charge_current();
-        Some(c)
+        let _ = self.charge_current()?;
+        Ok(Some(c))
     }
 
     /// Admission + prefill execution under the step plan.  Paged mode

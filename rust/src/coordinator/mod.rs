@@ -3,7 +3,7 @@
 //!
 //! The paper is a serving-side contribution, so the coordinator follows
 //! the vLLM-router shape: requests enter a priority-banded FIFO, the
-scheduler plans
+//! scheduler plans
 //! each step — one decode token per running sequence first, then the
 //! remaining `--step-tokens` budget as group-aligned prefill chunks and
 //! fresh admissions through the batcher's bounded lookahead

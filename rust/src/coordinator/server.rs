@@ -21,16 +21,20 @@
 //! **Cancellation**: a `{"cancel":id}` frame — or the connection
 //! dropping — routes through the control channel to
 //! [`Engine::cancel`] between steps, retiring the sequence and freeing
-//! its pool pages before the next decode.  Per-request deadlines ride
-//! the request frame (`deadline_ms`) and are enforced by the engine's
-//! own sweep.  `{"stats":true}` answers with a metrics snapshot frame.
+//! its pool pages before the next decode.  A cancel that beats its
+//! target through the admission channel is remembered and honoured when
+//! the request drains; a request reusing a live in-flight `id` on the
+//! same connection gets a terminal reject (one stream per id).
+//! Per-request deadlines ride the request frame (`deadline_ms`) and are
+//! enforced by the engine's own sweep.  `{"stats":true}` answers with a
+//! metrics snapshot frame.
 //!
 //! The pre-PR-7 `GEN …`/`OK …` line protocol survives behind
 //! `--legacy-proto` ([`serve_legacy`]) for old harnesses, with its
 //! error leak fixed: internal failures now log server-side and answer a
 //! generic `ERR`.  It is deprecated and will be removed.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read as _, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,7 +46,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::{Engine, EngineCfg};
 use crate::coordinator::proto::{self, ClientFrame, GenReq};
-use crate::coordinator::request::{Completion, Request};
+use crate::coordinator::request::{Completion, FinishReason, Request};
 use crate::model::Sampler;
 use crate::runtime::Runtime;
 use crate::util::pool::{resolve_threads, WorkerPool};
@@ -161,6 +165,16 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
     WorkerPool::scoped(threads, |pool| {
         let mut engine = Engine::with_pool(rt, cfg, Some(pool))?;
         let mut pending: HashMap<u64, Route> = HashMap::new();
+        // cancels that matched no live route: the target may still be
+        // buffered in the admission sync_channel (sent but not yet
+        // drained), so remember the (conn, client_id) pair and honour it
+        // at admission time.  Bounded — a flood of bogus cancel ids must
+        // not grow memory, so past the cap a cancel for a still-buffered
+        // request degrades to the pre-fix no-op; entries die with their
+        // connection, and the whole set clears whenever the channel
+        // drains empty (every buffered target has been checked by then).
+        let mut orphan_cancels: HashSet<(u64, u64)> = HashSet::new();
+        let orphan_cap = admit_cap * 4;
         let mut next_global: u64 = 0;
         let mut served = 0usize;
         loop {
@@ -171,14 +185,19 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
                         let gid = pending.iter()
                             .find(|(_, r)| r.conn == conn && r.client_id == client_id)
                             .map(|(&g, _)| g);
-                        // unknown id: already terminal (or never existed) — no-op
                         if let Some(gid) = gid {
                             let route = pending.remove(&gid).expect("gid from pending");
-                            if let Some(c) = engine.cancel(gid) {
+                            if let Some(c) = engine.cancel(gid)? {
                                 let _ = route.out.send(
                                     proto::final_frame(route.client_id, &c));
                             }
                             served += 1;
+                        } else if orphan_cancels.len() < orphan_cap {
+                            // not routed: either already terminal / never
+                            // existed (entry cleared next full drain) or
+                            // still in the admission channel (caught on
+                            // drain)
+                            orphan_cancels.insert((conn, client_id));
                         }
                     }
                     Ctl::Gone { conn } => {
@@ -187,10 +206,11 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
                             .map(|(&g, _)| g)
                             .collect();
                         for gid in gids {
-                            let _ = engine.cancel(gid);
+                            engine.cancel(gid)?;
                             pending.remove(&gid);
                             served += 1; // terminal for this request; no frames
                         }
+                        orphan_cancels.retain(|&(c, _)| c != conn);
                     }
                     Ctl::Stats { out } => {
                         let frame = proto::stats_frame(
@@ -204,7 +224,42 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
             // admissions, gated on the engine-side queue depth — the
             // second bounded stage of the backpressure state machine
             while engine.batcher.waiting() < admit_cap {
-                let Ok(m) = new_rx.try_recv() else { break };
+                let Ok(m) = new_rx.try_recv() else {
+                    // channel drained: the reader sends a request before
+                    // its cancel, so any orphan whose target was buffered
+                    // has been matched by now — surviving entries are
+                    // stale (already-terminal or never-existed ids) and
+                    // must not shoot down a future reuse of the id
+                    orphan_cancels.clear();
+                    break;
+                };
+                if orphan_cancels.remove(&(m.conn, m.client_id)) {
+                    // the cancel overtook its target in the admission
+                    // channel: retire it here, before the engine ever
+                    // sees the request
+                    engine.metrics.cancellations += 1;
+                    let now = engine.metrics.now_ns();
+                    let c = Completion {
+                        id: 0, prompt_len: m.req.prompt.len(), tokens: Vec::new(),
+                        finish: FinishReason::Cancelled,
+                        submitted_ns: now, first_token_ns: now, finished_ns: now,
+                    };
+                    let _ = m.out.send(proto::final_frame(m.client_id, &c));
+                    served += 1;
+                    continue;
+                }
+                if pending.values()
+                    .any(|r| r.conn == m.conn && r.client_id == m.client_id)
+                {
+                    // duplicate in-flight id on this connection: the
+                    // client could not demultiplex two streams sharing
+                    // one "id", and a later cancel would retire an
+                    // arbitrary match — terminal reject instead
+                    let _ = m.out.send(proto::reject_frame(
+                        Some(m.client_id), "duplicate in-flight id", None));
+                    served += 1;
+                    continue;
+                }
                 next_global += 1;
                 let gid = next_global;
                 pending.insert(gid, Route { conn: m.conn, client_id: m.client_id,

@@ -298,6 +298,69 @@ fn socket_cancel_frame_retires_mid_decode() {
 }
 
 #[test]
+fn socket_cancel_racing_admission_still_cancels() {
+    // the request and its cancel land in ONE write, so the cancel can
+    // reach the serve loop's control channel while the request is still
+    // buffered in the admission sync_channel — the orphan-cancel path
+    // must retire it at admission time; in the other interleaving the
+    // routed path retires it mid-decode.  Either way the client gets
+    // exactly one terminal frame with finish "cancelled".
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 1, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{{\"id\":8,\"prompt\":[1,2,3],\"max_new\":4096}}\n{}\n",
+               proto::cancel_frame(8)).unwrap();
+        let fin = loop {
+            let f = read_frame(&mut r);
+            if is_final(&f) {
+                break f;
+            }
+        };
+        assert_eq!(fin.get("id").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "cancelled");
+        assert!(fin.get("n").unwrap().as_usize().unwrap() < 4096,
+                "generation must not have run to completion");
+    });
+}
+
+#[test]
+fn socket_duplicate_inflight_id_rejected() {
+    // two live streams sharing one client id cannot be demultiplexed, so
+    // a Gen frame reusing an in-flight id gets a terminal reject (no
+    // retry_after_ms) while the original stream keeps running
+    let Some(rt) = runtime() else { return };
+    with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 2, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        write!(w, "{{\"id\":9,\"prompt\":[1,2,3],\"max_new\":4096}}\n").unwrap();
+        let first = read_frame(&mut r);
+        assert!(first.opt("delta").is_some(), "id 9 must be provably active");
+        write!(w, "{{\"id\":9,\"prompt\":[1,2,3],\"max_new\":1}}\n").unwrap();
+        let rej = loop {
+            let f = read_frame(&mut r);
+            if f.opt("error").is_some() {
+                break f;
+            }
+            assert!(f.opt("delta").is_some(), "id 9's stream must survive");
+        };
+        assert_eq!(rej.get("id").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(rej.get("error").unwrap().as_str().unwrap(),
+                   "duplicate in-flight id");
+        assert!(rej.opt("retry_after_ms").is_none(), "reject is terminal");
+        // the original stream is intact: cancel retires it normally
+        write!(w, "{}\n", proto::cancel_frame(9)).unwrap();
+        let fin = loop {
+            let f = read_frame(&mut r);
+            if f.opt("done").is_some() {
+                break f;
+            }
+        };
+        assert_eq!(fin.get("finish").unwrap().as_str().unwrap(), "cancelled");
+    });
+}
+
+#[test]
 fn socket_deadline_retires_with_deadline_finish() {
     let Some(rt) = runtime() else { return };
     with_server(&rt, engine_cfg(&rt, 2), ServeCfg::new(""), 1, |sock| {
@@ -383,7 +446,7 @@ fn engine_cancel_frees_exactly_the_owned_pool_pages() {
     let before = pool.modeled_bytes();
     assert_eq!(exclusive, before, "sole owner: every mapped page is exclusive");
 
-    let c = engine.cancel(11).expect("active lane cancels");
+    let c = engine.cancel(11).unwrap().expect("active lane cancels");
     assert_eq!(c.finish, FinishReason::Cancelled);
     assert!(!c.tokens.is_empty(), "partial generation is returned");
     let pool = engine.page_pool().unwrap();
@@ -394,5 +457,5 @@ fn engine_cancel_frees_exactly_the_owned_pool_pages() {
     assert!(engine.idle());
     assert_eq!(engine.metrics.cancellations, 1);
     assert_eq!(engine.metrics.completions, 0, "a cancel is not a completion");
-    assert!(engine.cancel(11).is_none(), "second cancel is a no-op");
+    assert!(engine.cancel(11).unwrap().is_none(), "second cancel is a no-op");
 }
