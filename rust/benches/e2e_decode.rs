@@ -138,6 +138,7 @@ fn main() {
             let mut engine = Engine::new(&rt, EngineCfg {
                 method: eager.clone(), max_batch: batch, kv_budget: None,
                 threads: 1, page_tokens: 64, prefix_cache: on, step_tokens: 0,
+                pressure_weights: None,
             }).expect("engine");
             let mut rng = Rng::new(11);
             let (system, _) = workload::sample_mixture(&mut rng, 64);
@@ -183,6 +184,7 @@ fn main() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: eager.clone(), max_batch: n_short + 2, kv_budget: None,
             threads: 1, page_tokens: 0, prefix_cache: false, step_tokens,
+            pressure_weights: None,
         }).expect("engine");
         let mut rng = Rng::new(21);
         let (shorts, long) = workload::interference_prompts(&mut rng, n_short,

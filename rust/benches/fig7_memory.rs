@@ -6,11 +6,15 @@
 //! strictly larger decode batch (DESIGN.md §Memory-Manager).  The
 //! trailing shared-prefix rows serve a common-system-prompt workload
 //! with `--prefix-cache` off vs on and print the page deduplication
-//! (DESIGN.md §Prefix-Sharing).
+//! (DESIGN.md §Prefix-Sharing).  The final asymmetric rows compare a
+//! searched per-layer (k_bits, v_bits) plan against the symmetric 2-bit
+//! ladder at equal modeled bytes (modeled scorer only;
+//! docs/adr/007-asymmetric-bit-allocation.md).
 
 use kvmix::baselines::Method;
 use kvmix::config::QuantPlan;
 use kvmix::harness::tables::{run_serving, run_serving_prefixed};
+use kvmix::profiler::{search, Importance};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 
 fn main() {
@@ -80,5 +84,37 @@ fn main() {
                                    if on { "on" } else { "off" }, b),
             }
         }
+    }
+
+    // -- asymmetric plan-search rows: searched per-layer (k_bits, v_bits)
+    // vs the symmetric 2-bit ladder at the same modeled byte budget,
+    // modeled scorer only so the bench stays cheap (the measured-ppl
+    // version is `kvmix repro fig7`;
+    // docs/adr/007-asymmetric-bit-allocation.md) --
+    let imp = match QuantPlan::scores_from_importance_file(&dir.join("importance.json")) {
+        Ok(Some((k, v))) => Importance { k, v, mean_loss: 1.0, n_prompts: 0 },
+        _ => search::synthetic_importance(rt.model.n_layers, 7),
+    };
+    let (kv_dim, group) = (rt.model.kv_dim(), rt.model.group);
+    let symmetric = QuantPlan::uniform(rt.model.n_layers, 2);
+    let sym_bytes = search::plan_bytes_per_token(&symmetric, kv_dim, group);
+    let res = search::search_plans_with_budget(
+        &imp, &search::SearchCfg::default(), kv_dim, group, sym_bytes,
+        &mut |p| Ok(search::modeled_ppl(&imp, p))).expect("plan search");
+    println!();
+    println!("# asymmetric plan search vs symmetric ladder at equal modeled bytes \
+              (budget {sym_bytes:.1} B/token, modeled scorer)");
+    println!("{:<24} {:>12} {:>12} {:>12}",
+             "plan", "bytes/token", "modeled_ppl", "peak KiB");
+    let sym_peak = run_serving(&rt, &Method::Kvmix(symmetric.clone()), 4, 48, 64, None, 0)
+        .expect("serve").peak_kv_bytes;
+    println!("{:<24} {:>12.1} {:>12.4} {:>12.2}",
+             format!("{} (symmetric)", symmetric.name), sym_bytes,
+             search::modeled_ppl(&imp, &symmetric), sym_peak as f64 / 1024.0);
+    if let Some(best) = res.best() {
+        let peak = run_serving(&rt, &Method::Kvmix(best.plan.clone()), 4, 48, 64, None, 0)
+            .expect("serve").peak_kv_bytes;
+        println!("{:<24} {:>12.1} {:>12.4} {:>12.2}",
+                 best.plan.name, best.bytes_per_token, best.ppl, peak as f64 / 1024.0);
     }
 }

@@ -101,7 +101,13 @@ impl QuantPlan {
     /// Load the profiler's plan from artifacts/importance.json.
     pub fn from_importance_file(path: &Path) -> Result<Self> {
         let j = parse_file(path)?;
-        let p = j.get("plan")?;
+        Self::from_json(j.get("plan")?)
+    }
+
+    /// Parse a plan object (the `plan` node of importance.json, or one
+    /// entry of a plan-search frontier file — see
+    /// `rust/src/profiler/search.rs`).
+    pub fn from_json(p: &Json) -> Result<Self> {
         Ok(QuantPlan {
             name: p.get("name")?.as_str()?.to_string(),
             k_bits: p.get("k_bits")?.usize_vec()?.iter().map(|&b| b as u8).collect(),
@@ -111,7 +117,36 @@ impl QuantPlan {
         })
     }
 
+    /// Serialize in the importance.json `plan` schema (minus the
+    /// profiler-only score fields) — `from_json` round-trips it.
+    pub fn to_json(&self) -> Json {
+        let bits = |b: &[u8]| Json::from_usizes(&b.iter().map(|&x| x as usize)
+            .collect::<Vec<_>>());
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("k_bits", bits(&self.k_bits)),
+            ("v_bits", bits(&self.v_bits)),
+            ("k_rpc", Json::from_f64s(&self.k_rpc)),
+            ("v_rpc", Json::from_f64s(&self.v_rpc)),
+        ])
+    }
+
     // ------------- presets used by the paper's ablations -------------
+
+    /// The raw per-layer gradient scores the profiler folded into the
+    /// plan (importance.json `plan.k_scores` / `plan.v_scores`).  The
+    /// engine feeds them to the pressure controller's loss-per-byte
+    /// downshift order (DESIGN.md §Pressure-Ladder); older artifacts
+    /// without the fields return `None`.
+    pub fn scores_from_importance_file(path: &Path)
+                                       -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let j = parse_file(path)?;
+        let p = j.get("plan")?;
+        match (p.opt("k_scores"), p.opt("v_scores")) {
+            (Some(k), Some(v)) => Ok(Some((k.f64_vec()?, v.f64_vec()?))),
+            _ => Ok(None),
+        }
+    }
 
     /// FP16 baseline: 16 "bits", no quantization at all.
     pub fn fp16(n_layers: usize) -> Self {
@@ -201,6 +236,14 @@ mod tests {
         let p = QuantPlan::uniform(4, 2).without_rpc();
         assert!(p.k_rpc.iter().all(|&r| r == 0.0));
         assert!(p.name.ends_with("w/oRPC"));
+    }
+
+    #[test]
+    fn plan_json_round_trip() {
+        let p = QuantPlan::random_highbit(6, 2, 9);
+        let q = QuantPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(p.to_json().to_string(), q.to_json().to_string());
     }
 
     #[test]

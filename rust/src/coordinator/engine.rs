@@ -91,6 +91,12 @@ pub struct EngineCfg {
     /// behavior, bit-for-bit; N > 0 bounds each step to ~N tokens by
     /// splitting prompts into group-aligned chunks (decode-first).
     pub step_tokens: usize,
+    /// per-layer (K, V) gradient-importance weights for the pressure
+    /// controller's loss-per-byte downshift order
+    /// (DESIGN.md §Pressure-Ladder; importance.json `plan.k_scores` /
+    /// `plan.v_scores` via `--method kvmix`).  None = the plan-bit proxy
+    /// weights from [`PressureCfg::from_plan`].
+    pub pressure_weights: Option<(Vec<f64>, Vec<f64>)>,
 }
 
 pub struct Engine<'a> {
@@ -159,7 +165,11 @@ impl<'a> Engine<'a> {
             None
         };
         let scheduler = Scheduler::new(cfg.step_tokens, rt.model.group, max_bucket)?;
-        let pressure = cfg.method.pressure_floors(rt.model.n_layers);
+        let pressure = match cfg.pressure_weights.clone() {
+            Some((k, v)) => cfg.method.pressure_floors(rt.model.n_layers)
+                .with_weights(k, v),
+            None => cfg.method.pressure_floors(rt.model.n_layers),
+        };
         let probe = cfg.prefix_cache.then(|| cfg.method.make_cache(&rt.model));
         Ok(Engine {
             rt,
@@ -846,12 +856,17 @@ impl<'a> Engine<'a> {
         Ok(self.budget.set_kv(kv).map_err(|_| ()))
     }
 
-    /// One pressure-controller downshift: requantize the oldest sealed
-    /// page still above its floor, scanning the oldest-admitted sequence
-    /// first, and reconcile that one sequence's page table immediately.
+    /// One pressure-controller downshift: take the best
+    /// predicted-loss-per-byte (layer, side, page) rung still above its
+    /// side floor (DESIGN.md §Pressure-Ladder), scanning the
+    /// oldest-admitted sequence first, and reconcile that one sequence's
+    /// page table immediately.  The page-frame delta below is per-side
+    /// safe: frame bytes depend only on the width, never on which side
+    /// the page holds, so a K-only or V-only rung charges correctly.
     /// Returns the frame-accounting bytes reclaimed, or `None` in
     /// monolithic mode / when every page across the batch already sits at
-    /// its floor (the caller then preempts).
+    /// its side floor (the caller then evicts prefix entries, then
+    /// preempts).
     ///
     /// The underlying scan restarts from page 0 each call on purpose —
     /// it's O(1) field reads per already-floored entry, and admissions /

@@ -59,6 +59,36 @@ impl Default for EvalCfg {
     }
 }
 
+/// Score one teacher-forced prediction: `row` is the logits row,
+/// `target` the reference token, `w` the mask weight.  Zero-weight
+/// positions contribute nothing (they are not counted as predictions).
+/// Pure accumulation — the unit under test in this module's `tests`;
+/// `evaluate_seqs` drives it once per decode step, and the plan search
+/// (`profiler/search.rs`) consumes the resulting [`EvalResult::ppl`].
+pub fn score_prediction(result: &mut EvalResult, row: &[f32], target: usize, w: f64) {
+    if w <= 0.0 {
+        return;
+    }
+    result.nll_sum += w * -log_prob(row, target);
+    result.correct += w * (argmax(row) == target) as u8 as f64;
+    result.weight += w;
+    result.n_predictions += 1;
+}
+
+/// Teacher-forced scoring of one whole sequence from precomputed
+/// per-position logits (`vocab`-strided, row `p` = logits after reading
+/// `toks[p]`), mirroring the decode loop in [`evaluate_seqs`]: position
+/// `p` in `prefill_len .. len-1` scores `toks[p+1]` with weight
+/// `mask[p]`.  Empty and length-1 sequences score nothing (there is no
+/// next token to predict), as does a prefix covering the whole sequence.
+pub fn score_sequence(result: &mut EvalResult, logits: &[f32], vocab: usize,
+                      toks: &[i32], mask: &[f32], prefill_len: usize) {
+    for p in prefill_len..toks.len().saturating_sub(1) {
+        let row = &logits[p * vocab..(p + 1) * vocab];
+        score_prediction(result, row, toks[p + 1] as usize, mask[p] as f64);
+    }
+}
+
 /// Evaluate `method` on `task`; teacher-forced, batched decode.
 pub fn evaluate(rt: &Runtime, method: &Method, task: Task, cfg: &EvalCfg)
                 -> Result<EvalResult> {
@@ -86,21 +116,17 @@ pub fn evaluate_seqs(rt: &Runtime, method: &Method,
             fwd.prefill(&toks[..cfg.prefill_len], &mut cache)?;
             caches.push(cache);
         }
-        // teacher-forced batched decode over the rest
-        for p in cfg.prefill_len..cfg.seq_len - 1 {
+        // teacher-forced batched decode over the rest (saturating_sub:
+        // degenerate length-0/1 configs score nothing instead of
+        // underflowing)
+        for p in cfg.prefill_len..cfg.seq_len.saturating_sub(1) {
             let inputs: Vec<i32> = chunk.iter().map(|(t, _)| t[p]).collect();
             let mut refs: Vec<&mut SeqKvCache> = caches.iter_mut().collect();
             let logits = fwd.decode_step(&inputs, &mut refs, &mut scratch)?;
             for (b, (toks, mask)) in chunk.iter().enumerate() {
-                let w = mask[p] as f64;
-                if w > 0.0 {
-                    let row = &logits[b * vocab..(b + 1) * vocab];
-                    let target = toks[p + 1] as usize;
-                    result.nll_sum += w * -log_prob(row, target);
-                    result.correct += w * (argmax(row) == target) as u8 as f64;
-                    result.weight += w;
-                    result.n_predictions += 1;
-                }
+                let row = &logits[b * vocab..(b + 1) * vocab];
+                score_prediction(&mut result, row, toks[p + 1] as usize,
+                                 mask[p] as f64);
             }
         }
         result.kv_bytes += caches.iter().map(|c| c.modeled_bytes()).sum::<usize>();
@@ -112,4 +138,86 @@ pub fn evaluate_seqs(rt: &Runtime, method: &Method,
 pub fn evaluate_all_tasks(rt: &Runtime, method: &Method, cfg: &EvalCfg)
                           -> Result<Vec<(Task, EvalResult)>> {
     Task::all().iter().map(|&t| Ok((t, evaluate(rt, method, t, cfg)?))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// vocab-2 logit row putting probability 3/4 on token 0:
+    /// softmax([ln 3, 0]) = [3/4, 1/4].
+    fn row_three_quarters() -> Vec<f32> {
+        vec![3.0f32.ln(), 0.0]
+    }
+
+    #[test]
+    fn closed_form_ppl() {
+        // every prediction hits the 3/4 token: ppl = exp(ln(4/3)) = 4/3
+        let mut r = EvalResult::default();
+        for _ in 0..3 {
+            score_prediction(&mut r, &row_three_quarters(), 0, 1.0);
+        }
+        assert_eq!(r.n_predictions, 3);
+        assert!((r.ppl() - 4.0 / 3.0).abs() < 1e-6, "ppl {} != 4/3", r.ppl());
+        assert!((r.acc() - 1.0).abs() < 1e-12, "argmax is token 0 every step");
+        // the miss direction: target 1 holds 1/4 -> ppl = 4
+        let mut miss = EvalResult::default();
+        score_prediction(&mut miss, &row_three_quarters(), 1, 1.0);
+        assert!((miss.ppl() - 4.0).abs() < 1e-5);
+        assert_eq!(miss.score(), 0.0);
+    }
+
+    #[test]
+    fn weights_scale_the_mean_not_the_count() {
+        // same row at weights 1 and 3: ppl unchanged (weighted mean of a
+        // constant), weight accumulates, both count as predictions
+        let mut r = EvalResult::default();
+        score_prediction(&mut r, &row_three_quarters(), 0, 1.0);
+        score_prediction(&mut r, &row_three_quarters(), 0, 3.0);
+        assert_eq!(r.n_predictions, 2);
+        assert!((r.weight - 4.0).abs() < 1e-12);
+        assert!((r.ppl() - 4.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_is_a_no_op() {
+        let mut r = EvalResult::default();
+        score_prediction(&mut r, &row_three_quarters(), 0, 0.0);
+        assert_eq!(r.n_predictions, 0);
+        assert_eq!(r.weight, 0.0);
+        assert_eq!(r.ppl(), 1.0, "no predictions: exp(0 / eps) = 1");
+        assert_eq!(r.acc(), 0.0);
+    }
+
+    #[test]
+    fn sequence_scoring_matches_per_step() {
+        let vocab = 2;
+        // toks[p+1] scored from row p; mask weights position 2 double
+        let toks = [0i32, 0, 1, 0];
+        let mask = [1.0f32, 1.0, 2.0, 1.0];
+        let logits: Vec<f32> = (0..toks.len()).flat_map(|_| row_three_quarters())
+            .collect();
+        let mut seq = EvalResult::default();
+        score_sequence(&mut seq, &logits, vocab, &toks, &mask, 1);
+        let mut step = EvalResult::default();
+        score_prediction(&mut step, &row_three_quarters(), 1, 1.0); // p=1 -> toks[2]
+        score_prediction(&mut step, &row_three_quarters(), 0, 2.0); // p=2 -> toks[3]
+        assert_eq!(seq.n_predictions, step.n_predictions);
+        assert!((seq.nll_sum - step.nll_sum).abs() < 1e-9);
+        assert!((seq.weight - step.weight).abs() < 1e-12);
+        assert!((seq.ppl() - step.ppl()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_sequences_score_nothing() {
+        let mut r = EvalResult::default();
+        score_sequence(&mut r, &[], 2, &[], &[], 0); // empty
+        score_sequence(&mut r, &row_three_quarters(), 2, &[0], &[1.0], 0); // length 1
+        let toks = [0i32, 1, 0];
+        let mask = [1.0f32; 3];
+        let logits: Vec<f32> = (0..3).flat_map(|_| row_three_quarters()).collect();
+        score_sequence(&mut r, &logits, 2, &toks, &mask, 2); // prefix covers all
+        assert_eq!(r.n_predictions, 0);
+        assert_eq!(r.ppl(), 1.0);
+    }
 }

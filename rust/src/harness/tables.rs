@@ -12,7 +12,7 @@ use crate::harness::eval::{evaluate, evaluate_all_tasks, EvalCfg, EvalResult};
 use crate::harness::workload::{self, Task};
 use crate::kvcache::fp16_kv_bytes;
 use crate::model::Sampler;
-use crate::profiler;
+use crate::profiler::{self, search};
 use crate::runtime::Runtime;
 use crate::util::Rng;
 
@@ -196,7 +196,7 @@ pub fn fig6(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
 // ---------------------------------------------------------------------------
 pub fn fig7(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     println!("# Fig 7 — peak KV memory during inference (batch=4, prompt 64, gen 192)");
-    let (_, plan) = profiled_plan(rt, cfg)?;
+    let (imp, plan) = profiled_plan(rt, cfg)?;
     println!("{:<22} {:>12} {:>12} {:>10} {:>9} {:>9} {:>9} {:>9}",
              "method", "peak_kv_KiB", "vs FP16", "tok/s",
              "ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99");
@@ -221,6 +221,34 @@ pub fn fig7(rt: &Runtime, cfg: &ReproCfg) -> Result<()> {
     println!("{:<22} {:>12.2} {:>11.2}x {:>10.1} {:>9.1} {:>9.1} {:>9.2} {:>9.2}",
              format!("kvmix +step{step}"), kib, fp16_peak / kib.max(1e-9),
              s.tok_per_s, s.ttft_p50_ms, s.ttft_p99_ms, s.tbt_p50_ms, s.tbt_p99_ms);
+
+    // asymmetric allocation rows
+    // (docs/adr/007-asymmetric-bit-allocation.md): a searched per-layer
+    // (k_bits, v_bits) plan against the symmetric 2-bit ladder at the
+    // same modeled byte budget.  The symmetric plan is itself a search
+    // candidate (low=2, no high tier, same RPC), so the searched row can
+    // only match or beat it on measured perplexity.
+    let (kv_dim, group) = (rt.model.kv_dim(), rt.model.group);
+    let ecfg = cfg.eval_cfg();
+    let symmetric = QuantPlan::uniform(rt.model.n_layers, 2);
+    let sym_bytes = search::plan_bytes_per_token(&symmetric, kv_dim, group);
+    let sym_ppl = evaluate(rt, &Method::Kvmix(symmetric.clone()), Task::Lm, &ecfg)?.ppl();
+    let scfg = search::SearchCfg { seed: cfg.seed, ..search::SearchCfg::coarse() };
+    let res = search::search_plans_with_budget(
+        &imp, &scfg, kv_dim, group, sym_bytes,
+        &mut |p| Ok(evaluate(rt, &Method::Kvmix(p.clone()), Task::Lm, &ecfg)?.ppl()))?;
+    println!();
+    println!("asymmetric plan search at equal modeled bytes (budget {sym_bytes:.1} B/token):");
+    println!("{:<24} {:>12} {:>10} {:>6} {:>6}",
+             "plan", "bytes/token", "lm_ppl", "avg K", "avg V");
+    println!("{:<24} {:>12.1} {:>10.3} {:>6.2} {:>6.2}",
+             format!("{} (symmetric)", symmetric.name), sym_bytes, sym_ppl,
+             symmetric.avg_k_bits(), symmetric.avg_v_bits());
+    if let Some(best) = res.best() {
+        println!("{:<24} {:>12.1} {:>10.3} {:>6.2} {:>6.2}",
+                 best.plan.name, best.bytes_per_token, best.ppl,
+                 best.plan.avg_k_bits(), best.plan.avg_v_bits());
+    }
     Ok(())
 }
 
@@ -540,6 +568,7 @@ fn serve_requests_scheduled(rt: &Runtime, method: &Method, batch: usize,
     let mut engine = Engine::new(rt, EngineCfg {
         method: method.clone(), max_batch: batch, kv_budget, threads: 1, page_tokens,
         prefix_cache, step_tokens,
+        pressure_weights: None,
     })?;
     let n = reqs.len();
     for req in reqs {

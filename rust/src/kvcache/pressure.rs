@@ -1,15 +1,23 @@
-//! The pressure controller (DESIGN.md §Memory-Manager): what happens when
-//! the paged pool cannot satisfy a charge.
+//! The pressure controller (DESIGN.md §Memory-Manager,
+//! §Pressure-Ladder): what happens when the paged pool cannot satisfy a
+//! charge.
 //!
-//! On admission failure or simulated OOM the engine first **requantizes
-//! the oldest out-of-window pages down the bit ladder** (8 → 4 → 2, with
-//! a 3-bit entry rung for plans that start there), bounded below by
-//! per-layer floors derived from the gradient-importance profile, and
-//! only when every sealed page sits at its floor does it **preempt** the
-//! lowest-priority sequence back to the batcher queue.  This makes the
-//! paper's dynamic long-context policy — re-compress older tokens, keep
-//! recent pivotal ones precise — an actual runtime mechanism instead of a
-//! static window.
+//! On admission failure or simulated OOM the engine **requantizes sealed
+//! out-of-window pages down per-side bit ladders** — keys step through a
+//! 3-bit rung (8 → 4 → 3 → 2 → 1) that values skip (8 → 4 → 2 → 1) —
+//! bounded below by per-layer per-side floors derived from the
+//! gradient-importance profile.  The scan no longer drains the oldest
+//! page on both sides in lockstep: each call picks the single
+//! (layer, side, page) step with the **best predicted-loss-per-byte**,
+//! folding the profiler's per-layer K/V importance weights with the
+//! bytes each rung reclaims (DESIGN.md §Pressure-Ladder).  Only when
+//! every eligible page sits at its side floor does the engine **preempt**
+//! the lowest-priority sequence back to the batcher queue.  This makes
+//! the paper's dynamic long-context policy — re-compress older tokens,
+//! keep recent pivotal ones precise — an actual runtime mechanism instead
+//! of a static window, and lets the ladder land on asymmetric K/V
+//! operating points like the paper's headline K 2.19 / V 2.38
+//! (docs/adr/007-asymmetric-bit-allocation.md).
 //!
 //! Everything here runs on the engine thread between decode steps; the
 //! decode fan-out never sees a page mid-downshift
@@ -30,12 +38,18 @@ use crate::config::QuantPlan;
 use super::pages::{page_frame_bytes, KvSide, KV_SIDES};
 use super::SeqKvCache;
 
-/// Per-layer requantization floors: the narrowest width the controller
-/// may downshift each layer's pages to.
+/// Per-layer, per-side requantization floors plus the importance weights
+/// that order the downshift scan (DESIGN.md §Pressure-Ladder).
 #[derive(Debug, Clone)]
 pub struct PressureCfg {
     pub k_floor: Vec<u8>,
     pub v_floor: Vec<u8>,
+    /// Per-layer K-side importance weights for the loss-per-byte order:
+    /// a larger weight means downshifting that layer's keys is predicted
+    /// to cost more accuracy, so the scan defers it.  Uniform 1.0 when no
+    /// profile is available.
+    pub k_weight: Vec<f64>,
+    pub v_weight: Vec<f64>,
 }
 
 impl PressureCfg {
@@ -43,6 +57,9 @@ impl PressureCfg {
     /// profiler allocated high widths (> 2 bits — the important ones)
     /// never drop below 2 bits; low-importance layers may fall to 1 bit;
     /// fp16 layers have no quantized pages to downshift (floor 16).
+    /// The plan's bit widths double as proxy importance weights — the
+    /// profiler already folded the gradient norms into them — until
+    /// [`PressureCfg::with_weights`] installs the raw scores.
     pub fn from_plan(plan: &QuantPlan) -> Self {
         let floor = |b: u8| match b {
             16 => 16,
@@ -52,12 +69,27 @@ impl PressureCfg {
         PressureCfg {
             k_floor: plan.k_bits.iter().map(|&b| floor(b)).collect(),
             v_floor: plan.v_bits.iter().map(|&b| floor(b)).collect(),
+            k_weight: plan.k_bits.iter().map(|&b| b as f64).collect(),
+            v_weight: plan.v_bits.iter().map(|&b| b as f64).collect(),
         }
     }
 
-    /// The same floor for every layer (uniform baselines).
+    /// The same floor for every layer (uniform baselines); unit weights.
     pub fn uniform(n_layers: usize, floor: u8) -> Self {
-        PressureCfg { k_floor: vec![floor; n_layers], v_floor: vec![floor; n_layers] }
+        PressureCfg {
+            k_floor: vec![floor; n_layers],
+            v_floor: vec![floor; n_layers],
+            k_weight: vec![1.0; n_layers],
+            v_weight: vec![1.0; n_layers],
+        }
+    }
+
+    /// Install per-layer K/V importance weights (the profiler's averaged
+    /// gradient norms, Eq. 10–11) in place of the plan-bit proxies.
+    pub fn with_weights(mut self, k: Vec<f64>, v: Vec<f64>) -> Self {
+        self.k_weight = k;
+        self.v_weight = v;
+        self
     }
 
     pub fn floor(&self, layer: usize, side: KvSide) -> u8 {
@@ -67,9 +99,21 @@ impl PressureCfg {
         };
         floors.get(layer).copied().unwrap_or(16)
     }
+
+    /// Importance weight for one (layer, side); out-of-range layers fall
+    /// back to 1.0 so a short weight vector never panics the scan.
+    pub fn weight(&self, layer: usize, side: KvSide) -> f64 {
+        let w = match side {
+            KvSide::Key => &self.k_weight,
+            KvSide::Value => &self.v_weight,
+        };
+        w.get(layer).copied().unwrap_or(1.0)
+    }
 }
 
-/// One rung down the requantization bit ladder.
+/// One rung down the side-blind requantization ladder — the pre-split
+/// sequence, kept as the value-side track and for the uniform baselines'
+/// docs/tests.  [`ladder_down_for`] is what the scan steps.
 pub fn ladder_down(bits: u8) -> u8 {
     match bits {
         16 => 8,
@@ -78,6 +122,30 @@ pub fn ladder_down(bits: u8) -> u8 {
         3 => 2,
         2 => 1,
         b => b,
+    }
+}
+
+/// One rung down the per-side ladder (DESIGN.md §Pressure-Ladder).  Keys
+/// get the denser track with a 3-bit rung (4 → 3 → 2) — KVmix's own
+/// allocations put keys at 3 bits, so the ladder can rest there — while
+/// values take the steeper 4 → 2 step.
+pub fn ladder_down_for(side: KvSide, bits: u8) -> u8 {
+    if side == KvSide::Key && bits == 4 {
+        3
+    } else {
+        ladder_down(bits)
+    }
+}
+
+/// Quantization-noise proxy for a packed width: a uniform quantizer's
+/// MSE scales as `2^(-2b)`, and fp16 counts as noiseless.  Only *ratios*
+/// of differences of this matter (the scan compares loss-per-byte), so
+/// the constant factor is dropped.
+pub fn quant_err_proxy(bits: u8) -> f64 {
+    if bits >= 16 {
+        0.0
+    } else {
+        0.25f64.powi(bits as i32)
     }
 }
 
@@ -111,12 +179,14 @@ pub struct Downshift {
     pub cow: bool,
 }
 
-/// Requantize the oldest sealed page still above its floor, one ladder
-/// rung down, skipping shared pages ([`SharedDownshift::Exempt`]).  Scan
-/// order is oldest-page-first, then layer order, K before V — so the
-/// most recent context keeps its precision for as long as possible.
-/// Returns `None` when every eligible sealed page sits at its floor (the
-/// caller's cue to move on to prefix-entry eviction, then preemption).
+/// Take the single best downshift step, skipping shared pages
+/// ([`SharedDownshift::Exempt`]).  "Best" is minimum predicted
+/// loss-per-byte: `weight(layer, side) * Δ(quant_err_proxy)` divided by
+/// the page-frame bytes the rung reclaims, ties broken oldest-page-first,
+/// then layer order, K before V — so important layers and recent context
+/// keep their precision for as long as possible.  Returns `None` when
+/// every eligible sealed page sits at its side floor (the caller's cue
+/// to move on to prefix-entry eviction, then preemption).
 pub fn downshift_one(cache: &mut SeqKvCache, page_tokens: usize,
                      cfg: &PressureCfg) -> Option<Downshift> {
     downshift_one_with(cache, page_tokens, cfg, SharedDownshift::Exempt)
@@ -126,22 +196,50 @@ pub fn downshift_one(cache: &mut SeqKvCache, page_tokens: usize,
 pub fn downshift_one_with(cache: &mut SeqKvCache, page_tokens: usize,
                           cfg: &PressureCfg, shared: SharedDownshift)
                           -> Option<Downshift> {
-    let max_pages = cache.layers.iter()
-        .flat_map(|l| KV_SIDES.iter().map(move |&s| l.sealed_quant_pages(s, page_tokens)))
-        .max()
-        .unwrap_or(0);
-    for page in 0..max_pages {
-        for (li, layer) in cache.layers.iter_mut().enumerate() {
-            for &side in &KV_SIDES {
-                if page >= layer.sealed_quant_pages(side, page_tokens) {
-                    continue;
-                }
+    downshift_best(cache, page_tokens, cfg, shared, None)
+}
+
+/// [`downshift_one`] restricted to one side of the cache — the
+/// property-test wall's probe for per-side floor invariants
+/// (`rust/tests/props.rs`), and the audit hook that proves a cache whose
+/// K pages sit at floor still yields V-side relief.
+pub fn downshift_one_side(cache: &mut SeqKvCache, page_tokens: usize,
+                          cfg: &PressureCfg, side: KvSide)
+                          -> Option<Downshift> {
+    downshift_best(cache, page_tokens, cfg, SharedDownshift::Exempt, Some(side))
+}
+
+/// Candidate scan + apply.  Two passes: a read-only sweep scores every
+/// eligible (layer, side, page) rung, then the winner is requantized.
+/// The comparison key is lexicographic
+/// `(loss_per_byte, page, layer, side)` — exact float ties (common:
+/// identical widths and weights) fall back to the old
+/// oldest-page-first / K-before-V order, keeping the scan deterministic.
+fn downshift_best(cache: &mut SeqKvCache, page_tokens: usize,
+                  cfg: &PressureCfg, shared: SharedDownshift,
+                  only: Option<KvSide>) -> Option<Downshift> {
+    let side_rank = |s: KvSide| match s {
+        KvSide::Key => 0usize,
+        KvSide::Value => 1,
+    };
+    let mut best: Option<((f64, usize, usize, usize), KvSide, u8, u8, bool)> = None;
+    for (li, layer) in cache.layers.iter().enumerate() {
+        let (kv_dim, group) = (layer.cfg.kv_dim, layer.cfg.group);
+        for &side in &KV_SIDES {
+            if only.is_some_and(|s| s != side) {
+                continue;
+            }
+            let floor = cfg.floor(li, side);
+            if floor >= 16 {
+                continue;
+            }
+            let w = cfg.weight(li, side);
+            for page in 0..layer.sealed_quant_pages(side, page_tokens) {
                 let bits = layer.quant_page_bits(side, page, page_tokens);
-                let floor = cfg.floor(li, side);
                 if bits <= floor {
                     continue;
                 }
-                let to = ladder_down(bits).max(floor);
+                let to = ladder_down_for(side, bits).max(floor);
                 if to >= bits {
                     continue;
                 }
@@ -149,21 +247,34 @@ pub fn downshift_one_with(cache: &mut SeqKvCache, page_tokens: usize,
                 if is_shared && shared == SharedDownshift::Exempt {
                     continue;
                 }
-                let bytes_saved = layer.requant_page(side, page, page_tokens, to);
-                return Some(Downshift {
-                    layer: li, side, page, from_bits: bits, to_bits: to, bytes_saved,
-                    cow: is_shared,
-                });
+                let saved = page_frame_bytes(page_tokens, kv_dim, group, bits)
+                    .saturating_sub(page_frame_bytes(page_tokens, kv_dim, group, to));
+                if saved == 0 {
+                    continue;
+                }
+                let loss = w * (quant_err_proxy(to) - quant_err_proxy(bits));
+                let key = (loss / saved as f64, page, li, side_rank(side));
+                let better = match &best {
+                    None => true,
+                    Some((bk, ..)) => key.partial_cmp(bk) == Some(std::cmp::Ordering::Less),
+                };
+                if better {
+                    best = Some((key, side, bits, to, is_shared));
+                }
             }
         }
     }
-    None
+    let ((_, page, li, _), side, from_bits, to_bits, cow) = best?;
+    let bytes_saved = cache.layers[li].requant_page(side, page, page_tokens, to_bits);
+    Some(Downshift { layer: li, side, page, from_bits, to_bits, bytes_saved, cow })
 }
 
 /// Upper bound on page-accounting bytes the controller could still
 /// reclaim from `cache` by downshifting every *eligible* (unshared)
-/// sealed page to its floor — the engine's gate for admission-time
+/// sealed page to its side floor — the engine's gate for admission-time
 /// relief (don't grind pages for a request that can't fit even then).
+/// Path-independent: every ladder telescopes from `bits` down to the
+/// floor, so the bound is the same whichever per-side rungs get taken.
 /// Shared pages are excluded: the ladder exempts them
 /// (DESIGN.md §Prefix-Sharing); the engine adds
 /// `PagePool::prefix_reclaimable_bytes` for the index-eviction rung.
@@ -205,6 +316,22 @@ mod tests {
         assert_eq!(ladder_down(3), 2);
         assert_eq!(ladder_down(2), 1);
         assert_eq!(ladder_down(1), 1); // bottom: no further rung
+        // keys get the denser track: the 3-bit rung values skip
+        assert_eq!(ladder_down_for(KvSide::Key, 4), 3);
+        assert_eq!(ladder_down_for(KvSide::Value, 4), 2);
+        for b in [16u8, 8, 3, 2, 1] {
+            assert_eq!(ladder_down_for(KvSide::Key, b), ladder_down(b));
+            assert_eq!(ladder_down_for(KvSide::Value, b), ladder_down(b));
+        }
+    }
+
+    #[test]
+    fn err_proxy_is_monotone() {
+        assert!(quant_err_proxy(1) > quant_err_proxy(2));
+        assert!(quant_err_proxy(2) > quant_err_proxy(3));
+        assert!(quant_err_proxy(3) > quant_err_proxy(4));
+        assert!(quant_err_proxy(4) > quant_err_proxy(16));
+        assert_eq!(quant_err_proxy(16), 0.0);
     }
 
     #[test]
@@ -219,30 +346,54 @@ mod tests {
         assert_eq!(cfg.floor(2, KvSide::Value), 2);
         assert_eq!(cfg.floor(3, KvSide::Key), 16);
         assert_eq!(cfg.floor(99, KvSide::Key), 16); // out of range: untouchable
+        // plan bits double as proxy weights until raw scores arrive
+        assert_eq!(cfg.weight(1, KvSide::Key), 3.0);
+        assert_eq!(cfg.weight(2, KvSide::Value), 4.0);
+        assert_eq!(cfg.weight(99, KvSide::Value), 1.0);
+        let cfg = cfg.with_weights(vec![9.0; 4], vec![7.0; 4]);
+        assert_eq!(cfg.weight(1, KvSide::Key), 9.0);
+        assert_eq!(cfg.weight(2, KvSide::Value), 7.0);
     }
 
+    /// The loss-per-byte order from a uniform 4-bit start: the gentle
+    /// K 4→3 rung is the cheapest loss per byte, so every K page steps
+    /// to 3 first (oldest page, then layer order), then K 3→2 still
+    /// undercuts V 4→2, and only once all keys rest at floor do values
+    /// move.  En route the cache passes through exactly the paper's
+    /// K-below-V asymmetric shape.
     #[test]
-    fn downshift_is_oldest_first_and_floors_out() {
+    fn downshift_order_is_loss_per_byte() {
         let m = ModelConfig::test_small();
         let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
-        let cfg = PressureCfg::from_plan(&plan); // floor 2 everywhere
+        let cfg = PressureCfg::from_plan(&plan); // floor 2, equal weights
         let mut cache = filled(&m, &plan, 256, 1); // 8 blocks = 4 pages per side
         let first = downshift_one(&mut cache, PT, &cfg).expect("downshiftable");
         assert_eq!((first.layer, first.side, first.page), (0, KvSide::Key, 0));
-        assert_eq!((first.from_bits, first.to_bits), (4, 2));
+        assert_eq!((first.from_bits, first.to_bits), (4, 3));
         assert!(first.bytes_saved > 0);
-        let second = downshift_one(&mut cache, PT, &cfg).unwrap();
-        assert_eq!((second.layer, second.side, second.page), (0, KvSide::Value, 0));
-        // page 0 across all layers/sides drains before page 1 is touched
-        let mut seen: usize = 2;
+        let mut steps = vec![first];
         while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
-            seen += 1;
-            if seen <= m.n_layers * 2 {
-                assert_eq!(d.page, 0, "downshift #{seen} must still be page 0");
+            steps.push(d);
+        }
+        let pages_per_side = 4 * m.n_layers;
+        // K takes two rungs (4→3→2), V one (4→2)
+        assert_eq!(steps.len(), pages_per_side * 2 + pages_per_side);
+        let phase = |d: &Downshift| match (d.side, d.from_bits, d.to_bits) {
+            (KvSide::Key, 4, 3) => 0,
+            (KvSide::Key, 3, 2) => 1,
+            (KvSide::Value, 4, 2) => 2,
+            other => panic!("unexpected rung {other:?}"),
+        };
+        for w in steps.windows(2) {
+            assert!(phase(&w[0]) <= phase(&w[1]),
+                    "rungs must come in loss-per-byte phases: {:?} then {:?}", w[0], w[1]);
+        }
+        // within a phase, exact ties break oldest-page-first then layer
+        for w in steps.windows(2) {
+            if phase(&w[0]) == phase(&w[1]) {
+                assert!((w[0].page, w[0].layer) < (w[1].page, w[1].layer));
             }
         }
-        // 4 pages x 2 layers x 2 sides, one rung (4 -> 2) each
-        assert_eq!(seen, 4 * m.n_layers * 2);
         for l in &cache.layers {
             for &s in &KV_SIDES {
                 for p in 0..l.sealed_quant_pages(s, PT) {
@@ -250,6 +401,86 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Weights steer the scan: a layer whose keys carry overwhelming
+    /// importance holds its K pages while everything else (including its
+    /// own values) drains first.
+    #[test]
+    fn weights_defer_important_layers() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let cfg = PressureCfg::from_plan(&plan)
+            .with_weights(vec![1e6, 1.0], vec![1.0, 1.0]);
+        let mut cache = filled(&m, &plan, 128, 9); // 2 pages per side
+        let mut order = Vec::new();
+        while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
+            order.push((d.layer, d.side));
+        }
+        let first_l0k = order.iter().position(|&x| x == (0, KvSide::Key)).unwrap();
+        for (i, &(l, s)) in order.iter().enumerate() {
+            if (l, s) != (0, KvSide::Key) {
+                assert!(i < first_l0k,
+                        "layer-0 keys (weight 1e6) must drain last, saw {l}/{s:?} at {i}");
+            }
+        }
+    }
+
+    /// Satellite audit regression: K already at floor must not starve
+    /// V-side relief, and the reclaimable-bytes claim stays exact when
+    /// only one side has headroom.
+    #[test]
+    fn k_at_floor_still_yields_v_relief() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        // custom floors: K pinned at its plan width, V may fall to 2
+        let cfg = PressureCfg {
+            k_floor: vec![4; m.n_layers],
+            v_floor: vec![2; m.n_layers],
+            k_weight: vec![1.0; m.n_layers],
+            v_weight: vec![1.0; m.n_layers],
+        };
+        let mut cache = filled(&m, &plan, 192, 7); // 3 pages per side
+        let pages_per_side = 3 * m.n_layers;
+        let per_page = page_frame_bytes(PT, m.kv_dim(), m.group, 4)
+            - page_frame_bytes(PT, m.kv_dim(), m.group, 2);
+        assert_eq!(reclaimable_bytes(&cache, PT, &cfg), pages_per_side * per_page,
+                   "claim must count only the V side");
+        let mut n = 0usize;
+        while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
+            assert_eq!(d.side, KvSide::Value, "K at floor: only V relief allowed");
+            assert_eq!((d.from_bits, d.to_bits), (4, 2));
+            n += 1;
+        }
+        assert_eq!(n, pages_per_side);
+        assert_eq!(reclaimable_bytes(&cache, PT, &cfg), 0);
+        for l in &cache.layers {
+            for p in 0..l.sealed_quant_pages(KvSide::Key, PT) {
+                assert_eq!(l.quant_page_bits(KvSide::Key, p, PT), 4, "K untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn downshift_one_side_respects_restriction() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let cfg = PressureCfg::from_plan(&plan);
+        let mut cache = filled(&m, &plan, 128, 11);
+        while let Some(d) = downshift_one_side(&mut cache, PT, &cfg, KvSide::Value) {
+            assert_eq!(d.side, KvSide::Value);
+        }
+        // values exhausted to floor; keys untouched and still eligible
+        for l in &cache.layers {
+            for p in 0..l.sealed_quant_pages(KvSide::Value, PT) {
+                assert_eq!(l.quant_page_bits(KvSide::Value, p, PT), 2);
+            }
+            for p in 0..l.sealed_quant_pages(KvSide::Key, PT) {
+                assert_eq!(l.quant_page_bits(KvSide::Key, p, PT), 4);
+            }
+        }
+        let d = downshift_one_side(&mut cache, PT, &cfg, KvSide::Key).unwrap();
+        assert_eq!(d.side, KvSide::Key);
     }
 
     #[test]
@@ -260,18 +491,16 @@ mod tests {
         let mut cache = filled(&m, &plan, 256, 2);
         let claim = reclaimable_bytes(&cache, PT, &cfg);
         assert!(claim > 0);
+        // page accounting telescopes over the per-side rungs: sum the
+        // frame delta of every step actually taken
         let mut actual = 0usize;
         while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
-            // page accounting, not exact block bytes: recompute per page
-            let _ = d;
-            actual += 1;
+            actual += page_frame_bytes(PT, m.kv_dim(), m.group, d.from_bits)
+                - page_frame_bytes(PT, m.kv_dim(), m.group, d.to_bits);
         }
         assert!(actual > 0);
         assert_eq!(reclaimable_bytes(&cache, PT, &cfg), 0, "nothing left at floor");
-        // the page-accounting claim equals frames x (bytes(4) - bytes(2))
-        let per_page = page_frame_bytes(PT, m.kv_dim(), m.group, 4)
-            - page_frame_bytes(PT, m.kv_dim(), m.group, 2);
-        assert_eq!(claim, actual * per_page);
+        assert_eq!(claim, actual, "claim must telescope over the rungs taken");
     }
 
     #[test]

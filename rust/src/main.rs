@@ -9,6 +9,10 @@
 //!             [--prefix-cache] [--step-tokens N] [--admit-queue N]
 //!             [--legacy-proto]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
+//!             [--plan-search] [--budget-frac F] [--plan-out FILE]
+//!   plan-search  [--budget-frac F] [--plan-out FILE] [--prompts N]
+//!             [--seed N] [--synthetic-layers N] [--check FILE]
+//!             offline Pareto plan search (README.md §Plan search)
 //!   repro     <fig1|fig2|fig4|fig5|fig6|fig7|fig8|fig10|table1..table5|headline|all>
 //!   inspect                                       artifact + weight summary
 //!
@@ -34,6 +38,15 @@
 //! (DESIGN.md §Serving-Protocol).
 //! --legacy-proto (serve) speaks the deprecated pre-PR-7 `GEN`/`OK`
 //! line protocol instead of the streaming NDJSON one.
+//! --plan-in FILE (generate/serve) loads a searched plan-search frontier
+//! file and serves its minimum-perplexity plan instead of the profiled
+//! `allocate` split (docs/adr/007-asymmetric-bit-allocation.md).
+//! --synthetic-layers N (plan-search) searches a seeded synthetic
+//! importance profile at a reference geometry — no artifacts needed
+//! (what CI's plan-search-smoke step runs).
+//! --check FILE (plan-search) re-parses an emitted frontier file and
+//! verifies the canonical re-serialization is byte-identical, exiting
+//! non-zero otherwise.
 
 use anyhow::{anyhow, bail, Result};
 use kvmix::baselines::Method;
@@ -41,7 +54,8 @@ use kvmix::config::QuantPlan;
 use kvmix::coordinator::{server, EngineCfg, Engine, Request};
 use kvmix::harness::tables::{self, ReproCfg};
 use kvmix::model::Sampler;
-use kvmix::profiler;
+use kvmix::harness::eval::EvalCfg;
+use kvmix::profiler::{self, search};
 use kvmix::runtime::{default_artifacts_dir, Runtime};
 use kvmix::util::cli::Args;
 use kvmix::util::{Rng, WorkerPool};
@@ -54,7 +68,7 @@ fn main() {
 }
 
 fn usage() -> ! {
-    eprintln!("usage: kvmix <generate|serve|profile|repro|inspect> [options]");
+    eprintln!("usage: kvmix <generate|serve|profile|plan-search|repro|inspect> [options]");
     eprintln!("  see rust/src/main.rs header or README.md for options");
     std::process::exit(2);
 }
@@ -62,7 +76,7 @@ fn usage() -> ! {
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, &["fast", "no-profiler", "help", "prefix-cache",
-                                   "legacy-proto"]);
+                                   "legacy-proto", "plan-search"]);
     if args.flag("help") || args.positional.is_empty() {
         usage();
     }
@@ -85,9 +99,42 @@ fn run() -> Result<()> {
             let rt = Runtime::load(&dir)?;
             let n = args.usize_or("prompts", 16)?;
             let frac = args.f64_or("high-frac", 0.25)?;
-            let imp = profiler::profile(&rt, n, args.usize_or("seed", 42)? as u64)?;
+            let seed = args.usize_or("seed", 42)? as u64;
+            let imp = profiler::profile(&rt, n, seed)?;
             let plan = profiler::allocate(&imp, frac);
             print!("{}", profiler::plan_report(&imp, &plan));
+            if args.flag("plan-search") {
+                let res = run_plan_search(&rt, &imp, &args, seed)?;
+                print_frontier(&res);
+                write_plan_out(&res, &args)?;
+            }
+            Ok(())
+        }
+        "plan-search" => {
+            if let Some(path) = args.get("check") {
+                return check_plan_file(path);
+            }
+            let seed = args.usize_or("seed", 7)? as u64;
+            let synth_layers = args.usize_or("synthetic-layers", 0)?;
+            let res = if synth_layers > 0 {
+                // artifact-free smoke path: seeded synthetic importance at
+                // a reference geometry (kv_dim 64, group 32), modeled
+                // scorer only
+                let imp = search::synthetic_importance(synth_layers, seed);
+                let mut cfg = search::SearchCfg { seed, ..Default::default() };
+                cfg.budget_frac = args.f64_or("budget-frac", cfg.budget_frac)?;
+                search::search_modeled(&imp, &cfg, 64, 32)?
+            } else {
+                let rt = Runtime::load(&dir)?;
+                let imp = profiler::profile(&rt, args.usize_or("prompts", 16)?, seed)?;
+                run_plan_search(&rt, &imp, &args, seed)?
+            };
+            if res.frontier.is_empty() {
+                bail!("no feasible plan under budget {:.1} B/token — raise --budget-frac",
+                      res.budget_bytes_per_token);
+            }
+            print_frontier(&res);
+            write_plan_out(&res, &args)?;
             Ok(())
         }
         "generate" => {
@@ -106,10 +153,11 @@ fn run() -> Result<()> {
             let page_tokens = args.usize_or("page-tokens", 0)?;
             let prefix_cache = args.flag("prefix-cache");
             let step_tokens = args.usize_or("step-tokens", 0)?;
+            let pressure_weights = pressure_weights(&rt, &args);
             WorkerPool::scoped(threads, |pool| {
                 let mut engine = Engine::with_pool(&rt, EngineCfg {
                     method, max_batch: 1, kv_budget: None, threads, page_tokens,
-                    prefix_cache, step_tokens,
+                    prefix_cache, step_tokens, pressure_weights,
                 }, Some(pool))?;
                 engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
                                         sampler: Sampler::Greedy, stop_token: None,
@@ -136,8 +184,10 @@ fn run() -> Result<()> {
             let mut scfg = server::ServeCfg::new(&addr);
             scfg.admit_queue = args.usize_or("admit-queue", 32)?;
             scfg.legacy = args.flag("legacy-proto");
+            let pressure_weights = pressure_weights(&rt, &args);
             server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads,
-                                           page_tokens, prefix_cache, step_tokens },
+                                           page_tokens, prefix_cache, step_tokens,
+                                           pressure_weights },
                           scfg)
         }
         "repro" => {
@@ -186,7 +236,83 @@ fn run_repro(rt: &Runtime, cfg: &ReproCfg, exp: &str) -> Result<()> {
     }
 }
 
+/// Shared eval-scored search driver for `profile --plan-search` and the
+/// artifact-backed `plan-search` subcommand: coarse grid, small LM eval
+/// (each frontier survivor costs one teacher-forced pass).
+fn run_plan_search(rt: &Runtime, imp: &profiler::Importance, args: &Args, seed: u64)
+                   -> Result<search::SearchResult> {
+    let mut cfg = search::SearchCfg { seed, ..search::SearchCfg::coarse() };
+    cfg.budget_frac = args.f64_or("budget-frac", cfg.budget_frac)?;
+    let ecfg = EvalCfg { n_seqs: 6, seq_len: 96, prefill_len: 32, batch: 6,
+                         seed: seed ^ 0x5EED, query_offset: None };
+    search::search_with_eval(rt, imp, &cfg, &ecfg)
+}
+
+fn print_frontier(res: &search::SearchResult) {
+    println!("plan search: budget {:.1} B/token, {} frontier plan(s)",
+             res.budget_bytes_per_token, res.frontier.len());
+    println!("{:<24} | {:>12} | {:>10} | {:>6} | {:>6}",
+             "plan", "bytes/token", "ppl", "avg K", "avg V");
+    for p in &res.frontier {
+        println!("{:<24} | {:>12.1} | {:>10.4} | {:>6.2} | {:>6.2}",
+                 p.plan.name, p.bytes_per_token, p.ppl,
+                 p.plan.avg_k_bits(), p.plan.avg_v_bits());
+    }
+    if let Some(best) = res.best() {
+        println!("best: {}", best.plan.name);
+    }
+}
+
+fn write_plan_out(res: &search::SearchResult, args: &Args) -> Result<()> {
+    if let Some(path) = args.get("plan-out") {
+        res.write_file(std::path::Path::new(path))?;
+        println!("wrote frontier to {path}");
+    }
+    Ok(())
+}
+
+/// `plan-search --check FILE`: re-parse an emitted frontier file and
+/// verify the canonical re-serialization is byte-identical (what CI's
+/// plan-search-smoke step pins).
+fn check_plan_file(path: &str) -> Result<()> {
+    let res = search::SearchResult::read_file(std::path::Path::new(path))?;
+    if res.frontier.is_empty() {
+        bail!("{path}: frontier is empty");
+    }
+    let raw = std::fs::read_to_string(path)?;
+    let canon = res.to_json().to_string() + "\n";
+    if raw != canon {
+        bail!("{path}: not in canonical form (re-serialization differs)");
+    }
+    println!("{path}: OK ({} frontier plan(s), {} layers)",
+             res.frontier.len(), res.n_layers);
+    Ok(())
+}
+
+/// Per-layer downshift weights for the pressure controller: the raw
+/// gradient scores the profiler recorded in importance.json, when
+/// running the profiled kvmix method (DESIGN.md §Pressure-Ladder).
+/// Anything else (uniform baselines, searched `--plan-in` plans, missing
+/// or score-less artifact files) falls back to the plan-derived weights
+/// inside `PressureCfg::from_plan`.
+fn pressure_weights(rt: &Runtime, args: &Args) -> Option<(Vec<f64>, Vec<f64>)> {
+    if args.get("plan-in").is_some() || args.get_or("method", "kvmix") != "kvmix" {
+        return None;
+    }
+    QuantPlan::scores_from_importance_file(&rt.artifacts_dir().join("importance.json"))
+        .ok().flatten()
+}
+
 fn parse_method(rt: &Runtime, args: &Args) -> Result<Method> {
+    if let Some(path) = args.get("plan-in") {
+        let res = search::SearchResult::read_file(std::path::Path::new(path))?;
+        if res.n_layers != rt.model.n_layers {
+            bail!("{path}: plan file has {} layers, model has {}",
+                  res.n_layers, rt.model.n_layers);
+        }
+        let best = res.best().ok_or_else(|| anyhow!("{path}: frontier is empty"))?;
+        return Ok(Method::Kvmix(best.plan.clone()));
+    }
     let plan_path = rt.artifacts_dir().join("importance.json");
     let kvmix_plan = || -> Result<QuantPlan> {
         QuantPlan::from_importance_file(&plan_path)

@@ -8,6 +8,8 @@
 //! build-time reference the result is cross-checked against
 //! (rust/tests/integration.rs).
 
+pub mod search;
+
 use anyhow::Result;
 
 use crate::config::QuantPlan;

@@ -1,0 +1,462 @@
+//! Offline Pareto plan search (ROADMAP item 3,
+//! docs/adr/007-asymmetric-bit-allocation.md): enumerate per-layer
+//! `(k_bits, v_bits)` allocations under a modeled byte budget, score
+//! each feasible candidate's perplexity, and keep the Pareto frontier —
+//! the KVTuner recipe of deriving asymmetric K/V operating points from
+//! search instead of hand-set fractions.
+//!
+//! Two-phase to keep measured evals affordable: a deterministic modeled
+//! proxy ([`modeled_ppl`], the importance-weighted quantization-noise
+//! model) prunes the candidate grid down to its frontier, then only the
+//! survivors are re-scored against the teacher-forced eval harness
+//! (`harness/eval.rs`).  The frontier serializes to JSON
+//! (`--plan-out` / `--plan-in`, README.md §Plan search) so serve and
+//! generate can load a searched [`QuantPlan`] instead of
+//! `profiler::allocate`'s fixed `high_frac` split.
+//!
+//! Everything here is deterministic for a fixed seed + budget: candidate
+//! enumeration follows importance rank order, the frontier sort is
+//! total, and the JSON serializer is canonical (sorted keys), which is
+//! what `rust/tests/plan_search.rs` pins.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::baselines::Method;
+use crate::config::QuantPlan;
+use crate::harness::eval::{evaluate, EvalCfg};
+use crate::harness::workload::Task;
+use crate::kvcache::pages::page_frame_bytes;
+use crate::kvcache::pressure::quant_err_proxy;
+use crate::runtime::Runtime;
+use crate::util::json::{parse_file, Json};
+use crate::util::Rng;
+
+use super::Importance;
+
+/// Search space + budget for one plan search.
+#[derive(Debug, Clone)]
+pub struct SearchCfg {
+    /// Byte budget as a fraction of the fp16 modeled bytes/token
+    /// (`4 * kv_dim`, both sides at 2 B/element).
+    pub budget_frac: f64,
+    /// Packed widths the enumeration may assign (16/fp is never a
+    /// search candidate — it has no packed pages to manage).
+    pub bit_choices: Vec<u8>,
+    /// High-tier sizes as fractions of the layer count: for each, the
+    /// top layers *by importance rank* (per side) get the high width.
+    pub high_fracs: Vec<f64>,
+    /// RPC ratio for high-tier / low-tier layers (mirrors
+    /// `profiler::allocate_with`).  Setting them equal makes modeled
+    /// bytes linear in total bits, which the budget-monotonicity
+    /// property test relies on.
+    pub rpc_high: f64,
+    pub rpc_low: f64,
+    /// Recorded in the emitted JSON; also seeds [`synthetic_importance`].
+    pub seed: u64,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        SearchCfg {
+            budget_frac: 0.30,
+            bit_choices: vec![1, 2, 3, 4],
+            high_fracs: vec![0.0, 0.25, 0.5],
+            rpc_high: 0.2,
+            rpc_low: 0.1,
+            seed: 7,
+        }
+    }
+}
+
+impl SearchCfg {
+    /// Smaller grid for eval-scored runs (each surviving candidate costs
+    /// a full teacher-forced eval pass).
+    pub fn coarse() -> Self {
+        SearchCfg {
+            bit_choices: vec![1, 2, 3, 4],
+            high_fracs: vec![0.0, 0.25],
+            ..SearchCfg::default()
+        }
+    }
+}
+
+/// One scored candidate on (or off) the frontier.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub plan: QuantPlan,
+    pub bytes_per_token: f64,
+    pub ppl: f64,
+}
+
+/// The outcome of one search: the Pareto frontier, bytes strictly
+/// ascending and perplexity strictly descending, plus enough metadata to
+/// reproduce and to sanity-check a loaded file against a model.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub n_layers: usize,
+    pub kv_dim: usize,
+    pub group: usize,
+    pub seed: u64,
+    pub budget_bytes_per_token: f64,
+    pub frontier: Vec<PlanPoint>,
+}
+
+/// Modeled fp16 KV bytes per token, both sides (2 B/element).
+pub fn fp16_bytes_per_token(kv_dim: usize) -> f64 {
+    (4 * kv_dim) as f64
+}
+
+/// Steady-state modeled KV bytes per token of a plan: each side keeps an
+/// `rpc` fraction of the context full-precision (the RPC window) and
+/// holds the rest in packed pages at the plan's width, group-scale
+/// overhead included, page rounding excluded.  Uses the same
+/// `page_frame_bytes` arithmetic the pool charges, evaluated at one
+/// group per page so no rounding slack enters.
+pub fn plan_bytes_per_token(plan: &QuantPlan, kv_dim: usize, group: usize) -> f64 {
+    let fp_side = (2 * kv_dim) as f64;
+    let quant = |b: u8| page_frame_bytes(group, kv_dim, group, b) as f64 / group as f64;
+    let side = |bits: &[u8], rpc: &[f64]| -> f64 {
+        bits.iter().zip(rpc.iter()).map(|(&b, &r)| {
+            if b == 16 { fp_side } else { (1.0 - r) * quant(b) + r * fp_side }
+        }).sum()
+    };
+    side(&plan.k_bits, &plan.k_rpc) + side(&plan.v_bits, &plan.v_rpc)
+}
+
+/// Deterministic proxy perplexity: exp of the mean profiling loss plus
+/// the importance-weighted quantization noise of the plan, with each
+/// layer's RPC window discounting its noise (full-precision fraction).
+/// Strictly decreasing in every bit width (positive scores assumed), so
+/// it is a valid Pareto scorer even though its absolute scale is crude —
+/// phase 2 replaces the values with measured eval perplexity.
+pub fn modeled_ppl(imp: &Importance, plan: &QuantPlan) -> f64 {
+    let mut noise = 0.0;
+    for l in 0..plan.n_layers() {
+        noise += imp.k[l] * (1.0 - plan.k_rpc[l]) * quant_err_proxy(plan.k_bits[l]);
+        noise += imp.v[l] * (1.0 - plan.v_rpc[l]) * quant_err_proxy(plan.v_bits[l]);
+    }
+    (imp.mean_loss + noise).exp()
+}
+
+/// Artifact-free importance profile for CI smoke and the property tests:
+/// seeded, loosely front-loaded (early layers matter more, like the
+/// profiled models), strictly positive.
+pub fn synthetic_importance(n_layers: usize, seed: u64) -> Importance {
+    let mut rng = Rng::new(seed ^ 0xA11C_E5);
+    let side = |rng: &mut Rng| -> Vec<f64> {
+        (0..n_layers).map(|i| (1.0 + rng.f64()) / (1.0 + 0.35 * i as f64)).collect()
+    };
+    let k = side(&mut rng);
+    let v = side(&mut rng);
+    Importance { k, v, mean_loss: 1.0, n_prompts: 0 }
+}
+
+/// Layer indices sorted by descending score, index as the tie-break so
+/// the order (and therefore the whole search) is deterministic.
+fn ranked(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+/// All distinct (bits, rpc) assignments for one side: a low width
+/// everywhere, a high width + `rpc_high` on the top `frac` of layers by
+/// importance rank — the same two-tier shape `profiler::allocate_with`
+/// emits, swept over the grid.
+fn side_variants(scores: &[f64], cfg: &SearchCfg) -> Vec<(Vec<u8>, Vec<f64>)> {
+    let n = scores.len();
+    let order = ranked(scores);
+    let mut seen: BTreeSet<(Vec<u8>, Vec<u64>)> = BTreeSet::new();
+    let mut out = Vec::new();
+    for &low in &cfg.bit_choices {
+        for &high in &cfg.bit_choices {
+            if high < low {
+                continue;
+            }
+            for &frac in &cfg.high_fracs {
+                let n_high = ((frac * n as f64).round() as usize).min(n);
+                let mut bits = vec![low; n];
+                let mut rpc = vec![cfg.rpc_low; n];
+                for &i in order.iter().take(n_high) {
+                    bits[i] = high;
+                    rpc[i] = cfg.rpc_high;
+                }
+                let key = (bits.clone(), rpc.iter().map(|r| r.to_bits()).collect());
+                if seen.insert(key) {
+                    out.push((bits, rpc));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The full candidate grid: the cross product of per-side variants.
+pub fn enumerate_candidates(imp: &Importance, cfg: &SearchCfg) -> Vec<QuantPlan> {
+    let ks = side_variants(&imp.k, cfg);
+    let vs = side_variants(&imp.v, cfg);
+    let mut out = Vec::with_capacity(ks.len() * vs.len());
+    for (kb, kr) in &ks {
+        for (vb, vr) in &vs {
+            let mut p = QuantPlan {
+                name: String::new(),
+                k_bits: kb.clone(),
+                v_bits: vb.clone(),
+                k_rpc: kr.clone(),
+                v_rpc: vr.clone(),
+            };
+            p.name = format!("searched-k{:.2}v{:.2}", p.avg_k_bits(), p.avg_v_bits());
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Total order over scored points: bytes, then perplexity, then the plan
+/// itself — so sorting (and hence the surviving frontier) never depends
+/// on enumeration order.
+fn cmp_points(a: &PlanPoint, b: &PlanPoint) -> std::cmp::Ordering {
+    let rpc_key = |p: &QuantPlan| -> Vec<u64> {
+        p.k_rpc.iter().chain(p.v_rpc.iter()).map(|r| r.to_bits()).collect()
+    };
+    a.bytes_per_token.partial_cmp(&b.bytes_per_token).unwrap()
+        .then(a.ppl.partial_cmp(&b.ppl).unwrap())
+        .then_with(|| a.plan.k_bits.cmp(&b.plan.k_bits))
+        .then_with(|| a.plan.v_bits.cmp(&b.plan.v_bits))
+        .then_with(|| rpc_key(&a.plan).cmp(&rpc_key(&b.plan)))
+}
+
+/// Reduce scored candidates to the Pareto frontier: sorted by bytes
+/// ascending, a point survives only if it strictly improves perplexity
+/// over everything cheaper — so no survivor weakly dominates another on
+/// both axes, and the last entry is the minimum-perplexity plan (with
+/// minimum bytes among perplexity ties).
+pub fn pareto_frontier(mut pts: Vec<PlanPoint>) -> Vec<PlanPoint> {
+    pts.sort_by(cmp_points);
+    let mut out: Vec<PlanPoint> = Vec::new();
+    for p in pts {
+        match out.last() {
+            Some(last) if p.ppl >= last.ppl => {}
+            _ => out.push(p),
+        }
+    }
+    out
+}
+
+/// Search with an explicit absolute byte budget and a caller-supplied
+/// scorer (modeled or measured).
+pub fn search_plans_with_budget(
+    imp: &Importance, cfg: &SearchCfg, kv_dim: usize, group: usize, budget: f64,
+    scorer: &mut dyn FnMut(&QuantPlan) -> Result<f64>) -> Result<SearchResult> {
+    let mut pts = Vec::new();
+    for plan in enumerate_candidates(imp, cfg) {
+        let bytes = plan_bytes_per_token(&plan, kv_dim, group);
+        if bytes > budget + 1e-9 {
+            continue;
+        }
+        let ppl = scorer(&plan)?;
+        pts.push(PlanPoint { plan, bytes_per_token: bytes, ppl });
+    }
+    Ok(SearchResult {
+        n_layers: imp.k.len(),
+        kv_dim,
+        group,
+        seed: cfg.seed,
+        budget_bytes_per_token: budget,
+        frontier: pareto_frontier(pts),
+    })
+}
+
+/// Search under `cfg.budget_frac` of the fp16 footprint.
+pub fn search_plans(imp: &Importance, cfg: &SearchCfg, kv_dim: usize, group: usize,
+                    scorer: &mut dyn FnMut(&QuantPlan) -> Result<f64>)
+                    -> Result<SearchResult> {
+    let budget = cfg.budget_frac * fp16_bytes_per_token(kv_dim);
+    search_plans_with_budget(imp, cfg, kv_dim, group, budget, scorer)
+}
+
+/// Phase-1-only search: modeled proxy scores, no runtime needed.
+pub fn search_modeled(imp: &Importance, cfg: &SearchCfg, kv_dim: usize,
+                      group: usize) -> Result<SearchResult> {
+    search_plans(imp, cfg, kv_dim, group, &mut |p| Ok(modeled_ppl(imp, p)))
+}
+
+/// The full two-phase search: modeled prune, then measured teacher-forced
+/// perplexity (LM suite) on the surviving frontier only.
+pub fn search_with_eval(rt: &Runtime, imp: &Importance, cfg: &SearchCfg,
+                        ecfg: &EvalCfg) -> Result<SearchResult> {
+    let (kv_dim, group) = (rt.model.kv_dim(), rt.model.group);
+    let SearchResult { n_layers, seed, budget_bytes_per_token, frontier, .. } =
+        search_plans(imp, cfg, kv_dim, group, &mut |p| Ok(modeled_ppl(imp, p)))?;
+    let mut pts = Vec::with_capacity(frontier.len());
+    for pt in frontier {
+        let r = evaluate(rt, &Method::Kvmix(pt.plan.clone()), Task::Lm, ecfg)?;
+        pts.push(PlanPoint { ppl: r.ppl(), ..pt });
+    }
+    Ok(SearchResult {
+        n_layers,
+        kv_dim,
+        group,
+        seed,
+        budget_bytes_per_token,
+        frontier: pareto_frontier(pts),
+    })
+}
+
+impl SearchResult {
+    /// The minimum-perplexity plan under the budget (frontier tail).
+    pub fn best(&self) -> Option<&PlanPoint> {
+        self.frontier.last()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pts = self.frontier.iter().map(|p| Json::obj(vec![
+            ("bytes_per_token", Json::Num(p.bytes_per_token)),
+            ("plan", p.plan.to_json()),
+            ("ppl", Json::Num(p.ppl)),
+        ])).collect();
+        Json::obj(vec![
+            ("budget_bytes_per_token", Json::Num(self.budget_bytes_per_token)),
+            ("frontier", Json::Arr(pts)),
+            ("group", Json::Num(self.group as f64)),
+            ("kv_dim", Json::Num(self.kv_dim as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let n_layers = j.get("n_layers")?.as_usize()?;
+        let mut frontier = Vec::new();
+        for pt in j.get("frontier")?.as_arr()? {
+            let plan = QuantPlan::from_json(pt.get("plan")?)?;
+            plan.validate()?;
+            if plan.n_layers() != n_layers {
+                bail!("frontier plan {:?} has {} layers, file says {n_layers}",
+                      plan.name, plan.n_layers());
+            }
+            frontier.push(PlanPoint {
+                plan,
+                bytes_per_token: pt.get("bytes_per_token")?.as_f64()?,
+                ppl: pt.get("ppl")?.as_f64()?,
+            });
+        }
+        Ok(SearchResult {
+            n_layers,
+            kv_dim: j.get("kv_dim")?.as_usize()?,
+            group: j.get("group")?.as_usize()?,
+            seed: j.get("seed")?.as_f64()? as u64,
+            budget_bytes_per_token: j.get("budget_bytes_per_token")?.as_f64()?,
+            frontier,
+        })
+    }
+
+    /// Canonical serialization (sorted keys, shortest-round-trip floats):
+    /// `read_file` → `write_file` is byte-identical, which the CLI's
+    /// `plan-search --check` and `rust/tests/plan_search.rs` pin.
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")?;
+        Ok(())
+    }
+
+    pub fn read_file(path: &Path) -> Result<Self> {
+        Self::from_json(&parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KV_DIM: usize = 64;
+    const GROUP: usize = 32;
+
+    #[test]
+    fn bytes_model_matches_hand_arithmetic() {
+        // group=32: packed bytes/token = kv_dim*(b+1)/8, fp16 = 2*kv_dim
+        let no_rpc = QuantPlan::uniform(4, 2).without_rpc();
+        let expect = 2.0 * (KV_DIM as f64) * 3.0 / 8.0 * 4.0;
+        assert!((plan_bytes_per_token(&no_rpc, KV_DIM, GROUP) - expect).abs() < 1e-9,
+                "4 layers x 2 sides of 2-bit packed");
+        let fp = QuantPlan::fp16(4);
+        assert!((plan_bytes_per_token(&fp, KV_DIM, GROUP)
+                 - 4.0 * fp16_bytes_per_token(KV_DIM)).abs() < 1e-9);
+        // the RPC window adds (and never subtracts) bytes
+        let rpc = QuantPlan::uniform(4, 2);
+        assert!(plan_bytes_per_token(&rpc, KV_DIM, GROUP)
+                > plan_bytes_per_token(&no_rpc, KV_DIM, GROUP));
+    }
+
+    #[test]
+    fn modeled_ppl_rewards_bits_and_rpc() {
+        let imp = synthetic_importance(4, 3);
+        let p2 = modeled_ppl(&imp, &QuantPlan::uniform(4, 2));
+        let p4 = modeled_ppl(&imp, &QuantPlan::uniform(4, 4));
+        let p2n = modeled_ppl(&imp, &QuantPlan::uniform(4, 2).without_rpc());
+        assert!(p4 < p2, "more bits must lower the proxy");
+        assert!(p2 < p2n, "the RPC window must lower the proxy");
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_and_high_tier_follows_rank() {
+        let imp = synthetic_importance(8, 11);
+        let cfg = SearchCfg::default();
+        let a = enumerate_candidates(&imp, &cfg);
+        let b = enumerate_candidates(&imp, &cfg);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        let order = ranked(&imp.k);
+        // any two-tier K variant puts its high bits exactly on the top-ranked prefix
+        for p in &a {
+            let hi: Vec<u8> = p.k_bits.iter().copied().collect::<BTreeSet<_>>()
+                .into_iter().collect();
+            if hi.len() == 2 {
+                let n_high = p.k_bits.iter().filter(|&&b| b == hi[1]).count();
+                for &i in order.iter().take(n_high) {
+                    assert_eq!(p.k_bits[i], hi[1], "high tier must follow rank order");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_has_no_dominated_points() {
+        let imp = synthetic_importance(6, 5);
+        let res = search_modeled(&imp, &SearchCfg::default(), KV_DIM, GROUP).unwrap();
+        assert!(!res.frontier.is_empty());
+        for w in res.frontier.windows(2) {
+            assert!(w[0].bytes_per_token < w[1].bytes_per_token);
+            assert!(w[0].ppl > w[1].ppl);
+        }
+        for p in &res.frontier {
+            assert!(p.bytes_per_token <= res.budget_bytes_per_token + 1e-9);
+            p.plan.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn impossible_budget_yields_empty_frontier() {
+        let imp = synthetic_importance(4, 1);
+        let res = search_plans_with_budget(&imp, &SearchCfg::default(), KV_DIM, GROUP,
+                                           1.0, &mut |p| Ok(modeled_ppl(&imp, p)))
+            .unwrap();
+        assert!(res.frontier.is_empty(), "1 B/token fits no plan");
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let imp = synthetic_importance(4, 42);
+        let res = search_modeled(&imp, &SearchCfg::default(), KV_DIM, GROUP).unwrap();
+        let s = res.to_json().to_string();
+        let back = SearchResult::from_json(&crate::util::json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), s);
+        assert_eq!(back.frontier.len(), res.frontier.len());
+        assert_eq!(back.best().unwrap().plan, res.best().unwrap().plan);
+    }
+}

@@ -160,6 +160,7 @@ fn engine_cfg(rt: &Runtime, max_batch: usize) -> EngineCfg {
         method: Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2).without_rpc()),
         max_batch, kv_budget: None, threads: 1, page_tokens: 0,
         prefix_cache: false, step_tokens: 0,
+        pressure_weights: None,
     }
 }
 

@@ -107,6 +107,7 @@ fn engine_serves_batch_with_budget() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: Some(64 << 20),
         threads: 1, page_tokens: 0, prefix_cache: false, step_tokens: 0,
+        pressure_weights: None,
     }).unwrap();
     let mut rng = Rng::new(3);
     for id in 0..6 {
@@ -134,6 +135,7 @@ fn engine_oom_eviction_still_completes() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method, max_batch: 4, kv_budget: Some(budget), threads: 1, page_tokens: 0,
         prefix_cache: false, step_tokens: 0,
+        pressure_weights: None,
     }).unwrap();
     let mut rng = Rng::new(4);
     for id in 0..3 {
@@ -170,6 +172,7 @@ fn paged_preemption_resumes_bit_identically() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Fp16, max_batch: 4, kv_budget, threads: 1,
             page_tokens: 64, prefix_cache: false, step_tokens: 0,
+            pressure_weights: None,
         }).unwrap();
         let mut rng = Rng::new(4);
         for id in 0..3 {
@@ -209,6 +212,7 @@ fn paged_pressure_downshifts_under_budget() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: method.clone(), max_batch: 4, kv_budget, threads: 1,
             page_tokens: 64, prefix_cache: false, step_tokens: 0,
+            pressure_weights: None,
         }).unwrap();
         let mut rng = Rng::new(6);
         for id in 0..4 {

@@ -1,0 +1,117 @@
+//! Property wall around the offline Pareto plan search
+//! (`profiler/search.rs`, docs/adr/007-asymmetric-bit-allocation.md):
+//! determinism, frontier validity, budget monotonicity, and bit-exact
+//! JSON round-trips through a real file.
+
+use kvmix::profiler::search::{
+    fp16_bytes_per_token, modeled_ppl, plan_bytes_per_token, search_modeled,
+    search_plans_with_budget, synthetic_importance, SearchCfg, SearchResult,
+};
+
+const KV_DIM: usize = 64;
+const GROUP: usize = 32;
+
+#[test]
+fn search_is_deterministic() {
+    // same importance + config: byte-identical canonical serialization
+    let imp = synthetic_importance(6, 17);
+    let cfg = SearchCfg::default();
+    let a = search_modeled(&imp, &cfg, KV_DIM, GROUP).unwrap();
+    let b = search_modeled(&imp, &cfg, KV_DIM, GROUP).unwrap();
+    assert!(!a.frontier.is_empty());
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    // and the seed actually flows into the importance profile: a
+    // different profile must not be silently identical
+    let other = synthetic_importance(6, 18);
+    assert!(imp.k != other.k || imp.v != other.v);
+}
+
+#[test]
+fn frontier_is_valid_and_undominated() {
+    let imp = synthetic_importance(8, 23);
+    let res = search_modeled(&imp, &SearchCfg::default(), KV_DIM, GROUP).unwrap();
+    assert!(!res.frontier.is_empty());
+    for p in &res.frontier {
+        p.plan.validate().unwrap();
+        assert!(p.bytes_per_token <= res.budget_bytes_per_token + 1e-9);
+        assert!((p.bytes_per_token
+                 - plan_bytes_per_token(&p.plan, KV_DIM, GROUP)).abs() < 1e-9,
+                "recorded bytes must match the byte model");
+    }
+    // pairwise: no frontier point weakly dominates another on both axes
+    for (i, a) in res.frontier.iter().enumerate() {
+        for (j, b) in res.frontier.iter().enumerate() {
+            if i != j {
+                assert!(a.bytes_per_token > b.bytes_per_token || a.ppl > b.ppl,
+                        "{i} dominates {j}");
+            }
+        }
+    }
+    // the frontier tail is the minimum-perplexity plan
+    let best = res.best().unwrap();
+    for p in &res.frontier {
+        assert!(best.ppl <= p.ppl);
+    }
+}
+
+#[test]
+fn tighter_budget_never_raises_bits_or_bytes() {
+    // With rpc_high == rpc_low, modeled bytes/token is affine in total
+    // bits, so the best plan under a tighter budget can spend
+    // no more bytes — and hence no more mean bits — than under a looser
+    // one.  Sweep budgets descending and pin both monotonicities.
+    let imp = synthetic_importance(6, 29);
+    let cfg = SearchCfg { rpc_high: 0.1, rpc_low: 0.1, ..SearchCfg::default() };
+    let mut prev_bytes = f64::INFINITY;
+    let mut prev_bits = f64::INFINITY;
+    for frac in [0.6, 0.5, 0.4, 0.35, 0.3, 0.27, 0.25] {
+        let budget = frac * fp16_bytes_per_token(KV_DIM);
+        let res = search_plans_with_budget(&imp, &cfg, KV_DIM, GROUP, budget,
+                                           &mut |p| Ok(modeled_ppl(&imp, p)))
+            .unwrap();
+        let best = res.best()
+            .unwrap_or_else(|| panic!("budget frac {frac} must be feasible"));
+        assert!(best.bytes_per_token <= prev_bytes + 1e-9,
+                "frac {frac}: best bytes went up under a tighter budget");
+        let bits = (best.plan.avg_k_bits() + best.plan.avg_v_bits()) / 2.0;
+        assert!(bits <= prev_bits + 1e-9,
+                "frac {frac}: mean bits went up under a tighter budget");
+        prev_bytes = best.bytes_per_token;
+        prev_bits = bits;
+    }
+    // the sweep actually tightened something
+    assert!(prev_bits < 2.0 + 1e-9, "0.25x fp16 forces below-uniform-2 bits");
+}
+
+#[test]
+fn file_round_trip_is_bit_exact() {
+    let imp = synthetic_importance(4, 31);
+    let res = search_modeled(&imp, &SearchCfg::default(), KV_DIM, GROUP).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("kvmix_plan_search_{}.json", std::process::id()));
+    res.write_file(&path).unwrap();
+    let raw = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(raw, res.to_json().to_string() + "\n",
+               "emitted file must be the canonical serialization");
+    let back = SearchResult::read_file(&path).unwrap();
+    assert_eq!(back.to_json().to_string() + "\n", raw,
+               "read -> re-serialize must be byte-identical");
+    assert_eq!(back.n_layers, res.n_layers);
+    assert_eq!(back.frontier.len(), res.frontier.len());
+    assert_eq!(back.best().unwrap().plan, res.best().unwrap().plan);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn infeasible_budget_gives_empty_frontier_and_no_best() {
+    let imp = synthetic_importance(4, 37);
+    let res = search_plans_with_budget(&imp, &SearchCfg::default(), KV_DIM, GROUP,
+                                       0.0, &mut |p| Ok(modeled_ppl(&imp, p)))
+        .unwrap();
+    assert!(res.frontier.is_empty());
+    assert!(res.best().is_none());
+    // an empty frontier still round-trips canonically
+    let s = res.to_json().to_string();
+    let back = SearchResult::from_json(&kvmix::util::json::parse(&s).unwrap()).unwrap();
+    assert_eq!(back.to_json().to_string(), s);
+}

@@ -307,6 +307,7 @@ fn serve_shared_pair(rt: &Runtime, prefix_cache: bool)
     let mut engine = Engine::new(rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: None, threads: 1,
         page_tokens: PT, prefix_cache, step_tokens: 0,
+        pressure_weights: None,
     }).unwrap();
     let mut rng = Rng::new(8);
     let (system, _) = kvmix::harness::workload::sample_mixture(&mut rng, PT);
@@ -363,6 +364,7 @@ fn engine_prefix_cache_on_without_sharing_matches_off() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Kvmix(plan.clone()), max_batch: 4, kv_budget: None,
             threads: 1, page_tokens: PT, prefix_cache, step_tokens: 0,
+            pressure_weights: None,
         }).unwrap();
         let mut rng = Rng::new(17);
         for id in 0..3u64 {
@@ -393,6 +395,7 @@ fn engine_rejects_prefix_cache_without_pages() {
     let err = Engine::new(&rt, EngineCfg {
         method: Method::Fp16, max_batch: 1, kv_budget: None, threads: 1,
         page_tokens: 0, prefix_cache: true, step_tokens: 0,
+        pressure_weights: None,
     });
     assert!(err.is_err(), "--prefix-cache without --page-tokens must be rejected");
 }

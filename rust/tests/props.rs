@@ -3,10 +3,11 @@
 //! seeded deterministically; failures print the seed for replay.
 
 use kvmix::config::{ModelConfig, QuantPlan};
-use kvmix::kvcache::pressure::downshift_one;
+use kvmix::kvcache::pages::page_frame_bytes;
+use kvmix::kvcache::pressure::{downshift_one, downshift_one_side, reclaimable_bytes};
 use kvmix::kvcache::{
-    AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, PagePool, PressureCfg,
-    SeqKvCache, ValueRepr, WindowPolicy,
+    AttnScratch, KeyRepr, KvSide, LayerCacheCfg, LayerKvCache, PagePool,
+    PressureCfg, SeqKvCache, ValueRepr, WindowPolicy, KV_SIDES,
 };
 use kvmix::quant::{pack_stream, qmax_at, unpack_stream, words_for, PackedBlock};
 use kvmix::util::json;
@@ -250,7 +251,7 @@ fn prop_page_pool_accounting_under_random_interleaving() {
             assert_eq!(pool.owner_pages(id), 0, "seed {seed}");
         };
         for op in 0..40 {
-            match rng.below(6) {
+            match rng.below(8) {
                 // admit a fresh sequence, adopting any registered prefix
                 0 | 1 => {
                     next_owner += 1;
@@ -314,7 +315,7 @@ fn prop_page_pool_accounting_under_random_interleaving() {
                     audit(&pool, &format!("cancel #{op}"));
                 }
                 // prefix index churn: register a donor or evict the LRU
-                _ => {
+                5 => {
                     if rng.bool(0.6) && !live.is_empty() {
                         let (id, cache, prompt) = &live[rng.below(live.len())];
                         let cap = cache.max_shareable_prefix(prompt.len(), PT);
@@ -323,6 +324,32 @@ fn prop_page_pool_accounting_under_random_interleaving() {
                         let _ = pool.evict_lru_prefix();
                     }
                     audit(&pool, &format!("prefix #{op}"));
+                }
+                // side-restricted pressure: one K-only / V-only rung
+                // (DESIGN.md §Pressure-Ladder)
+                _ => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let side = if rng.bool(0.5) { KvSide::Key } else { KvSide::Value };
+                    let i = rng.below(live.len());
+                    if let Some(d) = downshift_one_side(&mut live[i].1, PT, &pcfg, side) {
+                        assert_eq!(d.side, side, "seed {seed}");
+                    }
+                    pool.sync(live[i].0, &live[i].1);
+                    audit(&pool, &format!("side-downshift #{op}"));
+                }
+            }
+            // per-side floor invariant: no live page may ever sit below
+            // its (layer, side) floor, whatever interleaving got us here
+            for (_, cache, _) in &live {
+                for (li, l) in cache.layers.iter().enumerate() {
+                    for &s in &KV_SIDES {
+                        for p in 0..l.sealed_quant_pages(s, PT) {
+                            assert!(l.quant_page_bits(s, p, PT) >= pcfg.floor(li, s),
+                                    "seed {seed} op {op}: page below side floor");
+                        }
+                    }
                 }
             }
         }
@@ -337,6 +364,93 @@ fn prop_page_pool_accounting_under_random_interleaving() {
         }
         assert_eq!(pool.modeled_bytes(), 0, "seed {seed}: pool must drain");
         assert_eq!(pool.allocated_pages(), 0, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_per_side_downshift_floors_and_accounting() {
+    // The per-side pressure-ladder wall (DESIGN.md §Pressure-Ladder):
+    // >=1000 randomized interleavings of whole-cache, K-only, and V-only
+    // downshift steps against random per-layer per-side floors and
+    // weights.  After every step no page sits below its side floor, and
+    // the bytes actually reclaimed telescope to exactly the upfront
+    // `reclaimable_bytes` claim, path-independently — whichever order the
+    // rungs were taken in, every page lands exactly on its floor.
+    const PT: usize = 64;
+    for_cases(1000, 12, |seed, rng| {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let kv = m.kv_dim();
+        let pcfg = PressureCfg {
+            k_floor: (0..m.n_layers).map(|_| [1u8, 2, 3][rng.below(3)]).collect(),
+            v_floor: (0..m.n_layers).map(|_| [1u8, 2, 3][rng.below(3)]).collect(),
+            k_weight: (0..m.n_layers).map(|_| rng.uniform(0.1, 10.0)).collect(),
+            v_weight: (0..m.n_layers).map(|_| rng.uniform(0.1, 10.0)).collect(),
+        };
+        let tokens = PT * rng.range(1, 4); // 1-3 sealed pages per side
+        let mut cache = SeqKvCache::new(&m, &plan);
+        let k = rng.normal_vec(tokens * kv);
+        let v = rng.normal_vec(tokens * kv);
+        for l in &mut cache.layers {
+            l.append(&k, &v, tokens);
+        }
+        let claim = reclaimable_bytes(&cache, PT, &pcfg);
+        assert!(claim > 0, "seed {seed}: 4-bit pages above floors <= 3");
+        let check_floors = |cache: &SeqKvCache, what: &str| {
+            for (li, l) in cache.layers.iter().enumerate() {
+                for &s in &KV_SIDES {
+                    for p in 0..l.sealed_quant_pages(s, PT) {
+                        assert!(l.quant_page_bits(s, p, PT) >= pcfg.floor(li, s),
+                                "seed {seed} {what}: page below side floor");
+                    }
+                }
+            }
+        };
+        let mut actual = 0usize;
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            assert!(iters < 10_000, "seed {seed}: ladder must terminate");
+            let choice = rng.below(3);
+            let step = match choice {
+                0 => downshift_one(&mut cache, PT, &pcfg),
+                1 => downshift_one_side(&mut cache, PT, &pcfg, KvSide::Key),
+                _ => downshift_one_side(&mut cache, PT, &pcfg, KvSide::Value),
+            };
+            match step {
+                Some(d) => {
+                    assert!(d.to_bits < d.from_bits, "seed {seed}");
+                    assert!(d.to_bits >= pcfg.floor(d.layer, d.side),
+                            "seed {seed}: rung stepped through the floor");
+                    if choice == 1 {
+                        assert_eq!(d.side, KvSide::Key, "seed {seed}");
+                    } else if choice == 2 {
+                        assert_eq!(d.side, KvSide::Value, "seed {seed}");
+                    }
+                    actual += page_frame_bytes(PT, kv, m.group, d.from_bits)
+                        - page_frame_bytes(PT, kv, m.group, d.to_bits);
+                    check_floors(&cache, "mid-ladder");
+                }
+                // one exhausted side must not hide the other side's
+                // headroom: only stop once the whole claim is spent
+                None => {
+                    if reclaimable_bytes(&cache, PT, &pcfg) == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(actual, claim,
+                   "seed {seed}: reclaimed bytes must telescope to the claim");
+        check_floors(&cache, "drained");
+        for (li, l) in cache.layers.iter().enumerate() {
+            for &s in &KV_SIDES {
+                for p in 0..l.sealed_quant_pages(s, PT) {
+                    assert_eq!(l.quant_page_bits(s, p, PT), pcfg.floor(li, s),
+                               "seed {seed}: drained ladder must land on the floor");
+                }
+            }
+        }
     });
 }
 
