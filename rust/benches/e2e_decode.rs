@@ -138,7 +138,7 @@ fn main() {
             let mut engine = Engine::new(&rt, EngineCfg {
                 method: eager.clone(), max_batch: batch, kv_budget: None,
                 threads: 1, page_tokens: 64, prefix_cache: on, step_tokens: 0,
-                pressure_weights: None,
+                pressure_weights: None, spill_dir: None, spill_bytes: 0,
             }).expect("engine");
             let mut rng = Rng::new(11);
             let (system, _) = workload::sample_mixture(&mut rng, 64);
@@ -149,7 +149,7 @@ fn main() {
                 engine.submit(Request {
                     id: id as u64, prompt, max_new_tokens: 8,
                     sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                    deadline_ms: None, submitted_ns: 0,
+                    deadline_ms: None, submitted_ns: 0, session: None,
                 });
             }
             let t0 = std::time::Instant::now();
@@ -184,7 +184,7 @@ fn main() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: eager.clone(), max_batch: n_short + 2, kv_budget: None,
             threads: 1, page_tokens: 0, prefix_cache: false, step_tokens,
-            pressure_weights: None,
+            pressure_weights: None, spill_dir: None, spill_bytes: 0,
         }).expect("engine");
         let mut rng = Rng::new(21);
         let (shorts, long) = workload::interference_prompts(&mut rng, n_short,
@@ -192,7 +192,7 @@ fn main() {
         for (id, prompt) in shorts.into_iter().enumerate() {
             engine.submit(Request { id: id as u64, prompt, max_new_tokens: 96,
                                     sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                    deadline_ms: None, submitted_ns: 0 });
+                                    deadline_ms: None, submitted_ns: 0, session: None });
         }
         // let the short cohort reach steady-state decode, then land the
         // long prompt mid-stream
@@ -203,7 +203,7 @@ fn main() {
         }
         engine.submit(Request { id: 99, prompt: long, max_new_tokens: 16,
                                 sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                deadline_ms: None, submitted_ns: 0 });
+                                deadline_ms: None, submitted_ns: 0, session: None });
         done.extend(engine.run_to_completion().expect("serve"));
         let secs = t0.elapsed().as_secs_f64();
         assert_eq!(done.len(), n_short + 1);

@@ -1,0 +1,165 @@
+//! Serving-path benchmarks for the multi-replica router, the disk spill
+//! tier, and session resume (DESIGN.md §Replication, §Spill-Tier,
+//! docs/adr/008-replica-router-and-spill-tier.md).
+//!
+//! Artifact-free sections (always run):
+//!   * `router/*` — [`route_replica`] dispatch throughput over a bursty
+//!     heavy-tailed arrival trace at 2/4/8 replicas.  Routing is a pure
+//!     hash + argmax over per-replica loads, so this prices the
+//!     per-request coordinator overhead of `--replicas N`.
+//!   * `workload/*` — the seeded workload generators themselves
+//!     (multi-turn chat, bursty Poisson arrivals, reasoning prompts).
+//!   * `spill/*` — a full spill→fault-back cycle over every sealed page
+//!     of a synthetic cache through [`PagePool`]'s file tier: pages/s is
+//!     the spill fault service rate.
+//!
+//! The `resume/*` section needs the PJRT runtime (gated on
+//! `make artifacts` like benches/e2e_decode.rs): it compares turn-2 TTFT
+//! of a parked-then-resumed session against a cold engine full-prefilling
+//! the concatenated conversation — the resume row skips the adopted
+//! prefix's prefill and re-quantization.
+
+use kvmix::baselines::Method;
+use kvmix::config::{ModelConfig, QuantPlan};
+use kvmix::coordinator::{route_replica, Engine, EngineCfg, Request};
+use kvmix::harness::workload;
+use kvmix::kvcache::{PagePool, SeqKvCache};
+use kvmix::model::Sampler;
+use kvmix::runtime::{default_artifacts_dir, Runtime};
+use kvmix::util::bench::{bench, black_box, JsonSink};
+use kvmix::util::Rng;
+
+fn main() {
+    let mut sink = JsonSink::from_env("serving");
+
+    // -- router dispatch throughput (artifact-free) --
+    let mut rng = Rng::new(71);
+    let trace = workload::bursty_poisson(&mut rng, 1024, 200.0, 8.0, 1.2, 8, 256);
+    let prompts: Vec<&[i32]> = trace.iter().map(|(_, p)| p.as_slice()).collect();
+    println!("# route_replica dispatch ({} bursty prompts, page 64, slack 8)",
+             prompts.len());
+    for n in [2usize, 4, 8] {
+        let s = bench(&format!("router/route/replicas{n}"), 80, || {
+            let mut loads = vec![0usize; n];
+            for p in &prompts {
+                let r = route_replica(n, &loads, p, 64, None, 8);
+                loads[black_box(r)] += 1;
+            }
+        });
+        println!("{}", s.line());
+        sink.record(&s, Some(prompts.len() as f64));
+    }
+
+    // -- workload generators (artifact-free; seeded-deterministic) --
+    println!();
+    println!("# workload generators");
+    let s = bench("workload/multi_turn_chat/8x32", 40, || {
+        let mut rng = Rng::new(72);
+        black_box(workload::multi_turn_chat(&mut rng, 8, 32, 16));
+    });
+    println!("{}", s.line());
+    sink.record(&s, Some(8.0));
+    let s = bench("workload/bursty_poisson/256", 40, || {
+        let mut rng = Rng::new(73);
+        black_box(workload::bursty_poisson(&mut rng, 256, 100.0, 10.0, 1.1, 8, 512));
+    });
+    println!("{}", s.line());
+    sink.record(&s, Some(256.0));
+    let s = bench("workload/reasoning_prompts/64", 40, || {
+        let mut rng = Rng::new(74);
+        black_box(workload::reasoning_prompts(&mut rng, 64, 32, 48, 96));
+    });
+    println!("{}", s.line());
+    sink.record(&s, Some(64.0));
+
+    // -- spill tier round trip (artifact-free): spill every sealed page
+    //    to disk, fault them all back; pages/s is the fault service rate --
+    println!();
+    let dir = std::env::temp_dir()
+        .join(format!("kvmix-bench-spill-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("spill dir");
+    let m = ModelConfig::test_small();
+    let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+    let kv = m.kv_dim();
+    let tokens = 4 * 64;
+    let mut cache = SeqKvCache::new(&m, &plan);
+    let mut srng = Rng::new(75);
+    let k = srng.normal_vec(tokens * kv);
+    let v = srng.normal_vec(tokens * kv);
+    for l in &mut cache.layers {
+        l.append(&k, &v, tokens);
+    }
+    let mut pool = PagePool::new(64, kv, m.group).expect("page pool");
+    pool.enable_spill(&dir, 0).expect("spill tier");
+    pool.sync(1, &cache);
+    let mut pages = 0usize;
+    println!("# spill round trip ({} tokens x {} layers, page 64)",
+             tokens, m.n_layers);
+    let s = bench("spill/roundtrip/pages", 80, || {
+        let mut n = 0usize;
+        while pool.spill_one(1, &mut cache, false).is_some() {
+            n += 1;
+        }
+        n += pool.fault_back_owner(1, &mut cache);
+        pages = black_box(n / 2);
+    });
+    println!("{}  ({pages} pages/cycle)", s.line());
+    sink.record(&s, Some(pages as f64));
+    pool.free_owner(1);
+    drop(pool);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // -- session resume vs full re-prefill TTFT (needs artifacts) --
+    let adir = default_artifacts_dir();
+    if !adir.join("manifest.json").exists() {
+        println!();
+        println!("SKIP resume section: artifacts not built");
+        sink.finish();
+        return;
+    }
+    let rt = Runtime::load_with(&adir, false).expect("runtime");
+    let plan = QuantPlan::from_importance_file(&adir.join("importance.json"))
+        .unwrap_or_else(|_| QuantPlan::uniform(rt.model.n_layers, 2));
+    let cfg = EngineCfg {
+        method: Method::Kvmix(plan.without_rpc()), max_batch: 2,
+        kv_budget: None, threads: 1, page_tokens: 64, prefix_cache: false,
+        step_tokens: 64, pressure_weights: None, spill_dir: None,
+        spill_bytes: 0,
+    };
+    let sreq = |id: u64, prompt: Vec<i32>, session: Option<u64>| Request {
+        id, prompt, max_new_tokens: 16, sampler: Sampler::Greedy,
+        stop_token: None, priority: 0, deadline_ms: None, submitted_ns: 0,
+        session,
+    };
+    let iters = 5usize;
+    let (mut ttft_resume, mut ttft_cold, mut reused) = (0.0f64, 0.0f64, 0usize);
+    let mut warm = Engine::new(&rt, cfg.clone()).expect("engine");
+    let mut cold = Engine::new(&rt, cfg).expect("engine");
+    for i in 0..iters as u64 {
+        let p1: Vec<i32> = (1..=130).map(|t| t + i as i32).collect();
+        warm.submit(sreq(2 * i, p1.clone(), Some(i)));
+        let done = warm.run_to_completion().expect("turn 1");
+        let mut p2 = p1;
+        p2.extend_from_slice(&done[0].tokens);
+        p2.extend(300..314);
+        let before = warm.metrics.resume_tokens_reused;
+        warm.submit(sreq(2 * i + 1, p2.clone(), Some(i)));
+        let done = warm.run_to_completion().expect("turn 2");
+        ttft_resume += done[0].ttft_ms();
+        reused += warm.metrics.resume_tokens_reused - before;
+        cold.submit(sreq(i, p2, None));
+        let done = cold.run_to_completion().expect("cold");
+        ttft_cold += done[0].ttft_ms();
+    }
+    assert_eq!(warm.metrics.sessions_resumed as usize, iters);
+    println!();
+    println!("# session resume vs full re-prefill (turn-2 TTFT, {iters} sessions, \
+              {} tokens adopted/turn)", reused / iters);
+    println!("{:<24} {:>12.3} ms", "resume", ttft_resume / iters as f64);
+    println!("{:<24} {:>12.3} ms", "reprefill", ttft_cold / iters as f64);
+    sink.record_value("resume/ttft_ms/resume",
+                      ttft_resume / iters as f64 * 1e6, None);
+    sink.record_value("resume/ttft_ms/reprefill",
+                      ttft_cold / iters as f64 * 1e6, None);
+    sink.finish();
+}

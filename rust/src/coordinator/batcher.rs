@@ -147,7 +147,7 @@ mod tests {
     fn req(id: u64, prompt: usize, new: usize) -> Request {
         Request { id, prompt: vec![1; prompt], max_new_tokens: new,
                   sampler: Sampler::Greedy, stop_token: None,
-                  priority: 0, deadline_ms: None, submitted_ns: 0 }
+                  priority: 0, deadline_ms: None, submitted_ns: 0, session: None }
     }
 
     #[test]

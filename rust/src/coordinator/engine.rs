@@ -24,9 +24,20 @@
 //!   pressure — admission failure or simulated OOM — the engine first
 //!   requantizes the oldest out-of-window *unshared* pages down the bit
 //!   ladder (bounded by the per-layer gradient-importance floors), then
-//!   evicts LRU prefix-index entries, and only when both rungs are
-//!   exhausted preempts the lowest-priority (youngest) sequence;
-//!   `oom_events` then only counts the unrecoverable case.
+//!   evicts LRU prefix-index entries, then (with `--spill-dir`) spills
+//!   sealed cold pages to the disk tier and drops parked sessions
+//!   (DESIGN.md §Spill-Tier), and only when every rung is exhausted
+//!   preempts the lowest-priority (youngest) sequence; `oom_events` then
+//!   only counts the unrecoverable case.
+//!
+//! With a `"session"` key on the request (paged mode), a Length/Stop
+//! finish *parks* the conversation's pages under that key instead of
+//! freeing them, and the session's next turn — whose prompt must extend
+//! the parked conversation exactly — *resumes* by adopting the parked
+//! turn's page-aligned prompt-prefix pages, prefix-sharing style, so the
+//! dense replay stays bit-identical to a cold prefill of the
+//! concatenated conversation while skipping its prefix re-quantization
+//! (DESIGN.md §Serving-Protocol).
 //!
 //! With `--prefix-cache` (paged mode only), admission additionally runs
 //! the shared-prefix path (DESIGN.md §Prefix-Sharing): hash the longest
@@ -54,6 +65,9 @@
 //! disconnects).  Both free the sequence's pool pages immediately and
 //! neither counts as a completion in the metrics.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
 use anyhow::Result;
 
 use crate::baselines::Method;
@@ -62,11 +76,13 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ActiveRequest, Completion, FinishReason, Lifecycle,
                                   Rejection, Request, RequestId};
 use crate::coordinator::scheduler::{ChunkGrant, Scheduler, StepPlan};
-use crate::kvcache::{pressure, MemoryBudget, PagePool, PressureCfg, SeqKvCache};
+use crate::kvcache::{pressure, KeyRepr, KvSide, MemoryBudget, PagePool, PressureCfg,
+                     SeqKvCache, ValueRepr, KV_SIDES};
 use crate::model::{DecodeScratch, Forward};
 use crate::runtime::Runtime;
 use crate::util::{Rng, WorkerPool};
 
+#[derive(Clone)]
 pub struct EngineCfg {
     pub method: Method,
     pub max_batch: usize,
@@ -97,6 +113,13 @@ pub struct EngineCfg {
     /// `plan.v_scores` via `--method kvmix`).  None = the plan-bit proxy
     /// weights from [`PressureCfg::from_plan`].
     pub pressure_weights: Option<(Vec<f64>, Vec<f64>)>,
+    /// disk spill directory (`--spill-dir`; requires `page_tokens > 0`):
+    /// gives the pressure ladder a spill rung between prefix eviction and
+    /// preemption (DESIGN.md §Spill-Tier).  None = no spill tier,
+    /// bit-for-bit the pre-spill engine.
+    pub spill_dir: Option<PathBuf>,
+    /// cap on live spilled bytes (`--spill-bytes`; 0 = unlimited)
+    pub spill_bytes: usize,
 }
 
 pub struct Engine<'a> {
@@ -128,6 +151,26 @@ pub struct Engine<'a> {
     /// per-layer window/representation config, so one never-filled
     /// instance serves every projection probe
     probe: Option<SeqKvCache>,
+    /// finished conversations parked under their session key, keeping
+    /// their pool pages for a next-turn resume (paged mode only;
+    /// DESIGN.md §Serving-Protocol)
+    parked: BTreeMap<u64, ParkedSession>,
+}
+
+/// A finished conversation whose KV pages stayed in the pool under its
+/// session key for a next-turn resume without re-quantizing the shared
+/// prefix (DESIGN.md §Serving-Protocol).  `gid` is the pool owner the
+/// pages still sit under; `prompt_len` bounds resume adoption to
+/// prefill-derived pages — decode-derived K/V differs from what a dense
+/// prefill of the concatenated conversation produces at layers past the
+/// first, so adopting those pages would break resume bit-identity.
+struct ParkedSession {
+    gid: RequestId,
+    prompt_len: usize,
+    /// the full conversation so far: prompt + generated tokens (the next
+    /// turn's prompt must extend this exactly to resume)
+    tokens: Vec<i32>,
+    cache: SeqKvCache,
 }
 
 impl<'a> Engine<'a> {
@@ -157,10 +200,16 @@ impl<'a> Engine<'a> {
             if cfg.prefix_cache {
                 pool.enable_prefix_cache();
             }
+            if let Some(dir) = &cfg.spill_dir {
+                pool.enable_spill(dir, cfg.spill_bytes)?;
+            }
             Some(pool)
         } else if cfg.prefix_cache {
             anyhow::bail!("--prefix-cache needs the paged KV pool: set --page-tokens N \
                            (prefix sharing is page-aligned — DESIGN.md §Prefix-Sharing)");
+        } else if cfg.spill_dir.is_some() {
+            anyhow::bail!("--spill-dir needs the paged KV pool: set --page-tokens N \
+                           (spill is page-granular — DESIGN.md §Spill-Tier)");
         } else {
             None
         };
@@ -188,6 +237,7 @@ impl<'a> Engine<'a> {
             pages,
             pressure,
             probe,
+            parked: BTreeMap::new(),
         })
     }
 
@@ -467,10 +517,16 @@ impl<'a> Engine<'a> {
                     let fits_exclusive = self.batcher.min_projected_in_lookahead()
                         .map(|n| n <= self.budget.free() + reclaimable)
                         .unwrap_or(false);
-                    if !fits_exclusive || self.evict_prefix_once().is_none() {
+                    if fits_exclusive && self.evict_prefix_once().is_some() {
+                        reclaim_cache = None;
+                    } else if self.spill_once().is_some() {
+                        // spilled bytes were never part of the
+                        // downshift/evict reclaimable bound — recompute
+                        // it next round (DESIGN.md §Spill-Tier)
+                        reclaim_cache = None;
+                    } else {
                         break;
                     }
-                    reclaim_cache = None;
                 }
             }
             // recharge (O(1): downshift_once reconciled the mutated
@@ -508,19 +564,25 @@ impl<'a> Engine<'a> {
         // plan bookkeeping only: legacy grants are always whole-prompt
         let _ = self.scheduler.grant_chunk(plan, req.prompt.len());
         let mut cache = self.cfg.method.make_cache(&self.rt.model);
+        // session resume first (park/resume — DESIGN.md §Serving-Protocol):
+        // a hit adopts the parked turn's pages exactly like a prefix hit
+        // and skips the prefix-index lookup (adoption needs a fresh cache)
+        let session_ran = req.session.is_some() && self.pages.is_some();
+        let mut adopted = self.try_resume(&req, &mut cache, false);
         // shared-prefix lookup (DESIGN.md §Prefix-Sharing): adopt a
         // registered whole-page prefix's quantized pages as shared
         // read-only frames, capped by what this prompt's window
         // policies would quantize anyway (the bit-identity bound)
-        let mut adopted = 0usize;
-        if let Some(pool) = &mut self.pages {
-            if pool.prefix_cache_enabled() {
-                let cap = cache.max_shareable_prefix(req.prompt.len(),
-                                                     self.cfg.page_tokens);
-                adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
-                if adopted > 0 {
-                    self.metrics.prefix_hits += 1;
-                    self.metrics.prefix_tokens_reused += adopted;
+        if adopted == 0 {
+            if let Some(pool) = &mut self.pages {
+                if pool.prefix_cache_enabled() {
+                    let cap = cache.max_shareable_prefix(req.prompt.len(),
+                                                         self.cfg.page_tokens);
+                    adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
+                    if adopted > 0 {
+                        self.metrics.prefix_hits += 1;
+                        self.metrics.prefix_tokens_reused += adopted;
+                    }
                 }
             }
         }
@@ -561,7 +623,7 @@ impl<'a> Engine<'a> {
                 prefix_ran = true;
             }
         }
-        Ok(prefix_ran)
+        Ok(prefix_ran || session_ran)
     }
 
     /// Chunked admission: adopt any shared prefix (clamped strictly below
@@ -572,23 +634,27 @@ impl<'a> Engine<'a> {
     /// machinery ran.
     fn admit_chunked(&mut self, req: Request) -> Result<bool> {
         let mut cache = self.cfg.method.make_cache(&self.rt.model);
-        let mut adopted = 0usize;
-        let mut prefix_ran = false;
-        if let Some(pool) = &mut self.pages {
-            if pool.prefix_cache_enabled() {
-                // never adopt the whole prompt: leave >= 1 token for the
-                // first chunk's forward pass (reused_tokens projects with
-                // this same clamp)
-                let cap = cache.max_shareable_prefix(req.prompt.len(),
-                                                     self.cfg.page_tokens)
-                    .min(req.prompt.len().saturating_sub(1) / self.cfg.page_tokens
-                         * self.cfg.page_tokens);
-                adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
-                if adopted > 0 {
-                    self.metrics.prefix_hits += 1;
-                    self.metrics.prefix_tokens_reused += adopted;
+        // session resume first, exactly as in legacy admission (the
+        // chunked flag applies the leave-one-token clamp inside)
+        let mut prefix_ran = req.session.is_some() && self.pages.is_some();
+        let mut adopted = self.try_resume(&req, &mut cache, true);
+        if adopted == 0 {
+            if let Some(pool) = &mut self.pages {
+                if pool.prefix_cache_enabled() {
+                    // never adopt the whole prompt: leave >= 1 token for the
+                    // first chunk's forward pass (reused_tokens projects with
+                    // this same clamp)
+                    let cap = cache.max_shareable_prefix(req.prompt.len(),
+                                                         self.cfg.page_tokens)
+                        .min(req.prompt.len().saturating_sub(1) / self.cfg.page_tokens
+                             * self.cfg.page_tokens);
+                    adopted = pool.adopt_prefix(req.id, &req.prompt, cap, &mut cache);
+                    if adopted > 0 {
+                        self.metrics.prefix_hits += 1;
+                        self.metrics.prefix_tokens_reused += adopted;
+                    }
+                    prefix_ran = true;
                 }
-                prefix_ran = true;
             }
         }
         self.active.push(ActiveRequest {
@@ -598,6 +664,91 @@ impl<'a> Engine<'a> {
         });
         let _ = self.charge_lane(self.active.len() - 1)?;
         Ok(prefix_ran)
+    }
+
+    /// Session resume (park/resume — DESIGN.md §Serving-Protocol): if
+    /// `req` names a parked session whose conversation its prompt
+    /// strictly extends, adopt the parked turn's page-aligned
+    /// prompt-prefix pages into the fresh `cache` — the same shape as a
+    /// prefix-cache hit, so the dense replay over the full prompt stays
+    /// bit-identical to a cold prefill (pinned by
+    /// `rust/tests/coordinator.rs`) — and return the adopted token count.
+    /// The parked entry is consumed either way: a mismatched prompt (the
+    /// client edited history) frees the parked pages and admits cold.
+    ///
+    /// The adoption boundary excludes decode-derived pages (capped at the
+    /// parked turn's page-aligned *prompt* length — generated-token K/V
+    /// differs from a dense prefill's at layers past the first) and any
+    /// page the pressure controller downshifted off the plan width while
+    /// the previous turn decoded.
+    fn try_resume(&mut self, req: &Request, cache: &mut SeqKvCache,
+                  chunked: bool) -> usize {
+        let Some(key) = req.session else { return 0 };
+        if self.pages.is_none() {
+            return 0; // monolithic mode: sessions are ignored
+        }
+        let Some(mut p) = self.parked.remove(&key) else { return 0 };
+        let pool = self.pages.as_mut().expect("checked above");
+        if req.prompt.len() <= p.tokens.len()
+            || req.prompt[..p.tokens.len()] != p.tokens[..] {
+            pool.free_owner(p.gid);
+            return 0;
+        }
+        // spilled pages must be resident before their blocks are adopted
+        self.metrics.spill_faults += pool.fault_back_owner(p.gid, &mut p.cache);
+        let pt = self.cfg.page_tokens;
+        let group = self.rt.model.group;
+        let mut cap = cache.max_shareable_prefix(req.prompt.len(), pt)
+            .min(p.prompt_len / pt * pt);
+        if chunked {
+            // the final prompt token must forward through a chunk
+            cap = cap.min(req.prompt.len().saturating_sub(1) / pt * pt);
+        }
+        let mut adopted = 0usize;
+        'grow: while adopted + pt <= cap {
+            let page = adopted / pt;
+            for (li, fresh) in cache.layers.iter().enumerate() {
+                let l = &p.cache.layers[li];
+                for side in KV_SIDES {
+                    if page >= l.sealed_quant_pages(side, pt) {
+                        break 'grow;
+                    }
+                    let plan_bits = match side {
+                        KvSide::Key => match fresh.cfg.key {
+                            KeyRepr::PerChannel { bits }
+                            | KeyRepr::PerToken { bits } => bits,
+                            _ => break 'grow,
+                        },
+                        KvSide::Value => match fresh.cfg.value {
+                            ValueRepr::PerToken { bits } => bits,
+                            ValueRepr::Fp => break 'grow,
+                        },
+                    };
+                    if l.quant_page_bits(side, page, pt) != plan_bits {
+                        break 'grow; // downshifted while the last turn decoded
+                    }
+                }
+            }
+            adopted += pt;
+        }
+        if adopted > 0 && pool.adopt_owner_pages(p.gid, req.id, adopted / pt) {
+            for (li, fresh) in cache.layers.iter_mut().enumerate() {
+                let l = &p.cache.layers[li];
+                for side in KV_SIDES {
+                    fresh.adopt_shared_blocks(
+                        side, &l.quant_blocks(side)[..adopted / group]);
+                }
+            }
+            self.metrics.sessions_resumed += 1;
+            self.metrics.resume_tokens_reused += adopted;
+        } else {
+            adopted = 0;
+        }
+        // the un-adopted remainder (decode-derived pages, downshifted
+        // pages, the sub-page tail) frees here; adopted frames survive
+        // at refs 1 under the new owner
+        pool.free_owner(p.gid);
+        adopted
     }
 
     /// Run one granted prefill chunk on `lane` (chunked mode only): the
@@ -611,6 +762,15 @@ impl<'a> Engine<'a> {
         let Lifecycle::Prefilling { done } = self.active[lane].state else {
             unreachable!("chunk granted to a non-prefilling lane");
         };
+        // the chunk attends over this lane's whole history — any spilled
+        // page must be resident first (DESIGN.md §Spill-Tier)
+        if let Some(pool) = &mut self.pages {
+            let a = &mut self.active[lane];
+            if a.cache.any_spilled() {
+                self.metrics.spill_faults +=
+                    pool.fault_back_owner(a.req.id, &mut a.cache);
+            }
+        }
         let a = &mut self.active[lane];
         debug_assert!(done + grant.tokens <= a.req.prompt.len());
         let chunk = &a.req.prompt[done..done + grant.tokens];
@@ -665,6 +825,18 @@ impl<'a> Engine<'a> {
             .map(|(i, _)| i)
             .collect();
         if !decoding.is_empty() {
+            // fault spilled pages back before the batched attend:
+            // `LayerKvCache::attend` walks every history block, so a
+            // spill stub must never reach it (DESIGN.md §Spill-Tier)
+            if let Some(pool) = &mut self.pages {
+                for &i in &decoding {
+                    let a = &mut self.active[i];
+                    if a.cache.any_spilled() {
+                        self.metrics.spill_faults +=
+                            pool.fault_back_owner(a.req.id, &mut a.cache);
+                    }
+                }
+            }
             let inputs: Vec<i32> = decoding.iter()
                 .map(|&i| self.active[i].next_input)
                 .collect();
@@ -705,7 +877,9 @@ impl<'a> Engine<'a> {
             // first downshifts the oldest out-of-window unshared pages
             // down the bit ladder, then evicts LRU prefix-index entries
             // (freeing index-only frames and un-sharing pages so the
-            // ladder can resume), and only past both rungs preempts the
+            // ladder can resume), then spills sealed cold pages to the
+            // disk tier and drops parked sessions (DESIGN.md
+            // §Spill-Tier), and only past every rung preempts the
             // lowest-priority (youngest) sequence — which may be a
             // mid-prompt `Prefilling` lane; preempt-restart discards its
             // chunk progress.  One full page-table reconcile after the
@@ -720,6 +894,14 @@ impl<'a> Engine<'a> {
                     continue;
                 }
                 if self.evict_prefix_once().is_some() {
+                    over = self.charge_current()?.is_err();
+                    continue;
+                }
+                if self.spill_once().is_some() {
+                    over = self.charge_current()?.is_err();
+                    continue;
+                }
+                if self.drop_parked_once().is_some() {
                     over = self.charge_current()?.is_err();
                     continue;
                 }
@@ -752,9 +934,6 @@ impl<'a> Engine<'a> {
         while i < self.active.len() {
             if self.active[i].is_done() {
                 let mut ar = self.active.remove(i);
-                if let Some(pool) = &mut self.pages {
-                    pool.free_owner(ar.req.id);
-                }
                 // is_done() fires on length or stop-token; length wins
                 // the (length-cap AND stop-token) tie by convention
                 let finish = if ar.generated.len() >= ar.req.max_new_tokens {
@@ -762,7 +941,34 @@ impl<'a> Engine<'a> {
                 } else {
                     FinishReason::Stop
                 };
-                done.push(self.retire(ar_into_completion(&mut ar, now, finish)));
+                let c = ar_into_completion(&mut ar, now, finish);
+                match (ar.req.session, &mut self.pages) {
+                    // park instead of free (DESIGN.md §Serving-Protocol):
+                    // the conversation's pages stay in the pool under
+                    // this owner until the session's next turn resumes
+                    // them (cancel/deadline retirements free as before —
+                    // a truncated generation is not a resumable turn)
+                    (Some(key), Some(pool)) => {
+                        if let Some(old) = self.parked.remove(&key) {
+                            // one parked turn per session: the newer
+                            // conversation supersedes the older
+                            pool.free_owner(old.gid);
+                        }
+                        let prompt_len = ar.req.prompt.len();
+                        let mut tokens = std::mem::take(&mut ar.req.prompt);
+                        tokens.extend_from_slice(&c.tokens);
+                        self.parked.insert(key, ParkedSession {
+                            gid: ar.req.id, prompt_len, tokens, cache: ar.cache,
+                        });
+                        self.metrics.sessions_parked += 1;
+                    }
+                    _ => {
+                        if let Some(pool) = &mut self.pages {
+                            pool.free_owner(ar.req.id);
+                        }
+                    }
+                }
+                done.push(self.retire(c));
             } else {
                 i += 1;
             }
@@ -800,6 +1006,11 @@ impl<'a> Engine<'a> {
     /// benches and tests inspect allocator stats through this.
     pub fn page_pool(&self) -> Option<&PagePool> {
         self.pages.as_ref()
+    }
+
+    /// Conversations currently parked under a session key.
+    pub fn parked_sessions(&self) -> usize {
+        self.parked.len()
     }
 
     /// Charge the budget with the current KV footprint: page-granular via
@@ -890,6 +1101,50 @@ impl<'a> Engine<'a> {
             }
         }
         None
+    }
+
+    /// One spill-rung relief step (DESIGN.md §Spill-Tier): write a single
+    /// sealed, unshared, unspilled page to the disk tier, freeing its
+    /// frame bytes from the budget.  Parked sessions spill first — nobody
+    /// is attending over them, so they are the coldest pages in the
+    /// system — newest pages first, keeping the oldest (prompt-prefix,
+    /// resume-adoptable) pages resident longest; then active lanes,
+    /// oldest-admitted first, oldest pages first.  Returns the frame
+    /// bytes freed, or `None` when nothing is eligible (tier off, cap
+    /// reached, or every sealed page shared or already spilled).
+    fn spill_once(&mut self) -> Option<usize> {
+        let pool = self.pages.as_mut()?;
+        if !pool.spill_enabled() {
+            return None;
+        }
+        for p in self.parked.values_mut() {
+            if let Some(freed) = pool.spill_one(p.gid, &mut p.cache, true) {
+                self.metrics.pages_spilled += 1;
+                return Some(freed);
+            }
+        }
+        for a in &mut self.active {
+            if let Some(freed) = pool.spill_one(a.req.id, &mut a.cache, false) {
+                self.metrics.pages_spilled += 1;
+                return Some(freed);
+            }
+        }
+        None
+    }
+
+    /// Evict one parked session outright (lowest key first —
+    /// deterministic) — the last rung before preempting *live* work: a
+    /// parked conversation is a convenience cache, a decoding lane is a
+    /// served client.  Returns the pool bytes freed (0 when every page
+    /// was already spilled), or `None` when nothing is parked.
+    fn drop_parked_once(&mut self) -> Option<usize> {
+        self.pages.as_ref()?;
+        let key = *self.parked.keys().next()?;
+        let p = self.parked.remove(&key).expect("key just read");
+        let pool = self.pages.as_mut().expect("checked above");
+        let before = pool.modeled_bytes();
+        pool.free_owner(p.gid);
+        Some(before - pool.modeled_bytes())
     }
 
     /// One prefix-index eviction: drop the LRU shared-prefix entry,

@@ -54,6 +54,20 @@ pub struct Metrics {
     /// requests retired by the engine's deadline sweep (`deadline_ms`
     /// exceeded while waiting or mid-decode); not counted in `completions`
     pub deadline_hits: usize,
+    /// sealed cold pages written to the disk spill tier by the pressure
+    /// ladder's spill rung (`--spill-dir` — DESIGN.md §Spill-Tier)
+    pub pages_spilled: usize,
+    /// spilled pages faulted back into memory before an attend touched
+    /// them (the spill tier's read path)
+    pub spill_faults: usize,
+    /// finished conversations whose KV pages parked under a session key
+    /// instead of freeing (`"session"` — DESIGN.md §Serving-Protocol)
+    pub sessions_parked: usize,
+    /// admissions that resumed a parked session's pages
+    pub sessions_resumed: usize,
+    /// prompt tokens covered by resumed session pages across all resumes
+    /// (their quantized pages were adopted, not re-encoded)
+    pub resume_tokens_reused: usize,
 }
 
 impl Default for Metrics {
@@ -65,7 +79,9 @@ impl Default for Metrics {
                   attn_us: Histogram::default(), pool_util: Histogram::default(),
                   peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0,
                   prefix_hits: 0, prefix_tokens_reused: 0, cow_splits: 0,
-                  cancellations: 0, deadline_hits: 0 }
+                  cancellations: 0, deadline_hits: 0, pages_spilled: 0,
+                  spill_faults: 0, sessions_parked: 0, sessions_resumed: 0,
+                  resume_tokens_reused: 0 }
     }
 }
 
@@ -94,6 +110,40 @@ impl Metrics {
 
     pub fn now_ns(&self) -> u64 {
         self.started.elapsed().as_nanos() as u64
+    }
+
+    /// Fold another registry into this one — the router's cross-replica
+    /// stats aggregation (DESIGN.md §Replication).  Counters sum,
+    /// histograms concatenate their samples (quantiles over the union),
+    /// and `peak_kv_bytes` takes the max: replica peaks are concurrent
+    /// highwater marks of *separate* pools, so the fleet-wide figure is
+    /// conservative (true simultaneous usage may be lower).  `started` /
+    /// `elapsed_s` keep the receiver's clock.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_tokens += other.decode_tokens;
+        self.completions += other.completions;
+        self.oom_events += other.oom_events;
+        self.ttft_ms.merge(&other.ttft_ms);
+        self.tbt_ms.merge(&other.tbt_ms);
+        self.total_ms.merge(&other.total_ms);
+        self.step_us.merge(&other.step_us);
+        self.budget_util.merge(&other.budget_util);
+        self.attn_us.merge(&other.attn_us);
+        self.pool_util.merge(&other.pool_util);
+        self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
+        self.pages_requantized += other.pages_requantized;
+        self.preemptions += other.preemptions;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_tokens_reused += other.prefix_tokens_reused;
+        self.cow_splits += other.cow_splits;
+        self.cancellations += other.cancellations;
+        self.deadline_hits += other.deadline_hits;
+        self.pages_spilled += other.pages_spilled;
+        self.spill_faults += other.spill_faults;
+        self.sessions_parked += other.sessions_parked;
+        self.sessions_resumed += other.sessions_resumed;
+        self.resume_tokens_reused += other.resume_tokens_reused;
     }
 
     pub fn report(&mut self) -> String {
@@ -131,16 +181,29 @@ impl Metrics {
             format!(" | cancelled {} | deadline {}",
                     self.cancellations, self.deadline_hits)
         };
+        let spill = if self.pages_spilled == 0 && self.spill_faults == 0 {
+            String::new()
+        } else {
+            format!(" | spilled {} pages ({} faults)",
+                    self.pages_spilled, self.spill_faults)
+        };
+        let session = if self.sessions_parked == 0 && self.sessions_resumed == 0 {
+            String::new()
+        } else {
+            format!(" | sessions parked {} resumed {} ({} tok reused)",
+                    self.sessions_parked, self.sessions_resumed,
+                    self.resume_tokens_reused)
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
              ttft p50 {:.1} ms p95 {:.1} ms{} | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             attn p50 {:.0} µs{}{} | peak kv {:.2} MiB | oom {}{}{}{}",
+             attn p50 {:.0} µs{}{} | peak kv {:.2} MiB | oom {}{}{}{}{}{}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
             tbt, self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
             self.attn_us.quantile(0.5), util, budget,
             self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure,
-            prefix, early)
+            prefix, early, spill, session)
     }
 }
 
@@ -168,6 +231,17 @@ impl Histogram {
     /// Sum of all recorded samples.
     pub fn sum(&self) -> f64 {
         self.samples.iter().sum()
+    }
+
+    /// Concatenate another histogram's samples (cross-replica merge):
+    /// quantiles afterwards are over the union, not an average of
+    /// per-replica quantiles.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.samples.is_empty() {
+            return;
+        }
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
     }
 
     pub fn quantile(&mut self, q: f64) -> f64 {
@@ -256,6 +330,46 @@ mod tests {
         let r = m.report();
         assert!(r.contains("cancelled 3"), "{r}");
         assert!(r.contains("deadline 1"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_spill_and_session_lines_only_when_active() {
+        let mut m = Metrics::default();
+        let r = m.report();
+        assert!(!r.contains("spilled"), "{r}");
+        assert!(!r.contains("sessions"), "{r}");
+        m.pages_spilled = 4;
+        m.spill_faults = 3;
+        m.sessions_parked = 2;
+        m.sessions_resumed = 1;
+        m.resume_tokens_reused = 128;
+        let r = m.report();
+        assert!(r.contains("spilled 4 pages (3 faults)"), "{r}");
+        assert!(r.contains("sessions parked 2 resumed 1 (128 tok reused)"), "{r}");
+    }
+
+    #[test]
+    fn merge_sums_counters_unions_histograms_maxes_peak() {
+        let mut a = Metrics::default();
+        a.decode_tokens = 10;
+        a.completions = 2;
+        a.peak_kv_bytes = 100;
+        a.pages_spilled = 1;
+        a.ttft_ms.record(1.0);
+        a.ttft_ms.record(2.0);
+        let mut b = Metrics::default();
+        b.decode_tokens = 5;
+        b.completions = 1;
+        b.peak_kv_bytes = 300;
+        b.sessions_resumed = 2;
+        b.ttft_ms.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.decode_tokens, 15);
+        assert_eq!(a.completions, 3);
+        assert_eq!(a.peak_kv_bytes, 300, "peaks max, not sum");
+        assert_eq!((a.pages_spilled, a.sessions_resumed), (1, 2));
+        assert_eq!(a.ttft_ms.len(), 3);
+        assert_eq!(a.ttft_ms.quantile(1.0), 10.0, "quantiles over the union");
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod engine;
 pub mod metrics;
 pub mod proto;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
@@ -27,5 +28,6 @@ pub use engine::{estimate_bytes_per_token, Engine, EngineCfg};
 pub use metrics::{Histogram, Metrics};
 pub use request::{ActiveRequest, Completion, FinishReason, Lifecycle, Rejection,
                   Request, RequestId};
+pub use router::{route_replica, Router};
 pub use scheduler::{ChunkGrant, Scheduler, StepPlan};
 pub use server::ServeCfg;

@@ -91,6 +91,11 @@ pub struct GenReq {
     pub top_k: Option<usize>,
     /// stop token id
     pub stop: Option<i32>,
+    /// session key for park/resume across conversation turns
+    /// (DESIGN.md §Serving-Protocol): a finished request's KV pages park
+    /// under this key; the next request naming it resumes without
+    /// re-quantizing the shared prefix
+    pub session: Option<u64>,
 }
 
 impl GenReq {
@@ -122,6 +127,9 @@ impl GenReq {
         if let Some(t) = self.stop {
             let _ = write!(s, ",\"stop\":{t}");
         }
+        if let Some(k) = self.session {
+            let _ = write!(s, ",\"session\":{k}");
+        }
         s.push('}');
         s
     }
@@ -149,6 +157,7 @@ pub fn scan_client_frame(line: &[u8]) -> Result<ClientFrame, ProtoError> {
     let mut temperature: Option<f64> = None;
     let mut top_k: Option<u64> = None;
     let mut stop: Option<i32> = None;
+    let mut session: Option<u64> = None;
     let mut cancel: Option<u64> = None;
     let mut stats_seen = false;
 
@@ -173,6 +182,7 @@ pub fn scan_client_frame(line: &[u8]) -> Result<ClientFrame, ProtoError> {
                 b"temperature" => put(&mut temperature, s.f64_value()?, ks)?,
                 b"top_k" => put(&mut top_k, s.u64_value()?, ks)?,
                 b"stop" => put(&mut stop, s.i32_value()?, ks)?,
+                b"session" => put(&mut session, s.u64_value()?, ks)?,
                 b"cancel" => put(&mut cancel, s.u64_value()?, ks)?,
                 b"stats" => {
                     if stats_seen {
@@ -203,7 +213,7 @@ pub fn scan_client_frame(line: &[u8]) -> Result<ClientFrame, ProtoError> {
     // ---- classification: the three frame kinds must not blend ----
     let gen_keys = id.is_some() || prompt.is_some() || max_new.is_some()
         || priority.is_some() || deadline_ms.is_some() || temperature.is_some()
-        || top_k.is_some() || stop.is_some();
+        || top_k.is_some() || stop.is_some() || session.is_some();
     if let Some(cid) = cancel {
         if gen_keys || stats_seen {
             return Err(ProtoError { at: 0, msg: "cancel frame mixes other keys" });
@@ -247,6 +257,7 @@ pub fn scan_client_frame(line: &[u8]) -> Result<ClientFrame, ProtoError> {
         temperature,
         top_k: top_k.map(|k| k as usize),
         stop,
+        session,
     }))
 }
 
@@ -326,14 +337,18 @@ pub fn stats_request_frame() -> String {
 }
 
 /// `{"stats":{…}}` snapshot of the metrics registry plus the live serve
-/// state the registry cannot see (queue depth, running lanes, load-sheds).
+/// state the registry cannot see (queue depth, running lanes, load-sheds,
+/// replica count).  With `--replicas N` the registry passed here is the
+/// router's [`Metrics::merge`] aggregate over every replica
+/// (DESIGN.md §Replication).
 pub fn stats_frame(m: &mut Metrics, queue_depth: usize, active: usize,
-                   shed: usize) -> String {
+                   shed: usize, replicas: usize) -> String {
     let u = |x: usize| Json::Num(x as f64);
     let inner = Json::obj(vec![
         ("queue_depth", u(queue_depth)),
         ("active", u(active)),
         ("shed", u(shed)),
+        ("replicas", u(replicas)),
         ("completions", u(m.completions)),
         ("cancellations", u(m.cancellations)),
         ("deadline_hits", u(m.deadline_hits)),
@@ -343,6 +358,11 @@ pub fn stats_frame(m: &mut Metrics, queue_depth: usize, active: usize,
         ("prefix_hits", u(m.prefix_hits)),
         ("prefix_tokens_reused", u(m.prefix_tokens_reused)),
         ("cow_splits", u(m.cow_splits)),
+        ("pages_spilled", u(m.pages_spilled)),
+        ("spill_faults", u(m.spill_faults)),
+        ("sessions_parked", u(m.sessions_parked)),
+        ("sessions_resumed", u(m.sessions_resumed)),
+        ("resume_tokens_reused", u(m.resume_tokens_reused)),
         ("prefill_tokens", u(m.prefill_tokens)),
         ("decode_tokens", u(m.decode_tokens)),
         ("peak_kv_bytes", u(m.peak_kv_bytes)),
@@ -617,8 +637,8 @@ mod tests {
         assert_eq!(g.prompt, vec![1, 2, 3]);
         assert_eq!(g.max_new, 16);
         assert_eq!(g.priority, 0);
-        assert_eq!((g.deadline_ms, g.temperature, g.top_k, g.stop),
-                   (None, None, None, None));
+        assert_eq!((g.deadline_ms, g.temperature, g.top_k, g.stop, g.session),
+                   (None, None, None, None, None));
     }
 
     #[test]
@@ -626,13 +646,29 @@ mod tests {
         let g = gen(concat!(
             r#" { "temperature" : 0.8 , "prompt":[ -5 , 0 ,7 ], "stop": 2,"#,
             r#" "top_k":4, "deadline_ms": 250, "max_new":8, "priority":-3,"#,
-            r#" "id": 9 } "#));
+            r#" "session": 41, "id": 9 } "#));
         assert_eq!(g.id, 9);
         assert_eq!(g.prompt, vec![-5, 0, 7]);
         assert_eq!((g.max_new, g.priority), (8, -3));
         assert_eq!(g.deadline_ms, Some(250));
         assert_eq!(g.temperature, Some(0.8));
         assert_eq!((g.top_k, g.stop), (Some(4), Some(2)));
+        assert_eq!(g.session, Some(41));
+    }
+
+    #[test]
+    fn session_round_trips_and_classifies_as_gen() {
+        let g = GenReq {
+            id: 5, prompt: vec![1, 2], max_new: 4, priority: 0,
+            deadline_ms: None, temperature: None, top_k: None, stop: None,
+            session: Some(1234),
+        };
+        let line = g.encode();
+        assert!(line.contains("\"session\":1234"), "{line}");
+        assert_eq!(gen(&line), g);
+        // a session key marks a gen frame — it must not blend with others
+        assert!(scan_client_frame(br#"{"cancel":1,"session":2}"#).is_err());
+        assert!(scan_client_frame(br#"{"stats":true,"session":2}"#).is_err());
     }
 
     #[test]
@@ -707,7 +743,7 @@ mod tests {
             error_frame("parse error at byte 3: expected '{'\nnew\"line\""),
             cancel_frame(9),
             stats_request_frame(),
-            stats_frame(&mut Metrics::default(), 3, 1, 2),
+            stats_frame(&mut Metrics::default(), 3, 1, 2, 1),
         ] {
             let v = json::parse(&frame).expect(&frame);
             assert!(matches!(v, Json::Obj(_)), "{frame}");

@@ -27,6 +27,13 @@ pub struct Request {
     pub deadline_ms: Option<u64>,
     /// submission timestamp (engine clock, ns)
     pub submitted_ns: u64,
+    /// session key for park/resume (`"session"` on the wire —
+    /// DESIGN.md §Serving-Protocol): on a Length/Stop finish the
+    /// request's KV pages park under this key instead of freeing, and a
+    /// later request naming the same key whose prompt extends the parked
+    /// conversation resumes from those pages without re-quantizing them.
+    /// None = free on finish (the pre-session behaviour, bit-for-bit).
+    pub session: Option<u64>,
 }
 
 /// Where a request sits in the scheduler's state machine

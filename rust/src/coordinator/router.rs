@@ -1,0 +1,317 @@
+//! Front-of-house multi-replica router (DESIGN.md §Replication,
+//! docs/adr/008-replica-router-and-spill-tier.md).
+//!
+//! Owns N independent [`Engine`]s — each with its own page pool,
+//! scheduler, pressure controller, and metrics — and dispatches admitted
+//! requests by **shared-prefix affinity**: prompts sharing their first
+//! whole KV page hash to the same replica (rendezvous hashing over an
+//! FNV-1a digest of the page-aligned prompt head), so the per-replica
+//! prefix index (DESIGN.md §Prefix-Sharing) keeps its hit rate instead
+//! of seeing each prefix family diluted 1/N across replicas.  Affinity
+//! is a throughput optimisation, never a correctness requirement: when
+//! the affinity pick is loaded more than [`LOAD_SLACK`] requests past
+//! the least-loaded replica, the request falls back to the least-loaded
+//! one and simply re-quantizes its prefix there.
+//!
+//! Two dispatch rules outrank the hash:
+//!
+//! 1. **Session pinning** — a request naming a `"session"` key routes to
+//!    the replica that parked that session's pages (park/resume lives in
+//!    [`Engine`]); a resume anywhere else would always miss.
+//! 2. **Sub-page prompts** — prompts shorter than one KV page can never
+//!    share prefix pages (sealing is page-granular), so they go straight
+//!    to the least-loaded replica.
+//!
+//! The router aggregates the per-replica [`Metrics`] for stats frames
+//! with [`Metrics::merge`] — counters sum, histograms pool their
+//! samples, `peak_kv_bytes` takes the max.  With one replica every
+//! method degenerates to the single-engine call it wraps, keeping the
+//! `--replicas 1` serving path bit-for-bit the pre-router one
+//! (`rust/tests/coordinator.rs` pins the two-replica affinity split).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ActiveRequest, Completion, Rejection, Request, RequestId};
+
+/// Load-fallback slack: the affinity replica keeps a request until it is
+/// loaded this many requests (active + waiting) past the least-loaded
+/// replica.  Small enough that a hot prefix family cannot starve the
+/// fleet, large enough that transient imbalance does not shatter
+/// affinity (docs/adr/008-replica-router-and-spill-tier.md).
+pub const LOAD_SLACK: usize = 8;
+
+/// Distinct session keys remembered for pinning before the home map is
+/// wholesale cleared (same bounded-memory idiom as the serve loop's
+/// orphan-cancel set): losing a pin only costs a resume miss — the next
+/// turn re-prefills on whatever replica the hash picks — never
+/// correctness.
+const SESSION_HOME_CAP: usize = 1 << 16;
+
+/// FNV-1a over the little-endian bytes of a token slice.
+fn fnv1a(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// splitmix64 finalizer — decorrelates the per-replica rendezvous scores
+/// derived from one prompt digest.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Pick a replica for a prompt — pure, so tests exercise the policy
+/// without artifacts (DESIGN.md §Replication).
+///
+/// Precedence: a valid `session_home` pin wins outright; sub-page
+/// prompts (nothing page-shareable) go least-loaded; otherwise the
+/// first whole page of the prompt is FNV-1a-hashed and rendezvous
+/// hashing (highest `mix(digest ^ replica)` score) names the affinity
+/// primary, demoted to the least-loaded replica only when its load
+/// exceeds the minimum by more than `slack`.  Rendezvous hashing keeps
+/// the mapping stable under fleet resize: changing N remaps only the
+/// families whose argmax moved, not a modulo-sized slice of all of them.
+pub fn route_replica(n: usize, loads: &[usize], prompt: &[i32], page_tokens: usize,
+                     session_home: Option<usize>, slack: usize) -> usize {
+    debug_assert_eq!(loads.len(), n);
+    if n <= 1 {
+        return 0;
+    }
+    if let Some(r) = session_home {
+        if r < n {
+            return r;
+        }
+    }
+    let least = (0..n).min_by_key(|&r| loads[r]).unwrap_or(0);
+    if page_tokens == 0 || prompt.len() < page_tokens {
+        return least;
+    }
+    let h = fnv1a(&prompt[..page_tokens]);
+    let primary = (0..n).max_by_key(|&r| mix(h ^ r as u64)).unwrap_or(0);
+    if loads[primary] > loads[least] + slack {
+        least
+    } else {
+        primary
+    }
+}
+
+/// N engines behind one dispatch policy.  The serve loop talks to this
+/// instead of a bare [`Engine`]; every aggregate method is a plain fold
+/// over the replicas so `--replicas 1` stays the single-engine path.
+pub struct Router<'a> {
+    engines: Vec<Engine<'a>>,
+    page_tokens: usize,
+    /// session key → replica holding its parked pages
+    session_home: HashMap<u64, usize>,
+}
+
+impl<'a> Router<'a> {
+    pub fn new(engines: Vec<Engine<'a>>, page_tokens: usize) -> Self {
+        assert!(!engines.is_empty(), "router needs at least one replica");
+        Router { engines, page_tokens, session_home: HashMap::new() }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn engines(&self) -> &[Engine<'a>] {
+        &self.engines
+    }
+
+    pub fn engines_mut(&mut self) -> &mut [Engine<'a>] {
+        &mut self.engines
+    }
+
+    /// Per-replica load for routing: running lanes + waiting queue.
+    fn loads(&self) -> Vec<usize> {
+        self.engines.iter()
+            .map(|e| e.active.len() + e.batcher.waiting())
+            .collect()
+    }
+
+    /// Route and submit, returning the chosen replica.  A sessioned
+    /// request records (or refreshes) its home so the next turn lands on
+    /// the replica holding the parked pages.
+    pub fn dispatch(&mut self, req: Request) -> usize {
+        let loads = self.loads();
+        let home = req.session.and_then(|k| self.session_home.get(&k).copied());
+        let r = route_replica(self.engines.len(), &loads, &req.prompt,
+                              self.page_tokens, home, LOAD_SLACK);
+        if let Some(k) = req.session {
+            if self.session_home.len() >= SESSION_HOME_CAP
+                && !self.session_home.contains_key(&k)
+            {
+                self.session_home.clear();
+            }
+            self.session_home.insert(k, r);
+        }
+        self.engines[r].submit(req);
+        r
+    }
+
+    /// Total waiting across all replica queues (admission gate).
+    pub fn waiting(&self) -> usize {
+        self.engines.iter().map(|e| e.batcher.waiting()).sum()
+    }
+
+    /// Total running lanes across replicas (stats frame).
+    pub fn active(&self) -> usize {
+        self.engines.iter().map(|e| e.active.len()).sum()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.engines.iter().all(Engine::idle)
+    }
+
+    pub fn take_rejections(&mut self) -> Vec<Rejection> {
+        self.engines.iter_mut()
+            .flat_map(Engine::take_rejections)
+            .collect()
+    }
+
+    /// Cancel wherever the request lives — serve-loop gids are global,
+    /// so at most one replica knows the id.
+    pub fn cancel(&mut self, id: RequestId) -> Result<Option<Completion>> {
+        for e in &mut self.engines {
+            if let Some(c) = e.cancel(id)? {
+                return Ok(Some(c));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Step every non-idle replica once, pooling completions.  Replicas
+    /// are independent — an error from any aborts the serve loop, same
+    /// as the single-engine path.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        for e in &mut self.engines {
+            if !e.idle() {
+                done.extend(e.step()?);
+            }
+        }
+        Ok(done)
+    }
+
+    /// All running lanes across replicas (delta streaming walks this).
+    pub fn active_lanes(&self) -> impl Iterator<Item = &ActiveRequest> {
+        self.engines.iter().flat_map(|e| e.active.iter())
+    }
+
+    /// Cross-replica metrics snapshot for the stats frame
+    /// (DESIGN.md §Replication): counters sum, histograms pool samples,
+    /// `peak_kv_bytes` maxes.
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = self.engines[0].metrics.clone();
+        for e in &self.engines[1..] {
+            m.merge(&e.metrics);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PT: usize = 16;
+
+    fn prompt(seed: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| seed * 1000 + i).collect()
+    }
+
+    #[test]
+    fn single_replica_is_always_zero() {
+        let p = prompt(7, 40);
+        assert_eq!(route_replica(1, &[99], &p, PT, None, LOAD_SLACK), 0);
+        assert_eq!(route_replica(1, &[99], &p, PT, Some(5), LOAD_SLACK), 0);
+        assert_eq!(route_replica(1, &[99], &p, 0, None, LOAD_SLACK), 0);
+    }
+
+    #[test]
+    fn same_first_page_routes_together_deterministically() {
+        // two prompts sharing their first page but diverging after it
+        // must land on the same replica, call after call
+        let a = prompt(3, 64);
+        let mut b = a.clone();
+        for t in b.iter_mut().skip(PT) {
+            *t += 9000;
+        }
+        let loads = [0usize; 4];
+        let ra = route_replica(4, &loads, &a, PT, None, LOAD_SLACK);
+        let rb = route_replica(4, &loads, &b, PT, None, LOAD_SLACK);
+        assert_eq!(ra, rb, "shared first page must collocate");
+        for _ in 0..8 {
+            assert_eq!(route_replica(4, &loads, &a, PT, None, LOAD_SLACK), ra);
+        }
+    }
+
+    #[test]
+    fn distinct_prefix_families_spread_across_replicas() {
+        let loads = [0usize; 4];
+        let mut hit = [false; 4];
+        let mut moved = 0;
+        for f in 0..64 {
+            let p = prompt(f, 2 * PT);
+            let r = route_replica(4, &loads, &p, PT, None, LOAD_SLACK);
+            hit[r] = true;
+            // rendezvous stability: dropping to 3 replicas only remaps
+            // families whose argmax was replica 3
+            let r3 = route_replica(3, &loads[..3], &p, PT, None, LOAD_SLACK);
+            if r < 3 && r3 != r {
+                moved += 1;
+            }
+        }
+        assert!(hit.iter().filter(|&&h| h).count() >= 2,
+                "64 families all hashed to one replica");
+        assert_eq!(moved, 0, "resize remapped families whose primary survived");
+    }
+
+    #[test]
+    fn sub_page_prompts_go_least_loaded() {
+        let p = prompt(5, PT - 1);
+        assert_eq!(route_replica(3, &[4, 1, 2], &p, PT, None, LOAD_SLACK), 1);
+        // page_tokens == 0 (monolithic mode): also pure least-loaded
+        let long = prompt(5, 10 * PT);
+        assert_eq!(route_replica(3, &[4, 1, 2], &long, 0, None, LOAD_SLACK), 1);
+    }
+
+    #[test]
+    fn overloaded_primary_falls_back_to_least_loaded() {
+        let p = prompt(11, 64);
+        let even = [0usize; 4];
+        let primary = route_replica(4, &even, &p, PT, None, LOAD_SLACK);
+        // pile load onto the affinity pick until it crosses the slack
+        let mut loads = [0usize; 4];
+        loads[primary] = LOAD_SLACK; // at the boundary: still affine
+        assert_eq!(route_replica(4, &loads, &p, PT, None, LOAD_SLACK), primary);
+        loads[primary] = LOAD_SLACK + 1; // past it: demoted
+        let r = route_replica(4, &loads, &p, PT, None, LOAD_SLACK);
+        assert_ne!(r, primary);
+        assert_eq!(loads[r], 0);
+    }
+
+    #[test]
+    fn session_home_pin_beats_hash_and_load() {
+        let p = prompt(2, 64);
+        let loads = [0usize, 1000, 0, 0];
+        assert_eq!(route_replica(4, &loads, &p, PT, Some(1), LOAD_SLACK), 1,
+                   "pin wins even over a heavily loaded replica");
+        // a stale pin from a larger fleet is ignored, not trusted
+        let r = route_replica(4, &loads, &p, PT, Some(9), LOAD_SLACK);
+        assert!(r < 4);
+        assert_ne!(r, 1);
+    }
+}

@@ -29,6 +29,15 @@
 //! enforced by the engine's own sweep.  `{"stats":true}` answers with a
 //! metrics snapshot frame.
 //!
+//! **Replication** (`--replicas N`, DESIGN.md §Replication): the serve
+//! loop drives a [`Router`] over N independent engines, dispatching each
+//! admission by shared-prefix affinity so one replica's prefix index
+//! accumulates each prefix family, and pinning sessioned requests to the
+//! replica holding their parked pages.  The admission gate and
+//! `max_requests` accounting are fleet-wide; stats frames report merged
+//! metrics plus a `"replicas"` field.  `--replicas 1` (the default) is
+//! bit-for-bit the single-engine serving path.
+//!
 //! The pre-PR-7 `GEN …`/`OK …` line protocol survives behind
 //! `--legacy-proto` ([`serve_legacy`]) for old harnesses, with its
 //! error leak fixed: internal failures now log server-side and answer a
@@ -47,6 +56,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::engine::{Engine, EngineCfg};
 use crate::coordinator::proto::{self, ClientFrame, GenReq};
 use crate::coordinator::request::{Completion, FinishReason, Request};
+use crate::coordinator::router::Router;
 use crate::model::Sampler;
 use crate::runtime::Runtime;
 use crate::util::pool::{resolve_threads, WorkerPool};
@@ -65,12 +75,17 @@ pub struct ServeCfg {
     /// speak the deprecated `GEN …` line protocol instead
     /// (`--legacy-proto`)
     pub legacy: bool,
+    /// independent engine replicas behind the prefix-affinity router
+    /// (`--replicas`; DESIGN.md §Replication).  Each replica gets its own
+    /// page pool, scheduler, and metrics; 1 (the default) keeps the
+    /// single-engine serving path bit-for-bit.
+    pub replicas: usize,
 }
 
 impl ServeCfg {
     pub fn new(addr: &str) -> Self {
         ServeCfg { addr: addr.to_string(), max_requests: None,
-                   admit_queue: 32, legacy: false }
+                   admit_queue: 32, legacy: false, replicas: 1 }
     }
 }
 
@@ -128,9 +143,10 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
     } else {
         String::new()
     };
-    println!("kvmix serving NDJSON on {} (policy {}, {} attention worker(s){paging}, \
-              admit queue {})",
-             listener.local_addr()?, cfg.method.name(),
+    let replicas = scfg.replicas.max(1);
+    println!("kvmix serving NDJSON on {} (policy {}, {} replica(s), \
+              {} attention worker(s){paging}, admit queue {})",
+             listener.local_addr()?, cfg.method.name(), replicas,
              resolve_threads(cfg.threads), scfg.admit_queue);
 
     let admit_cap = scfg.admit_queue.max(1);
@@ -163,7 +179,19 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
     // only the cache attention fans out across the scoped pool)
     let threads = cfg.threads;
     WorkerPool::scoped(threads, |pool| {
-        let mut engine = Engine::with_pool(rt, cfg, Some(pool))?;
+        // N independent replicas sharing one attention worker pool; each
+        // spills into its own subdirectory so the per-replica spill
+        // files never collide (DESIGN.md §Spill-Tier)
+        let mut engines = Vec::with_capacity(replicas);
+        for r in 0..replicas {
+            let mut ecfg = cfg.clone();
+            if replicas > 1 {
+                ecfg.spill_dir =
+                    cfg.spill_dir.as_ref().map(|d| d.join(format!("r{r}")));
+            }
+            engines.push(Engine::with_pool(rt, ecfg, Some(pool))?);
+        }
+        let mut router = Router::new(engines, cfg.page_tokens);
         let mut pending: HashMap<u64, Route> = HashMap::new();
         // cancels that matched no live route: the target may still be
         // buffered in the admission sync_channel (sent but not yet
@@ -187,7 +215,7 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
                             .map(|(&g, _)| g);
                         if let Some(gid) = gid {
                             let route = pending.remove(&gid).expect("gid from pending");
-                            if let Some(c) = engine.cancel(gid)? {
+                            if let Some(c) = router.cancel(gid)? {
                                 let _ = route.out.send(
                                     proto::final_frame(route.client_id, &c));
                             }
@@ -206,24 +234,26 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
                             .map(|(&g, _)| g)
                             .collect();
                         for gid in gids {
-                            engine.cancel(gid)?;
+                            router.cancel(gid)?;
                             pending.remove(&gid);
                             served += 1; // terminal for this request; no frames
                         }
                         orphan_cancels.retain(|&(c, _)| c != conn);
                     }
                     Ctl::Stats { out } => {
+                        let mut merged = router.merged_metrics();
                         let frame = proto::stats_frame(
-                            &mut engine.metrics, engine.batcher.waiting(),
-                            engine.active.len(),
-                            shed.load(Ordering::Relaxed) as usize);
+                            &mut merged, router.waiting(), router.active(),
+                            shed.load(Ordering::Relaxed) as usize,
+                            router.replicas());
                         let _ = out.send(frame);
                     }
                 }
             }
-            // admissions, gated on the engine-side queue depth — the
+            // admissions, gated on the fleet-wide queue depth — the
             // second bounded stage of the backpressure state machine
-            while engine.batcher.waiting() < admit_cap {
+            // (total buffering stays ≈ 2×admit_queue at any replica count)
+            while router.waiting() < admit_cap {
                 let Ok(m) = new_rx.try_recv() else {
                     // channel drained: the reader sends a request before
                     // its cancel, so any orphan whose target was buffered
@@ -235,10 +265,11 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
                 };
                 if orphan_cancels.remove(&(m.conn, m.client_id)) {
                     // the cancel overtook its target in the admission
-                    // channel: retire it here, before the engine ever
+                    // channel: retire it here, before any engine ever
                     // sees the request
-                    engine.metrics.cancellations += 1;
-                    let now = engine.metrics.now_ns();
+                    let e0 = &mut router.engines_mut()[0];
+                    e0.metrics.cancellations += 1;
+                    let now = e0.metrics.now_ns();
                     let c = Completion {
                         id: 0, prompt_len: m.req.prompt.len(), tokens: Vec::new(),
                         finish: FinishReason::Cancelled,
@@ -264,33 +295,39 @@ pub fn serve_on(rt: &Runtime, cfg: EngineCfg, listener: TcpListener,
                 let gid = next_global;
                 pending.insert(gid, Route { conn: m.conn, client_id: m.client_id,
                                             out: m.out, sent: 0 });
-                engine.submit(build_request(gid, m.req));
+                router.dispatch(build_request(gid, m.req));
             }
-            // submit-time rejections can leave the engine idle: drain
+            // submit-time rejections can leave the fleet idle: drain
             // them (terminal — no retry_after_ms) before the idle check
-            for r in engine.take_rejections() {
+            for r in router.take_rejections() {
                 if let Some(route) = pending.remove(&r.id) {
                     let _ = route.out.send(
                         proto::reject_frame(Some(route.client_id), &r.reason, None));
                 }
                 served += 1;
             }
-            retry_hint.store(retry_hint_ms(&mut engine), Ordering::Relaxed);
-            if engine.idle() {
+            // a shed request would re-enter through routing, so hint
+            // with the most optimistic (least-loaded) replica's drain time
+            let hint = router.engines_mut().iter_mut()
+                .map(retry_hint_ms)
+                .min()
+                .unwrap_or(50);
+            retry_hint.store(hint, Ordering::Relaxed);
+            if router.idle() {
                 if let Some(max) = scfg.max_requests {
                     if served + shed.load(Ordering::Relaxed) as usize >= max {
                         drop(accept);
-                        println!("{}", engine.metrics.report());
+                        println!("{}", router.merged_metrics().report());
                         return Ok(());
                     }
                 }
                 std::thread::sleep(Duration::from_millis(2));
                 continue;
             }
-            let done = engine.step()?;
+            let done = router.step()?;
             // stream per-step deltas for still-running lanes first, so a
             // ≥2-token generation always sees a delta before its final
-            for a in &engine.active {
+            for a in router.active_lanes() {
                 if let Some(route) = pending.get_mut(&a.req.id) {
                     if a.generated.len() > route.sent {
                         let _ = route.out.send(proto::delta_frame(
@@ -324,7 +361,7 @@ fn build_request(gid: u64, g: GenReq) -> Request {
     };
     Request { id: gid, prompt: g.prompt, max_new_tokens: g.max_new, sampler,
               stop_token: g.stop, priority: g.priority,
-              deadline_ms: g.deadline_ms, submitted_ns: 0 }
+              deadline_ms: g.deadline_ms, submitted_ns: 0, session: g.session }
 }
 
 /// Load-shed hint: projected queue drain time from the e2e p50, clamped
@@ -546,7 +583,7 @@ fn handle_legacy_client(stream: TcpStream, tx: Sender<(Request, Sender<Outcome>)
                 let req = Request { id, prompt, max_new_tokens: max_new,
                                     sampler: Sampler::Greedy, stop_token: None,
                                     priority: 0, deadline_ms: None,
-                                    submitted_ns: 0 };
+                                    submitted_ns: 0, session: None };
                 tx.send((req, done_tx)).map_err(|_| anyhow!("engine gone"))?;
                 match done_rx.recv() {
                     Ok(Ok(c)) => {
@@ -641,12 +678,13 @@ mod tests {
     fn build_request_maps_sampler_and_lifecycle_fields() {
         let g = GenReq { id: 4, prompt: vec![1, 2], max_new: 8, priority: 2,
                          deadline_ms: Some(100), temperature: Some(0.5),
-                         top_k: Some(3), stop: Some(2) };
+                         top_k: Some(3), stop: Some(2), session: Some(7) };
         let r = build_request(99, g);
         assert_eq!(r.id, 99, "engine id is the serve loop's global one");
         assert_eq!(r.priority, 2);
         assert_eq!(r.deadline_ms, Some(100));
         assert_eq!(r.stop_token, Some(2));
+        assert_eq!(r.session, Some(7), "session key rides through to the engine");
         match r.sampler {
             Sampler::TopK { k, temperature } => {
                 assert_eq!(k, 3);
@@ -656,7 +694,7 @@ mod tests {
         }
         let plain = GenReq { id: 4, prompt: vec![1], max_new: 1, priority: 0,
                              deadline_ms: None, temperature: None, top_k: None,
-                             stop: None };
+                             stop: None, session: None };
         assert!(matches!(build_request(1, plain).sampler, Sampler::Greedy));
     }
 }

@@ -521,7 +521,7 @@ pub fn run_serving_chunked(rt: &Runtime, method: &Method, batch: usize,
         let (toks, _) = workload::sample_mixture(&mut rng, prompt_len);
         Request { id: id as u64, prompt: toks, max_new_tokens: gen,
                   sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                  deadline_ms: None, submitted_ns: 0 }
+                  deadline_ms: None, submitted_ns: 0, session: None }
     }).collect();
     serve_requests_scheduled(rt, method, batch, reqs, kv_budget, page_tokens,
                              false, step_tokens)
@@ -544,7 +544,7 @@ pub fn run_serving_prefixed(rt: &Runtime, method: &Method, batch: usize,
         prompt.extend_from_slice(&tail);
         Request { id: id as u64, prompt, max_new_tokens: gen,
                   sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                  deadline_ms: None, submitted_ns: 0 }
+                  deadline_ms: None, submitted_ns: 0, session: None }
     }).collect();
     serve_requests(rt, method, batch, reqs, kv_budget, page_tokens, prefix_cache)
 }
@@ -568,7 +568,7 @@ fn serve_requests_scheduled(rt: &Runtime, method: &Method, batch: usize,
     let mut engine = Engine::new(rt, EngineCfg {
         method: method.clone(), max_batch: batch, kv_budget, threads: 1, page_tokens,
         prefix_cache, step_tokens,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     })?;
     let n = reqs.len();
     for req in reqs {

@@ -178,6 +178,86 @@ pub fn interference_prompts(rng: &mut Rng, n_short: usize, short_len: usize,
     (shorts, long)
 }
 
+/// One user turn of a [`multi_turn_chat`] conversation: the user's new
+/// tokens (NOT the accumulated conversation) and the decode budget for
+/// the reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChatTurn {
+    /// this turn's user utterance — the caller builds turn *t*'s prompt
+    /// as `prompt[t-1] + generated[t-1] + user[t]`, exactly the
+    /// concatenation the engine's session park/resume adopts pages for
+    /// (DESIGN.md §Serving-Protocol)
+    pub user: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Multi-turn conversation workload for session park/resume: `turns`
+/// user utterances of `turn_len/2 ..= turn_len` LM-space tokens each
+/// (turn 0 opens with BOS, later turns with SEP), replies capped at
+/// `4 ..= max_new` tokens.  Deterministic in the seed —
+/// `rust/tests/coordinator.rs` replays one conversation twice (resumed
+/// vs. fresh-prefilled) and pins bit-identical generations.
+pub fn multi_turn_chat(rng: &mut Rng, turns: usize, turn_len: usize,
+                       max_new: usize) -> Vec<ChatTurn> {
+    let lo = (turn_len / 2).max(1);
+    (0..turns)
+        .map(|t| {
+            let len = rng.range(lo, turn_len + 1);
+            let mut user = Vec::with_capacity(len + 1);
+            user.push(if t == 0 { BOS } else { SEP });
+            for _ in 0..len {
+                user.push(LM_BASE + rng.below(LM_COUNT) as i32);
+            }
+            ChatTurn { user, max_new: rng.range(4.min(max_new), max_new + 1) }
+        })
+        .collect()
+}
+
+/// Bursty open-loop arrival process with heavy-tailed prompt lengths —
+/// the router stress shape (DESIGN.md §Replication): base
+/// exponential inter-arrival gaps at `rate_per_s`, compressed by
+/// `burst`× for seeded burst windows of 2–5 requests, prompt lengths
+/// Pareto(`alpha`) on `[min_len, max_len]` (LM-task content).  Returns
+/// `(arrival_ns, prompt)` pairs with strictly increasing arrivals.
+/// Deterministic in the seed.
+pub fn bursty_poisson(rng: &mut Rng, n: usize, rate_per_s: f64, burst: f64,
+                      alpha: f64, min_len: usize, max_len: usize)
+                      -> Vec<(u64, Vec<i32>)> {
+    assert!(rate_per_s > 0.0 && burst >= 1.0 && alpha > 0.0);
+    assert!(0 < min_len && min_len <= max_len);
+    let mut out = Vec::with_capacity(n);
+    let mut now_ns = 0u64;
+    let mut burst_left = 0usize;
+    for _ in 0..n {
+        if burst_left == 0 && rng.bool(0.2) {
+            burst_left = rng.range(2, 6);
+        }
+        let mut gap_s = -(1.0 - rng.f64()).ln() / rate_per_s;
+        if burst_left > 0 {
+            burst_left -= 1;
+            gap_s /= burst;
+        }
+        now_ns += (gap_s * 1e9) as u64 + 1; // +1: strictly increasing
+        let len = ((min_len as f64 * (1.0 - rng.f64()).powf(-1.0 / alpha))
+            as usize).clamp(min_len, max_len);
+        out.push((now_ns, gen_lm(rng, len).0));
+    }
+    out
+}
+
+/// Long-generation "reasoning" workload: short chain-task prompts that
+/// each decode for `min_new ..= max_new` tokens — decode-dominated
+/// lanes that keep KV resident long enough for the pressure ladder's
+/// spill rung to matter (DESIGN.md §Spill-Tier).  Returns
+/// `(prompt, max_new)` pairs, deterministic in the seed.
+pub fn reasoning_prompts(rng: &mut Rng, n: usize, prompt_len: usize,
+                         min_new: usize, max_new: usize) -> Vec<(Vec<i32>, usize)> {
+    assert!(0 < min_new && min_new <= max_new);
+    (0..n)
+        .map(|_| (gen_chain(rng, prompt_len).0, rng.range(min_new, max_new + 1)))
+        .collect()
+}
+
 /// Exact-state selection (corpus.gen_chain): `n1 n2 n3 EQL max(n1,n2,n3)`.
 pub fn gen_chain(rng: &mut Rng, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
     let mut toks = vec![BOS];
@@ -268,6 +348,58 @@ mod tests {
         assert!(long.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
         let (again, long2) = interference_prompts(&mut Rng::new(9), 4, 32, 256);
         assert_eq!((shorts, long), (again, long2), "seed-deterministic");
+    }
+
+    #[test]
+    fn multi_turn_chat_shape_and_determinism() {
+        let turns = multi_turn_chat(&mut Rng::new(21), 5, 24, 16);
+        assert_eq!(turns.len(), 5);
+        for (t, turn) in turns.iter().enumerate() {
+            assert_eq!(turn.user[0], if t == 0 { BOS } else { SEP });
+            let body = turn.user.len() - 1;
+            assert!((12..=24).contains(&body), "turn body {body} outside band");
+            assert!(turn.user[1..].iter()
+                        .all(|&x| (LM_BASE..LM_BASE + LM_COUNT as i32).contains(&x)));
+            assert!((4..=16).contains(&turn.max_new));
+        }
+        assert_eq!(turns, multi_turn_chat(&mut Rng::new(21), 5, 24, 16),
+                   "seed-deterministic");
+    }
+
+    #[test]
+    fn bursty_poisson_arrivals_and_tail() {
+        let w = bursty_poisson(&mut Rng::new(33), 64, 100.0, 20.0, 1.2, 8, 256);
+        assert_eq!(w.len(), 64);
+        let times: Vec<u64> = w.iter().map(|&(t, _)| t).collect();
+        assert!(times.windows(2).all(|p| p[0] < p[1]), "strictly increasing");
+        for (_, p) in &w {
+            assert!((8..=256).contains(&p.len()));
+            assert!(p.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
+        }
+        // heavy tail: Pareto(1.2) puts mass well past min_len
+        assert!(w.iter().any(|(_, p)| p.len() >= 16),
+                "no prompt reached 2x min_len — tail lost");
+        // burstiness: burst windows compress gaps 20x under the base
+        // exponential, so the min/max gap spread is far past uniform
+        let gaps: Vec<u64> = times.windows(2).map(|p| p[1] - p[0]).collect();
+        let (min_g, max_g) = (gaps.iter().min().unwrap(), gaps.iter().max().unwrap());
+        assert!(min_g * 4 < *max_g, "gap spread {min_g}..{max_g} too flat");
+        assert_eq!(w, bursty_poisson(&mut Rng::new(33), 64, 100.0, 20.0, 1.2, 8, 256),
+                   "seed-deterministic");
+    }
+
+    #[test]
+    fn reasoning_prompts_decode_heavy() {
+        let w = reasoning_prompts(&mut Rng::new(44), 64, 32, 48, 96);
+        assert_eq!(w.len(), 64);
+        for (p, max_new) in &w {
+            assert_eq!(p.len(), 32);
+            assert!((48..=96).contains(max_new));
+            assert!(*max_new > p.len(), "decode-dominated by construction");
+        }
+        assert!(w.iter().any(|&(_, m)| m >= 72), "upper half of budget unused");
+        assert_eq!(w, reasoning_prompts(&mut Rng::new(44), 64, 32, 48, 96),
+                   "seed-deterministic");
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::quant::{key_scores_dispatch, value_accum_dispatch, FusedScratch, Pack
 
 use super::jl::{JlProjector, SignJlKeys};
 use super::pages::KvSide;
+use super::spill::{decode_block, encode_block};
 use super::window::WindowPolicy;
 
 /// Key representation for one layer.
@@ -433,6 +434,80 @@ impl LayerKvCache {
         saved
     }
 
+    // ------------- spill tier (DESIGN.md §Spill-Tier) -------------
+
+    /// Serialize quantized page `page` of `side` and replace its blocks
+    /// with zero-byte stubs (bits/n/group kept, payload vectors empty,
+    /// uid 0).  Stubs model 0 bytes, so `modeled_bytes` drops by exactly
+    /// the page's footprint; `quant_page_bits` stays valid on a stub.
+    /// The caller (the page pool's spill rung) owns the returned bytes
+    /// and must [`Self::restore_spill_page`] before the next attend —
+    /// a stub cannot be attended or requantized.
+    pub fn take_spill_page(&mut self, side: KvSide, page: usize,
+                           page_tokens: usize) -> Vec<u8> {
+        let bpp = page_tokens / self.cfg.group;
+        let blocks = match side {
+            KvSide::Key => &mut self.k_blocks,
+            KvSide::Value => &mut self.v_blocks,
+        };
+        let b1 = ((page + 1) * bpp).min(blocks.len());
+        let mut out = Vec::new();
+        for b in &mut blocks[page * bpp..b1] {
+            debug_assert!(!b.words.is_empty() || b.n == 0, "page already spilled");
+            debug_assert_eq!(Arc::strong_count(b), 1, "shared pages are spill-exempt");
+            encode_block(b, &mut out);
+            let stub = PackedBlock {
+                bits: b.bits, n: b.n, group: b.group,
+                words: Vec::new(), scales: Vec::new(), mins: Vec::new(),
+                outliers: Vec::new(), uid: 0,
+            };
+            *b = Arc::new(stub);
+        }
+        out
+    }
+
+    /// Fault a spilled page back: decode `bytes` (produced by
+    /// [`Self::take_spill_page`]) and replace the stubs.  The restored
+    /// blocks are bit-identical to what was spilled but carry fresh uids
+    /// ([`PackedBlock::from_parts`]), so the fused kernels' unpack cache
+    /// can never serve stale integers.
+    pub fn restore_spill_page(&mut self, side: KvSide, page: usize,
+                              page_tokens: usize, bytes: &[u8]) {
+        let bpp = page_tokens / self.cfg.group;
+        let blocks = match side {
+            KvSide::Key => &mut self.k_blocks,
+            KvSide::Value => &mut self.v_blocks,
+        };
+        let b1 = ((page + 1) * bpp).min(blocks.len());
+        let mut pos = 0;
+        for b in &mut blocks[page * bpp..b1] {
+            let restored = decode_block(bytes, &mut pos)
+                .expect("truncated spill extent");
+            debug_assert!(b.words.is_empty() && b.n > 0, "restore target must be a stub");
+            debug_assert_eq!((restored.bits, restored.n, restored.group),
+                             (b.bits, b.n, b.group),
+                             "spill extent does not match the stub's shape");
+            *b = Arc::new(restored);
+        }
+        debug_assert_eq!(pos, bytes.len(), "trailing bytes in spill extent");
+    }
+
+    /// Whether quantized page `page` of `side` currently sits in the
+    /// spill tier (its blocks are stubs).
+    pub fn quant_page_spilled(&self, side: KvSide, page: usize,
+                              page_tokens: usize) -> bool {
+        let bpp = page_tokens / self.cfg.group;
+        let blocks = self.quant_blocks(side);
+        let b = &blocks[page * bpp];
+        b.words.is_empty() && b.n > 0
+    }
+
+    /// Any page of this layer spilled? (fast pre-attend check)
+    pub fn any_spilled(&self) -> bool {
+        self.k_blocks.iter().chain(&self.v_blocks)
+            .any(|b| b.words.is_empty() && b.n > 0)
+    }
+
     // ---------------- attention ----------------
 
     /// Decode attention for a batchful of query heads against this cache.
@@ -826,6 +901,42 @@ mod tests {
         assert_eq!(donor.quant_page_bits(KvSide::Key, 0, pt), 4);
         assert_eq!(donor.k_blocks[0].words, donor_words);
         assert!(!other.quant_page_shared(KvSide::Key, 0, pt), "split made it private");
+    }
+
+    #[test]
+    fn spill_page_round_trip_is_byte_identical() {
+        let c = cfg(KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+                    WindowPolicy::None, WindowPolicy::None);
+        let mut cache = LayerKvCache::new(c);
+        let mut rng = Rng::new(33);
+        let pt = 64;
+        cache.append(&rng.normal_vec(128 * 64), &rng.normal_vec(128 * 64), 128);
+        let before = cache.modeled_bytes();
+        let orig: Vec<_> = cache.k_blocks[..2].iter().map(|b| (**b).clone()).collect();
+
+        let bytes = cache.take_spill_page(KvSide::Key, 0, pt);
+        assert!(cache.quant_page_spilled(KvSide::Key, 0, pt));
+        assert!(!cache.quant_page_spilled(KvSide::Key, 1, pt));
+        assert!(cache.any_spilled());
+        assert_eq!(cache.quant_page_bits(KvSide::Key, 0, pt), 2, "bits survive on the stub");
+        let spilled_bytes = before - cache.modeled_bytes();
+        assert_eq!(spilled_bytes,
+                   orig.iter().map(|b| b.modeled_bytes()).sum::<usize>(),
+                   "spill removes exactly the page's modeled footprint");
+
+        cache.restore_spill_page(KvSide::Key, 0, pt, &bytes);
+        assert!(!cache.quant_page_spilled(KvSide::Key, 0, pt));
+        assert!(!cache.any_spilled());
+        assert_eq!(cache.modeled_bytes(), before);
+        for (r, o) in cache.k_blocks[..2].iter().zip(&orig) {
+            assert_eq!(r.words, o.words, "packed words byte-identical after fault-back");
+            assert_eq!(r.scales.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       o.scales.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+            assert_eq!(r.mins.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       o.mins.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+            assert_eq!(r.outliers, o.outliers);
+            assert_ne!(r.uid, o.uid, "restored blocks carry fresh uids");
+        }
     }
 
     #[test]

@@ -9,12 +9,14 @@ pub mod jl;
 pub mod memory;
 pub mod pages;
 pub mod pressure;
+pub mod spill;
 pub mod window;
 
 pub use cache::{AttnScratch, KeyRepr, LayerCacheCfg, LayerKvCache, ValueRepr};
 pub use memory::{fp16_kv_bytes, MemoryBudget};
 pub use pages::{KvSide, PageId, PagePool, PoolStats, DEFAULT_PAGE_TOKENS, KV_SIDES};
 pub use pressure::{PressureCfg, SharedDownshift};
+pub use spill::SpillTier;
 pub use window::WindowPolicy;
 
 use crate::config::{ModelConfig, QuantPlan};

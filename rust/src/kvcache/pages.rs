@@ -44,6 +44,7 @@
 //! the KVmix policies the pool exists for use neither.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -51,6 +52,7 @@ use anyhow::{bail, Result};
 use crate::quant::{words_for, PackedBlock};
 
 use super::cache::LayerKvCache;
+use super::spill::SpillTier;
 use super::SeqKvCache;
 
 /// Default `--page-tokens` when paging is enabled (2 quant groups).
@@ -69,6 +71,17 @@ pub const KV_SIDES: [KvSide; 2] = [KvSide::Key, KvSide::Value];
 /// Index of a page frame in the pool (stable across free + reuse).
 pub type PageId = u32;
 
+/// Residency of one page frame (DESIGN.md §Spill-Tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameState {
+    /// packed bytes live in the owning cache's blocks
+    Resident,
+    /// packed bytes live in the spill tier at this extent; the cache
+    /// holds zero-byte stubs and the frame leaves `modeled_bytes` until
+    /// it faults back
+    Spilled { off: u64, len: u32 },
+}
+
 /// Metadata of one live page frame.
 #[derive(Debug, Clone)]
 pub struct Frame {
@@ -80,6 +93,9 @@ pub struct Frame {
     /// index.  1 = exclusively owned (the pre-prefix-sharing invariant);
     /// freed only when the count reaches 0.
     pub refs: u32,
+    /// residency — spilled frames stay in the table (same id, same
+    /// bits class) but are charged to the disk tier, not the budget
+    pub state: FrameState,
 }
 
 /// Allocation / lifecycle counters.
@@ -102,6 +118,10 @@ pub struct PoolStats {
     pub prefix_insertions: usize,
     /// LRU prefix entries evicted under memory pressure
     pub prefix_evictions: usize,
+    /// sealed cold pages written to the spill tier
+    pub spills: usize,
+    /// spilled pages faulted back before an attend
+    pub spill_faults: usize,
 }
 
 /// One layer's slice of a sequence's page table.
@@ -167,6 +187,12 @@ pub struct PagePool {
     prefix: Option<BTreeMap<Vec<i32>, PrefixEntry>>,
     /// logical clock for prefix LRU ordering
     tick: u64,
+    /// disk tier for sealed cold pages (`--spill-dir`); `None` = the
+    /// spill rung is inert (DESIGN.md §Spill-Tier)
+    spill: Option<SpillTier>,
+    /// live frames currently in `FrameState::Spilled` — the O(1) guard
+    /// that lets `fault_back_owner` early-return on the hot path
+    spilled_live: usize,
     /// running byte total of all live frames, each counted ONCE however
     /// many references it has — maintained by alloc/release/retag so
     /// [`PagePool::modeled_bytes`] is O(1) (the engine charges it once
@@ -190,9 +216,36 @@ impl PagePool {
             tables: BTreeMap::new(),
             prefix: None,
             tick: 0,
+            spill: None,
+            spilled_live: 0,
             bytes: 0,
             stats: PoolStats::default(),
         })
+    }
+
+    /// Turn on the disk spill tier (`--spill-dir`, `--spill-bytes`):
+    /// sealed, exclusively-owned cold pages become spillable as the
+    /// pressure ladder's rung below downshift/eviction
+    /// (DESIGN.md §Spill-Tier).  `cap_bytes == 0` means uncapped.
+    pub fn enable_spill(&mut self, dir: &Path, cap_bytes: usize) -> Result<()> {
+        if self.spill.is_none() {
+            self.spill = Some(SpillTier::new(dir, cap_bytes)?);
+        }
+        Ok(())
+    }
+
+    pub fn spill_enabled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Live frames currently parked in the spill tier.
+    pub fn spilled_pages(&self) -> usize {
+        self.spilled_live
+    }
+
+    /// Bytes of live spilled extents on disk (0 when disabled).
+    pub fn spill_used_bytes(&self) -> usize {
+        self.spill.as_ref().map(SpillTier::used).unwrap_or(0)
     }
 
     /// Turn on the shared-prefix index (`--prefix-cache`).  Off by
@@ -239,7 +292,9 @@ impl PagePool {
     pub fn modeled_bytes(&self) -> usize {
         debug_assert_eq!(
             self.bytes,
-            self.frames.iter().flatten().map(|f| self.page_bytes(f.bits)).sum::<usize>(),
+            self.frames.iter().flatten()
+                .filter(|f| f.state == FrameState::Resident)
+                .map(|f| self.page_bytes(f.bits)).sum::<usize>(),
             "page byte counter out of sync with the frame table");
         self.bytes
     }
@@ -451,6 +506,11 @@ impl PagePool {
             if kb.len() < pages * bpp || vb.len() < pages * bpp {
                 return false; // cap should prevent this; stay safe
             }
+            if kb[..pages * bpp].iter().chain(&vb[..pages * bpp])
+                .any(|b| b.words.is_empty() && b.n > 0)
+            {
+                return false; // spilled stubs never register (no bytes to pin)
+            }
             blocks.push((kb[..pages * bpp].to_vec(), vb[..pages * bpp].to_vec()));
         }
         let frames: Vec<PageId> = {
@@ -516,6 +576,178 @@ impl PagePool {
             .sum()
     }
 
+    // ----------------- spill tier (DESIGN.md §Spill-Tier) -----------------
+
+    /// Spill one sealed cold page of `owner` to the disk tier: serialize
+    /// its packed blocks, park the bytes at an extent, and leave
+    /// zero-byte stubs in the cache and a `Spilled` frame in the table.
+    /// Returns the modeled bytes freed, or `None` when nothing is
+    /// eligible (tier disabled/full, or every page is unsealed, shared,
+    /// fp16, or already spilled).
+    ///
+    /// Eligibility is deliberately narrow — sealed + exclusively owned
+    /// only (docs/adr/008-replica-router-and-spill-tier.md): a shared
+    /// page's bytes are read by other sequences and the prefix index,
+    /// and an unsealed page is still being appended into.  `newest_first`
+    /// picks the scan direction within each (layer, side): parked
+    /// sessions spill newest-first (their tail is what a resume replays
+    /// anyway), active lanes oldest-first (the paper's cold-history
+    /// shape).
+    pub fn spill_one(&mut self, owner: u64, cache: &mut SeqKvCache,
+                     newest_first: bool) -> Option<usize> {
+        self.spill.as_ref()?;
+        let pt = self.page_tokens;
+        let bpp = pt / self.group;
+        let table = self.tables.get(&owner)?;
+        let mut pick: Option<(usize, KvSide, usize, PageId)> = None;
+        'scan: for (li, lp) in table.layers.iter().enumerate() {
+            let layer = &cache.layers[li];
+            for &side in &KV_SIDES {
+                let ids = match side {
+                    KvSide::Key => &lp.k_q,
+                    KvSide::Value => &lp.v_q,
+                };
+                let sealed = layer.sealed_quant_pages(side, pt).min(ids.len());
+                let order: Box<dyn Iterator<Item = usize>> = if newest_first {
+                    Box::new((0..sealed).rev())
+                } else {
+                    Box::new(0..sealed)
+                };
+                for p in order {
+                    let f = self.frames[ids[p] as usize].as_ref().expect("live frame");
+                    if f.refs != 1 || f.state != FrameState::Resident
+                        || layer.quant_page_shared(side, p, pt)
+                        || layer.quant_page_spilled(side, p, pt)
+                    {
+                        continue;
+                    }
+                    // exact serialized length without mutating: per block
+                    // a 28-byte header + the payload vectors (spill.rs)
+                    let len: usize = layer.quant_blocks(side)
+                        [p * bpp..((p + 1) * bpp).min(layer.quant_blocks(side).len())]
+                        .iter()
+                        .map(|b| 28 + b.words.len() * 4 + b.scales.len() * 4
+                                 + b.mins.len() * 4 + b.outliers.len() * 8)
+                        .sum();
+                    if !self.spill.as_ref().unwrap().fits(len) {
+                        continue;
+                    }
+                    pick = Some((li, side, p, ids[p]));
+                    break 'scan;
+                }
+            }
+        }
+        let (li, side, page, id) = pick?;
+        let bytes = cache.layers[li].take_spill_page(side, page, pt);
+        let tier = self.spill.as_mut().unwrap();
+        let (off, len) = match tier.write(&bytes) {
+            Ok(extent) => extent,
+            Err(_) => {
+                // I/O failure: undo the stub swap and report no relief
+                cache.layers[li].restore_spill_page(side, page, pt, &bytes);
+                return None;
+            }
+        };
+        let f = self.frames[id as usize].as_mut().unwrap();
+        debug_assert_eq!(f.state, FrameState::Resident);
+        f.state = FrameState::Spilled { off, len };
+        let freed = self.page_bytes(f.bits);
+        self.bytes -= freed;
+        self.spilled_live += 1;
+        self.stats.spills += 1;
+        Some(freed)
+    }
+
+    /// Fault every spilled page of `owner` back before an attend: read
+    /// the extents, restore the packed blocks (fresh uids), re-charge
+    /// the frames to `modeled_bytes`, and return the extents to the
+    /// tier's free list.  Returns the number of pages faulted.  O(1)
+    /// when nothing is spilled anywhere (the hot-path case).
+    pub fn fault_back_owner(&mut self, owner: u64, cache: &mut SeqKvCache) -> usize {
+        if self.spilled_live == 0 {
+            return 0;
+        }
+        let Some(table) = self.tables.get(&owner) else { return 0 };
+        let pt = self.page_tokens;
+        let mut work: Vec<(usize, KvSide, usize, PageId, u64, u32)> = Vec::new();
+        for (li, lp) in table.layers.iter().enumerate() {
+            for &side in &KV_SIDES {
+                let ids = match side {
+                    KvSide::Key => &lp.k_q,
+                    KvSide::Value => &lp.v_q,
+                };
+                for (p, &id) in ids.iter().enumerate() {
+                    if let Some(f) = self.frames[id as usize].as_ref() {
+                        if let FrameState::Spilled { off, len } = f.state {
+                            work.push((li, side, p, id, off, len));
+                        }
+                    }
+                }
+            }
+        }
+        let mut buf = Vec::new();
+        for &(li, side, page, id, off, len) in &work {
+            self.spill.as_ref().expect("spilled frame without a tier")
+                .read(off, len, &mut buf)
+                .expect("spill tier read failed on fault-back");
+            cache.layers[li].restore_spill_page(side, page, pt, &buf);
+            let f = self.frames[id as usize].as_mut().unwrap();
+            f.state = FrameState::Resident;
+            self.bytes += self.page_bytes(f.bits);
+            self.spill.as_mut().unwrap().release(off, len);
+            self.spilled_live -= 1;
+            self.stats.spill_faults += 1;
+        }
+        work.len()
+    }
+
+    // ------------- session adoption (DESIGN.md §Serving-Protocol) -------------
+
+    /// Map the first `pages` quantized pages per layer/side of `donor`'s
+    /// table into `owner`'s (fresh) table, taking a reference on each —
+    /// the pool half of session resume: the engine adopts the parked
+    /// cache's prefill-pure prefix blocks into a fresh cache
+    /// (`adopt_shared_blocks`) and this mirrors the frames, exactly the
+    /// `adopt_prefix` shape without going through the prefix index.
+    /// The caller then `free_owner(donor)`s, leaving the adopted frames
+    /// at refcount 1 under the new owner.  Returns `false` (no-op) when
+    /// the donor is unknown, too short, or still has spilled pages
+    /// (fault back first — stubs must never be adopted).
+    pub fn adopt_owner_pages(&mut self, donor: u64, owner: u64, pages: usize) -> bool {
+        if pages == 0 || donor == owner {
+            return false;
+        }
+        let Some(dt) = self.tables.get(&donor) else { return false };
+        let mut per_layer: Vec<(Vec<PageId>, Vec<PageId>)> = Vec::new();
+        for lp in &dt.layers {
+            if lp.k_q.len() < pages || lp.v_q.len() < pages {
+                return false;
+            }
+            per_layer.push((lp.k_q[..pages].to_vec(), lp.v_q[..pages].to_vec()));
+        }
+        for (ks, vs) in &per_layer {
+            for &id in ks.iter().chain(vs) {
+                let f = self.frames[id as usize].as_ref().expect("live frame");
+                if f.state != FrameState::Resident {
+                    return false;
+                }
+            }
+        }
+        let n_layers = per_layer.len();
+        let mut table = self.tables.remove(&owner).unwrap_or_default();
+        debug_assert_eq!(table.pages(), 0, "session adoption needs a fresh table");
+        table.layers.resize_with(n_layers, LayerPages::default);
+        for (li, (ks, vs)) in per_layer.into_iter().enumerate() {
+            for &id in ks.iter().chain(vs.iter()) {
+                self.retain(id);
+            }
+            table.layers[li].k_q = ks;
+            table.layers[li].v_q = vs;
+        }
+        self.tables.insert(owner, table);
+        true
+    }
+
     // ----------------- invariant checking (test support) -----------------
 
     /// Full-scan audit of the pool's internal invariants, for property
@@ -533,11 +765,43 @@ impl PagePool {
     ///
     /// Returns a human-readable description of the first violation.
     pub fn verify_accounting(&self) -> Result<(), String> {
-        let scanned: usize =
-            self.frames.iter().flatten().map(|f| self.page_bytes(f.bits)).sum();
+        let scanned: usize = self.frames.iter().flatten()
+            .filter(|f| f.state == FrameState::Resident)
+            .map(|f| self.page_bytes(f.bits)).sum();
         if scanned != self.bytes {
-            return Err(format!("byte counter {} != frame scan {}",
+            return Err(format!("byte counter {} != resident frame scan {}",
                                self.bytes, scanned));
+        }
+        // spill-tier cross-checks: the live-frame view and the tier's
+        // used counter must agree, spilled frames are exclusively owned,
+        // and the fast-path counter matches a full scan
+        let mut spilled = 0usize;
+        let mut spilled_bytes = 0usize;
+        for (id, f) in self.frames.iter().enumerate() {
+            let Some(f) = f else { continue };
+            if let FrameState::Spilled { len, .. } = f.state {
+                spilled += 1;
+                spilled_bytes += len as usize;
+                if f.refs != 1 {
+                    return Err(format!(
+                        "spilled frame {id} has {} refs (must be exclusive)", f.refs));
+                }
+                if f.bits == 16 {
+                    return Err(format!("spilled frame {id} is an fp16 window page"));
+                }
+            }
+        }
+        if spilled != self.spilled_live {
+            return Err(format!("spilled_live {} != frame scan {spilled}",
+                               self.spilled_live));
+        }
+        let tier_used = self.spill.as_ref().map(SpillTier::used).unwrap_or(0);
+        if tier_used != spilled_bytes {
+            return Err(format!(
+                "spill tier used {tier_used} != live spilled extents {spilled_bytes}"));
+        }
+        if spilled > 0 && self.spill.is_none() {
+            return Err("spilled frames without a spill tier".into());
         }
         let mut expected: BTreeMap<PageId, u32> = BTreeMap::new();
         for (owner, table) in &self.tables {
@@ -593,17 +857,20 @@ impl PagePool {
         Ok(())
     }
 
-    /// Bytes `free_owner(owner)` would actually reclaim right now: the
-    /// owner's mapped frames whose reference count is exactly 1 (frames
-    /// shared with the prefix index or other sequences survive the free
-    /// and reclaim nothing).  Test support for the cancellation
+    /// Modeled bytes `free_owner(owner)` would actually reclaim right
+    /// now: the owner's mapped frames whose reference count is exactly 1
+    /// (frames shared with the prefix index or other sequences survive
+    /// the free and reclaim nothing).  Spilled frames count zero — their
+    /// bytes already left `modeled_bytes` at spill time, and freeing
+    /// them releases a disk extent, not modeled HBM
+    /// (DESIGN.md §Spill-Tier).  Test support for the cancellation
     /// accounting property.
     pub fn owner_exclusive_bytes(&self, owner: u64) -> usize {
         let Some(table) = self.tables.get(&owner) else { return 0 };
         table.layers.iter()
             .flat_map(|lp| lp.k_fp.iter().chain(&lp.v_fp).chain(&lp.k_q).chain(&lp.v_q))
             .filter_map(|&id| self.frames[id as usize].as_ref())
-            .filter(|f| f.refs == 1)
+            .filter(|f| f.refs == 1 && f.state == FrameState::Resident)
             .map(|f| self.page_bytes(f.bits))
             .sum()
     }
@@ -613,7 +880,7 @@ impl PagePool {
     fn alloc(&mut self, layer: u16, side: KvSide, bits: u8) -> PageId {
         self.stats.allocs += 1;
         self.bytes += self.page_bytes(bits);
-        let frame = Frame { layer, side, bits, refs: 1 };
+        let frame = Frame { layer, side, bits, refs: 1, state: FrameState::Resident };
         if let Some(id) = self.free.get_mut(&(layer, bits)).and_then(Vec::pop) {
             self.stats.reuses += 1;
             self.frames[id as usize] = Some(frame);
@@ -636,7 +903,17 @@ impl PagePool {
             return; // still mapped elsewhere (prefix sharing)
         }
         let f = self.frames[id as usize].take().unwrap();
-        self.bytes -= self.page_bytes(f.bits);
+        match f.state {
+            FrameState::Resident => self.bytes -= self.page_bytes(f.bits),
+            // a parked-session teardown can drop a spilled frame without
+            // faulting it back: the extent returns to the tier, the
+            // budget was never charged
+            FrameState::Spilled { off, len } => {
+                self.spill.as_mut().expect("spilled frame without a tier")
+                    .release(off, len);
+                self.spilled_live -= 1;
+            }
+        }
         self.stats.frees += 1;
         self.free.entry((f.layer, f.bits)).or_default().push(id);
     }
@@ -768,6 +1045,142 @@ mod tests {
         assert!(page_frame_bytes(64, 16, 32, 2) < page_frame_bytes(64, 16, 32, 4));
         assert!(page_frame_bytes(64, 16, 32, 4) < page_frame_bytes(64, 16, 32, 8));
         assert!(page_frame_bytes(64, 16, 32, 8) < page_frame_bytes(64, 16, 32, 16));
+    }
+
+    // ----------------- spill tier -----------------
+
+    fn spill_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("kvmix-pages-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn spill_then_fault_back_round_trips_exact_bytes() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let mut c = filled(&m, &plan, 128, 40);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        let dir = spill_dir("roundtrip");
+        pool.enable_spill(&dir, 0).unwrap();
+        pool.sync(5, &c);
+        let before = pool.modeled_bytes();
+        let orig_words: Vec<Vec<u32>> = c.layers[0].quant_blocks(KvSide::Key)
+            .iter().map(|b| b.words.clone()).collect();
+
+        let freed = pool.spill_one(5, &mut c, false).expect("a page must spill");
+        assert_eq!(freed, pool.page_bytes(2));
+        assert_eq!(pool.modeled_bytes(), before - freed,
+                   "spilled bytes leave modeled_bytes exactly");
+        assert_eq!(pool.spilled_pages(), 1);
+        assert!(pool.spill_used_bytes() > 0);
+        assert_eq!(pool.stats.spills, 1);
+        // oldest-first scan: layer 0, K side, page 0 went first
+        assert!(c.layers[0].quant_page_spilled(KvSide::Key, 0, PT));
+        pool.verify_accounting().unwrap();
+        // sync over the stubbed cache is a no-op (bits survive on stubs)
+        pool.sync(5, &c);
+        pool.verify_accounting().unwrap();
+        assert_eq!(pool.modeled_bytes(), before - freed);
+
+        assert_eq!(pool.fault_back_owner(5, &mut c), 1);
+        assert_eq!(pool.modeled_bytes(), before);
+        assert_eq!(pool.spilled_pages(), 0);
+        assert_eq!(pool.spill_used_bytes(), 0);
+        assert_eq!(pool.stats.spill_faults, 1);
+        pool.verify_accounting().unwrap();
+        for (b, w) in c.layers[0].quant_blocks(KvSide::Key).iter().zip(&orig_words) {
+            assert_eq!(&b.words, w, "fault-back is byte-identical");
+        }
+        drop(pool);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shared_and_unsealed_pages_are_spill_exempt() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let prompt: Vec<i32> = (0..192).collect();
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.enable_prefix_cache();
+        let dir = spill_dir("exempt");
+        pool.enable_spill(&dir, 0).unwrap();
+        let (mut donor, _rec) = share_fixture(&m, &plan, &mut pool, &prompt, 128);
+        // pages 0..2 of every layer/side are shared (index + recipient);
+        // only page 2 is exclusive, so the first spill must land there
+        let freed = pool.spill_one(10, &mut donor, false).expect("exclusive page spills");
+        assert!(freed > 0);
+        assert!(!donor.layers[0].quant_page_spilled(KvSide::Key, 0, PT));
+        assert!(!donor.layers[0].quant_page_spilled(KvSide::Key, 1, PT));
+        assert!(donor.layers[0].quant_page_spilled(KvSide::Key, 2, PT));
+        pool.verify_accounting().unwrap();
+        // registering a prefix over a spilled page is refused
+        assert!(!pool.register_prefix(10, &prompt, 192, &donor),
+                "spilled pages must not register into the prefix index");
+        drop(pool);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_cap_blocks_oversized_tier() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let mut c = filled(&m, &plan, 128, 41);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        let dir = spill_dir("cap");
+        pool.enable_spill(&dir, 8).unwrap(); // 8 bytes: nothing fits
+        pool.sync(5, &c);
+        assert!(pool.spill_one(5, &mut c, false).is_none());
+        assert_eq!(pool.spilled_pages(), 0);
+        pool.verify_accounting().unwrap();
+        drop(pool);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spilled_owner_frees_without_fault_back() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let mut c = filled(&m, &plan, 128, 42);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        let dir = spill_dir("teardown");
+        pool.enable_spill(&dir, 0).unwrap();
+        pool.sync(5, &c);
+        while pool.spill_one(5, &mut c, false).is_some() {}
+        assert!(pool.spilled_pages() > 0);
+        pool.free_owner(5);
+        assert_eq!(pool.modeled_bytes(), 0);
+        assert_eq!(pool.spilled_pages(), 0);
+        assert_eq!(pool.spill_used_bytes(), 0, "extents returned on teardown");
+        pool.verify_accounting().unwrap();
+        drop(pool);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adopt_owner_pages_moves_frames_to_a_new_owner() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 2).without_rpc();
+        let c = filled(&m, &plan, 128, 43);
+        let mut pool = PagePool::new(PT, m.kv_dim(), m.group).unwrap();
+        pool.sync(20, &c);
+        let before = pool.modeled_bytes();
+        assert!(pool.adopt_owner_pages(20, 21, 2));
+        pool.verify_accounting().unwrap();
+        // shared while both tables exist, charged once
+        assert_eq!(pool.modeled_bytes(), before);
+        assert_eq!(pool.owner_pages(21), m.n_layers * 2 * 2);
+        // the resume shape: donor frees, adopted frames survive at refs 1
+        pool.free_owner(20);
+        pool.verify_accounting().unwrap();
+        assert_eq!(pool.modeled_bytes(),
+                   m.n_layers * 2 * 2 * pool.page_bytes(2));
+        assert_eq!(pool.owner_pages(21), m.n_layers * 2 * 2);
+        // too-short donors and unknown donors are no-ops
+        assert!(!pool.adopt_owner_pages(21, 22, 99));
+        assert!(!pool.adopt_owner_pages(77, 22, 1));
+        pool.verify_accounting().unwrap();
     }
 
     // ----------------- prefix-sharing lifecycle -----------------

@@ -243,6 +243,9 @@ fn downshift_best(cache: &mut SeqKvCache, page_tokens: usize,
                 if to >= bits {
                     continue;
                 }
+                if layer.quant_page_spilled(side, page, page_tokens) {
+                    continue; // spilled stubs hold no bytes to requantize
+                }
                 let is_shared = layer.quant_page_shared(side, page, page_tokens);
                 if is_shared && shared == SharedDownshift::Exempt {
                     continue;
@@ -290,7 +293,10 @@ pub fn reclaimable_bytes(cache: &SeqKvCache, page_tokens: usize,
             }
             for page in 0..layer.sealed_quant_pages(side, page_tokens) {
                 let bits = layer.quant_page_bits(side, page, page_tokens);
-                if bits > floor && !layer.quant_page_shared(side, page, page_tokens) {
+                if bits > floor
+                    && !layer.quant_page_shared(side, page, page_tokens)
+                    && !layer.quant_page_spilled(side, page, page_tokens)
+                {
                     total += page_frame_bytes(page_tokens, kv_dim, group, bits)
                         .saturating_sub(page_frame_bytes(page_tokens, kv_dim, group, floor));
                 }
@@ -527,6 +533,31 @@ mod tests {
         drop(held);
         assert!(downshift_one(&mut cache, PT, &cfg).is_some());
         assert!(reclaimable_bytes(&cache, PT, &cfg) > 0);
+    }
+
+    #[test]
+    fn spilled_pages_are_downshift_exempt() {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let cfg = PressureCfg::from_plan(&plan);
+        let mut cache = filled(&m, &plan, 64, 13); // one page per side
+        let before = reclaimable_bytes(&cache, PT, &cfg);
+        let bytes = cache.layers[0].take_spill_page(KvSide::Key, 0, PT);
+        let per_k = page_frame_bytes(PT, m.kv_dim(), m.group, 4)
+            - page_frame_bytes(PT, m.kv_dim(), m.group, 2);
+        assert_eq!(reclaimable_bytes(&cache, PT, &cfg), before - per_k,
+                   "a spilled page leaves the reclaim claim");
+        let mut n = 0;
+        while let Some(d) = downshift_one(&mut cache, PT, &cfg) {
+            assert!((d.layer, d.side) != (0, KvSide::Key),
+                    "the scan must skip the spilled stub");
+            n += 1;
+        }
+        assert!(n > 0, "other pages still drain");
+        // fault-back restores eligibility
+        cache.layers[0].restore_spill_page(KvSide::Key, 0, PT, &bytes);
+        let d = downshift_one(&mut cache, PT, &cfg).expect("restored page eligible");
+        assert_eq!((d.layer, d.side), (0, KvSide::Key));
     }
 
     #[test]

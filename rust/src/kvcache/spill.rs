@@ -1,0 +1,256 @@
+//! Disk spill tier for sealed cold KV pages (DESIGN.md §Spill-Tier).
+//!
+//! The pressure ladder's new bottom rung before preemption: a sealed,
+//! unshared quantized page serializes its packed blocks into one
+//! append-mostly file under `--spill-dir`, the in-memory frames shrink
+//! to stubs, and the page faults back on the next attend.  I/O is plain
+//! positioned pread/pwrite (`std::os::unix::fs::FileExt`) — no mmap, no
+//! new dependencies; docs/adr/008-replica-router-and-spill-tier.md
+//! records the trade.
+//!
+//! Extent management is exact-length free-listing: a faulted-back
+//! extent is parked under its byte length and reused verbatim by the
+//! next spill of an identically-sized page (the common case — pages at
+//! one (bits, kv_dim, group) shape all serialize to the same length).
+//! The file never shrinks while the tier lives; the whole directory
+//! entry is unlinked on drop.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use crate::quant::PackedBlock;
+
+/// On-disk page store with a byte cap and exact-length extent reuse.
+#[derive(Debug)]
+pub struct SpillTier {
+    file: File,
+    path: PathBuf,
+    /// cap on live spilled bytes (0 = unlimited)
+    cap: usize,
+    /// bytes currently holding live spilled pages
+    used: usize,
+    /// next append offset (monotone; freed extents are reused instead)
+    next_off: u64,
+    /// freed extents keyed by exact byte length
+    free: BTreeMap<u32, Vec<u64>>,
+}
+
+impl SpillTier {
+    /// Create (truncating) the backing file `kvspill.bin` inside `dir`.
+    /// `cap_bytes == 0` means uncapped.
+    pub fn new(dir: &Path, cap_bytes: usize) -> io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("kvspill.bin");
+        let file = OpenOptions::new()
+            .read(true).write(true).create(true).truncate(true)
+            .open(&path)?;
+        Ok(SpillTier { file, path, cap: cap_bytes, used: 0, next_off: 0,
+                       free: BTreeMap::new() })
+    }
+
+    /// Bytes of live spilled pages.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Configured cap (0 = unlimited).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Would a `len`-byte write fit under the cap?
+    pub fn fits(&self, len: usize) -> bool {
+        self.cap == 0 || self.used + len <= self.cap
+    }
+
+    /// Write `bytes` to a free extent of exactly this length, or append.
+    /// Returns `(offset, len)`; the caller records both in the frame.
+    pub fn write(&mut self, bytes: &[u8]) -> io::Result<(u64, u32)> {
+        let len = bytes.len() as u32;
+        let off = match self.free.get_mut(&len).and_then(Vec::pop) {
+            Some(off) => {
+                if self.free.get(&len).is_some_and(Vec::is_empty) {
+                    self.free.remove(&len);
+                }
+                off
+            }
+            None => {
+                let off = self.next_off;
+                self.next_off += len as u64;
+                off
+            }
+        };
+        self.file.write_all_at(bytes, off)?;
+        self.used += bytes.len();
+        Ok((off, len))
+    }
+
+    /// Read the extent back (fault path).
+    pub fn read(&self, off: u64, len: u32, buf: &mut Vec<u8>) -> io::Result<()> {
+        buf.clear();
+        buf.resize(len as usize, 0);
+        self.file.read_exact_at(buf, off)
+    }
+
+    /// Return an extent to the free list (fault-back or owner teardown).
+    pub fn release(&mut self, off: u64, len: u32) {
+        self.used -= len as usize;
+        self.free.entry(len).or_default().push(off);
+    }
+}
+
+impl Drop for SpillTier {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Serialize one packed block: a 7-field u32 LE header
+/// (bits, n, group, |words|, |scales|, |mins|, |outliers|) followed by
+/// the payload vectors (floats as IEEE-754 bit patterns).
+pub fn encode_block(b: &PackedBlock, out: &mut Vec<u8>) {
+    let header = [b.bits as u32, b.n as u32, b.group as u32,
+                  b.words.len() as u32, b.scales.len() as u32,
+                  b.mins.len() as u32, b.outliers.len() as u32];
+    for w in header {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for &w in &b.words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for &s in &b.scales {
+        out.extend_from_slice(&s.to_bits().to_le_bytes());
+    }
+    for &m in &b.mins {
+        out.extend_from_slice(&m.to_bits().to_le_bytes());
+    }
+    for &(i, v) in &b.outliers {
+        out.extend_from_slice(&i.to_le_bytes());
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode one block at `*pos`, advancing it.  Returns `None` on a
+/// malformed buffer (truncation).  The restored block carries a fresh
+/// uid ([`PackedBlock::from_parts`]) so the fused kernels' unpack cache
+/// can never serve stale integers for it.
+pub fn decode_block(bytes: &[u8], pos: &mut usize) -> Option<PackedBlock> {
+    let u32_at = |bytes: &[u8], p: usize| -> Option<u32> {
+        bytes.get(p..p + 4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    };
+    let mut p = *pos;
+    let mut header = [0u32; 7];
+    for h in &mut header {
+        *h = u32_at(bytes, p)?;
+        p += 4;
+    }
+    let [bits, n, group, n_words, n_scales, n_mins, n_outliers] = header;
+    let mut read_u32s = |count: u32| -> Option<Vec<u32>> {
+        let mut v = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            v.push(u32_at(bytes, p)?);
+            p += 4;
+        }
+        Some(v)
+    };
+    let words = read_u32s(n_words)?;
+    let scales: Vec<f32> = read_u32s(n_scales)?.into_iter().map(f32::from_bits).collect();
+    let mins: Vec<f32> = read_u32s(n_mins)?.into_iter().map(f32::from_bits).collect();
+    let mut outliers = Vec::with_capacity(n_outliers as usize);
+    for _ in 0..n_outliers {
+        let i = u32_at(bytes, p)?;
+        let v = f32::from_bits(u32_at(bytes, p + 4)?);
+        outliers.push((i, v));
+        p += 8;
+    }
+    *pos = p;
+    Some(PackedBlock::from_parts(bits as u8, n as usize, group as usize,
+                                 words, scales, mins, outliers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("kvmix-spill-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn block_codec_round_trips_bit_exact() {
+        let mut rng = Rng::new(31);
+        for bits in [1u8, 2, 3, 4, 8] {
+            let data = rng.normal_vec(192);
+            let mut b = PackedBlock::default();
+            b.quantize_outliers_into(&data, bits, 32, 0.03, &mut Vec::new());
+            let mut buf = Vec::new();
+            encode_block(&b, &mut buf);
+            let mut pos = 0;
+            let r = decode_block(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len());
+            assert_eq!((r.bits, r.n, r.group), (b.bits, b.n, b.group));
+            assert_eq!(r.words, b.words);
+            assert_eq!(r.scales.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       b.scales.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+            assert_eq!(r.mins.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       b.mins.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+            assert_eq!(r.outliers, b.outliers);
+            assert_ne!(r.uid, b.uid, "restore must not alias the unpack cache");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let b = PackedBlock::quantize(&vec![1.0; 64], 2, 32);
+        let mut buf = Vec::new();
+        encode_block(&b, &mut buf);
+        for cut in [0, 3, 7, buf.len() - 1] {
+            assert!(decode_block(&buf[..cut], &mut 0).is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn tier_write_read_release_reuses_extents() {
+        let dir = tmpdir("extents");
+        let mut t = SpillTier::new(&dir, 0).unwrap();
+        let (o1, l1) = t.write(&[1u8; 100]).unwrap();
+        let (o2, _l2) = t.write(&[2u8; 100]).unwrap();
+        assert_ne!(o1, o2);
+        assert_eq!(t.used(), 200);
+        let mut buf = Vec::new();
+        t.read(o1, l1, &mut buf).unwrap();
+        assert_eq!(buf, vec![1u8; 100]);
+        t.release(o1, l1);
+        assert_eq!(t.used(), 100);
+        // exact-length reuse: the freed extent is handed back verbatim
+        let (o3, l3) = t.write(&[3u8; 100]).unwrap();
+        assert_eq!((o3, l3), (o1, l1));
+        t.read(o3, l3, &mut buf).unwrap();
+        assert_eq!(buf, vec![3u8; 100]);
+        // a different length appends instead
+        let (o4, _) = t.write(&[4u8; 50]).unwrap();
+        assert_eq!(o4, 200);
+        drop(t);
+        assert!(!dir.join("kvspill.bin").exists(), "backing file unlinked on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tier_cap_enforced_via_fits() {
+        let dir = tmpdir("cap");
+        let mut t = SpillTier::new(&dir, 150).unwrap();
+        assert!(t.fits(100));
+        t.write(&[0u8; 100]).unwrap();
+        assert!(!t.fits(100), "second 100B page exceeds the 150B cap");
+        assert!(t.fits(50));
+        drop(t);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

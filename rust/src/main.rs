@@ -7,7 +7,8 @@
 //!   serve     --addr 127.0.0.1:7979 [--method ...] [--max-batch N]
 //!             [--kv-budget-kib K] [--threads N] [--page-tokens N]
 //!             [--prefix-cache] [--step-tokens N] [--admit-queue N]
-//!             [--legacy-proto]
+//!             [--legacy-proto] [--replicas N] [--spill-dir DIR]
+//!             [--spill-bytes B] [--max-requests N]
 //!   profile   [--prompts N] [--high-frac F]      run the KVmix profiler
 //!             [--plan-search] [--budget-frac F] [--plan-out FILE]
 //!   plan-search  [--budget-frac F] [--plan-out FILE] [--prompts N]
@@ -38,6 +39,17 @@
 //! (DESIGN.md §Serving-Protocol).
 //! --legacy-proto (serve) speaks the deprecated pre-PR-7 `GEN`/`OK`
 //! line protocol instead of the streaming NDJSON one.
+//! --replicas N (serve; default 1) runs N independent engine replicas
+//! behind the prefix-affinity router (DESIGN.md §Replication); 1 keeps
+//! the single-engine path bit-for-bit.
+//! --spill-dir DIR (serve/generate; requires --page-tokens) gives the
+//! pressure ladder a disk spill rung between prefix eviction and
+//! preemption: sealed cold pages serialize to a file tier and fault
+//! back on demand (DESIGN.md §Spill-Tier).  --spill-bytes B caps live
+//! spilled bytes per replica (0 = unlimited).
+//! --max-requests N (serve) exits cleanly after N terminal frames —
+//! what scripted smokes (CI's router+spill step) and drain-style
+//! restarts use; unset = serve forever.
 //! --plan-in FILE (generate/serve) loads a searched plan-search frontier
 //! file and serves its minimum-perplexity plan instead of the profiled
 //! `allocate` split (docs/adr/007-asymmetric-bit-allocation.md).
@@ -153,15 +165,17 @@ fn run() -> Result<()> {
             let page_tokens = args.usize_or("page-tokens", 0)?;
             let prefix_cache = args.flag("prefix-cache");
             let step_tokens = args.usize_or("step-tokens", 0)?;
+            let (spill_dir, spill_bytes) = spill_opts(&args)?;
             let pressure_weights = pressure_weights(&rt, &args);
             WorkerPool::scoped(threads, |pool| {
                 let mut engine = Engine::with_pool(&rt, EngineCfg {
                     method, max_batch: 1, kv_budget: None, threads, page_tokens,
                     prefix_cache, step_tokens, pressure_weights,
+                    spill_dir, spill_bytes,
                 }, Some(pool))?;
                 engine.submit(Request { id: 0, prompt: prompt.clone(), max_new_tokens: max_new,
                                         sampler: Sampler::Greedy, stop_token: None,
-                                        priority: 0, deadline_ms: None, submitted_ns: 0 });
+                                        priority: 0, deadline_ms: None, submitted_ns: 0, session: None });
                 let done = engine.run_to_completion()?;
                 println!("prompt ({} tokens): {:?}", prompt.len(), prompt);
                 println!("generated: {:?}", done[0].tokens);
@@ -184,10 +198,14 @@ fn run() -> Result<()> {
             let mut scfg = server::ServeCfg::new(&addr);
             scfg.admit_queue = args.usize_or("admit-queue", 32)?;
             scfg.legacy = args.flag("legacy-proto");
+            scfg.replicas = args.usize_or("replicas", 1)?.max(1);
+            scfg.max_requests = args.get("max-requests")
+                .map(|v| v.parse::<usize>()).transpose()?;
+            let (spill_dir, spill_bytes) = spill_opts(&args)?;
             let pressure_weights = pressure_weights(&rt, &args);
             server::serve(&rt, EngineCfg { method, max_batch, kv_budget, threads,
                                            page_tokens, prefix_cache, step_tokens,
-                                           pressure_weights },
+                                           pressure_weights, spill_dir, spill_bytes },
                           scfg)
         }
         "repro" => {
@@ -287,6 +305,18 @@ fn check_plan_file(path: &str) -> Result<()> {
     println!("{path}: OK ({} frontier plan(s), {} layers)",
              res.frontier.len(), res.n_layers);
     Ok(())
+}
+
+/// `--spill-dir DIR [--spill-bytes B]` → the engine's spill-tier knobs
+/// (DESIGN.md §Spill-Tier).  `--spill-bytes` without `--spill-dir` is a
+/// misconfiguration worth failing loudly on.
+fn spill_opts(args: &Args) -> Result<(Option<std::path::PathBuf>, usize)> {
+    let dir = args.get("spill-dir").map(std::path::PathBuf::from);
+    let bytes = args.usize_or("spill-bytes", 0)?;
+    if dir.is_none() && bytes > 0 {
+        bail!("--spill-bytes needs --spill-dir");
+    }
+    Ok((dir, bytes))
 }
 
 /// Per-layer downshift weights for the pressure controller: the raw

@@ -54,6 +54,21 @@ pub struct PackedBlock {
 }
 
 impl PackedBlock {
+    /// Rebuild a block from previously serialized parts (the spill tier's
+    /// fault-back path — DESIGN.md §Spill-Tier).  A **fresh** uid is
+    /// assigned: the bytes are identical to what was spilled, but the
+    /// fused kernels' unpack cache may have recycled the old uid for a
+    /// different block in the meantime, so restored contents must never
+    /// alias a cached unpack.
+    pub fn from_parts(bits: u8, n: usize, group: usize, words: Vec<u32>,
+                      scales: Vec<f32>, mins: Vec<f32>,
+                      outliers: Vec<(u32, f32)>) -> Self {
+        PackedBlock {
+            bits, n, group, words, scales, mins, outliers,
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
     /// Quantize `data` (stream order) into a new block.
     pub fn quantize(data: &[f32], bits: u8, group: usize) -> Self {
         let mut b = PackedBlock::default();
@@ -380,6 +395,23 @@ mod tests {
         let b = PackedBlock::quantize(&data, 2, 32);
         assert_ne!(a.uid, 0);
         assert_ne!(a.uid, b.uid);
+    }
+
+    #[test]
+    fn from_parts_round_trips_with_fresh_uid() {
+        let mut rng = Rng::new(21);
+        let data = rng.normal_vec(128);
+        let a = PackedBlock::quantize(&data, 3, 32);
+        let b = PackedBlock::from_parts(a.bits, a.n, a.group, a.words.clone(),
+                                        a.scales.clone(), a.mins.clone(),
+                                        a.outliers.clone());
+        assert_ne!(b.uid, a.uid, "restored block must not alias the unpack cache");
+        assert_ne!(b.uid, 0);
+        let (mut oa, mut ob) = (vec![0f32; a.n], vec![0f32; a.n]);
+        a.dequantize_into(&mut oa, &mut Vec::new());
+        b.dequantize_into(&mut ob, &mut Vec::new());
+        assert_eq!(oa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   ob.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! adversarial sequences, metrics, server protocol — plus the NDJSON
 //! serving lifecycle over a real socket (delta-before-final streaming,
 //! queue-full load shedding, cancellation, deadlines, disconnects;
-//! DESIGN.md §Serving-Protocol).  The socket tests need the PJRT
-//! runtime and are gated on `make artifacts` like tests/integration.rs.
+//! DESIGN.md §Serving-Protocol), session park/resume bit-identity and
+//! the spill rung of the pressure ladder (DESIGN.md §Spill-Tier), and
+//! prefix-affinity dispatch across replicas (DESIGN.md §Replication).
+//! The socket/engine tests need the PJRT runtime and are gated on
+//! `make artifacts` like tests/integration.rs.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -32,7 +35,7 @@ fn runtime() -> Option<Runtime> {
 fn req(id: u64, prompt: usize, new: usize) -> Request {
     Request { id, prompt: vec![1; prompt], max_new_tokens: new,
               sampler: Sampler::Greedy, stop_token: None, priority: 0,
-              deadline_ms: None, submitted_ns: 0 }
+              deadline_ms: None, submitted_ns: 0, session: None }
 }
 
 #[test]
@@ -160,7 +163,7 @@ fn engine_cfg(rt: &Runtime, max_batch: usize) -> EngineCfg {
         method: Method::Kvmix(QuantPlan::uniform(rt.model.n_layers, 2).without_rpc()),
         max_batch, kv_budget: None, threads: 1, page_tokens: 0,
         prefix_cache: false, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }
 }
 
@@ -436,7 +439,7 @@ fn engine_cancel_frees_exactly_the_owned_pool_pages() {
     let mut engine = Engine::new(&rt, cfg).unwrap();
     engine.submit(Request { id: 11, prompt: (1..=130).collect(), max_new_tokens: 64,
                             sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                            deadline_ms: None, submitted_ns: 0 });
+                            deadline_ms: None, submitted_ns: 0, session: None });
     for _ in 0..3 {
         engine.step().unwrap();
     }
@@ -459,4 +462,169 @@ fn engine_cancel_frees_exactly_the_owned_pool_pages() {
     assert_eq!(engine.metrics.cancellations, 1);
     assert_eq!(engine.metrics.completions, 0, "a cancel is not a completion");
     assert!(engine.cancel(11).unwrap().is_none(), "second cancel is a no-op");
+}
+
+// ------------- session park/resume + spill tier + replication -------------
+
+fn sreq(id: u64, prompt: Vec<i32>, new: usize, session: Option<u64>) -> Request {
+    Request { id, prompt, max_new_tokens: new, sampler: Sampler::Greedy,
+              stop_token: None, priority: 0, deadline_ms: None,
+              submitted_ns: 0, session }
+}
+
+#[test]
+fn session_resume_is_bit_identical_to_full_reprefill() {
+    // ISSUE 9 acceptance bar: a parked-then-resumed session produces the
+    // same tokens as a fresh engine full-prefilling the concatenated
+    // conversation, while skipping most of the turn-2 prefill
+    // (DESIGN.md §Serving-Protocol).  Chunked mode so the prefill saving
+    // is observable: the first chunk starts at the adoption boundary.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = engine_cfg(&rt, 2);
+    cfg.page_tokens = 64;
+    cfg.step_tokens = 64;
+
+    // turn 1 under session 42 parks instead of freeing
+    let mut engine = Engine::new(&rt, cfg.clone()).unwrap();
+    let p1: Vec<i32> = (1..=130).collect();
+    engine.submit(sreq(1, p1.clone(), 16, Some(42)));
+    let done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish, FinishReason::Length);
+    let g1 = done[0].tokens.clone();
+    assert_eq!(g1.len(), 16);
+    assert_eq!(engine.parked_sessions(), 1, "finished session must park");
+    assert_eq!(engine.metrics.sessions_parked, 1);
+    let pool = engine.page_pool().unwrap();
+    pool.verify_accounting().unwrap();
+    assert!(pool.owner_pages(1) > 0, "parked pages stay in the pool");
+    let t1_prefill = engine.metrics.prefill_tokens;
+
+    // turn 2: prompt strictly extends conversation so far + a user turn
+    let mut p2 = p1;
+    p2.extend_from_slice(&g1);
+    p2.extend(200..214);
+    engine.submit(sreq(2, p2.clone(), 16, Some(42)));
+    let resumed = engine.run_to_completion().unwrap();
+    assert_eq!(resumed.len(), 1);
+    assert_eq!(engine.metrics.sessions_resumed, 1,
+               "turn 2 must resume the parked session, not admit cold");
+    let reused = engine.metrics.resume_tokens_reused;
+    assert!(reused >= 64,
+            "at least one whole page must be adopted, got {reused}");
+    let t2_prefill = engine.metrics.prefill_tokens - t1_prefill;
+    assert_eq!(t2_prefill, p2.len() - reused,
+               "resume must skip exactly the adopted prefix's prefill");
+    assert_eq!(engine.parked_sessions(), 1, "turn 2 re-parks on finish");
+    engine.page_pool().unwrap().verify_accounting().unwrap();
+
+    // reference: a cold engine prefills the whole concatenated prompt
+    let mut cold = Engine::new(&rt, cfg).unwrap();
+    cold.submit(sreq(3, p2, 16, None));
+    let base = cold.run_to_completion().unwrap();
+    assert_eq!(resumed[0].tokens, base[0].tokens,
+               "resume must be bit-identical to a full re-prefill");
+}
+
+#[test]
+fn pressure_ladder_spills_parked_pages_before_preempting_or_dropping() {
+    // ISSUE 9 acceptance bar: with a spill tier configured the pressure
+    // ladder spills before it preempts.  The plan is uniform 2-bit (no
+    // downshift rung below the floor) and no prefix index exists, so a
+    // budget below the measured peak forces relief straight onto the
+    // spill rung — and spilling the parked session's sealed pages must
+    // fully cover the shortfall: no preemption, no OOM, the parked
+    // session survives (drop-parked is a rung below spill).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = engine_cfg(&rt, 2);
+    cfg.page_tokens = 64;
+    let p1: Vec<i32> = (1..=130).collect();
+    let p2: Vec<i32> = (301..=430).collect();
+
+    // probe run: same workload, unlimited budget, measures the peak
+    let mut probe = Engine::new(&rt, cfg.clone()).unwrap();
+    probe.submit(sreq(1, p1.clone(), 32, Some(9)));
+    probe.run_to_completion().unwrap();
+    probe.submit(sreq(2, p2.clone(), 32, None));
+    probe.run_to_completion().unwrap();
+    let peak = probe.metrics.peak_kv_bytes;
+    assert!(peak > 0, "paged run must model KV bytes");
+
+    let dir = std::env::temp_dir()
+        .join(format!("kvmix-spill-ladder-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    cfg.kv_budget = Some(peak - peak / 8);
+    cfg.spill_dir = Some(dir.clone());
+    let mut engine = Engine::new(&rt, cfg).unwrap();
+    engine.submit(sreq(1, p1, 32, Some(9)));
+    engine.run_to_completion().unwrap();
+    assert_eq!(engine.parked_sessions(), 1);
+    engine.submit(sreq(2, p2, 32, None));
+    engine.run_to_completion().unwrap();
+    assert!(engine.metrics.pages_spilled > 0,
+            "the spill rung must engage below the measured peak");
+    assert_eq!(engine.metrics.preemptions, 0,
+               "spill must relieve pressure before preemption");
+    assert_eq!(engine.metrics.oom_events, 0,
+               "spill must fully cover the budget shortfall");
+    assert_eq!(engine.parked_sessions(), 1,
+               "the parked session survives: drop-parked sits below spill");
+    let pool = engine.page_pool().unwrap();
+    pool.verify_accounting().unwrap();
+    assert!(pool.spilled_pages() > 0, "spilled pages stay in the table");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn socket_two_replicas_prefix_affinity_lands_family_on_one_replica() {
+    // ISSUE 9 acceptance bar: with --replicas 2, requests sharing a
+    // whole-page prompt head hash to the same replica, so later family
+    // members hit that replica's prefix cache — the merged stats frame
+    // reports replicas=2 and nonzero prefix_hits (DESIGN.md §Replication).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = engine_cfg(&rt, 2);
+    cfg.page_tokens = 64;
+    cfg.prefix_cache = true;
+    let mut scfg = ServeCfg::new("");
+    scfg.replicas = 2;
+    with_server(&rt, cfg, scfg, 5, |sock| {
+        let mut r = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        let head = (1..=64).map(|t: i32| t.to_string())
+            .collect::<Vec<_>>().join(",");
+        // one prefix family, served sequentially so each finished
+        // member's prefix is registered before the next one admits
+        for id in 1..=4u64 {
+            write!(w, "{{\"id\":{id},\"prompt\":[{head},{}],\"max_new\":2}}\n",
+                   100 + id).unwrap();
+            loop {
+                let f = read_frame(&mut r);
+                if is_final(&f) {
+                    assert_eq!(f.get("id").unwrap().as_usize().unwrap(),
+                               id as usize);
+                    assert!(f.opt("done").is_some(), "unexpected reject {f:?}");
+                    break;
+                }
+            }
+        }
+        write!(w, "{}\n", proto::stats_request_frame()).unwrap();
+        loop {
+            let f = read_frame(&mut r);
+            if let Some(s) = f.opt("stats") {
+                assert_eq!(s.get("replicas").unwrap().as_usize().unwrap(), 2);
+                assert!(s.get("prefix_hits").unwrap().as_usize().unwrap() >= 1,
+                        "affinity must land the family on one replica's \
+                         prefix cache: {f:?}");
+                break;
+            }
+        }
+        // one last request lets the server reach max_requests and exit
+        write!(w, "{{\"id\":9,\"prompt\":[1,2,3],\"max_new\":1}}\n").unwrap();
+        loop {
+            let f = read_frame(&mut r);
+            if is_final(&f) {
+                break;
+            }
+        }
+    });
 }

@@ -107,14 +107,14 @@ fn engine_serves_batch_with_budget() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: Some(64 << 20),
         threads: 1, page_tokens: 0, prefix_cache: false, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).unwrap();
     let mut rng = Rng::new(3);
     for id in 0..6 {
         let (toks, _) = workload::sample_mixture(&mut rng, 40);
         engine.submit(Request { id, prompt: toks, max_new_tokens: 12,
                                 sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                deadline_ms: None, submitted_ns: 0 });
+                                deadline_ms: None, submitted_ns: 0, session: None });
     }
     let done = engine.run_to_completion().unwrap();
     assert_eq!(done.len(), 6);
@@ -135,14 +135,14 @@ fn engine_oom_eviction_still_completes() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method, max_batch: 4, kv_budget: Some(budget), threads: 1, page_tokens: 0,
         prefix_cache: false, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).unwrap();
     let mut rng = Rng::new(4);
     for id in 0..3 {
         let (toks, _) = workload::sample_mixture(&mut rng, 40);
         engine.submit(Request { id, prompt: toks, max_new_tokens: 24,
                                 sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                deadline_ms: None, submitted_ns: 0 });
+                                deadline_ms: None, submitted_ns: 0, session: None });
     }
     let done = engine.run_to_completion().unwrap();
     assert_eq!(done.len(), 3, "all requests must eventually finish");
@@ -172,14 +172,14 @@ fn paged_preemption_resumes_bit_identically() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Fp16, max_batch: 4, kv_budget, threads: 1,
             page_tokens: 64, prefix_cache: false, step_tokens: 0,
-            pressure_weights: None,
+            pressure_weights: None, spill_dir: None, spill_bytes: 0,
         }).unwrap();
         let mut rng = Rng::new(4);
         for id in 0..3 {
             let (toks, _) = workload::sample_mixture(&mut rng, 40);
             engine.submit(Request { id, prompt: toks, max_new_tokens: 40,
                                     sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                    deadline_ms: None, submitted_ns: 0 });
+                                    deadline_ms: None, submitted_ns: 0, session: None });
         }
         let mut done = engine.run_to_completion().unwrap();
         done.sort_by_key(|c| c.id);
@@ -212,14 +212,14 @@ fn paged_pressure_downshifts_under_budget() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: method.clone(), max_batch: 4, kv_budget, threads: 1,
             page_tokens: 64, prefix_cache: false, step_tokens: 0,
-            pressure_weights: None,
+            pressure_weights: None, spill_dir: None, spill_bytes: 0,
         }).unwrap();
         let mut rng = Rng::new(6);
         for id in 0..4 {
             let (toks, _) = workload::sample_mixture(&mut rng, 48);
             engine.submit(Request { id, prompt: toks, max_new_tokens: 48,
                                     sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                    deadline_ms: None, submitted_ns: 0 });
+                                    deadline_ms: None, submitted_ns: 0, session: None });
         }
         let done = engine.run_to_completion().unwrap();
         (done.len(), engine.metrics.peak_kv_bytes, engine.metrics.pages_requantized,

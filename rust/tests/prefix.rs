@@ -307,7 +307,7 @@ fn serve_shared_pair(rt: &Runtime, prefix_cache: bool)
     let mut engine = Engine::new(rt, EngineCfg {
         method: Method::Kvmix(plan), max_batch: 4, kv_budget: None, threads: 1,
         page_tokens: PT, prefix_cache, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).unwrap();
     let mut rng = Rng::new(8);
     let (system, _) = kvmix::harness::workload::sample_mixture(&mut rng, PT);
@@ -317,7 +317,7 @@ fn serve_shared_pair(rt: &Runtime, prefix_cache: bool)
         prompt.extend_from_slice(&tail);
         engine.submit(Request { id, prompt, max_new_tokens: 16,
                                 sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                deadline_ms: None, submitted_ns: 0 });
+                                deadline_ms: None, submitted_ns: 0, session: None });
     }
     let mut done = engine.run_to_completion().unwrap();
     done.sort_by_key(|c| c.id);
@@ -364,14 +364,14 @@ fn engine_prefix_cache_on_without_sharing_matches_off() {
         let mut engine = Engine::new(&rt, EngineCfg {
             method: Method::Kvmix(plan.clone()), max_batch: 4, kv_budget: None,
             threads: 1, page_tokens: PT, prefix_cache, step_tokens: 0,
-            pressure_weights: None,
+            pressure_weights: None, spill_dir: None, spill_bytes: 0,
         }).unwrap();
         let mut rng = Rng::new(17);
         for id in 0..3u64 {
             let (toks, _) = kvmix::harness::workload::sample_mixture(&mut rng, 48);
             engine.submit(Request { id, prompt: toks, max_new_tokens: 12,
                                     sampler: Sampler::Greedy, stop_token: None, priority: 0,
-                                    deadline_ms: None, submitted_ns: 0 });
+                                    deadline_ms: None, submitted_ns: 0, session: None });
         }
         let mut done = engine.run_to_completion().unwrap();
         done.sort_by_key(|c| c.id);
@@ -395,7 +395,7 @@ fn engine_rejects_prefix_cache_without_pages() {
     let err = Engine::new(&rt, EngineCfg {
         method: Method::Fp16, max_batch: 1, kv_budget: None, threads: 1,
         page_tokens: 0, prefix_cache: true, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     });
     assert!(err.is_err(), "--prefix-cache without --page-tokens must be rejected");
 }

@@ -214,12 +214,16 @@ fn prop_json_roundtrip() {
 fn prop_page_pool_accounting_under_random_interleaving() {
     // ROADMAP 5b: drive the paged pool through seeded random interleavings
     // of admit (with prefix adoption), decode append, pressure downshift,
-    // cancel/preempt (free_owner), prefix registration, and LRU eviction
-    // — auditing after every op that the O(1) byte counter matches a full
-    // frame scan, refcounts equal their mappings (never underflow), free
-    // lists are duplicate-free, and cancellation frees exactly the bytes
-    // of the frames the request's table owned exclusively.
+    // cancel/preempt (free_owner), prefix registration, LRU eviction,
+    // disk spill, and fault-back — auditing after every op that the O(1)
+    // byte counter matches a full frame scan, refcounts equal their
+    // mappings (never underflow), free lists are duplicate-free, spilled
+    // bytes leave `modeled_bytes` exactly, the disk tier's used bytes
+    // equal the live spilled extents, and cancellation frees exactly the
+    // bytes of the frames the request's table owned exclusively.
     const PT: usize = 64;
+    let spill_dir = std::env::temp_dir()
+        .join(format!("kvmix-spill-props-{}", std::process::id()));
     for_cases(25, 11, |seed, rng| {
         let m = ModelConfig::test_small();
         // eager 4-bit plan: whole groups quantize at append (maximally
@@ -229,6 +233,7 @@ fn prop_page_pool_accounting_under_random_interleaving() {
         let kv = m.kv_dim();
         let mut pool = PagePool::new(PT, kv, m.group).unwrap();
         pool.enable_prefix_cache();
+        pool.enable_spill(&spill_dir, 0).unwrap();
         let audit = |pool: &PagePool, op: &str| {
             if let Err(e) = pool.verify_accounting() {
                 panic!("seed {seed} after {op}: {e}");
@@ -251,7 +256,7 @@ fn prop_page_pool_accounting_under_random_interleaving() {
             assert_eq!(pool.owner_pages(id), 0, "seed {seed}");
         };
         for op in 0..40 {
-            match rng.below(8) {
+            match rng.below(10) {
                 // admit a fresh sequence, adopting any registered prefix
                 0 | 1 => {
                     next_owner += 1;
@@ -327,7 +332,7 @@ fn prop_page_pool_accounting_under_random_interleaving() {
                 }
                 // side-restricted pressure: one K-only / V-only rung
                 // (DESIGN.md §Pressure-Ladder)
-                _ => {
+                6 => {
                     if live.is_empty() {
                         continue;
                     }
@@ -338,6 +343,41 @@ fn prop_page_pool_accounting_under_random_interleaving() {
                     }
                     pool.sync(live[i].0, &live[i].1);
                     audit(&pool, &format!("side-downshift #{op}"));
+                }
+                // spill: push one sealed cold page to the disk tier
+                // (DESIGN.md §Spill-Tier)
+                7 | 8 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len());
+                    let before = pool.modeled_bytes();
+                    let parked = pool.spilled_pages();
+                    if let Some(freed) =
+                        pool.spill_one(live[i].0, &mut live[i].1, rng.bool(0.5))
+                    {
+                        assert_eq!(pool.modeled_bytes(), before - freed,
+                                   "seed {seed}: spilled bytes must leave \
+                                    modeled_bytes exactly");
+                        assert_eq!(pool.spilled_pages(), parked + 1, "seed {seed}");
+                        assert!(live[i].1.layers.iter().any(|l| l.any_spilled()),
+                                "seed {seed}: spill must leave a cache stub");
+                    }
+                    audit(&pool, &format!("spill #{op}"));
+                }
+                // fault-back: restore every spilled page of one owner
+                _ => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len());
+                    let before = pool.modeled_bytes();
+                    let n = pool.fault_back_owner(live[i].0, &mut live[i].1);
+                    assert!(pool.modeled_bytes() >= before, "seed {seed}");
+                    assert!(!live[i].1.layers.iter().any(|l| l.any_spilled()),
+                            "seed {seed}: fault-back ({n} pages) must clear \
+                             every stub of the owner");
+                    audit(&pool, &format!("fault-back #{op}"));
                 }
             }
             // per-side floor invariant: no live page may ever sit below
@@ -364,7 +404,239 @@ fn prop_page_pool_accounting_under_random_interleaving() {
         }
         assert_eq!(pool.modeled_bytes(), 0, "seed {seed}: pool must drain");
         assert_eq!(pool.allocated_pages(), 0, "seed {seed}");
+        assert_eq!(pool.spilled_pages(), 0,
+                   "seed {seed}: freeing owners must release spilled frames");
+        assert_eq!(pool.spill_used_bytes(), 0,
+                   "seed {seed}: the disk tier must drain with the pool");
     });
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
+
+#[test]
+fn prop_spill_fault_back_is_bit_identical() {
+    // DESIGN.md §Spill-Tier: a spill→fault-back round trip restores every
+    // packed block field-for-field — words, scales, mins, outliers, bits,
+    // n — so attention after a fault is bit-identical to never having
+    // spilled.  Only the unpack-cache uid is fresh (stale-cache safety).
+    const PT: usize = 64;
+    let dir = std::env::temp_dir()
+        .join(format!("kvmix-spill-rt-{}", std::process::id()));
+    for_cases(20, 13, |seed, rng| {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let kv = m.kv_dim();
+        let mut pool = PagePool::new(PT, kv, m.group).unwrap();
+        pool.enable_spill(&dir, 0).unwrap();
+        let tokens = PT * rng.range(1, 4);
+        let mut cache = SeqKvCache::new(&m, &plan);
+        let k = rng.normal_vec(tokens * kv);
+        let v = rng.normal_vec(tokens * kv);
+        for l in &mut cache.layers {
+            l.append(&k, &v, tokens);
+        }
+        pool.sync(7, &cache);
+        // snapshot Arcs before spilling: take_spill_page swaps in stub
+        // Arcs, so these still hold the original payloads
+        let snap: Vec<Vec<_>> = cache.layers.iter()
+            .map(|l| KV_SIDES.iter()
+                .flat_map(|&s| l.quant_blocks(s).iter().cloned())
+                .collect())
+            .collect();
+        let mut spilled = 0usize;
+        while pool.spill_one(7, &mut cache, rng.bool(0.5)).is_some() {
+            spilled += 1;
+        }
+        assert!(spilled > 0, "seed {seed}: sealed exclusive pages must spill");
+        assert_eq!(pool.fault_back_owner(7, &mut cache), spilled, "seed {seed}");
+        assert!(pool.verify_accounting().is_ok(), "seed {seed}");
+        for (li, l) in cache.layers.iter().enumerate() {
+            let now: Vec<_> = KV_SIDES.iter()
+                .flat_map(|&s| l.quant_blocks(s).iter().cloned())
+                .collect();
+            assert_eq!(now.len(), snap[li].len(), "seed {seed}");
+            for (a, b) in snap[li].iter().zip(&now) {
+                assert_eq!((a.bits, a.n, a.group), (b.bits, b.n, b.group),
+                           "seed {seed}: block geometry must round-trip");
+                assert_eq!(a.words, b.words, "seed {seed}: packed words differ");
+                assert_eq!(a.scales, b.scales, "seed {seed}: scales differ");
+                assert_eq!(a.mins, b.mins, "seed {seed}: mins differ");
+                assert_eq!(a.outliers, b.outliers, "seed {seed}: outliers differ");
+            }
+        }
+        pool.free_owner(7);
+        assert_eq!(pool.modeled_bytes(), 0, "seed {seed}");
+        assert_eq!(pool.spill_used_bytes(), 0, "seed {seed}");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_shared_and_adopted_pages_are_spill_exempt() {
+    // DESIGN.md §Spill-Tier / ADR-008: only sealed, exclusively-owned
+    // pages may spill.  Frames pinned by the prefix index or shared with
+    // an adopter must never leave memory — other sequences attend to
+    // them — while a third owner's exclusive pages spill freely.
+    const PT: usize = 64;
+    let dir = std::env::temp_dir()
+        .join(format!("kvmix-spill-shared-{}", std::process::id()));
+    for_cases(15, 14, |seed, rng| {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let kv = m.kv_dim();
+        let mut pool = PagePool::new(PT, kv, m.group).unwrap();
+        pool.enable_prefix_cache();
+        pool.enable_spill(&dir, 0).unwrap();
+        // donor: page-aligned prompt registered in the prefix index
+        let prompt: Vec<i32> =
+            (0..(2 * PT) as i32).map(|i| (seed % 97) as i32 + i).collect();
+        let mut donor = SeqKvCache::new(&m, &plan);
+        let k = rng.normal_vec(prompt.len() * kv);
+        let v = rng.normal_vec(prompt.len() * kv);
+        for l in &mut donor.layers {
+            l.append(&k, &v, prompt.len());
+        }
+        pool.sync(1, &donor);
+        let cap = donor.max_shareable_prefix(prompt.len(), PT);
+        assert!(pool.register_prefix(1, &prompt, cap, &donor), "seed {seed}");
+        // adopter: same head plus a private suffix — donor pages now shared
+        let mut ext = prompt.clone();
+        for j in 0..PT + rng.below(32) {
+            ext.push(100_000 + j as i32);
+        }
+        let mut adopter = SeqKvCache::new(&m, &plan);
+        let cap2 = adopter.max_shareable_prefix(ext.len(), PT);
+        let adopted = pool.adopt_prefix(2, &ext, cap2, &mut adopter);
+        assert_eq!(adopted, prompt.len(), "seed {seed}: whole head adopts");
+        let k2 = rng.normal_vec(ext.len() * kv);
+        let v2 = rng.normal_vec(ext.len() * kv);
+        for l in &mut adopter.layers {
+            l.append_prefill_suffix(&k2[adopted * kv..], &v2[adopted * kv..],
+                                    ext.len() - adopted, adopted);
+        }
+        pool.sync(2, &adopter);
+        assert!(pool.spill_one(1, &mut donor, rng.bool(0.5)).is_none(),
+                "seed {seed}: index-pinned donor frames must be spill-exempt");
+        // the adopter's own suffix pages (if any sealed) may spill, but
+        // its adopted head pages may not: spill everything it will give
+        // up, then verify the shared head is still resident
+        while pool.spill_one(2, &mut adopter, rng.bool(0.5)).is_some() {}
+        for l in &adopter.layers {
+            for &s in &KV_SIDES {
+                for p in 0..adopted / PT {
+                    assert!(!l.quant_page_spilled(s, p, PT),
+                            "seed {seed}: adopted head page {p} spilled");
+                }
+            }
+        }
+        // a third owner with exclusive sealed pages spills immediately
+        let mut third = SeqKvCache::new(&m, &plan);
+        let k3 = rng.normal_vec(PT * kv);
+        let v3 = rng.normal_vec(PT * kv);
+        for l in &mut third.layers {
+            l.append(&k3, &v3, PT);
+        }
+        pool.sync(3, &third);
+        assert!(pool.spill_one(3, &mut third, rng.bool(0.5)).is_some(),
+                "seed {seed}: exclusive sealed pages must spill");
+        if let Err(e) = pool.verify_accounting() {
+            panic!("seed {seed}: {e}");
+        }
+        for id in [1, 2, 3] {
+            pool.free_owner(id);
+        }
+        while pool.evict_lru_prefix().is_some() {}
+        assert_eq!(pool.modeled_bytes(), 0, "seed {seed}");
+        assert_eq!(pool.spill_used_bytes(), 0, "seed {seed}");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_spill_relieves_pressure_without_preemption_and_respects_cap() {
+    // The ladder-ordering pin at pool level (DESIGN.md §Spill-Tier): an
+    // over-budget pool with spill headroom sheds modeled bytes page by
+    // page WITHOUT freeing any owner — every sequence keeps its table and
+    // its tokens — and a byte-capped tier stops exactly at the cap
+    // instead of overrunning it, leaving the rest for preemption.
+    const PT: usize = 64;
+    let dir = std::env::temp_dir()
+        .join(format!("kvmix-spill-cap-{}", std::process::id()));
+    for_cases(15, 15, |seed, rng| {
+        let m = ModelConfig::test_small();
+        let plan = QuantPlan::uniform(m.n_layers, 4).without_rpc();
+        let kv = m.kv_dim();
+        let mut pool = PagePool::new(PT, kv, m.group).unwrap();
+        pool.enable_spill(&dir, 0).unwrap();
+        let mut owners: Vec<(u64, SeqKvCache)> = Vec::new();
+        for id in 1..=3u64 {
+            let tokens = PT * rng.range(1, 3);
+            let mut cache = SeqKvCache::new(&m, &plan);
+            let k = rng.normal_vec(tokens * kv);
+            let v = rng.normal_vec(tokens * kv);
+            for l in &mut cache.layers {
+                l.append(&k, &v, tokens);
+            }
+            pool.sync(id, &cache);
+            owners.push((id, cache));
+        }
+        let before = pool.modeled_bytes();
+        let mut freed = 0usize;
+        loop {
+            let i = rng.below(owners.len());
+            let (id, cache) = &mut owners[i];
+            match pool.spill_one(*id, cache, false) {
+                Some(b) => freed += b,
+                // this owner drained: sweep the rest, stop when nobody
+                // has headroom (crediting any page the sweep spills)
+                None => {
+                    let mut any = false;
+                    for (id, c) in owners.iter_mut() {
+                        if let Some(b) = pool.spill_one(*id, c, false) {
+                            freed += b;
+                            any = true;
+                        }
+                    }
+                    if !any {
+                        break;
+                    }
+                }
+            }
+        }
+        assert!(freed > 0, "seed {seed}");
+        assert_eq!(pool.modeled_bytes(), before - freed, "seed {seed}");
+        for (id, _) in &owners {
+            assert!(pool.owner_pages(*id) > 0,
+                    "seed {seed}: spill relief must not preempt owner {id}");
+        }
+        // uncapped tier: every sealed exclusive page made it to disk
+        assert_eq!(pool.spilled_pages(),
+                   owners.iter().map(|(_, c)| c.layers.iter()
+                       .map(|l| KV_SIDES.iter()
+                           .map(|&s| l.sealed_quant_pages(s, PT))
+                           .sum::<usize>())
+                       .sum::<usize>())
+                   .sum::<usize>(),
+                   "seed {seed}: uncapped spill must drain every sealed page");
+        for (id, cache) in &mut owners {
+            pool.fault_back_owner(*id, cache);
+        }
+        assert_eq!(pool.modeled_bytes(), before,
+                   "seed {seed}: fault-back must restore the exact charge");
+        // capped tier: a cap below one serialized page admits nothing
+        let mut tiny = PagePool::new(PT, kv, m.group).unwrap();
+        tiny.enable_spill(&dir.join("tiny"), 8).unwrap();
+        let (_, cache0) = &mut owners[0];
+        tiny.sync(9, cache0);
+        assert!(tiny.spill_one(9, cache0, false).is_none(),
+                "seed {seed}: an 8-byte cap must reject every page");
+        assert_eq!(tiny.spill_used_bytes(), 0, "seed {seed}");
+        tiny.free_owner(9);
+        for (id, _) in &owners {
+            pool.free_owner(*id);
+        }
+        assert_eq!(pool.modeled_bytes(), 0, "seed {seed}");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

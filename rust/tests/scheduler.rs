@@ -25,7 +25,7 @@ use kvmix::util::Rng;
 
 fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
     Request { id, prompt, max_new_tokens: max_new, sampler: Sampler::Greedy,
-              stop_token: None, priority: 0, deadline_ms: None, submitted_ns: 0 }
+              stop_token: None, priority: 0, deadline_ms: None, submitted_ns: 0, session: None }
 }
 
 // ---------------------------------------------------------------------------
@@ -116,7 +116,7 @@ fn engine_generate(rt: &Runtime, method: &Method, prompt: &[i32], max_new: usize
     let mut engine = Engine::new(rt, EngineCfg {
         method: method.clone(), max_batch: 1, kv_budget: None, threads: 1,
         page_tokens: 0, prefix_cache: false, step_tokens,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).expect("engine");
     engine.submit(req(7, prompt.to_vec(), max_new));
     let done = engine.run_to_completion().expect("serve");
@@ -158,7 +158,7 @@ fn chunked_engine_completes_with_aligned_boundaries() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method, max_batch: 4, kv_budget: None, threads: 1, page_tokens: 0,
         prefix_cache: false, step_tokens: group + 1, // tightest legal budget
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).expect("engine");
     let mut rng = Rng::new(5);
     let (prompt, _) = kvmix::harness::workload::sample_mixture(&mut rng, long);
@@ -202,7 +202,7 @@ fn decode_first_no_starvation_under_sustained_decode() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method, max_batch: 4, kv_budget: None, threads: 1, page_tokens: 0,
         prefix_cache: false, step_tokens: 2 + group + 1,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).expect("engine");
     let mut rng = Rng::new(6);
     for id in 0..2u64 {
@@ -253,7 +253,7 @@ fn oversized_request_is_rejected_alone_engine_keeps_stepping() {
     let mut engine = Engine::new(&rt, EngineCfg {
         method: method.clone(), max_batch: 4, kv_budget: Some(32 << 10),
         threads: 1, page_tokens: 0, prefix_cache: false, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).expect("engine");
     // an absurd projection: prompt 32 + 1M new tokens >> 32 KiB budget
     engine.submit(req(1, vec![1; 32], 1_000_000));
@@ -294,7 +294,7 @@ fn over_bucket_prompt_rejected_legacy_but_served_chunked() {
     let mut legacy = Engine::new(&rt, EngineCfg {
         method: method.clone(), max_batch: 2, kv_budget: None, threads: 1,
         page_tokens: 0, prefix_cache: false, step_tokens: 0,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).expect("engine");
     legacy.submit(req(1, prompt.clone(), 4));
     let rejections = legacy.take_rejections();
@@ -306,7 +306,7 @@ fn over_bucket_prompt_rejected_legacy_but_served_chunked() {
     let mut chunked = Engine::new(&rt, EngineCfg {
         method, max_batch: 2, kv_budget: None, threads: 1,
         page_tokens: 0, prefix_cache: false, step_tokens: 2 * group,
-        pressure_weights: None,
+        pressure_weights: None, spill_dir: None, spill_bytes: 0,
     }).expect("engine");
     chunked.submit(req(1, prompt, 4));
     let done = chunked.run_to_completion().expect("chunking makes it servable");
