@@ -11,9 +11,15 @@ use kvmix::util::{Rng, WorkerPool};
 
 fn build_cache(key: KeyRepr, value: ValueRepr, window: WindowPolicy,
                ctx: usize, kv_dim: usize) -> LayerKvCache {
+    build_cache_layout(key, value, window, ctx, kv_dim, false)
+}
+
+fn build_cache_layout(key: KeyRepr, value: ValueRepr, window: WindowPolicy,
+                      ctx: usize, kv_dim: usize, k_interleave: bool) -> LayerKvCache {
     let mut cache = LayerKvCache::new(LayerCacheCfg {
         kv_dim, head_dim: 32, group: 32, key, value,
         k_window: window, v_window: window, outlier_frac: 0.0,
+        k_interleave,
     });
     let mut rng = Rng::new(9);
     let k = rng.normal_vec(ctx * kv_dim);
@@ -53,6 +59,19 @@ fn main() {
                      s.line(), s.throughput(ctx as f64) / 1e6, cache.k_fp_tokens());
             sink.record(&s, Some(ctx as f64));
         }
+
+        // channel-interleaved K word layout (ADR-009): same arithmetic,
+        // sequential word loads — attend outputs are bit-identical
+        let inter = build_cache_layout(KeyRepr::PerChannel { bits: 2 },
+                                       ValueRepr::PerToken { bits: 2 },
+                                       WindowPolicy::Rpc { ratio: 0.1 }, ctx, kv_dim,
+                                       true);
+        let s = bench(&format!("attend/kvmix2bit_inter/ctx{ctx}"), 50, || {
+            inter.attend(black_box(&q), 4, &mut out, &mut scratch);
+            black_box(&out);
+        });
+        println!("{}  ({:.1} Mtok/s)", s.line(), s.throughput(ctx as f64) / 1e6);
+        sink.record(&s, Some(ctx as f64));
     }
 
     println!("\n# batched decode attend fan-out (8 lanes, ctx 512, kvmix 2-bit)");

@@ -12,7 +12,8 @@
 //! heads.  The headline multiple recorded in `BENCH_kernels.json`
 //! (`scripts/bench_to_json.py --check`) is packed vs cold fused.
 
-use kvmix::quant::{fused, pack_stream, qmax_at, unpack_stream, FusedScratch, PackedBlock};
+use kvmix::quant::{fused, pack_stream, qmax_at, unpack_stream, FusedScratch, PackedBlock,
+                   TileScratch};
 use kvmix::util::bench::{bench, black_box, JsonSink};
 use kvmix::util::Rng;
 
@@ -23,7 +24,7 @@ fn main() {
     let n = 4096;
     let data = rng.normal_vec(n);
 
-    for bits in [1u8, 2, 3, 4] {
+    for bits in [1u8, 2, 3, 4, 8] {
         let q: Vec<u32> = (0..n).map(|i| rng.below(qmax_at(bits, i) as usize + 1) as u32).collect();
         let mut words = Vec::new();
         pack_stream(&q, bits, &mut words);
@@ -53,22 +54,43 @@ fn main() {
 
     // key kernels: packed (integer-domain) vs fused (unpack-based,
     // cold + hot) vs unfused (dequantize-then-matvec)
-    println!("\n# key scores: packed vs fused(cold/hot) vs unfused (K block 64ch x 32tok, 1 head)");
+    println!("\n# key scores: packed/tiled/interleaved vs fused(cold/hot) vs unfused \
+              (K block 64ch x 32tok)");
     let kv_dim = 64;
     let tokens = 32;
     let kdata = rng.normal_vec(kv_dim * tokens);
     let q32 = rng.normal_vec(32);
-    for bits in [1u8, 2, 3, 4] {
+    let rep = 4; // GQA tile width for the head-tiled rows
+    let q_tile = rng.normal_vec(rep * 32);
+    let mut tile = TileScratch::default();
+    for bits in [1u8, 2, 3, 4, 8] {
         let block = PackedBlock::quantize(&kdata, bits, tokens);
         let mut scores = vec![0f32; tokens];
         let mut scratch = FusedScratch::default();
-        // 3-bit has no word-aligned packed layout: the dispatch row
-        // honestly measures its fused fallback (DESIGN.md §Quantized-Kernels)
         let s_p = bench(&format!("key_scores_packed/{bits}bit"), 40, || {
             scores.fill(0.0);
             fused::key_scores_dispatch(black_box(&q32), &block, tokens, 0,
                                        &mut scratch, &mut scores);
             black_box(&scores);
+        });
+        // head-tiled: decode each field once for the whole KV group
+        let mut tile_out = vec![0f32; rep * tokens];
+        let s_t = bench(&format!("key_scores_packed_tiled/{bits}bit"), 40, || {
+            tile_out.fill(0.0);
+            fused::key_scores_group_packed(black_box(&q_tile), rep, &block, tokens, 0,
+                                           &mut tile_out, tokens, &mut tile);
+            black_box(&tile_out);
+        });
+        // interleaved K layout: sequential word loads (no Eq. 12 variant —
+        // 3-bit words have no uniform sub-lane to interleave)
+        let s_i = (bits != 3).then(|| {
+            let mut iblock = PackedBlock::default();
+            iblock.quantize_into_layout(&kdata, bits, tokens, true, &mut Vec::new());
+            bench(&format!("key_scores_packed_inter/{bits}bit"), 40, || {
+                scores.fill(0.0);
+                fused::key_scores_packed(black_box(&q32), &iblock, tokens, 0, &mut scores);
+                black_box(&scores);
+            })
         });
         let mut scratch_cold = FusedScratch::default();
         let s_f = bench(&format!("key_scores_fused/{bits}bit"), 40, || {
@@ -92,21 +114,34 @@ fn main() {
             black_box(&scores);
         });
         println!("{}", s_p.line());
+        println!("{}", s_t.line());
+        if let Some(s) = &s_i {
+            println!("{}", s.line());
+        }
         println!("{}", s_f.line());
         println!("{}", s_h.line());
         println!("{}", s_u.line());
-        println!("  packed vs fused(cold): {:.2}x   vs fused(hot): {:.2}x   fused vs unfused: {:.2}x",
-                 s_f.mean / s_p.mean, s_h.mean / s_p.mean, s_u.mean / s_f.mean);
-        for s in [&s_p, &s_f, &s_h, &s_u] {
+        println!("  packed vs fused(cold): {:.2}x   vs fused(hot): {:.2}x   \
+                  tiled vs {rep}x packed: {:.2}x   fused vs unfused: {:.2}x",
+                 s_f.mean / s_p.mean, s_h.mean / s_p.mean,
+                 rep as f64 * s_p.mean / s_t.mean, s_u.mean / s_f.mean);
+        sink.record(&s_p, Some(tokens as f64));
+        sink.record(&s_t, Some((rep * tokens) as f64));
+        if let Some(s) = &s_i {
+            sink.record(s, Some(tokens as f64));
+        }
+        for s in [&s_f, &s_h, &s_u] {
             sink.record(s, Some(tokens as f64));
         }
     }
 
     // value side
-    println!("\n# weighted values: packed vs fused(cold/hot) vs unfused (V block 32tok x 64ch)");
+    println!("\n# weighted values: packed/tiled vs fused(cold/hot) vs unfused \
+              (V block 32tok x 64ch)");
     let vdata = rng.normal_vec(tokens * kv_dim);
     let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
-    for bits in [1u8, 2, 3, 4] {
+    let p_tile: Vec<f32> = (0..rep * tokens).map(|_| rng.f32()).collect();
+    for bits in [1u8, 2, 3, 4, 8] {
         let block = PackedBlock::quantize(&vdata, bits, 32);
         let mut out = vec![0f32; 32];
         let mut scratch = FusedScratch::default();
@@ -115,6 +150,13 @@ fn main() {
             fused::value_accum_dispatch(black_box(&p), &block, kv_dim, 0, 32,
                                         &mut scratch, &mut out);
             black_box(&out);
+        });
+        let mut tile_out = vec![0f32; rep * 32];
+        let s_t = bench(&format!("value_accum_packed_tiled/{bits}bit"), 40, || {
+            tile_out.fill(0.0);
+            fused::value_accum_group_packed(black_box(&p_tile), tokens, rep, &block,
+                                            kv_dim, 0, 32, &mut tile_out, &mut tile);
+            black_box(&tile_out);
         });
         let mut scratch_cold = FusedScratch::default();
         let s_f = bench(&format!("value_accum_fused/{bits}bit"), 40, || {
@@ -138,12 +180,17 @@ fn main() {
             black_box(&out);
         });
         println!("{}", s_p.line());
+        println!("{}", s_t.line());
         println!("{}", s_f.line());
         println!("{}", s_h.line());
         println!("{}", s_u.line());
-        println!("  packed vs fused(cold): {:.2}x   vs fused(hot): {:.2}x   fused vs unfused: {:.2}x",
-                 s_f.mean / s_p.mean, s_h.mean / s_p.mean, s_u.mean / s_f.mean);
-        for s in [&s_p, &s_f, &s_h, &s_u] {
+        println!("  packed vs fused(cold): {:.2}x   vs fused(hot): {:.2}x   \
+                  tiled vs {rep}x packed: {:.2}x   fused vs unfused: {:.2}x",
+                 s_f.mean / s_p.mean, s_h.mean / s_p.mean,
+                 rep as f64 * s_p.mean / s_t.mean, s_u.mean / s_f.mean);
+        sink.record(&s_p, Some(tokens as f64));
+        sink.record(&s_t, Some((rep * tokens) as f64));
+        for s in [&s_f, &s_h, &s_u] {
             sink.record(s, Some(tokens as f64));
         }
     }

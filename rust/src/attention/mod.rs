@@ -182,7 +182,7 @@ mod tests {
             kv_dim: n_kv * hd, head_dim: hd, group: 32,
             key: KeyRepr::Fp, value: ValueRepr::Fp,
             k_window: WindowPolicy::All, v_window: WindowPolicy::All,
-            outlier_frac: 0.0,
+            outlier_frac: 0.0, k_interleave: false,
         });
         cache.append(&k, &v, t);
         let mut out = vec![0f32; h * hd];

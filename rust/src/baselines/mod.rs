@@ -68,6 +68,7 @@ impl Method {
                     k_window: WindowPolicy::None,
                     v_window: WindowPolicy::None,
                     outlier_frac: 0.0,
+                    k_interleave: false,
                 }).collect();
                 SeqKvCache::from_cfgs(cfgs)
             }
@@ -81,6 +82,7 @@ impl Method {
                     k_window: WindowPolicy::None,
                     v_window: WindowPolicy::None,
                     outlier_frac: 0.0,
+                    k_interleave: false,
                 }).collect();
                 SeqKvCache::from_cfgs(cfgs)
             }

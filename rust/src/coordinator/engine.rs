@@ -849,6 +849,11 @@ impl<'a> Engine<'a> {
                 fwd.decode_step(&inputs, &mut caches, &mut self.scratch)?
             };
             self.metrics.attn_us.record(self.scratch.attn_ns as f64 / 1e3);
+            for (acc, &ns) in self.metrics.attn_ns_by_width.iter_mut()
+                .zip(&self.scratch.kernel_ns)
+            {
+                *acc += ns;
+            }
             if let Some(p) = self.pool {
                 if p.threads() > 1 && self.scratch.attn_ns > 0 {
                     let busy = (p.busy_ns() - busy0) as f64;

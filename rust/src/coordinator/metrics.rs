@@ -3,6 +3,8 @@
 
 use std::time::Instant;
 
+use crate::kvcache::cache::{ATTN_WIDTH_BUCKETS, ATTN_WIDTH_LABELS};
+
 #[derive(Debug, Clone)]
 pub struct Metrics {
     started: Instant,
@@ -26,6 +28,10 @@ pub struct Metrics {
     /// per-step wall time of the decode attention fan-out (append+attend
     /// summed over layers), in microseconds
     pub attn_us: Histogram,
+    /// accumulated attend kernel time split by block bit width
+    /// (`attn_width_bucket` order: 1/2/3/4/8/16-bit + the fp window) —
+    /// where decode attention time actually goes under a mixed plan
+    pub attn_ns_by_width: [u64; ATTN_WIDTH_BUCKETS],
     /// per-step worker-pool utilization of the decode attention fan-out:
     /// `busy_time / (threads * attention_wall_time)`, in `[0, 1]`.
     /// Only recorded when the engine runs with a pool of >1 threads.
@@ -76,7 +82,9 @@ impl Default for Metrics {
                   completions: 0, oom_events: 0, ttft_ms: Histogram::default(),
                   tbt_ms: Histogram::default(), total_ms: Histogram::default(),
                   step_us: Histogram::default(), budget_util: Histogram::default(),
-                  attn_us: Histogram::default(), pool_util: Histogram::default(),
+                  attn_us: Histogram::default(),
+                  attn_ns_by_width: [0; ATTN_WIDTH_BUCKETS],
+                  pool_util: Histogram::default(),
                   peak_kv_bytes: 0, pages_requantized: 0, preemptions: 0,
                   prefix_hits: 0, prefix_tokens_reused: 0, cow_splits: 0,
                   cancellations: 0, deadline_hits: 0, pages_spilled: 0,
@@ -130,6 +138,9 @@ impl Metrics {
         self.step_us.merge(&other.step_us);
         self.budget_util.merge(&other.budget_util);
         self.attn_us.merge(&other.attn_us);
+        for (a, b) in self.attn_ns_by_width.iter_mut().zip(&other.attn_ns_by_width) {
+            *a += b;
+        }
         self.pool_util.merge(&other.pool_util);
         self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
         self.pages_requantized += other.pages_requantized;
@@ -194,14 +205,29 @@ impl Metrics {
                     self.sessions_parked, self.sessions_resumed,
                     self.resume_tokens_reused)
         };
+        let by_width = {
+            let tot: u64 = self.attn_ns_by_width.iter().sum();
+            if tot == 0 {
+                String::new()
+            } else {
+                let shares: Vec<String> = self.attn_ns_by_width.iter()
+                    .zip(ATTN_WIDTH_LABELS)
+                    .filter(|(&ns, _)| ns > 0)
+                    .map(|(&ns, label)| {
+                        format!("{label} {:.0}%", ns as f64 / tot as f64 * 100.0)
+                    })
+                    .collect();
+                format!(" | attn by width: {}", shares.join(" "))
+            }
+        };
         format!(
             "tokens: prefill {} decode {} | completions {} | throughput {:.1} tok/s | \
              ttft p50 {:.1} ms p95 {:.1} ms{} | e2e p50 {:.1} ms | step p50 {:.0} µs | \
-             attn p50 {:.0} µs{}{} | peak kv {:.2} MiB | oom {}{}{}{}{}{}",
+             attn p50 {:.0} µs{}{}{} | peak kv {:.2} MiB | oom {}{}{}{}{}{}",
             self.prefill_tokens, self.decode_tokens, self.completions,
             self.throughput(), self.ttft_ms.quantile(0.5), self.ttft_ms.quantile(0.95),
             tbt, self.total_ms.quantile(0.5), self.step_us.quantile(0.5),
-            self.attn_us.quantile(0.5), util, budget,
+            self.attn_us.quantile(0.5), by_width, util, budget,
             self.peak_kv_bytes as f64 / (1 << 20) as f64, self.oom_events, pressure,
             prefix, early, spill, session)
     }
@@ -346,6 +372,29 @@ mod tests {
         let r = m.report();
         assert!(r.contains("spilled 4 pages (3 faults)"), "{r}");
         assert!(r.contains("sessions parked 2 resumed 1 (128 tok reused)"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_width_breakdown_only_when_active() {
+        let mut m = Metrics::default();
+        assert!(!m.report().contains("attn by width"), "silent until sampled");
+        m.attn_ns_by_width[1] = 750; // 2-bit
+        m.attn_ns_by_width[6] = 250; // fp window
+        let r = m.report();
+        assert!(r.contains("attn by width: 2b 75% fp 25%"), "{r}");
+        assert!(!r.contains("4b"), "empty buckets stay out of the report: {r}");
+    }
+
+    #[test]
+    fn merge_sums_width_breakdown_elementwise() {
+        let mut a = Metrics::default();
+        a.attn_ns_by_width[1] = 100;
+        let mut b = Metrics::default();
+        b.attn_ns_by_width[1] = 50;
+        b.attn_ns_by_width[3] = 25;
+        a.merge(&b);
+        assert_eq!(a.attn_ns_by_width[1], 150);
+        assert_eq!(a.attn_ns_by_width[3], 25);
     }
 
     #[test]

@@ -25,8 +25,10 @@
 //! never touched.  `Send` is asserted at compile time below.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use crate::quant::{key_scores_dispatch, value_accum_dispatch, FusedScratch, PackedBlock};
+use crate::quant::{key_scores_group_dispatch, value_accum_group_dispatch, FusedScratch,
+                   PackedBlock, TileScratch};
 
 use super::jl::{JlProjector, SignJlKeys};
 use super::pages::KvSide;
@@ -67,6 +69,13 @@ pub struct LayerCacheCfg {
     pub v_window: WindowPolicy,
     /// KVQuant-style fp outlier fraction applied inside each block
     pub outlier_frac: f64,
+    /// store Key blocks channel-interleaved (`PackedBlock::interleaved`)
+    /// for sequential word loads in the tiled score kernel — a pure word
+    /// permutation, so attend outputs are bit-identical to the linear
+    /// layout (docs/adr/009-swar-and-interleaved-layout.md).  Only
+    /// effective for `KeyRepr::PerChannel` at widths where
+    /// `interleave_supported` holds; Value blocks always stay linear.
+    pub k_interleave: bool,
 }
 
 impl LayerCacheCfg {
@@ -192,10 +201,13 @@ impl LayerKvCache {
                 }
                 let mut block = PackedBlock::default();
                 if self.cfg.outlier_frac > 0.0 {
-                    block.quantize_outliers_into(&self.tscratch, bits, g,
-                                                 self.cfg.outlier_frac, &mut self.qscratch);
+                    block.quantize_outliers_into_layout(&self.tscratch, bits, g,
+                                                        self.cfg.outlier_frac,
+                                                        self.cfg.k_interleave,
+                                                        &mut self.qscratch);
                 } else {
-                    block.quantize_into(&self.tscratch, bits, g, &mut self.qscratch);
+                    block.quantize_into_layout(&self.tscratch, bits, g,
+                                               self.cfg.k_interleave, &mut self.qscratch);
                 }
                 self.k_blocks.push(Arc::new(block));
             }
@@ -457,7 +469,7 @@ impl LayerKvCache {
             debug_assert_eq!(Arc::strong_count(b), 1, "shared pages are spill-exempt");
             encode_block(b, &mut out);
             let stub = PackedBlock {
-                bits: b.bits, n: b.n, group: b.group,
+                bits: b.bits, n: b.n, group: b.group, interleaved: b.interleaved,
                 words: Vec::new(), scales: Vec::new(), mins: Vec::new(),
                 outliers: Vec::new(), uid: 0,
             };
@@ -484,8 +496,8 @@ impl LayerKvCache {
             let restored = decode_block(bytes, &mut pos)
                 .expect("truncated spill extent");
             debug_assert!(b.words.is_empty() && b.n > 0, "restore target must be a stub");
-            debug_assert_eq!((restored.bits, restored.n, restored.group),
-                             (b.bits, b.n, b.group),
+            debug_assert_eq!((restored.bits, restored.n, restored.group, restored.interleaved),
+                             (b.bits, b.n, b.group, b.interleaved),
                              "spill extent does not match the stub's shape");
             *b = Arc::new(restored);
         }
@@ -526,8 +538,16 @@ impl LayerKvCache {
         let scale = 1.0 / (hd as f32).sqrt();
         let g = self.cfg.group;
 
-        scratch.scores.resize(n_heads * total, 0.0);
-        scratch.scores.fill(0.0);
+        // exact-size fast path: the steady decode state hits the same
+        // (n_heads, total) shape every step once the window stabilizes —
+        // skip the resize bookkeeping and just re-zero in place.  A grow
+        // clears first so the old prefix isn't copied twice.
+        if scratch.scores.len() != n_heads * total {
+            scratch.scores.clear();
+            scratch.scores.resize(n_heads * total, 0.0);
+        } else {
+            scratch.scores.fill(0.0);
+        }
 
         // --- K scores ---
         match self.cfg.key {
@@ -542,8 +562,12 @@ impl LayerKvCache {
                     proj.project(&q[h * hd..(h + 1) * hd], &mut scratch.rq);
                     let row = &mut scratch.scores[h * total..h * total + self.k_hist];
                     // compute per (token,kv_head) entries
-                    scratch.jl_tmp.resize(self.k_hist * n_kv, 0.0);
-                    scratch.jl_tmp.fill(0.0);
+                    if scratch.jl_tmp.len() != self.k_hist * n_kv {
+                        scratch.jl_tmp.clear();
+                        scratch.jl_tmp.resize(self.k_hist * n_kv, 0.0);
+                    } else {
+                        scratch.jl_tmp.fill(0.0);
+                    }
                     store.scores(&scratch.rq, &mut scratch.jl_tmp);
                     for t in 0..self.k_hist {
                         row[t] = scratch.jl_tmp[t * n_kv + kvh];
@@ -551,23 +575,48 @@ impl LayerKvCache {
                 }
             }
             KeyRepr::PerChannel { .. } => {
-                // per-block width dispatch (the pressure ladder mixes
-                // widths): uniform widths run the integer-domain packed
-                // kernel, 3-bit blocks fall back to the unpack-based
-                // fused path through the per-thread scratch
-                for (bi, block) in self.k_blocks.iter().enumerate() {
-                    for h in 0..n_heads {
-                        let kvh = h / rep;
-                        let qh = &q[h * hd..(h + 1) * hd];
-                        let row = &mut scratch.scores[h * total + bi * g..h * total + (bi + 1) * g];
-                        key_scores_dispatch(qh, block, g, kvh * hd, &mut scratch.fused, row);
+                // head-tiled per-block dispatch (the pressure ladder
+                // mixes widths): each block's fields decode once per KV
+                // group and fan out across its `rep` query heads, with
+                // per-(head, channel) q·scale precomputed per block.
+                // Contiguous same-width runs share one timer read so the
+                // per-width breakdown costs two clock calls per run.
+                let mut bi = 0;
+                while bi < self.k_blocks.len() {
+                    let bits = self.k_blocks[bi].bits;
+                    let end = self.k_blocks[bi..].iter().position(|b| b.bits != bits)
+                        .map_or(self.k_blocks.len(), |p| bi + p);
+                    let t0 = Instant::now();
+                    for (i, block) in self.k_blocks[bi..end].iter().enumerate() {
+                        let off = (bi + i) * g;
+                        for kvh in 0..n_kv {
+                            let h0 = kvh * rep;
+                            let qg = &q[h0 * hd..(h0 + rep) * hd];
+                            let rows = &mut scratch.scores[h0 * total + off..];
+                            key_scores_group_dispatch(qg, rep, block, g, kvh * hd,
+                                                      &mut scratch.fused, rows, total,
+                                                      &mut scratch.tile);
+                        }
                     }
+                    scratch.kernel_ns[attn_width_bucket(bits)] +=
+                        t0.elapsed().as_nanos() as u64;
+                    bi = end;
                 }
             }
             KeyRepr::PerToken { .. } => {
-                for (bi, block) in self.k_blocks.iter().enumerate() {
-                    token_major_key_scores(block, q, n_heads, hd, kv, rep, g,
-                                           bi * g, total, scratch);
+                let mut bi = 0;
+                while bi < self.k_blocks.len() {
+                    let bits = self.k_blocks[bi].bits;
+                    let end = self.k_blocks[bi..].iter().position(|b| b.bits != bits)
+                        .map_or(self.k_blocks.len(), |p| bi + p);
+                    let t0 = Instant::now();
+                    for (i, block) in self.k_blocks[bi..end].iter().enumerate() {
+                        token_major_key_scores(block, q, n_heads, hd, kv, rep, g,
+                                               (bi + i) * g, total, scratch);
+                    }
+                    scratch.kernel_ns[attn_width_bucket(bits)] +=
+                        t0.elapsed().as_nanos() as u64;
+                    bi = end;
                 }
             }
             KeyRepr::Fp => {}
@@ -575,18 +624,22 @@ impl LayerKvCache {
         // fp K window
         let k_fp_tokens = self.k_fp_tokens();
         let k_fp_start = total - k_fp_tokens;
-        for h in 0..n_heads {
-            let kvh = h / rep;
-            let qh = &q[h * hd..(h + 1) * hd];
-            let row = &mut scratch.scores[h * total..(h + 1) * total];
-            for t in 0..k_fp_tokens {
-                let key = &self.k_fp[t * kv + kvh * hd..t * kv + kvh * hd + hd];
-                let mut acc = 0f32;
-                for d in 0..hd {
-                    acc += qh[d] * key[d];
+        if k_fp_tokens > 0 {
+            let t0 = Instant::now();
+            for h in 0..n_heads {
+                let kvh = h / rep;
+                let qh = &q[h * hd..(h + 1) * hd];
+                let row = &mut scratch.scores[h * total..(h + 1) * total];
+                for t in 0..k_fp_tokens {
+                    let key = &self.k_fp[t * kv + kvh * hd..t * kv + kvh * hd + hd];
+                    let mut acc = 0f32;
+                    for d in 0..hd {
+                        acc += qh[d] * key[d];
+                    }
+                    row[k_fp_start + t] += acc;
                 }
-                row[k_fp_start + t] += acc;
             }
+            scratch.kernel_ns[ATTN_FP_BUCKET] += t0.elapsed().as_nanos() as u64;
         }
 
         // --- softmax (scaled) per head ---
@@ -609,16 +662,31 @@ impl LayerKvCache {
         }
 
         // --- weighted values ---
+        // overwrite semantic (not a fast-path candidate: skipping the
+        // zero-fill when sizes match would accumulate across steps)
         out[..n_heads * hd].fill(0.0);
         match self.cfg.value {
             ValueRepr::PerToken { .. } => {
-                for (bi, block) in self.v_blocks.iter().enumerate() {
-                    for h in 0..n_heads {
-                        let kvh = h / rep;
-                        let p = &scratch.scores[h * total + bi * g..h * total + (bi + 1) * g];
-                        let o = &mut out[h * hd..(h + 1) * hd];
-                        value_accum_dispatch(p, block, kv, kvh * hd, hd, &mut scratch.fused, o);
+                let mut bi = 0;
+                while bi < self.v_blocks.len() {
+                    let bits = self.v_blocks[bi].bits;
+                    let end = self.v_blocks[bi..].iter().position(|b| b.bits != bits)
+                        .map_or(self.v_blocks.len(), |p| bi + p);
+                    let t0 = Instant::now();
+                    for (i, block) in self.v_blocks[bi..end].iter().enumerate() {
+                        let off = (bi + i) * g;
+                        for kvh in 0..n_kv {
+                            let h0 = kvh * rep;
+                            let p = &scratch.scores[h0 * total + off..];
+                            let o = &mut out[h0 * hd..(h0 + rep) * hd];
+                            value_accum_group_dispatch(p, total, rep, block, kv,
+                                                       kvh * hd, hd, &mut scratch.fused,
+                                                       o, &mut scratch.tile);
+                        }
                     }
+                    scratch.kernel_ns[attn_width_bucket(bits)] +=
+                        t0.elapsed().as_nanos() as u64;
+                    bi = end;
                 }
             }
             ValueRepr::Fp => {}
@@ -626,20 +694,24 @@ impl LayerKvCache {
         // fp V window
         let v_fp_tokens = self.v_fp_tokens();
         let v_fp_start = total - v_fp_tokens;
-        for h in 0..n_heads {
-            let kvh = h / rep;
-            let row = &scratch.scores[h * total..(h + 1) * total];
-            let o = &mut out[h * hd..(h + 1) * hd];
-            for t in 0..v_fp_tokens {
-                let p = row[v_fp_start + t];
-                if p == 0.0 {
-                    continue;
-                }
-                let val = &self.v_fp[t * kv + kvh * hd..t * kv + kvh * hd + hd];
-                for d in 0..hd {
-                    o[d] += p * val[d];
+        if v_fp_tokens > 0 {
+            let t0 = Instant::now();
+            for h in 0..n_heads {
+                let kvh = h / rep;
+                let row = &scratch.scores[h * total..(h + 1) * total];
+                let o = &mut out[h * hd..(h + 1) * hd];
+                for t in 0..v_fp_tokens {
+                    let p = row[v_fp_start + t];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let val = &self.v_fp[t * kv + kvh * hd..t * kv + kvh * hd + hd];
+                    for d in 0..hd {
+                        o[d] += p * val[d];
+                    }
                 }
             }
+            scratch.kernel_ns[ATTN_FP_BUCKET] += t0.elapsed().as_nanos() as u64;
         }
     }
 }
@@ -655,17 +727,53 @@ fn token_major_key_scores(block: &PackedBlock, q: &[f32], n_heads: usize,
     block.dequantize_into(&mut scratch.fused.f32s, &mut ints);
     scratch.fused.ints = ints;
     scratch.fused.invalidate();
-    for h in 0..n_heads {
-        let kvh = h / rep;
-        let qh = &q[h * hd..(h + 1) * hd];
+    // KV-group-outer tiling: each dequantized key row is loaded once and
+    // dotted against all `rep` query heads of its group while hot.  The
+    // per-(head, token) dot runs the same d-ascending local accumulator
+    // as before, so scores are bit-identical to the head-outer loop.
+    let n_kv = kv / hd;
+    for kvh in 0..n_kv {
         for t in 0..g {
             let key = &scratch.fused.f32s[t * kv + kvh * hd..t * kv + kvh * hd + hd];
-            let mut acc = 0f32;
-            for d in 0..hd {
-                acc += qh[d] * key[d];
+            for r in 0..rep {
+                let h = kvh * rep + r;
+                if h >= n_heads {
+                    break;
+                }
+                let qh = &q[h * hd..(h + 1) * hd];
+                let mut acc = 0f32;
+                for d in 0..hd {
+                    acc += qh[d] * key[d];
+                }
+                scratch.scores[h * total + t_off + t] += acc;
             }
-            scratch.scores[h * total + t_off + t] += acc;
         }
+    }
+}
+
+/// Buckets of the per-bit-width attention-time breakdown: one per ladder
+/// width (1/2/3/4/8/16-bit) plus the fp window tail.
+pub const ATTN_WIDTH_BUCKETS: usize = 7;
+
+/// Bucket holding the fp window's share.
+pub const ATTN_FP_BUCKET: usize = ATTN_WIDTH_BUCKETS - 1;
+
+/// Report labels, indexed like [`attn_width_bucket`].
+pub const ATTN_WIDTH_LABELS: [&str; ATTN_WIDTH_BUCKETS] =
+    ["1b", "2b", "3b", "4b", "8b", "16b", "fp"];
+
+/// Breakdown bucket for a block width (unknown widths land in the fp
+/// bucket alongside the un-quantized window).
+#[inline]
+pub fn attn_width_bucket(bits: u8) -> usize {
+    match bits {
+        1 => 0,
+        2 => 1,
+        3 => 2,
+        4 => 3,
+        8 => 4,
+        16 => 5,
+        _ => ATTN_FP_BUCKET,
     }
 }
 
@@ -675,15 +783,22 @@ fn token_major_key_scores(block: &PackedBlock, q: &[f32], n_heads: usize,
 /// per pool worker (`DecodeScratch::lanes`), sized once and reused every
 /// step so the steady-state path does not allocate.  The `fused` unpack
 /// scratch is a fallback-only buffer since the integer-domain packed
-/// kernels took over the uniform widths (DESIGN.md §Quantized-Kernels):
-/// its `ints` staging never allocates unless a 3-bit block or the
-/// per-token key ablation path runs on this worker.
+/// kernels took over every ladder width, 3-bit included (DESIGN.md
+/// §Quantized-Kernels): its `ints` staging never allocates unless a
+/// non-ladder width or the per-token key ablation path runs on this
+/// worker.  `tile` carries the head-tiled kernels' per-(head, channel)
+/// weight tables.
 #[derive(Default)]
 pub struct AttnScratch {
     pub scores: Vec<f32>,
     pub fused: FusedScratch,
+    pub tile: TileScratch,
     pub rq: Vec<f32>,
     pub jl_tmp: Vec<f32>,
+    /// accumulated attend kernel time per width bucket
+    /// ([`attn_width_bucket`]); the model step drains this into
+    /// `Metrics::attn_ns_by_width`
+    pub kernel_ns: [u64; ATTN_WIDTH_BUCKETS],
 }
 
 // The decode fan-out sends per-lane caches and per-worker scratches to
@@ -711,7 +826,8 @@ mod tests {
 
     fn cfg(key: KeyRepr, value: ValueRepr, kw: WindowPolicy, vw: WindowPolicy) -> LayerCacheCfg {
         LayerCacheCfg { kv_dim: 64, head_dim: 32, group: 32, key, value,
-                        k_window: kw, v_window: vw, outlier_frac: 0.0 }
+                        k_window: kw, v_window: vw, outlier_frac: 0.0,
+                        k_interleave: false }
     }
 
     #[test]
@@ -937,6 +1053,72 @@ mod tests {
             assert_eq!(r.outliers, o.outliers);
             assert_ne!(r.uid, o.uid, "restored blocks carry fresh uids");
         }
+    }
+
+    #[test]
+    fn attend_bit_identical_across_k_layouts() {
+        // the interleaved Key layout is a pure word permutation, and
+        // attend is the only stage that reads the cache — so bit-equal
+        // attend outputs pin generations bit-identical across layouts
+        for bits in [2u8, 4] {
+            let mut c = cfg(KeyRepr::PerChannel { bits }, ValueRepr::PerToken { bits },
+                            WindowPolicy::Rpc { ratio: 0.2 },
+                            WindowPolicy::Rpc { ratio: 0.2 });
+            c.outlier_frac = 0.01;
+            let mut rng = Rng::new(41);
+            let n_tok = 160;
+            let ks = rng.normal_vec(n_tok * 64);
+            let vs = rng.normal_vec(n_tok * 64);
+            let q = rng.normal_vec(4 * 32);
+
+            let mut lin = LayerKvCache::new(c);
+            lin.append(&ks, &vs, n_tok);
+            c.k_interleave = true;
+            let mut inter = LayerKvCache::new(c);
+            inter.append(&ks, &vs, n_tok);
+            assert!(lin.k_hist > 0);
+            assert!(inter.k_blocks.iter().all(|b| b.interleaved));
+            assert!(inter.v_blocks.iter().all(|b| !b.interleaved), "V stays linear");
+
+            let mut s = AttnScratch::default();
+            let mut ol = vec![0f32; 4 * 32];
+            let mut oi = vec![0f32; 4 * 32];
+            lin.attend(&q, 4, &mut ol, &mut s);
+            inter.attend(&q, 4, &mut oi, &mut s);
+            for (a, b) in ol.iter().zip(&oi) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits}");
+            }
+
+            // the pressure downshift must preserve the equivalence too
+            // (requantize re-applies the layout after re-encoding)
+            if bits > 2 {
+                lin.requant_page(KvSide::Key, 0, 64, 2);
+                inter.requant_page(KvSide::Key, 0, 64, 2);
+                assert!(inter.k_blocks[0].interleaved);
+                lin.attend(&q, 4, &mut ol, &mut s);
+                inter.attend(&q, 4, &mut oi, &mut s);
+                for (a, b) in ol.iter().zip(&oi) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "post-downshift bits={bits}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attend_records_per_width_kernel_time() {
+        let c = cfg(KeyRepr::PerChannel { bits: 2 }, ValueRepr::PerToken { bits: 2 },
+                    WindowPolicy::Rpc { ratio: 0.2 }, WindowPolicy::Rpc { ratio: 0.2 });
+        let mut cache = LayerKvCache::new(c);
+        let mut rng = Rng::new(42);
+        cache.append(&rng.normal_vec(128 * 64), &rng.normal_vec(128 * 64), 128);
+        assert!(cache.k_hist > 0 && cache.k_fp_tokens() > 0);
+        let q = rng.normal_vec(4 * 32);
+        let mut s = AttnScratch::default();
+        let mut o = vec![0f32; 4 * 32];
+        cache.attend(&q, 4, &mut o, &mut s);
+        assert!(s.kernel_ns[attn_width_bucket(2)] > 0, "2-bit bucket must accrue");
+        assert!(s.kernel_ns[ATTN_FP_BUCKET] > 0, "fp window bucket must accrue");
+        assert_eq!(s.kernel_ns[attn_width_bucket(4)], 0, "no 4-bit blocks attended");
     }
 
     #[test]

@@ -57,9 +57,22 @@ impl SeqKvCache {
                 k_window,
                 v_window,
                 outlier_frac,
+                k_interleave: false,
             })
         }).collect();
         SeqKvCache { layers }
+    }
+
+    /// Switch Key-side history to the channel-interleaved word layout
+    /// (or back).  Safe mid-stream: the layout is a per-block property
+    /// selected at quantize time, so existing blocks keep their layout
+    /// and only blocks quantized after the call pick up the new one —
+    /// attend handles mixed layouts block by block and outputs stay
+    /// bit-identical either way (docs/adr/009-swar-and-interleaved-layout.md).
+    pub fn set_k_interleave(&mut self, on: bool) {
+        for l in &mut self.layers {
+            l.cfg.k_interleave = on;
+        }
     }
 
     pub fn len(&self) -> usize {

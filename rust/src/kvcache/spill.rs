@@ -109,10 +109,12 @@ impl Drop for SpillTier {
 }
 
 /// Serialize one packed block: a 7-field u32 LE header
-/// (bits, n, group, |words|, |scales|, |mins|, |outliers|) followed by
-/// the payload vectors (floats as IEEE-754 bit patterns).
+/// (bits|flags, n, group, |words|, |scales|, |mins|, |outliers|) followed
+/// by the payload vectors (floats as IEEE-754 bit patterns).  Field 0's
+/// low byte is the bit width; bit 8 carries the interleaved-layout flag
+/// so a faulted-back Key page keeps its word order.
 pub fn encode_block(b: &PackedBlock, out: &mut Vec<u8>) {
-    let header = [b.bits as u32, b.n as u32, b.group as u32,
+    let header = [b.bits as u32 | (b.interleaved as u32) << 8, b.n as u32, b.group as u32,
                   b.words.len() as u32, b.scales.len() as u32,
                   b.mins.len() as u32, b.outliers.len() as u32];
     for w in header {
@@ -147,7 +149,9 @@ pub fn decode_block(bytes: &[u8], pos: &mut usize) -> Option<PackedBlock> {
         *h = u32_at(bytes, p)?;
         p += 4;
     }
-    let [bits, n, group, n_words, n_scales, n_mins, n_outliers] = header;
+    let [bits_flags, n, group, n_words, n_scales, n_mins, n_outliers] = header;
+    let bits = bits_flags & 0xFF;
+    let interleaved = bits_flags & (1 << 8) != 0;
     let mut read_u32s = |count: u32| -> Option<Vec<u32>> {
         let mut v = Vec::with_capacity(count as usize);
         for _ in 0..count {
@@ -167,7 +171,7 @@ pub fn decode_block(bytes: &[u8], pos: &mut usize) -> Option<PackedBlock> {
         p += 8;
     }
     *pos = p;
-    Some(PackedBlock::from_parts(bits as u8, n as usize, group as usize,
+    Some(PackedBlock::from_parts(bits as u8, n as usize, group as usize, interleaved,
                                  words, scales, mins, outliers))
 }
 
@@ -204,6 +208,21 @@ mod tests {
             assert_eq!(r.outliers, b.outliers);
             assert_ne!(r.uid, b.uid, "restore must not alias the unpack cache");
         }
+    }
+
+    #[test]
+    fn block_codec_preserves_interleaved_layout() {
+        let mut rng = Rng::new(33);
+        let data = rng.normal_vec(256);
+        let mut b = PackedBlock::default();
+        b.quantize_into_layout(&data, 4, 32, true, &mut Vec::new());
+        assert!(b.interleaved);
+        let mut buf = Vec::new();
+        encode_block(&b, &mut buf);
+        let r = decode_block(&buf, &mut 0).unwrap();
+        assert!(r.interleaved, "interleave flag must round-trip");
+        assert_eq!(r.words, b.words);
+        assert_eq!((r.bits, r.n, r.group), (b.bits, b.n, b.group));
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::attention::prefill_attention_with;
+use crate::kvcache::cache::ATTN_WIDTH_BUCKETS;
 use crate::kvcache::{AttnScratch, SeqKvCache};
 use crate::runtime::Runtime;
 use crate::util::WorkerPool;
@@ -123,6 +124,7 @@ impl<'a> Forward<'a> {
         if scratch.lanes.is_empty() {
             scratch.lanes.push(AttnScratch::default());
         }
+        scratch.reset_kernel_ns();
         for layer in 0..m.n_layers {
             let (q, k, v) = self.rt.pre(layer, &h, &pos, t)?;
             let t0 = Instant::now();
@@ -138,6 +140,7 @@ impl<'a> Forward<'a> {
             scratch.attn_ns += t0.elapsed().as_nanos() as u64;
             h = self.rt.post(layer, &scratch.attn[..t * qd], &h, t)?;
         }
+        scratch.gather_kernel_ns();
         self.rt.logits(&h, t)
     }
 
@@ -170,6 +173,7 @@ impl<'a> Forward<'a> {
         if scratch.lanes.len() < nw {
             scratch.lanes.resize_with(nw, AttnScratch::default);
         }
+        scratch.reset_kernel_ns();
         for layer in 0..m.n_layers {
             let (q, k, v) = self.rt.pre(layer, &h, &pos, bsz)?;
             let t0 = Instant::now();
@@ -197,6 +201,7 @@ impl<'a> Forward<'a> {
             scratch.attn_ns += t0.elapsed().as_nanos() as u64;
             h = self.rt.post(layer, &scratch.attn, &h, bsz)?;
         }
+        scratch.gather_kernel_ns();
         self.rt.logits(&h, bsz)
     }
 }
@@ -245,4 +250,28 @@ pub struct DecodeScratch {
     /// append+attend fan-out, summed over layers (feeds
     /// `Metrics::attn_us` and the pool-utilization metric)
     pub attn_ns: u64,
+    /// per-bit-width kernel nanoseconds of the last step, summed over
+    /// layers and lanes ([`crate::kvcache::cache::attn_width_bucket`]
+    /// order; feeds `Metrics::attn_ns_by_width`).  Unlike `attn_ns` this
+    /// times only the inner score/value kernels, not append/softmax.
+    pub kernel_ns: [u64; ATTN_WIDTH_BUCKETS],
+}
+
+impl DecodeScratch {
+    /// Zero the per-width accrual in every lane scratch (step prologue).
+    fn reset_kernel_ns(&mut self) {
+        self.kernel_ns = [0; ATTN_WIDTH_BUCKETS];
+        for ws in &mut self.lanes {
+            ws.kernel_ns = [0; ATTN_WIDTH_BUCKETS];
+        }
+    }
+
+    /// Sum the lanes' per-width accruals into `kernel_ns` (step epilogue).
+    fn gather_kernel_ns(&mut self) {
+        for ws in &self.lanes {
+            for (acc, &ns) in self.kernel_ns.iter_mut().zip(&ws.kernel_ns) {
+                *acc += ns;
+            }
+        }
+    }
 }

@@ -3,22 +3,33 @@
 //! (DESIGN.md §Quantized-Kernels):
 //!
 //! * **Packed (integer-domain, unpack-free)** — [`key_scores_packed`] /
-//!   [`value_accum_packed`]: dot products computed directly on the packed
-//!   `u32` words for uniform widths (1/2/4/8-bit).  One word at a time,
-//!   `elems_per_word` fields are extracted with shift/mask — into
-//!   `std::simd` lanes behind the `simd` cargo feature, or a
-//!   word-at-a-time scalar loop otherwise — and each group's affine
-//!   `(scale, min)` is folded into the accumulator once per group.  No
+//!   [`value_accum_packed`] and their head-tiled group forms
+//!   [`key_scores_group_packed`] / [`value_accum_group_packed`]: dot
+//!   products computed directly on the packed words for every ladder
+//!   width (1/2/3/4/8-bit, plus 16).  Uniform widths extract all fields
+//!   of a 64-bit wide-word (two consecutive `u32`s) at once with SWAR
+//!   shift/mask spreads into byte sub-lanes (`pack::swar_mask`) — the
+//!   default on stable Rust — or into `std::simd` lanes behind the
+//!   nightly-only `simd` cargo feature; 3-bit walks the Eq. 12
+//!   11-per-word layout with a field cursor.  Each group's affine
+//!   `(scale, min)` is folded into the accumulator once per group; no
 //!   `u32` scratch is ever materialized; outliers are applied through
 //!   [`PackedBlock::dequant_at`] on a binary-searched sparse side path.
+//!   The group kernels additionally decode each field once and fan it
+//!   out across all query heads of a KV group, and understand the
+//!   channel-interleaved Key layout (`PackedBlock::interleaved`).
 //!
 //! * **Fused (unpack-based reference)** — [`key_scores_fused`] /
 //!   [`value_accum_fused`]: unpack the block's integer stream into a
-//!   reusable scratch, then fold the dequantization into the dot products
-//!   algebraically.  This is the execution path for 3-bit blocks (the
-//!   11-per-word Eq. 12 layout has no aligned word view) and the oracle
-//!   the packed kernels are pinned bit-exact against
-//!   (`rust/tests/packed_kernels.rs`).
+//!   reusable scratch, then fold the dequantization into the dot
+//!   products algebraically.  Since the 3-bit layout went packed this is
+//!   no longer on the decode path for any ladder width; it remains the
+//!   escape hatch for irregular widths and the oracle the packed kernels
+//!   are pinned bit-exact against (`rust/tests/packed_kernels.rs`).
+//!   A second, structural reference exists inside the packed tier
+//!   itself: [`key_scores_packed_ref`] / [`value_accum_packed_ref`] run
+//!   the identical traversal with per-field scalar extraction instead of
+//!   SWAR lanes — the word-scalar leg of the three-way identity wall.
 //!
 //! Both tiers share the same algebra:
 //!
@@ -32,26 +43,30 @@
 //!        = Σ_t (p[t]·s_{t,g})·Q[t,c]  +  bias_g(c∈g)
 //!     — token-outer/channel-inner, again contiguous in the stream.
 //!
-//! [`key_scores_dispatch`] / [`value_accum_dispatch`] pick the tier per
-//! block width; `kvcache/cache.rs::attend` routes through them, so the
-//! per-thread unpack scratch only ever fills for 3-bit blocks.
+//! Every backend keeps strict mul-then-add (no FMA contraction) and the
+//! identical per-output-slot accumulation order, so SWAR, word-scalar,
+//! `std::simd`, tiled, and interleaved paths all produce bit-identical
+//! f32s.  [`key_scores_dispatch`] / [`value_accum_dispatch`] (and the
+//! `_group_` forms used by `kvcache/cache.rs::attend`) pick the tier per
+//! block width; the per-thread unpack scratch only fills on the
+//! irregular-width fallback.
 
 use super::groupq::PackedBlock;
-use super::pack::{elems_per_word, field_range, unpack_stream};
+use super::pack::{elems_per_word, eq12_field, field_range, swar_mask};
 
-/// True if `bits` has the word-aligned uniform field layout the packed
-/// (unpack-free) kernels handle.  3-bit's 11-per-word layout stays on the
-/// unpack-based fused path (DESIGN.md §Quantized-Kernels).
+/// True if the packed (unpack-free) kernels handle this width: the
+/// word-aligned uniform layouts plus 3-bit's Eq. 12 11-per-word layout
+/// (DESIGN.md §Quantized-Kernels).
 #[inline]
 pub const fn packed_dot_supported(bits: u8) -> bool {
-    bits != 0 && bits != 3 && bits <= 16 && 32 % bits as usize == 0
+    bits == 3 || (bits != 0 && bits <= 16 && 32 % bits as usize == 0)
 }
 
 /// Reusable scratch buffers for the unpack-based fused kernels (one per
 /// worker thread: the decode fan-out carries a `FusedScratch` inside each
 /// worker's `AttnScratch`, never sharing one across threads).  The packed
-/// kernels take no scratch at all, so on plans without 3-bit layers the
-/// `ints` buffer never allocates.
+/// kernels take no scratch at all, so on ladder-width plans the `ints`
+/// buffer never allocates.
 ///
 /// The unpack-cache `tag` stores the [`PackedBlock::uid`] of the block
 /// currently staged in `ints`.  The uid is refreshed on every
@@ -80,6 +95,22 @@ impl FusedScratch {
     }
 }
 
+/// Reusable buffers for the head-tiled group kernels: the per-(channel,
+/// head) `q·scale` table precomputed once per block, per-head bias
+/// accumulators, and per-head `(p, p·s, p·m)` triples for value tiling.
+/// Small (at most `rep·head_dim` f32s) and reused across blocks; lives
+/// inside each worker's `AttnScratch` next to [`FusedScratch`].
+#[derive(Default)]
+pub struct TileScratch {
+    /// `q·scale` per (channel, head), transposed — `qs[d*rep + r]` — so
+    /// one channel's head weights are a contiguous slice
+    qs: Vec<f32>,
+    /// per-head scalars: key bias Σ q·min, or the gathered `p_t` column
+    acc: Vec<f32>,
+    /// per-head `p·min` products (value tiling)
+    pm: Vec<f32>,
+}
+
 /// Sorted-outlier invariant the binary-searched side paths rely on
 /// (established by `PackedBlock::quantize_outliers_into`).
 #[inline]
@@ -89,160 +120,161 @@ fn debug_assert_outliers_sorted(block: &PackedBlock) {
 }
 
 // ---------------------------------------------------------------------------
-// Packed (integer-domain, unpack-free) kernels
+// SWAR row primitives (stable-Rust wide path)
+//
+// Two consecutive u32 words fuse into one u64 wide-word — fields never
+// straddle a u32 boundary when 32 % bits == 0, so the concatenation is
+// seamless.  R = 8/bits shift/mask pairs spread the wide-word into byte
+// sub-lanes (pack::swar_mask); byte j of lane l is field j*R + l.  Each
+// field is extracted exactly once and multiply-added exactly once per
+// output slot, so results are bit-identical to the per-field scalar loop.
+// 16-bit fields don't fit a byte sub-lane and stay on the scalar loop.
 // ---------------------------------------------------------------------------
 
-/// Attention scores of one query head against a **Key block**, computed
-/// directly on the packed words — no unpacked stream is ever
-/// materialized.  Bit-exact with [`key_scores_fused`] (pinned by
-/// `rust/tests/packed_kernels.rs`).
-///
-/// * `q` — the query slice for this KV head (`head_dim` f32s, RoPE'd).
-/// * `block` — channel-major Key block (stream index `c*tokens + t`),
-///   width must satisfy [`packed_dot_supported`].
-/// * `tokens` — tokens in the block (= the per-channel group size).
-/// * `out[t] +=` raw (unscaled) dot products — caller applies 1/sqrt(hd).
-pub fn key_scores_packed(q: &[f32], block: &PackedBlock, tokens: usize,
-                         chan_offset: usize, out: &mut [f32]) {
-    debug_assert_eq!(block.group, tokens);
-    debug_assert!(out.len() >= tokens);
-    debug_assert!(chan_offset + q.len() <= block.scales.len());
-    debug_assert!(packed_dot_supported(block.bits));
-    debug_assert_outliers_sorted(block);
-    let bits = block.bits;
-    let per = elems_per_word(bits);
-    let out = &mut out[..tokens];
-
-    let mut bias = 0f32;
-    if tokens % per == 0 {
-        // every channel row starts word-aligned: word-per-lane-group path
-        let wpr = tokens / per; // words per row
-        for (d, &qd) in q.iter().enumerate() {
-            let c = chan_offset + d;
-            let qs = qd * block.scales[c];
-            bias += qd * block.mins[c];
-            dot_row_aligned(&block.words[c * wpr..(c + 1) * wpr], bits, qs, out);
-        }
-    } else {
-        // rows straddle word boundaries: word-at-a-time view
-        for (d, &qd) in q.iter().enumerate() {
-            let c = chan_offset + d;
-            let qs = qd * block.scales[c];
-            bias += qd * block.mins[c];
-            dot_row_unaligned(&block.words, bits, c * tokens, qs, out);
-        }
+/// `out[j*R + l] += qs * byte_j(lane_l)` for one u32 (bytes 0..4).
+#[inline(always)]
+fn swar_dot_word1<const BITS: usize, const R: usize>(w: u32, qs: f32, out: &mut [f32]) {
+    let mask = swar_mask(BITS as u8);
+    let w = w as u64;
+    let mut lanes = [0u64; R];
+    for (l, lane) in lanes.iter_mut().enumerate() {
+        *lane = (w >> (BITS * l)) & mask;
     }
-    for s in out.iter_mut() {
-        *s += bias;
-    }
-    // outlier corrections: the head's channels are the contiguous stream
-    // range [chan_offset·tokens, (chan_offset+hd)·tokens), binary-searched
-    // in the index-sorted list instead of scanning every outlier per head
-    let lo = block.outliers.partition_point(|&(i, _)| (i as usize) < chan_offset * tokens);
-    let hi = block.outliers
-        .partition_point(|&(i, _)| (i as usize) < (chan_offset + q.len()) * tokens);
-    for &(i, v) in &block.outliers[lo..hi] {
-        let c = i as usize / tokens;
-        let t = i as usize % tokens;
-        out[t] += q[c - chan_offset] * (v - block.dequant_at(i as usize));
+    for j in 0..4 {
+        for (l, &lane) in lanes.iter().enumerate() {
+            out[j * R + l] += qs * ((lane >> (8 * j)) & 0xFF) as f32;
+        }
     }
 }
 
-/// Weighted-value accumulation of one head's probabilities against a
-/// **Value block**, computed directly on the packed words.  Bit-exact
-/// with [`value_accum_fused`].
-///
-/// * `p[t]` — softmax probabilities for this block's tokens.
-/// * `block` — token-major Value block (stream index `t*kv_dim + c`),
-///   width must satisfy [`packed_dot_supported`].
-/// * `kv_dim` — full channel count per token; `chan_offset` selects this
-///   head's `head_dim` channels (must be group-aligned).
-/// * `out[d] +=` accumulated weighted values for d in 0..head_dim.
-pub fn value_accum_packed(p: &[f32], block: &PackedBlock, kv_dim: usize,
-                          chan_offset: usize, head_dim: usize, out: &mut [f32]) {
-    debug_assert_eq!(chan_offset % block.group, 0);
-    debug_assert_eq!(head_dim % block.group, 0);
-    debug_assert!(chan_offset + head_dim <= kv_dim);
-    debug_assert!((chan_offset + head_dim).div_ceil(block.group) <= block.scales.len());
-    debug_assert!(packed_dot_supported(block.bits));
-    debug_assert_outliers_sorted(block);
-    let bits = block.bits;
-    let per = elems_per_word(bits);
-    let tokens = block.n / kv_dim;
-    let groups_per_token = kv_dim / block.group;
-    let g0 = chan_offset / block.group;
-    let gn = head_dim / block.group;
-    // every token row is word-aligned iff a group spans whole words and
-    // token strides land on word boundaries (true for the standard
-    // group=32 layouts at 1/2/4/8-bit)
-    let aligned = block.group % per == 0 && kv_dim % per == 0 && chan_offset % per == 0;
-    let wpg = if aligned { block.group / per } else { 0 }; // words per group
-
-    for (t, &pt) in p.iter().enumerate().take(tokens) {
-        if pt == 0.0 {
-            continue;
+/// `out[i] += qs * field[i]` over whole packed words, SWAR backend.
+#[inline(always)]
+fn swar_dot_words<const BITS: usize, const R: usize>(words: &[u32], qs: f32,
+                                                     out: &mut [f32]) {
+    debug_assert_eq!(BITS * R, 8);
+    let mask = swar_mask(BITS as u8);
+    let per = 32 / BITS;
+    let mut i = 0;
+    let mut t = 0;
+    while i + 1 < words.len() {
+        let w = words[i] as u64 | (words[i + 1] as u64) << 32;
+        let mut lanes = [0u64; R];
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = (w >> (BITS * l)) & mask;
         }
-        let base = t * kv_dim + chan_offset;
-        for g in 0..gn {
-            let gi = t * groups_per_token + g0 + g;
-            let ps = pt * block.scales[gi];
-            let pm = pt * block.mins[gi];
-            let o = &mut out[g * block.group..(g + 1) * block.group];
-            let e0 = base + g * block.group;
-            if aligned {
-                let w0 = e0 / per;
-                accum_row_aligned(&block.words[w0..w0 + wpg], bits, ps, pm, o);
-            } else {
-                accum_row_unaligned(&block.words, bits, e0, ps, pm, o);
+        for j in 0..8 {
+            for (l, &lane) in lanes.iter().enumerate() {
+                out[t + j * R + l] += qs * ((lane >> (8 * j)) & 0xFF) as f32;
+            }
+        }
+        t += 2 * per;
+        i += 2;
+    }
+    if i < words.len() {
+        swar_dot_word1::<BITS, R>(words[i], qs, &mut out[t..t + per]);
+    }
+}
+
+/// `out[i] += ps * field[i] + pm` over whole packed words, SWAR backend.
+#[inline(always)]
+fn swar_accum_words<const BITS: usize, const R: usize>(words: &[u32], ps: f32,
+                                                       pm: f32, out: &mut [f32]) {
+    debug_assert_eq!(BITS * R, 8);
+    let mask = swar_mask(BITS as u8);
+    let per = 32 / BITS;
+    let mut i = 0;
+    let mut t = 0;
+    while i + 1 < words.len() {
+        let w = words[i] as u64 | (words[i + 1] as u64) << 32;
+        let mut lanes = [0u64; R];
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = (w >> (BITS * l)) & mask;
+        }
+        for j in 0..8 {
+            for (l, &lane) in lanes.iter().enumerate() {
+                out[t + j * R + l] += ps * ((lane >> (8 * j)) & 0xFF) as f32 + pm;
+            }
+        }
+        t += 2 * per;
+        i += 2;
+    }
+    if i < words.len() {
+        let w = words[i] as u64;
+        let mut lanes = [0u64; R];
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = (w >> (BITS * l)) & mask;
+        }
+        for j in 0..4 {
+            for (l, &lane) in lanes.iter().enumerate() {
+                out[t + j * R + l] += ps * ((lane >> (8 * j)) & 0xFF) as f32 + pm;
             }
         }
     }
-    // outlier corrections: index-sorted, so the scan is bounded to the
-    // tokens `p` covers; the head's channels are strided per token, so
-    // membership stays a predicate inside the bounded range
-    let hi = block.outliers
-        .partition_point(|&(i, _)| (i as usize) < p.len().min(tokens) * kv_dim);
-    for &(i, v) in &block.outliers[..hi] {
-        let t = i as usize / kv_dim;
-        let c = i as usize % kv_dim;
-        if c >= chan_offset && c < chan_offset + head_dim && p[t] != 0.0 {
-            out[c - chan_offset] += p[t] * (v - block.dequant_at(i as usize));
+}
+
+// ---------------------------------------------------------------------------
+// Eq. 12 3-bit row primitives
+//
+// The 11-per-word layout has no byte-aligned sub-lanes, so SWAR and the
+// word-scalar reference share this cursor walk: one cached word, field
+// index advanced mod 11 (pack::eq12_field handles the 2-bit tail field).
+// ---------------------------------------------------------------------------
+
+/// `out[t] += qs * field[start+t]` over an Eq. 12 3-bit row.
+#[inline]
+fn eq12_dot_row(words: &[u32], start: usize, qs: f32, out: &mut [f32]) {
+    let mut wi = start / 11;
+    let mut f = start % 11;
+    let mut w = words.get(wi).copied().unwrap_or(0);
+    for slot in out.iter_mut() {
+        *slot += qs * eq12_field(w, f) as f32;
+        f += 1;
+        if f == 11 {
+            wi += 1;
+            f = 0;
+            w = words.get(wi).copied().unwrap_or(0);
         }
     }
 }
 
-/// Width-dispatching key kernel: integer-domain packed path for uniform
-/// widths, unpack-based fused fallback for 3-bit.  Same contract as
-/// [`key_scores_fused`]; `scratch` is only touched on the fallback.
+/// `out[i] += ps * field[start+i] + pm` over an Eq. 12 3-bit group row.
 #[inline]
-pub fn key_scores_dispatch(q: &[f32], block: &PackedBlock, tokens: usize,
-                           chan_offset: usize, scratch: &mut FusedScratch,
-                           out: &mut [f32]) {
-    if packed_dot_supported(block.bits) {
-        key_scores_packed(q, block, tokens, chan_offset, out);
-    } else {
-        key_scores_fused(q, block, tokens, chan_offset, scratch, out);
+fn eq12_accum_row(words: &[u32], start: usize, ps: f32, pm: f32, out: &mut [f32]) {
+    let mut wi = start / 11;
+    let mut f = start % 11;
+    let mut w = words.get(wi).copied().unwrap_or(0);
+    for slot in out.iter_mut() {
+        *slot += ps * eq12_field(w, f) as f32 + pm;
+        f += 1;
+        if f == 11 {
+            wi += 1;
+            f = 0;
+            w = words.get(wi).copied().unwrap_or(0);
+        }
     }
 }
 
-/// Width-dispatching value kernel — see [`key_scores_dispatch`].
-#[inline]
-pub fn value_accum_dispatch(p: &[f32], block: &PackedBlock, kv_dim: usize,
-                            chan_offset: usize, head_dim: usize,
-                            scratch: &mut FusedScratch, out: &mut [f32]) {
-    if packed_dot_supported(block.bits) {
-        value_accum_packed(p, block, kv_dim, chan_offset, head_dim, out);
-    } else {
-        value_accum_fused(p, block, kv_dim, chan_offset, head_dim, scratch, out);
-    }
-}
+// ---------------------------------------------------------------------------
+// Backend-dispatching row kernels.  `swar=false` is the word-scalar
+// reference backend: identical traversal, per-field shift/mask
+// extraction — the structural oracle for the SWAR and simd lanes.
+// ---------------------------------------------------------------------------
 
 /// `out[i] += qs * field[i]` over one word-aligned row.
 #[inline]
-fn dot_row_aligned(row_words: &[u32], bits: u8, qs: f32, out: &mut [f32]) {
-    #[cfg(feature = "simd")]
-    if simd::dot_row(row_words, bits, qs, out) {
-        return;
+fn dot_row_aligned(row_words: &[u32], bits: u8, qs: f32, out: &mut [f32], swar: bool) {
+    if swar {
+        #[cfg(feature = "simd")]
+        if simd::dot_row(row_words, bits, qs, out) {
+            return;
+        }
+        match bits {
+            1 => return swar_dot_words::<1, 8>(row_words, qs, out),
+            2 => return swar_dot_words::<2, 4>(row_words, qs, out),
+            4 => return swar_dot_words::<4, 2>(row_words, qs, out),
+            8 => return swar_dot_words::<8, 1>(row_words, qs, out),
+            _ => {} // 16-bit fields don't fit byte sub-lanes
+        }
     }
     let per = elems_per_word(bits);
     let mask = (1u32 << bits) - 1;
@@ -254,7 +286,29 @@ fn dot_row_aligned(row_words: &[u32], bits: u8, qs: f32, out: &mut [f32]) {
     }
 }
 
-/// `out[i] += qs * field[start+i]` over a row that straddles words.
+/// `out[i] += qs * field[i]` for the `per` fields of a single word (the
+/// interleaved layout's strided walk visits one u32 at a time).
+#[inline]
+fn dot_word1(w: u32, bits: u8, qs: f32, out: &mut [f32], swar: bool) {
+    if swar {
+        match bits {
+            1 => return swar_dot_word1::<1, 8>(w, qs, out),
+            2 => return swar_dot_word1::<2, 4>(w, qs, out),
+            4 => return swar_dot_word1::<4, 2>(w, qs, out),
+            8 => return swar_dot_word1::<8, 1>(w, qs, out),
+            _ => {}
+        }
+    }
+    let per = elems_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let b = bits as usize;
+    for (i, slot) in out[..per].iter_mut().enumerate() {
+        *slot += qs * ((w >> (b * i)) & mask) as f32;
+    }
+}
+
+/// `out[i] += qs * field[start+i]` over a row that straddles words
+/// (word-scalar on every backend: these shapes never hit the hot path).
 #[inline]
 fn dot_row_unaligned(words: &[u32], bits: u8, start: usize, qs: f32, out: &mut [f32]) {
     let b = bits as usize;
@@ -270,10 +324,20 @@ fn dot_row_unaligned(words: &[u32], bits: u8, start: usize, qs: f32, out: &mut [
 
 /// `out[i] += ps * field[i] + pm` over one word-aligned group row.
 #[inline]
-fn accum_row_aligned(row_words: &[u32], bits: u8, ps: f32, pm: f32, out: &mut [f32]) {
-    #[cfg(feature = "simd")]
-    if simd::accum_row(row_words, bits, ps, pm, out) {
-        return;
+fn accum_row_aligned(row_words: &[u32], bits: u8, ps: f32, pm: f32, out: &mut [f32],
+                     swar: bool) {
+    if swar {
+        #[cfg(feature = "simd")]
+        if simd::accum_row(row_words, bits, ps, pm, out) {
+            return;
+        }
+        match bits {
+            1 => return swar_accum_words::<1, 8>(row_words, ps, pm, out),
+            2 => return swar_accum_words::<2, 4>(row_words, ps, pm, out),
+            4 => return swar_accum_words::<4, 2>(row_words, ps, pm, out),
+            8 => return swar_accum_words::<8, 1>(row_words, ps, pm, out),
+            _ => {}
+        }
     }
     let per = elems_per_word(bits);
     let mask = (1u32 << bits) - 1;
@@ -297,6 +361,748 @@ fn accum_row_unaligned(words: &[u32], bits: u8, start: usize, ps: f32, pm: f32,
             *slot += ps * ((w >> (b * (f0 + j))) & mask) as f32 + pm;
         }
         t += n;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed (integer-domain, unpack-free) single-head kernels
+// ---------------------------------------------------------------------------
+
+/// Attention scores of one query head against a **Key block**, computed
+/// directly on the packed words — no unpacked stream is ever
+/// materialized.  Bit-exact with [`key_scores_fused`] and with
+/// [`key_scores_packed_ref`] (pinned by `rust/tests/packed_kernels.rs`).
+///
+/// * `q` — the query slice for this KV head (`head_dim` f32s, RoPE'd).
+/// * `block` — channel-major Key block (stream index `c*tokens + t`),
+///   width must satisfy [`packed_dot_supported`]; either word layout.
+/// * `tokens` — tokens in the block (= the per-channel group size).
+/// * `out[t] +=` raw (unscaled) dot products — caller applies 1/sqrt(hd).
+pub fn key_scores_packed(q: &[f32], block: &PackedBlock, tokens: usize,
+                         chan_offset: usize, out: &mut [f32]) {
+    key_scores_packed_impl(q, block, tokens, chan_offset, out, true);
+}
+
+/// Word-scalar reference backend of [`key_scores_packed`]: identical
+/// traversal with per-field shift/mask extraction instead of SWAR lanes.
+/// The three-way identity wall pins SWAR (and `--features simd`) against
+/// this.
+pub fn key_scores_packed_ref(q: &[f32], block: &PackedBlock, tokens: usize,
+                             chan_offset: usize, out: &mut [f32]) {
+    key_scores_packed_impl(q, block, tokens, chan_offset, out, false);
+}
+
+fn key_scores_packed_impl(q: &[f32], block: &PackedBlock, tokens: usize,
+                          chan_offset: usize, out: &mut [f32], swar: bool) {
+    debug_assert_eq!(block.group, tokens);
+    debug_assert!(out.len() >= tokens);
+    debug_assert!(chan_offset + q.len() <= block.scales.len());
+    debug_assert!(packed_dot_supported(block.bits));
+    debug_assert_outliers_sorted(block);
+    let bits = block.bits;
+    let out = &mut out[..tokens];
+
+    let mut bias = 0f32;
+    if bits == 3 {
+        for (d, &qd) in q.iter().enumerate() {
+            let c = chan_offset + d;
+            let qs = qd * block.scales[c];
+            bias += qd * block.mins[c];
+            eq12_dot_row(&block.words, c * tokens, qs, out);
+        }
+    } else {
+        let per = elems_per_word(bits);
+        if block.interleaved {
+            // interleave guarantees tokens % per == 0; word w of channel
+            // c sits at words[w*n_chan + c]
+            let wpr = tokens / per;
+            let n_chan = block.n / block.group;
+            for (d, &qd) in q.iter().enumerate() {
+                let c = chan_offset + d;
+                let qs = qd * block.scales[c];
+                bias += qd * block.mins[c];
+                for w in 0..wpr {
+                    dot_word1(block.words[w * n_chan + c], bits, qs,
+                              &mut out[w * per..(w + 1) * per], swar);
+                }
+            }
+        } else if tokens % per == 0 {
+            // every channel row starts word-aligned: whole-word path
+            let wpr = tokens / per; // words per row
+            for (d, &qd) in q.iter().enumerate() {
+                let c = chan_offset + d;
+                let qs = qd * block.scales[c];
+                bias += qd * block.mins[c];
+                dot_row_aligned(&block.words[c * wpr..(c + 1) * wpr], bits, qs, out, swar);
+            }
+        } else {
+            // rows straddle word boundaries: word-at-a-time view
+            for (d, &qd) in q.iter().enumerate() {
+                let c = chan_offset + d;
+                let qs = qd * block.scales[c];
+                bias += qd * block.mins[c];
+                dot_row_unaligned(&block.words, bits, c * tokens, qs, out);
+            }
+        }
+    }
+    for s in out.iter_mut() {
+        *s += bias;
+    }
+    // outlier corrections: the head's channels are the contiguous stream
+    // range [chan_offset·tokens, (chan_offset+hd)·tokens), binary-searched
+    // in the index-sorted list instead of scanning every outlier per head
+    let lo = block.outliers.partition_point(|&(i, _)| (i as usize) < chan_offset * tokens);
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < (chan_offset + q.len()) * tokens);
+    for &(i, v) in &block.outliers[lo..hi] {
+        let c = i as usize / tokens;
+        let t = i as usize % tokens;
+        out[t] += q[c - chan_offset] * (v - block.dequant_at(i as usize));
+    }
+}
+
+/// Weighted-value accumulation of one head's probabilities against a
+/// **Value block**, computed directly on the packed words.  Bit-exact
+/// with [`value_accum_fused`] and [`value_accum_packed_ref`].
+///
+/// * `p[t]` — softmax probabilities for this block's tokens.
+/// * `block` — token-major Value block (stream index `t*kv_dim + c`),
+///   width must satisfy [`packed_dot_supported`]; always linear layout
+///   (the channel interleave is Key-only).
+/// * `kv_dim` — full channel count per token; `chan_offset` selects this
+///   head's `head_dim` channels (must be group-aligned).
+/// * `out[d] +=` accumulated weighted values for d in 0..head_dim.
+pub fn value_accum_packed(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                          chan_offset: usize, head_dim: usize, out: &mut [f32]) {
+    value_accum_packed_impl(p, block, kv_dim, chan_offset, head_dim, out, true);
+}
+
+/// Word-scalar reference backend of [`value_accum_packed`] — see
+/// [`key_scores_packed_ref`].
+pub fn value_accum_packed_ref(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                              chan_offset: usize, head_dim: usize, out: &mut [f32]) {
+    value_accum_packed_impl(p, block, kv_dim, chan_offset, head_dim, out, false);
+}
+
+fn value_accum_packed_impl(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                           chan_offset: usize, head_dim: usize, out: &mut [f32],
+                           swar: bool) {
+    debug_assert_eq!(chan_offset % block.group, 0);
+    debug_assert_eq!(head_dim % block.group, 0);
+    debug_assert!(chan_offset + head_dim <= kv_dim);
+    debug_assert!((chan_offset + head_dim).div_ceil(block.group) <= block.scales.len());
+    debug_assert!(packed_dot_supported(block.bits));
+    debug_assert!(!block.interleaved, "Value blocks stay linear");
+    debug_assert_outliers_sorted(block);
+    let bits = block.bits;
+    let per = elems_per_word(bits);
+    let tokens = block.n / kv_dim;
+    let groups_per_token = kv_dim / block.group;
+    let g0 = chan_offset / block.group;
+    let gn = head_dim / block.group;
+    // every token row is word-aligned iff a group spans whole words and
+    // token strides land on word boundaries (true for the standard
+    // group=32 layouts at 1/2/4/8-bit); 3-bit always walks the cursor
+    let aligned = bits != 3 && block.group % per == 0 && kv_dim % per == 0
+        && chan_offset % per == 0;
+    let wpg = if aligned { block.group / per } else { 0 }; // words per group
+
+    for (t, &pt) in p.iter().enumerate().take(tokens) {
+        if pt == 0.0 {
+            continue;
+        }
+        let base = t * kv_dim + chan_offset;
+        for g in 0..gn {
+            let gi = t * groups_per_token + g0 + g;
+            let ps = pt * block.scales[gi];
+            let pm = pt * block.mins[gi];
+            let o = &mut out[g * block.group..(g + 1) * block.group];
+            let e0 = base + g * block.group;
+            if aligned {
+                let w0 = e0 / per;
+                accum_row_aligned(&block.words[w0..w0 + wpg], bits, ps, pm, o, swar);
+            } else if bits == 3 {
+                eq12_accum_row(&block.words, e0, ps, pm, o);
+            } else {
+                accum_row_unaligned(&block.words, bits, e0, ps, pm, o);
+            }
+        }
+    }
+    // outlier corrections: index-sorted, so the scan is bounded to the
+    // tokens `p` covers; the head's channels are strided per token, so
+    // membership stays a predicate inside the bounded range
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < p.len().min(tokens) * kv_dim);
+    for &(i, v) in &block.outliers[..hi] {
+        let t = i as usize / kv_dim;
+        let c = i as usize % kv_dim;
+        if c >= chan_offset && c < chan_offset + head_dim && p[t] != 0.0 {
+            out[c - chan_offset] += p[t] * (v - block.dequant_at(i as usize));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Head-tiled group kernels: one KV group's `rep` query heads per call.
+// Each packed field is decoded once and fanned out across the tile; the
+// per-(channel, head) q·scale products are precomputed once per block.
+// Per-output-slot accumulation chains are the same adds in the same
+// order as `rep` successive single-head calls, so results are
+// bit-identical (pinned by rust/tests/packed_kernels.rs).
+// ---------------------------------------------------------------------------
+
+/// Head-tiled key kernel: scores of `rep` query heads sharing one KV
+/// head against a Key block.
+///
+/// * `q` — `rep * head_dim` f32s, head-major (the query group).
+/// * `out` — `rep` rows spaced `stride` apart: row `r` receives
+///   `out[r*stride .. r*stride + tokens] +=` scores.
+#[allow(clippy::too_many_arguments)]
+pub fn key_scores_group_packed(q: &[f32], rep: usize, block: &PackedBlock,
+                               tokens: usize, chan_offset: usize, out: &mut [f32],
+                               stride: usize, tile: &mut TileScratch) {
+    key_scores_group_impl(q, rep, block, tokens, chan_offset, out, stride, tile, true);
+}
+
+/// Word-scalar reference backend of [`key_scores_group_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn key_scores_group_ref(q: &[f32], rep: usize, block: &PackedBlock,
+                            tokens: usize, chan_offset: usize, out: &mut [f32],
+                            stride: usize, tile: &mut TileScratch) {
+    key_scores_group_impl(q, rep, block, tokens, chan_offset, out, stride, tile, false);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn key_scores_group_impl(q: &[f32], rep: usize, block: &PackedBlock, tokens: usize,
+                         chan_offset: usize, out: &mut [f32], stride: usize,
+                         tile: &mut TileScratch, swar: bool) {
+    debug_assert_eq!(block.group, tokens);
+    debug_assert!(rep >= 1 && q.len() % rep == 0);
+    let hd = q.len() / rep;
+    debug_assert!(chan_offset + hd <= block.scales.len());
+    debug_assert!(stride >= tokens);
+    debug_assert!(out.len() >= (rep - 1) * stride + tokens);
+    debug_assert!(packed_dot_supported(block.bits));
+    debug_assert_outliers_sorted(block);
+    let bits = block.bits;
+
+    // per-(channel, head) q·scale table + per-head bias, once per block;
+    // the bias sums run d-ascending exactly like the single-head kernel
+    tile.qs.clear();
+    tile.qs.resize(rep * hd, 0.0);
+    tile.acc.clear();
+    tile.acc.resize(rep, 0.0);
+    for r in 0..rep {
+        let qh = &q[r * hd..(r + 1) * hd];
+        let mut bias = 0f32;
+        for (d, &qd) in qh.iter().enumerate() {
+            let c = chan_offset + d;
+            tile.qs[d * rep + r] = qd * block.scales[c];
+            bias += qd * block.mins[c];
+        }
+        tile.acc[r] = bias;
+    }
+
+    if bits == 3 {
+        for d in 0..hd {
+            let c = chan_offset + d;
+            eq12_dot_row_multi(&block.words, c * tokens, tokens,
+                               &tile.qs[d * rep..(d + 1) * rep], out, stride);
+        }
+    } else {
+        let per = elems_per_word(bits);
+        if block.interleaved {
+            // the layout's payoff: walk words sequentially — one token
+            // chunk across every channel of the tile per stride step
+            let wpr = tokens / per;
+            let n_chan = block.n / block.group;
+            for w in 0..wpr {
+                let base = w * n_chan + chan_offset;
+                for d in 0..hd {
+                    dot_word1_multi(block.words[base + d], bits,
+                                    &tile.qs[d * rep..(d + 1) * rep],
+                                    &mut out[w * per..], stride, swar);
+                }
+            }
+        } else if tokens % per == 0 {
+            let wpr = tokens / per;
+            for d in 0..hd {
+                let c = chan_offset + d;
+                dot_row_multi(&block.words[c * wpr..(c + 1) * wpr], bits,
+                              &tile.qs[d * rep..(d + 1) * rep], out, stride, swar);
+            }
+        } else {
+            for d in 0..hd {
+                let c = chan_offset + d;
+                dot_row_unaligned_multi(&block.words, bits, c * tokens, tokens,
+                                        &tile.qs[d * rep..(d + 1) * rep], out, stride);
+            }
+        }
+    }
+    // per-head bias, then outliers — the same per-slot positions in the
+    // accumulation chain as the single-head kernel
+    for r in 0..rep {
+        let bias = tile.acc[r];
+        for s in out[r * stride..r * stride + tokens].iter_mut() {
+            *s += bias;
+        }
+    }
+    let lo = block.outliers.partition_point(|&(i, _)| (i as usize) < chan_offset * tokens);
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < (chan_offset + hd) * tokens);
+    for &(i, v) in &block.outliers[lo..hi] {
+        let c = i as usize / tokens;
+        let t = i as usize % tokens;
+        let corr = v - block.dequant_at(i as usize);
+        for r in 0..rep {
+            out[r * stride + t] += q[r * hd + (c - chan_offset)] * corr;
+        }
+    }
+}
+
+/// Head-tiled value kernel: weighted-value accumulation for `rep` heads
+/// sharing one KV head.  Row `r`'s probabilities are
+/// `p[r*p_stride .. r*p_stride + tokens]`; its output accumulates into
+/// `out[r*head_dim .. (r+1)*head_dim]`.  Per-head `p[t] == 0.0` skips are
+/// preserved exactly (adding a zero term would flip `-0.0` accumulators).
+#[allow(clippy::too_many_arguments)]
+pub fn value_accum_group_packed(p: &[f32], p_stride: usize, rep: usize,
+                                block: &PackedBlock, kv_dim: usize,
+                                chan_offset: usize, head_dim: usize,
+                                out: &mut [f32], tile: &mut TileScratch) {
+    value_accum_group_impl(p, p_stride, rep, block, kv_dim, chan_offset, head_dim,
+                           out, tile, true);
+}
+
+/// Word-scalar reference backend of [`value_accum_group_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn value_accum_group_ref(p: &[f32], p_stride: usize, rep: usize,
+                             block: &PackedBlock, kv_dim: usize,
+                             chan_offset: usize, head_dim: usize,
+                             out: &mut [f32], tile: &mut TileScratch) {
+    value_accum_group_impl(p, p_stride, rep, block, kv_dim, chan_offset, head_dim,
+                           out, tile, false);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn value_accum_group_impl(p: &[f32], p_stride: usize, rep: usize,
+                          block: &PackedBlock, kv_dim: usize, chan_offset: usize,
+                          head_dim: usize, out: &mut [f32], tile: &mut TileScratch,
+                          swar: bool) {
+    debug_assert_eq!(chan_offset % block.group, 0);
+    debug_assert_eq!(head_dim % block.group, 0);
+    debug_assert!(chan_offset + head_dim <= kv_dim);
+    debug_assert!((chan_offset + head_dim).div_ceil(block.group) <= block.scales.len());
+    debug_assert!(packed_dot_supported(block.bits));
+    debug_assert!(!block.interleaved, "Value blocks stay linear");
+    debug_assert_outliers_sorted(block);
+    debug_assert!(out.len() >= rep * head_dim);
+    let bits = block.bits;
+    let per = elems_per_word(bits);
+    let tokens = block.n / kv_dim;
+    debug_assert!(rep >= 1 && p.len() >= (rep - 1) * p_stride + tokens);
+    let groups_per_token = kv_dim / block.group;
+    let g0 = chan_offset / block.group;
+    let gn = head_dim / block.group;
+    let aligned = bits != 3 && block.group % per == 0 && kv_dim % per == 0
+        && chan_offset % per == 0;
+    let wpg = if aligned { block.group / per } else { 0 };
+
+    tile.acc.clear();
+    tile.acc.resize(rep, 0.0); // p_t column
+    tile.qs.clear();
+    tile.qs.resize(rep, 0.0); // p_t·scale
+    tile.pm.clear();
+    tile.pm.resize(rep, 0.0); // p_t·min
+    for t in 0..tokens {
+        let mut any = false;
+        for r in 0..rep {
+            let pt = p[r * p_stride + t];
+            tile.acc[r] = pt;
+            any |= pt != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        let base = t * kv_dim + chan_offset;
+        for g in 0..gn {
+            let gi = t * groups_per_token + g0 + g;
+            let (s, m) = (block.scales[gi], block.mins[gi]);
+            for r in 0..rep {
+                tile.qs[r] = tile.acc[r] * s;
+                tile.pm[r] = tile.acc[r] * m;
+            }
+            let e0 = base + g * block.group;
+            let o = &mut out[g * block.group..];
+            if aligned {
+                let w0 = e0 / per;
+                accum_row_multi(&block.words[w0..w0 + wpg], bits, &tile.acc,
+                                &tile.qs, &tile.pm, o, head_dim, swar);
+            } else if bits == 3 {
+                eq12_accum_row_multi(&block.words, e0, block.group, &tile.acc,
+                                     &tile.qs, &tile.pm, o, head_dim);
+            } else {
+                accum_row_unaligned_multi(&block.words, bits, e0, block.group,
+                                          &tile.acc, &tile.qs, &tile.pm, o, head_dim);
+            }
+        }
+    }
+    let hi = block.outliers
+        .partition_point(|&(i, _)| (i as usize) < tokens * kv_dim);
+    for &(i, v) in &block.outliers[..hi] {
+        let t = i as usize / kv_dim;
+        let c = i as usize % kv_dim;
+        if c >= chan_offset && c < chan_offset + head_dim {
+            let corr = v - block.dequant_at(i as usize);
+            for r in 0..rep {
+                let pt = p[r * p_stride + t];
+                if pt != 0.0 {
+                    out[r * head_dim + (c - chan_offset)] += pt * corr;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-head row primitives: decode each field once, fan it out across
+// the tile.  `qs`/`ps`/`pm` hold one weight per head; output rows are
+// `stride` apart.  Each slot still receives exactly one add of exactly
+// the single-head value, so any backend is bit-identical to per-head.
+// ---------------------------------------------------------------------------
+
+/// `out[r*stride + t] += qs[r] * field[t]` over a contiguous word row.
+#[inline]
+fn dot_row_multi(row_words: &[u32], bits: u8, qs: &[f32], out: &mut [f32],
+                 stride: usize, swar: bool) {
+    if swar {
+        #[cfg(feature = "simd")]
+        if simd::dot_row_multi(row_words, bits, qs, out, stride) {
+            return;
+        }
+        match bits {
+            1 => return swar_dot_words_multi::<1, 8>(row_words, qs, out, stride),
+            2 => return swar_dot_words_multi::<2, 4>(row_words, qs, out, stride),
+            4 => return swar_dot_words_multi::<4, 2>(row_words, qs, out, stride),
+            8 => return swar_dot_words_multi::<8, 1>(row_words, qs, out, stride),
+            _ => {}
+        }
+    }
+    let per = elems_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let b = bits as usize;
+    for (wi, w) in row_words.iter().enumerate() {
+        let t0 = wi * per;
+        for i in 0..per {
+            let fv = ((w >> (b * i)) & mask) as f32;
+            for (r, &qsr) in qs.iter().enumerate() {
+                out[r * stride + t0 + i] += qsr * fv;
+            }
+        }
+    }
+}
+
+/// SWAR backend of [`dot_row_multi`].
+#[inline(always)]
+fn swar_dot_words_multi<const BITS: usize, const R: usize>(words: &[u32], qs: &[f32],
+                                                           out: &mut [f32],
+                                                           stride: usize) {
+    debug_assert_eq!(BITS * R, 8);
+    let mask = swar_mask(BITS as u8);
+    let per = 32 / BITS;
+    let mut i = 0;
+    let mut t = 0;
+    while i + 1 < words.len() {
+        let w = words[i] as u64 | (words[i + 1] as u64) << 32;
+        let mut lanes = [0u64; R];
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = (w >> (BITS * l)) & mask;
+        }
+        for j in 0..8 {
+            for (l, &lane) in lanes.iter().enumerate() {
+                let fv = ((lane >> (8 * j)) & 0xFF) as f32;
+                let slot = t + j * R + l;
+                for (r, &qsr) in qs.iter().enumerate() {
+                    out[r * stride + slot] += qsr * fv;
+                }
+            }
+        }
+        t += 2 * per;
+        i += 2;
+    }
+    if i < words.len() {
+        swar_dot_word1_multi::<BITS, R>(words[i], qs, &mut out[t..], stride);
+    }
+}
+
+/// `out[r*stride + i] += qs[r] * field[i]` for one u32's fields.
+#[inline]
+fn dot_word1_multi(w: u32, bits: u8, qs: &[f32], out: &mut [f32], stride: usize,
+                   swar: bool) {
+    if swar {
+        match bits {
+            1 => return swar_dot_word1_multi::<1, 8>(w, qs, out, stride),
+            2 => return swar_dot_word1_multi::<2, 4>(w, qs, out, stride),
+            4 => return swar_dot_word1_multi::<4, 2>(w, qs, out, stride),
+            8 => return swar_dot_word1_multi::<8, 1>(w, qs, out, stride),
+            _ => {}
+        }
+    }
+    let per = elems_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let b = bits as usize;
+    for i in 0..per {
+        let fv = ((w >> (b * i)) & mask) as f32;
+        for (r, &qsr) in qs.iter().enumerate() {
+            out[r * stride + i] += qsr * fv;
+        }
+    }
+}
+
+/// SWAR backend of [`dot_word1_multi`].
+#[inline(always)]
+fn swar_dot_word1_multi<const BITS: usize, const R: usize>(w: u32, qs: &[f32],
+                                                           out: &mut [f32],
+                                                           stride: usize) {
+    let mask = swar_mask(BITS as u8);
+    let w = w as u64;
+    let mut lanes = [0u64; R];
+    for (l, lane) in lanes.iter_mut().enumerate() {
+        *lane = (w >> (BITS * l)) & mask;
+    }
+    for j in 0..4 {
+        for (l, &lane) in lanes.iter().enumerate() {
+            let fv = ((lane >> (8 * j)) & 0xFF) as f32;
+            let slot = j * R + l;
+            for (r, &qsr) in qs.iter().enumerate() {
+                out[r * stride + slot] += qsr * fv;
+            }
+        }
+    }
+}
+
+/// `out[r*stride + t] += qs[r] * field[start+t]` over a word-straddling row.
+#[inline]
+fn dot_row_unaligned_multi(words: &[u32], bits: u8, start: usize, len: usize,
+                           qs: &[f32], out: &mut [f32], stride: usize) {
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for (w, f0, n) in field_range(words, bits, start, len) {
+        for j in 0..n {
+            let fv = ((w >> (b * (f0 + j))) & mask) as f32;
+            for (r, &qsr) in qs.iter().enumerate() {
+                out[r * stride + t + j] += qsr * fv;
+            }
+        }
+        t += n;
+    }
+}
+
+/// `out[r*stride + t] += qs[r] * field[start+t]` over an Eq. 12 row.
+#[inline]
+fn eq12_dot_row_multi(words: &[u32], start: usize, tokens: usize, qs: &[f32],
+                      out: &mut [f32], stride: usize) {
+    let mut wi = start / 11;
+    let mut f = start % 11;
+    let mut w = words.get(wi).copied().unwrap_or(0);
+    for t in 0..tokens {
+        let fv = eq12_field(w, f) as f32;
+        for (r, &qsr) in qs.iter().enumerate() {
+            out[r * stride + t] += qsr * fv;
+        }
+        f += 1;
+        if f == 11 {
+            wi += 1;
+            f = 0;
+            w = words.get(wi).copied().unwrap_or(0);
+        }
+    }
+}
+
+/// `out[r*stride + i] += ps[r] * field[i] + pm[r]` over one group row,
+/// skipping heads whose `pt[r] == 0.0`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn accum_row_multi(row_words: &[u32], bits: u8, pt: &[f32], ps: &[f32], pm: &[f32],
+                   out: &mut [f32], stride: usize, swar: bool) {
+    if swar {
+        #[cfg(feature = "simd")]
+        if simd::accum_row_multi(row_words, bits, pt, ps, pm, out, stride) {
+            return;
+        }
+        match bits {
+            1 => return swar_accum_words_multi::<1, 8>(row_words, pt, ps, pm, out, stride),
+            2 => return swar_accum_words_multi::<2, 4>(row_words, pt, ps, pm, out, stride),
+            4 => return swar_accum_words_multi::<4, 2>(row_words, pt, ps, pm, out, stride),
+            8 => return swar_accum_words_multi::<8, 1>(row_words, pt, ps, pm, out, stride),
+            _ => {}
+        }
+    }
+    let per = elems_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let b = bits as usize;
+    for (wi, w) in row_words.iter().enumerate() {
+        let c0 = wi * per;
+        for i in 0..per {
+            let fv = ((w >> (b * i)) & mask) as f32;
+            for r in 0..pt.len() {
+                if pt[r] == 0.0 {
+                    continue;
+                }
+                out[r * stride + c0 + i] += ps[r] * fv + pm[r];
+            }
+        }
+    }
+}
+
+/// SWAR backend of [`accum_row_multi`].
+#[inline(always)]
+fn swar_accum_words_multi<const BITS: usize, const R: usize>(
+    words: &[u32], pt: &[f32], ps: &[f32], pm: &[f32], out: &mut [f32], stride: usize) {
+    debug_assert_eq!(BITS * R, 8);
+    let mask = swar_mask(BITS as u8);
+    let per = 32 / BITS;
+    for (wi, &word) in words.iter().enumerate() {
+        let c0 = wi * per;
+        let w = word as u64;
+        let mut lanes = [0u64; R];
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = (w >> (BITS * l)) & mask;
+        }
+        for j in 0..4 {
+            for (l, &lane) in lanes.iter().enumerate() {
+                let fv = ((lane >> (8 * j)) & 0xFF) as f32;
+                let slot = c0 + j * R + l;
+                for r in 0..pt.len() {
+                    if pt[r] == 0.0 {
+                        continue;
+                    }
+                    out[r * stride + slot] += ps[r] * fv + pm[r];
+                }
+            }
+        }
+    }
+}
+
+/// Eq. 12 backend of the multi-head value row.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn eq12_accum_row_multi(words: &[u32], start: usize, len: usize, pt: &[f32],
+                        ps: &[f32], pm: &[f32], out: &mut [f32], stride: usize) {
+    let mut wi = start / 11;
+    let mut f = start % 11;
+    let mut w = words.get(wi).copied().unwrap_or(0);
+    for i in 0..len {
+        let fv = eq12_field(w, f) as f32;
+        for r in 0..pt.len() {
+            if pt[r] == 0.0 {
+                continue;
+            }
+            out[r * stride + i] += ps[r] * fv + pm[r];
+        }
+        f += 1;
+        if f == 11 {
+            wi += 1;
+            f = 0;
+            w = words.get(wi).copied().unwrap_or(0);
+        }
+    }
+}
+
+/// Word-straddling backend of the multi-head value row.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn accum_row_unaligned_multi(words: &[u32], bits: u8, start: usize, len: usize,
+                             pt: &[f32], ps: &[f32], pm: &[f32], out: &mut [f32],
+                             stride: usize) {
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for (w, f0, n) in field_range(words, bits, start, len) {
+        for j in 0..n {
+            let fv = ((w >> (b * (f0 + j))) & mask) as f32;
+            for r in 0..pt.len() {
+                if pt[r] == 0.0 {
+                    continue;
+                }
+                out[r * stride + t + j] += ps[r] * fv + pm[r];
+            }
+        }
+        t += n;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Width dispatch
+// ---------------------------------------------------------------------------
+
+/// Width-dispatching key kernel: integer-domain packed path for every
+/// ladder width, unpack-based fused fallback for irregular widths.  Same
+/// contract as [`key_scores_fused`]; `scratch` is only touched on the
+/// fallback.
+#[inline]
+pub fn key_scores_dispatch(q: &[f32], block: &PackedBlock, tokens: usize,
+                           chan_offset: usize, scratch: &mut FusedScratch,
+                           out: &mut [f32]) {
+    if packed_dot_supported(block.bits) {
+        key_scores_packed(q, block, tokens, chan_offset, out);
+    } else {
+        key_scores_fused(q, block, tokens, chan_offset, scratch, out);
+    }
+}
+
+/// Width-dispatching value kernel — see [`key_scores_dispatch`].
+#[inline]
+pub fn value_accum_dispatch(p: &[f32], block: &PackedBlock, kv_dim: usize,
+                            chan_offset: usize, head_dim: usize,
+                            scratch: &mut FusedScratch, out: &mut [f32]) {
+    if packed_dot_supported(block.bits) {
+        value_accum_packed(p, block, kv_dim, chan_offset, head_dim, out);
+    } else {
+        value_accum_fused(p, block, kv_dim, chan_offset, head_dim, scratch, out);
+    }
+}
+
+/// Head-tiled width-dispatching key kernel (the attend hot path): packed
+/// widths go through [`key_scores_group_packed`]; anything else falls
+/// back to per-head [`key_scores_fused`] calls.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn key_scores_group_dispatch(q: &[f32], rep: usize, block: &PackedBlock,
+                                 tokens: usize, chan_offset: usize,
+                                 scratch: &mut FusedScratch, out: &mut [f32],
+                                 stride: usize, tile: &mut TileScratch) {
+    if packed_dot_supported(block.bits) {
+        key_scores_group_packed(q, rep, block, tokens, chan_offset, out, stride, tile);
+    } else {
+        let hd = q.len() / rep;
+        for r in 0..rep {
+            key_scores_fused(&q[r * hd..(r + 1) * hd], block, tokens, chan_offset,
+                             scratch, &mut out[r * stride..r * stride + tokens]);
+        }
+    }
+}
+
+/// Head-tiled width-dispatching value kernel — see
+/// [`key_scores_group_dispatch`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn value_accum_group_dispatch(p: &[f32], p_stride: usize, rep: usize,
+                                  block: &PackedBlock, kv_dim: usize,
+                                  chan_offset: usize, head_dim: usize,
+                                  scratch: &mut FusedScratch, out: &mut [f32],
+                                  tile: &mut TileScratch) {
+    if packed_dot_supported(block.bits) {
+        value_accum_group_packed(p, p_stride, rep, block, kv_dim, chan_offset,
+                                 head_dim, out, tile);
+    } else {
+        let tokens = block.n / kv_dim;
+        for r in 0..rep {
+            value_accum_fused(&p[r * p_stride..r * p_stride + tokens], block, kv_dim,
+                              chan_offset, head_dim, scratch,
+                              &mut out[r * head_dim..(r + 1) * head_dim]);
+        }
     }
 }
 
@@ -337,7 +1143,7 @@ mod simd {
     }
 
     /// Returns false when no lane count fits this width (caller falls
-    /// back to the scalar word loop).
+    /// back to the SWAR/scalar word loop).
     pub fn dot_row(row_words: &[u32], bits: u8, qs: f32, out: &mut [f32]) -> bool {
         macro_rules! rows {
             ($n:literal) => {
@@ -376,11 +1182,72 @@ mod simd {
         }
         true
     }
+
+    /// Head-tiled form: decode each word's lanes once, multiply-add into
+    /// every head row of the tile.
+    pub fn dot_row_multi(row_words: &[u32], bits: u8, qs: &[f32], out: &mut [f32],
+                         stride: usize) -> bool {
+        macro_rules! rows {
+            ($n:literal) => {
+                for (i, &w) in row_words.iter().enumerate() {
+                    let shifts = Simd::<u32, $n>::from_array(
+                        std::array::from_fn(|k| k as u32 * bits as u32));
+                    let mask = Simd::splat((1u32 << bits) - 1);
+                    let f = ((Simd::splat(w) >> shifts) & mask).cast::<f32>();
+                    for (r, &qsr) in qs.iter().enumerate() {
+                        let o = &mut out[r * stride + i * $n..r * stride + (i + 1) * $n];
+                        let acc = Simd::<f32, $n>::from_slice(o) + Simd::splat(qsr) * f;
+                        acc.copy_to_slice(o);
+                    }
+                }
+            };
+        }
+        match 32 / bits as usize {
+            32 => rows!(32),
+            16 => rows!(16),
+            8 => rows!(8),
+            4 => rows!(4),
+            _ => return false,
+        }
+        true
+    }
+
+    /// Head-tiled value form, preserving per-head `p == 0` skips.
+    pub fn accum_row_multi(row_words: &[u32], bits: u8, pt: &[f32], ps: &[f32],
+                           pm: &[f32], out: &mut [f32], stride: usize) -> bool {
+        macro_rules! rows {
+            ($n:literal) => {
+                for (i, &w) in row_words.iter().enumerate() {
+                    let shifts = Simd::<u32, $n>::from_array(
+                        std::array::from_fn(|k| k as u32 * bits as u32));
+                    let mask = Simd::splat((1u32 << bits) - 1);
+                    let f = ((Simd::splat(w) >> shifts) & mask).cast::<f32>();
+                    for r in 0..pt.len() {
+                        if pt[r] == 0.0 {
+                            continue;
+                        }
+                        let o = &mut out[r * stride + i * $n..r * stride + (i + 1) * $n];
+                        let acc = Simd::<f32, $n>::from_slice(o)
+                            + (Simd::splat(ps[r]) * f + Simd::splat(pm[r]));
+                        acc.copy_to_slice(o);
+                    }
+                }
+            };
+        }
+        match 32 / bits as usize {
+            32 => rows!(32),
+            16 => rows!(16),
+            8 => rows!(8),
+            4 => rows!(4),
+            _ => return false,
+        }
+        true
+    }
 }
 
 // ---------------------------------------------------------------------------
-// Fused (unpack-based) reference kernels — the 3-bit execution path and
-// the oracle the packed kernels are pinned against
+// Fused (unpack-based) reference kernels — the irregular-width escape
+// hatch and the oracle the packed kernels are pinned against
 // ---------------------------------------------------------------------------
 
 /// Attention scores of one query head against a **Key block**, via the
@@ -488,12 +1355,13 @@ pub fn value_accum_fused(p: &[f32], block: &PackedBlock, kv_dim: usize,
 
 /// Unpack the block's integer stream into `scratch.ints`, skipping if the
 /// scratch already holds this block's data (tagged by the block uid).
+/// Layout-aware via [`PackedBlock::unpack_into`].
 fn ensure_unpacked(block: &PackedBlock, scratch: &mut FusedScratch) {
     if block.uid != 0 && scratch.tag == block.uid && scratch.ints.len() >= block.n {
         return;
     }
     scratch.ints.resize(block.n, 0);
-    unpack_stream(&block.words, block.bits, block.n, &mut scratch.ints);
+    block.unpack_into(&mut scratch.ints);
     scratch.tag = block.uid;
 }
 
@@ -540,161 +1408,287 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    fn key_block(rng: &mut Rng, kv_dim: usize, tokens: usize, bits: u8) -> (Vec<f32>, PackedBlock) {
-        // channel-major stream
+    const HD: usize = 16;
+
+    /// Channel-major Key block: kv_dim channels × `tokens` tokens,
+    /// group == tokens (the per-channel layout).
+    fn key_block(bits: u8, kv_dim: usize, tokens: usize, frac: f64, seed: u64)
+                 -> PackedBlock {
+        let mut rng = Rng::new(seed);
         let data = rng.normal_vec(kv_dim * tokens);
-        let b = PackedBlock::quantize(&data, bits, tokens);
-        (data, b)
+        let mut b = PackedBlock::default();
+        b.quantize_outliers_into(&data, bits, tokens, frac, &mut Vec::new());
+        b
+    }
+
+    /// Token-major Value block: `tokens` tokens × kv_dim channels,
+    /// channel groups of 32.
+    fn value_block(bits: u8, kv_dim: usize, tokens: usize, frac: f64, seed: u64)
+                   -> PackedBlock {
+        let mut rng = Rng::new(seed);
+        let data = rng.normal_vec(kv_dim * tokens);
+        let mut b = PackedBlock::default();
+        b.quantize_outliers_into(&data, bits, 32, frac, &mut Vec::new());
+        b
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: slot {i}: {x} vs {y}");
+        }
     }
 
     #[test]
     fn fused_key_matches_unfused() {
-        let mut rng = Rng::new(11);
-        for bits in [1u8, 2, 3, 4] {
-            let (_, block) = key_block(&mut rng, 64, 32, bits);
-            let q = rng.normal_vec(32);
-            let mut a = vec![0f32; 32];
-            let mut b = vec![0f32; 32];
-            let mut s = FusedScratch::default();
-            key_scores_fused(&q, &block, 32, 16, &mut s, &mut a);
-            unfused::key_scores(&q, &block, 32, 16, &mut s, &mut b);
-            for (x, y) in a.iter().zip(&b) {
-                assert!((x - y).abs() < 1e-3, "bits={bits}: {x} vs {y}");
-            }
+        let mut rng = Rng::new(10);
+        let tokens = 32;
+        let block = key_block(4, 2 * HD, tokens, 0.0, 11);
+        let q = rng.normal_vec(HD);
+        let mut s = FusedScratch::default();
+        let mut fused = vec![0f32; tokens];
+        let mut plain = vec![0f32; tokens];
+        key_scores_fused(&q, &block, tokens, HD, &mut s, &mut fused);
+        unfused::key_scores(&q, &block, tokens, HD, &mut s, &mut plain);
+        for (a, b) in fused.iter().zip(&plain) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
     }
 
     #[test]
     fn fused_value_matches_unfused() {
         let mut rng = Rng::new(12);
-        for bits in [1u8, 2, 3, 4] {
-            let kv_dim = 64;
-            let tokens = 32;
-            let data = rng.normal_vec(tokens * kv_dim); // token-major
-            let block = PackedBlock::quantize(&data, bits, 32);
-            let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
-            let mut a = vec![0f32; 32];
-            let mut b = vec![0f32; 32];
-            let mut s = FusedScratch::default();
-            value_accum_fused(&p, &block, kv_dim, 32, 32, &mut s, &mut a);
-            unfused::value_accum(&p, &block, kv_dim, 32, 32, &mut s, &mut b);
-            for (x, y) in a.iter().zip(&b) {
-                assert!((x - y).abs() < 1e-3, "bits={bits}: {x} vs {y}");
-            }
+        let tokens = 32;
+        let block = value_block(4, 2 * HD, tokens, 0.0, 13);
+        let p: Vec<f32> = (0..tokens).map(|_| rng.uniform(0.0, 0.1) as f32).collect();
+        let mut s = FusedScratch::default();
+        let mut fused = vec![0f32; HD];
+        let mut plain = vec![0f32; HD];
+        value_accum_fused(&p, &block, 2 * HD, HD, HD, &mut s, &mut fused);
+        unfused::value_accum(&p, &block, 2 * HD, HD, HD, &mut s, &mut plain);
+        for (a, b) in fused.iter().zip(&plain) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }
 
     #[test]
     fn packed_key_matches_fused_bitwise() {
-        // quick in-module smoke of the exactness contract; the full
-        // property sweep lives in rust/tests/packed_kernels.rs
-        let mut rng = Rng::new(31);
-        for bits in [1u8, 2, 4, 8] {
-            let (_, block) = key_block(&mut rng, 64, 32, bits);
-            let q = rng.normal_vec(32);
-            let mut a = vec![0f32; 32];
-            let mut b = vec![0f32; 32];
-            key_scores_packed(&q, &block, 32, 16, &mut a);
-            key_scores_fused(&q, &block, 32, 16, &mut FusedScratch::default(), &mut b);
-            for (x, y) in a.iter().zip(&b) {
-                assert_eq!(x.to_bits(), y.to_bits(), "bits={bits}: {x} vs {y}");
+        let mut rng = Rng::new(14);
+        for bits in [1u8, 2, 3, 4, 8] {
+            for tokens in [32usize, 33, 40] {
+                let block = key_block(bits, 2 * HD, tokens, 0.02, 15 + bits as u64);
+                let q = rng.normal_vec(HD);
+                let mut s = FusedScratch::default();
+                let mut packed = vec![0f32; tokens];
+                let mut fused = vec![0f32; tokens];
+                key_scores_packed(&q, &block, tokens, HD, &mut packed);
+                key_scores_fused(&q, &block, tokens, HD, &mut s, &mut fused);
+                assert_bits_eq(&packed, &fused, &format!("key bits={bits} tokens={tokens}"));
             }
         }
     }
 
     #[test]
     fn packed_value_matches_fused_bitwise() {
-        let mut rng = Rng::new(32);
-        for bits in [1u8, 2, 4, 8] {
-            let kv_dim = 64;
-            let tokens = 32;
-            let data = rng.normal_vec(tokens * kv_dim);
-            let block = PackedBlock::quantize(&data, bits, 32);
-            let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
-            let mut a = vec![0f32; 32];
-            let mut b = vec![0f32; 32];
-            value_accum_packed(&p, &block, kv_dim, 32, 32, &mut a);
-            value_accum_fused(&p, &block, kv_dim, 32, 32, &mut FusedScratch::default(), &mut b);
-            for (x, y) in a.iter().zip(&b) {
-                assert_eq!(x.to_bits(), y.to_bits(), "bits={bits}: {x} vs {y}");
+        let mut rng = Rng::new(16);
+        for bits in [1u8, 2, 3, 4, 8] {
+            let tokens = 40;
+            let block = value_block(bits, 2 * HD, tokens, 0.02, 17 + bits as u64);
+            let mut p: Vec<f32> = (0..tokens).map(|_| rng.uniform(0.0, 0.1) as f32).collect();
+            p[3] = 0.0; // exercise the zero-probability skip
+            let mut s = FusedScratch::default();
+            let mut packed = vec![0f32; HD];
+            let mut fused = vec![0f32; HD];
+            value_accum_packed(&p, &block, 2 * HD, HD, HD, &mut packed);
+            value_accum_fused(&p, &block, 2 * HD, HD, HD, &mut s, &mut fused);
+            assert_bits_eq(&packed, &fused, &format!("value bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn swar_matches_word_scalar_reference() {
+        // the stable three-way wall's in-module leg: SWAR lanes vs the
+        // per-field word-scalar traversal, bit for bit
+        let mut rng = Rng::new(18);
+        for bits in [1u8, 2, 3, 4, 8] {
+            for tokens in [32usize, 64] {
+                let kb = key_block(bits, 2 * HD, tokens, 0.02, 19 + bits as u64);
+                let q = rng.normal_vec(HD);
+                let mut a = vec![0f32; tokens];
+                let mut b = vec![0f32; tokens];
+                key_scores_packed(&q, &kb, tokens, HD, &mut a);
+                key_scores_packed_ref(&q, &kb, tokens, HD, &mut b);
+                assert_bits_eq(&a, &b, &format!("key swar-vs-ref bits={bits}"));
+
+                let vb = value_block(bits, 2 * HD, tokens, 0.02, 20 + bits as u64);
+                let p: Vec<f32> = (0..tokens).map(|_| rng.uniform(0.0, 0.1) as f32).collect();
+                let mut va = vec![0f32; HD];
+                let mut vr = vec![0f32; HD];
+                value_accum_packed(&p, &vb, 2 * HD, HD, HD, &mut va);
+                value_accum_packed_ref(&p, &vb, 2 * HD, HD, HD, &mut vr);
+                assert_bits_eq(&va, &vr, &format!("value swar-vs-ref bits={bits}"));
             }
         }
     }
 
     #[test]
-    fn dispatch_routes_3bit_to_fused() {
-        assert!(!packed_dot_supported(3));
-        assert!(packed_dot_supported(1) && packed_dot_supported(2)
-                && packed_dot_supported(4) && packed_dot_supported(8));
-        let mut rng = Rng::new(33);
-        let (_, block) = key_block(&mut rng, 32, 32, 3);
-        let q = rng.normal_vec(32);
-        let mut a = vec![0f32; 32];
-        let mut b = vec![0f32; 32];
+    fn group_kernels_match_per_head_bitwise() {
+        // head tiling is a pure reordering of independent slots: the
+        // tiled kernels must equal `rep` single-head calls bit for bit
+        let mut rng = Rng::new(22);
+        for bits in [1u8, 2, 3, 4, 8] {
+            for rep in [1usize, 2, 4] {
+                let tokens = 32;
+                let stride = tokens + 5; // strided rows like the scores buffer
+                let kb = key_block(bits, 2 * HD, tokens, 0.02, 23 + bits as u64);
+                let q = rng.normal_vec(rep * HD);
+                let mut tile = TileScratch::default();
+                let mut tiled = vec![0f32; (rep - 1) * stride + tokens];
+                let mut per_head = vec![0f32; (rep - 1) * stride + tokens];
+                key_scores_group_packed(&q, rep, &kb, tokens, HD, &mut tiled, stride,
+                                        &mut tile);
+                for r in 0..rep {
+                    key_scores_packed(&q[r * HD..(r + 1) * HD], &kb, tokens, HD,
+                                      &mut per_head[r * stride..r * stride + tokens]);
+                }
+                assert_bits_eq(&tiled, &per_head,
+                               &format!("key group bits={bits} rep={rep}"));
+
+                let vb = value_block(bits, 2 * HD, tokens, 0.02, 24 + bits as u64);
+                let mut p: Vec<f32> =
+                    (0..rep * stride).map(|_| rng.uniform(0.0, 0.1) as f32).collect();
+                p[1] = 0.0; // per-head zero-skip must survive tiling
+                let mut tv = vec![0f32; rep * HD];
+                let mut pv = vec![0f32; rep * HD];
+                value_accum_group_packed(&p, stride, rep, &vb, 2 * HD, HD, HD, &mut tv,
+                                         &mut tile);
+                for r in 0..rep {
+                    value_accum_packed(&p[r * stride..r * stride + tokens], &vb, 2 * HD,
+                                       HD, HD, &mut pv[r * HD..(r + 1) * HD]);
+                }
+                assert_bits_eq(&tv, &pv, &format!("value group bits={bits} rep={rep}"));
+            }
+        }
+    }
+
+    #[test]
+    fn group_ref_matches_group_packed() {
+        let mut rng = Rng::new(26);
+        for bits in [2u8, 4] {
+            let (tokens, rep) = (32, 4);
+            let kb = key_block(bits, 2 * HD, tokens, 0.02, 27 + bits as u64);
+            let q = rng.normal_vec(rep * HD);
+            let mut tile = TileScratch::default();
+            let mut a = vec![0f32; rep * tokens];
+            let mut b = vec![0f32; rep * tokens];
+            key_scores_group_packed(&q, rep, &kb, tokens, HD, &mut a, tokens, &mut tile);
+            key_scores_group_ref(&q, rep, &kb, tokens, HD, &mut b, tokens, &mut tile);
+            assert_bits_eq(&a, &b, &format!("group ref bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn interleaved_key_matches_linear_bitwise() {
+        let mut rng = Rng::new(28);
+        for bits in [1u8, 2, 4, 8] {
+            let tokens = 64;
+            let mut data_rng = Rng::new(29 + bits as u64);
+            let data = data_rng.normal_vec(2 * HD * tokens);
+            let mut lin = PackedBlock::default();
+            lin.quantize_outliers_into_layout(&data, bits, tokens, 0.02, false,
+                                              &mut Vec::new());
+            let mut inter = PackedBlock::default();
+            inter.quantize_outliers_into_layout(&data, bits, tokens, 0.02, true,
+                                                &mut Vec::new());
+            assert!(inter.interleaved);
+            let q = rng.normal_vec(2 * HD);
+            for rep in [1usize, 2] {
+                let hd = 2 * HD / rep;
+                let mut tile = TileScratch::default();
+                let mut a = vec![0f32; rep * tokens];
+                let mut b = vec![0f32; rep * tokens];
+                key_scores_group_packed(&q, rep, &lin, tokens, 0, &mut a, tokens, &mut tile);
+                key_scores_group_packed(&q, rep, &inter, tokens, 0, &mut b, tokens,
+                                        &mut tile);
+                assert_bits_eq(&a, &b, &format!("interleave bits={bits} rep={rep} hd={hd}"));
+            }
+            let mut sa = vec![0f32; tokens];
+            let mut sb = vec![0f32; tokens];
+            key_scores_packed(&q[..HD], &lin, tokens, HD, &mut sa);
+            key_scores_packed(&q[..HD], &inter, tokens, HD, &mut sb);
+            assert_bits_eq(&sa, &sb, &format!("interleave single-head bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn dispatch_runs_3bit_packed() {
+        // Eq. 12 joined the packed tier: dispatch must not touch the
+        // unpack scratch for any ladder width, 3-bit included
+        assert!(packed_dot_supported(3));
+        let mut rng = Rng::new(30);
+        let tokens = 33; // 3 Eq.12 words per channel row
+        let block = key_block(3, 2 * HD, tokens, 0.02, 31);
+        let q = rng.normal_vec(HD);
         let mut s = FusedScratch::default();
-        key_scores_dispatch(&q, &block, 32, 0, &mut s, &mut a);
-        key_scores_fused(&q, &block, 32, 0, &mut FusedScratch::default(), &mut b);
-        assert_eq!(a, b);
-        assert!(!s.ints.is_empty(), "3-bit fallback stages the unpack scratch");
+        let mut via_dispatch = vec![0f32; tokens];
+        key_scores_dispatch(&q, &block, tokens, HD, &mut s, &mut via_dispatch);
+        assert!(s.ints.is_empty(), "3-bit dispatch must stay unpack-free");
+        let mut fused = vec![0f32; tokens];
+        key_scores_fused(&q, &block, tokens, HD, &mut s, &mut fused);
+        assert_bits_eq(&via_dispatch, &fused, "3-bit dispatch");
     }
 
     #[test]
     fn unpack_cache_tracks_inplace_requantization() {
-        // an in-place downshift must invalidate a scratch that still
-        // holds the block's old integers (uid-keyed cache)
-        let mut rng = Rng::new(21);
-        let (_, mut block) = key_block(&mut rng, 32, 32, 4);
-        let q = rng.normal_vec(32);
+        // requantize() rewrites words in place and bumps the uid; a stale
+        // unpack must never be reused
+        let mut rng = Rng::new(32);
+        let tokens = 32;
+        let mut block = key_block(8, 2 * HD, tokens, 0.0, 33);
+        let q = rng.normal_vec(HD);
         let mut s = FusedScratch::default();
-        let mut before = vec![0f32; 32];
-        key_scores_fused(&q, &block, 32, 0, &mut s, &mut before);
+        let mut before = vec![0f32; tokens];
+        key_scores_fused(&q, &block, tokens, HD, &mut s, &mut before);
         block.requantize(2, &mut Vec::new(), &mut Vec::new());
-        let mut after = vec![0f32; 32];
-        key_scores_fused(&q, &block, 32, 0, &mut s, &mut after);
-        let mut fresh = vec![0f32; 32];
-        key_scores_fused(&q, &block, 32, 0, &mut FusedScratch::default(), &mut fresh);
-        assert_eq!(after, fresh, "stale unpack served after requantize");
-        assert_ne!(after, before, "2-bit scores should differ from 4-bit");
+        let mut stale = vec![0f32; tokens];
+        key_scores_fused(&q, &block, tokens, HD, &mut s, &mut stale);
+        let mut fresh = vec![0f32; tokens];
+        key_scores_fused(&q, &block, tokens, HD, &mut FusedScratch::default(), &mut fresh);
+        assert_bits_eq(&stale, &fresh, "uid cache");
+        assert_ne!(before, stale, "requantization must change results");
     }
 
     #[test]
     fn fused_key_accumulates() {
-        // out is += so two calls double
-        let mut rng = Rng::new(13);
-        let (_, block) = key_block(&mut rng, 32, 32, 2);
-        let q = rng.normal_vec(32);
+        // += contract: callers accumulate scores across cache blocks
+        let mut rng = Rng::new(34);
+        let tokens = 32;
+        let block = key_block(4, HD, tokens, 0.0, 35);
+        let q = rng.normal_vec(HD);
         let mut s = FusedScratch::default();
-        let mut once = vec![0f32; 32];
-        key_scores_fused(&q, &block, 32, 0, &mut s, &mut once);
-        let mut twice = vec![0f32; 32];
-        key_scores_fused(&q, &block, 32, 0, &mut s, &mut twice);
-        key_scores_fused(&q, &block, 32, 0, &mut s, &mut twice);
-        for (x, y) in once.iter().zip(&twice) {
-            assert!((2.0 * x - y).abs() < 1e-4);
+        let mut out = vec![1.0f32; tokens];
+        let mut delta = vec![0f32; tokens];
+        key_scores_fused(&q, &block, tokens, 0, &mut s, &mut out);
+        key_scores_fused(&q, &block, tokens, 0, &mut s, &mut delta);
+        for (o, d) in out.iter().zip(&delta) {
+            assert!((o - (1.0 + d)).abs() < 1e-5);
         }
     }
 
     #[test]
     fn packed_outlier_side_path_is_binary_searched_range() {
-        // an outlier-carrying block: packed and fused must agree exactly
-        // for heads at every chan_offset (the partition_point range must
-        // select precisely the head's outliers)
-        let mut rng = Rng::new(34);
-        let (kv_dim, tokens) = (64usize, 32usize);
-        let data = rng.normal_vec(kv_dim * tokens);
-        let mut block = PackedBlock::default();
-        block.quantize_outliers_into(&data, 2, tokens, 0.05, &mut Vec::new());
+        // heavy outlier block + nonzero chan_offset: the packed side path
+        // must apply exactly the fused path's corrections
+        let mut rng = Rng::new(36);
+        let tokens = 32;
+        let block = key_block(2, 4 * HD, tokens, 0.1, 37);
         assert!(!block.outliers.is_empty());
-        let q = rng.normal_vec(32);
-        for chan_offset in [0usize, 32] {
-            let mut a = vec![0f32; tokens];
-            let mut b = vec![0f32; tokens];
-            key_scores_packed(&q, &block, tokens, chan_offset, &mut a);
-            key_scores_fused(&q, &block, tokens, chan_offset,
-                             &mut FusedScratch::default(), &mut b);
-            for (x, y) in a.iter().zip(&b) {
-                assert_eq!(x.to_bits(), y.to_bits(), "chan_offset={chan_offset}");
-            }
-        }
+        let q = rng.normal_vec(HD);
+        let mut s = FusedScratch::default();
+        let mut packed = vec![0f32; tokens];
+        let mut fused = vec![0f32; tokens];
+        key_scores_packed(&q, &block, tokens, 2 * HD, &mut packed);
+        key_scores_fused(&q, &block, tokens, 2 * HD, &mut s, &mut fused);
+        assert_bits_eq(&packed, &fused, "outlier side path");
     }
 }

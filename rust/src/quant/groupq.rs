@@ -17,9 +17,19 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::pack::{get_at, pack_stream, qmax, qmax_at, unpack_stream, words_for};
+use super::pack::{elems_per_word, get_at, pack_stream, qmax, qmax_at, unpack_stream, words_for};
 
 pub const EPS: f32 = 1e-6;
+
+/// True when `bits`/`group` admit the channel-interleaved Key word layout
+/// (DESIGN.md §Quantized-Kernels): uniform widths whose groups span whole
+/// words.  3-bit's 11-per-word Eq. 12 layout never interleaves, nor do
+/// groups that straddle word boundaries.
+#[inline]
+pub fn interleave_supported(bits: u8, group: usize) -> bool {
+    bits != 0 && bits != 3 && bits <= 16 && 32 % bits as usize == 0
+        && group % elems_per_word(bits) == 0
+}
 
 /// Monotonic source for [`PackedBlock::uid`] (0 = never quantized).
 static NEXT_UID: AtomicU64 = AtomicU64::new(1);
@@ -46,6 +56,16 @@ pub struct PackedBlock {
     /// head's contiguous stream range is located with `partition_point`
     /// instead of scanning every outlier per head per block.
     pub outliers: Vec<(u32, f32)>,
+    /// Channel-interleaved word layout (Key blocks only, opt-in —
+    /// docs/adr/009-swar-and-interleaved-layout.md): word `w` of group
+    /// `g` lives at `words[w * n_groups + g]` instead of the linear
+    /// `words[g * wpg + w]`, so the head-tiled score kernels stream one
+    /// token chunk across every channel with a fixed word stride.  A pure
+    /// word permutation: scales/mins/outliers and every dequant entry
+    /// point ([`Self::code_at`], [`Self::unpack_into`]) are layout-aware,
+    /// so `to_bits`-level results never change.  Only ever set when
+    /// [`interleave_supported`]; Value blocks stay linear.
+    pub interleaved: bool,
     /// Identity of the current packed contents, refreshed on every
     /// (re)quantization.  The fused kernels' unpack cache keys on this,
     /// so an in-place requantization (or a new block whose buffers reuse
@@ -60,11 +80,12 @@ impl PackedBlock {
     /// fused kernels' unpack cache may have recycled the old uid for a
     /// different block in the meantime, so restored contents must never
     /// alias a cached unpack.
-    pub fn from_parts(bits: u8, n: usize, group: usize, words: Vec<u32>,
-                      scales: Vec<f32>, mins: Vec<f32>,
+    pub fn from_parts(bits: u8, n: usize, group: usize, interleaved: bool,
+                      words: Vec<u32>, scales: Vec<f32>, mins: Vec<f32>,
                       outliers: Vec<(u32, f32)>) -> Self {
+        debug_assert!(!interleaved || interleave_supported(bits, group));
         PackedBlock {
-            bits, n, group, words, scales, mins, outliers,
+            bits, n, group, words, scales, mins, outliers, interleaved,
             uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
         }
     }
@@ -85,6 +106,7 @@ impl PackedBlock {
         self.bits = bits;
         self.n = data.len();
         self.group = group;
+        self.interleaved = false; // plain path always re-encodes linear
         self.uid = NEXT_UID.fetch_add(1, Ordering::Relaxed);
         self.scales.clear();
         self.mins.clear();
@@ -154,6 +176,90 @@ impl PackedBlock {
         self.outliers = keep;
     }
 
+    /// [`Self::quantize_into`] plus opt-in channel interleaving (Key
+    /// blocks; falls back to linear when the width/group can't
+    /// interleave — [`interleave_supported`]).
+    pub fn quantize_into_layout(&mut self, data: &[f32], bits: u8, group: usize,
+                                interleave: bool, scratch: &mut Vec<u32>) {
+        self.quantize_into(data, bits, group, scratch);
+        if interleave {
+            self.apply_interleave(scratch);
+        }
+    }
+
+    /// [`Self::quantize_outliers_into`] plus opt-in channel interleaving.
+    pub fn quantize_outliers_into_layout(&mut self, data: &[f32], bits: u8,
+                                         group: usize, frac: f64, interleave: bool,
+                                         scratch: &mut Vec<u32>) {
+        self.quantize_outliers_into(data, bits, group, frac, scratch);
+        if interleave {
+            self.apply_interleave(scratch);
+        }
+    }
+
+    /// Permute freshly packed (linear) words into the interleaved layout;
+    /// stays linear when the width/group can't interleave.  The stream
+    /// order (and thus outlier indices, scales, mins) is untouched — only
+    /// the physical word placement changes.
+    fn apply_interleave(&mut self, scratch: &mut Vec<u32>) {
+        if !interleave_supported(self.bits, self.group) || self.n == 0 {
+            self.interleaved = false;
+            return;
+        }
+        let wpg = self.group / elems_per_word(self.bits);
+        let ng = self.n / self.group;
+        scratch.clear();
+        scratch.extend_from_slice(&self.words);
+        for g in 0..ng {
+            for w in 0..wpg {
+                self.words[w * ng + g] = scratch[g * wpg + w];
+            }
+        }
+        self.interleaved = true;
+    }
+
+    /// Physical index in `words` of *linear* word `lw` (identity for the
+    /// linear layout) — the kernels' layout seam.
+    #[inline]
+    pub fn word_index(&self, lw: usize) -> usize {
+        if !self.interleaved {
+            return lw;
+        }
+        let wpg = self.group / elems_per_word(self.bits);
+        (lw % wpg) * (self.n / self.group) + lw / wpg
+    }
+
+    /// Packed code of stream element `idx`, layout-aware.
+    #[inline]
+    pub fn code_at(&self, idx: usize) -> u32 {
+        if !self.interleaved {
+            return get_at(&self.words, self.bits, idx);
+        }
+        let per = elems_per_word(self.bits);
+        let w = self.words[self.word_index(idx / per)];
+        (w >> (self.bits as usize * (idx % per))) & ((1u32 << self.bits) - 1)
+    }
+
+    /// Unpack the full integer stream (stream order) into `out[..n]`,
+    /// layout-aware — the unpack-based fused kernels and
+    /// [`Self::dequantize_into`] stage through this.
+    pub fn unpack_into(&self, out: &mut [u32]) {
+        if !self.interleaved {
+            unpack_stream(&self.words, self.bits, self.n, out);
+            return;
+        }
+        // interleaved ⇒ group % per == 0 ⇒ n % per == 0: no ragged tail
+        let per = elems_per_word(self.bits);
+        let bu = self.bits as usize;
+        let mask = (1u32 << self.bits) - 1;
+        for lw in 0..self.n / per {
+            let w = self.words[self.word_index(lw)];
+            for i in 0..per {
+                out[lw * per + i] = (w >> (bu * i)) & mask;
+            }
+        }
+    }
+
     /// Dequantized value of a single stream element given the unpacked
     /// integer stream (the unpack-based fused kernels' outlier path).
     #[inline]
@@ -168,7 +274,7 @@ impl PackedBlock {
     #[inline]
     pub fn dequant_at(&self, idx: usize) -> f32 {
         let g = idx / self.group;
-        get_at(&self.words, self.bits, idx) as f32 * self.scales[g] + self.mins[g]
+        self.code_at(idx) as f32 * self.scales[g] + self.mins[g]
     }
 
     /// Dequantize the full stream into `out[..n]`.
@@ -176,7 +282,7 @@ impl PackedBlock {
         assert!(out.len() >= self.n);
         scratch.clear();
         scratch.resize(self.n, 0);
-        unpack_stream(&self.words, self.bits, self.n, scratch);
+        self.unpack_into(scratch);
         for (g, chunk) in scratch[..self.n].chunks(self.group).enumerate() {
             let (s, m) = (self.scales[g], self.mins[g]);
             let base = g * self.group;
@@ -209,12 +315,18 @@ impl PackedBlock {
         let before = self.modeled_bytes();
         let n = self.n;
         let group = self.group;
+        let keep_interleave = self.interleaved;
         f32s.clear();
         f32s.resize(n, 0.0);
         self.dequantize_into(f32s, ints);
         let data = std::mem::take(f32s);
         self.quantize_into(&data[..n], to_bits, group, ints);
         *f32s = data;
+        // a downshifted Key block keeps its layout (when the narrower
+        // width still supports it — 3-bit drops to linear)
+        if keep_interleave {
+            self.apply_interleave(ints);
+        }
         before.saturating_sub(self.modeled_bytes())
     }
 
@@ -402,9 +514,9 @@ mod tests {
         let mut rng = Rng::new(21);
         let data = rng.normal_vec(128);
         let a = PackedBlock::quantize(&data, 3, 32);
-        let b = PackedBlock::from_parts(a.bits, a.n, a.group, a.words.clone(),
-                                        a.scales.clone(), a.mins.clone(),
-                                        a.outliers.clone());
+        let b = PackedBlock::from_parts(a.bits, a.n, a.group, a.interleaved,
+                                        a.words.clone(), a.scales.clone(),
+                                        a.mins.clone(), a.outliers.clone());
         assert_ne!(b.uid, a.uid, "restored block must not alias the unpack cache");
         assert_ne!(b.uid, 0);
         let (mut oa, mut ob) = (vec![0f32; a.n], vec![0f32; a.n]);
@@ -412,6 +524,70 @@ mod tests {
         b.dequantize_into(&mut ob, &mut Vec::new());
         assert_eq!(oa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
                    ob.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_layout_is_a_pure_word_permutation() {
+        // same data, both layouts: every dequant entry point must agree
+        // bit-for-bit (the to_bits/dequant_at round-trip contract)
+        let mut rng = Rng::new(23);
+        let data = rng.normal_vec(256); // 8 channel-groups of 32
+        for bits in [1u8, 2, 4, 8] {
+            let lin = PackedBlock::quantize(&data, bits, 32);
+            let mut inter = PackedBlock::default();
+            inter.quantize_into_layout(&data, bits, 32, true, &mut Vec::new());
+            assert!(inter.interleaved, "bits={bits}");
+            assert_eq!(lin.words.len(), inter.words.len());
+            // word_index maps linear positions onto the permuted store
+            for lw in 0..lin.words.len() {
+                assert_eq!(lin.words[lw], inter.words[inter.word_index(lw)],
+                           "bits={bits} lw={lw}");
+            }
+            for idx in 0..lin.n {
+                assert_eq!(lin.dequant_at(idx).to_bits(),
+                           inter.dequant_at(idx).to_bits(), "bits={bits} idx={idx}");
+            }
+            let (mut oa, mut ob) = (vec![0f32; lin.n], vec![0f32; lin.n]);
+            lin.dequantize_into(&mut oa, &mut Vec::new());
+            inter.dequantize_into(&mut ob, &mut Vec::new());
+            assert_eq!(oa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       ob.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn interleave_requires_uniform_whole_word_groups() {
+        assert!(!interleave_supported(3, 33)); // Eq. 12 never interleaves
+        assert!(!interleave_supported(1, 24)); // group straddles words
+        assert!(interleave_supported(2, 32) && interleave_supported(8, 32));
+        let mut rng = Rng::new(24);
+        let data = rng.normal_vec(66);
+        let mut b = PackedBlock::default();
+        b.quantize_into_layout(&data, 3, 33, true, &mut Vec::new());
+        assert!(!b.interleaved, "unsupported layouts silently stay linear");
+        let lin = PackedBlock::quantize(&data, 3, 33);
+        assert_eq!(b.words, lin.words);
+    }
+
+    #[test]
+    fn requantize_preserves_interleave() {
+        let mut rng = Rng::new(25);
+        let data = rng.normal_vec(512);
+        let mut lin = PackedBlock::default();
+        lin.quantize_outliers_into(&data, 4, 32, 0.02, &mut Vec::new());
+        let mut inter = PackedBlock::default();
+        inter.quantize_outliers_into_layout(&data, 4, 32, 0.02, true, &mut Vec::new());
+        assert!(inter.interleaved && !inter.outliers.is_empty());
+        lin.requantize(2, &mut Vec::new(), &mut Vec::new());
+        inter.requantize(2, &mut Vec::new(), &mut Vec::new());
+        assert!(inter.interleaved, "downshift must keep the layout");
+        assert_eq!(inter.bits, 2);
+        let (mut oa, mut ob) = (vec![0f32; lin.n], vec![0f32; lin.n]);
+        lin.dequantize_into(&mut oa, &mut Vec::new());
+        inter.dequantize_into(&mut ob, &mut Vec::new());
+        assert_eq!(oa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   ob.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   "layouts must downshift to identical values");
     }
 
     #[test]

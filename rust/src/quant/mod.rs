@@ -1,16 +1,21 @@
 //! Low-bit quantization: packing, group-wise asymmetric quant, and the
 //! decode-attention kernels over packed blocks — integer-domain
-//! (unpack-free) for uniform widths, unpack-based fused for 3-bit (the
-//! paper's CUDA-kernel contribution mapped to CPU — see DESIGN.md
-//! §Hardware-Adaptation and §Quantized-Kernels).
+//! (unpack-free) for every ladder width, including 3-bit's Eq. 12
+//! layout, with SWAR wide-words on stable Rust and head-tiled group
+//! kernels on the attend path (the paper's CUDA-kernel contribution
+//! mapped to CPU — see DESIGN.md §Hardware-Adaptation and
+//! §Quantized-Kernels, and docs/adr/009-swar-and-interleaved-layout.md).
 
 pub mod fused;
 pub mod groupq;
 pub mod pack;
 
-pub use fused::{key_scores_dispatch, key_scores_fused, key_scores_packed,
-                packed_dot_supported, value_accum_dispatch, value_accum_fused,
-                value_accum_packed, FusedScratch};
-pub use groupq::{quant_error, PackedBlock, QuantError};
-pub use pack::{elems_per_word, field_range, get_at, pack_stream, qmax, qmax_at,
-               unpack_stream, words_for, FieldRange};
+pub use fused::{key_scores_dispatch, key_scores_fused, key_scores_group_dispatch,
+                key_scores_group_packed, key_scores_group_ref, key_scores_packed,
+                key_scores_packed_ref, packed_dot_supported, value_accum_dispatch,
+                value_accum_fused, value_accum_group_dispatch,
+                value_accum_group_packed, value_accum_group_ref, value_accum_packed,
+                value_accum_packed_ref, FusedScratch, TileScratch};
+pub use groupq::{interleave_supported, quant_error, PackedBlock, QuantError};
+pub use pack::{elems_per_word, eq12_field, field_range, get_at, pack_stream, qmax,
+               qmax_at, swar_mask, unpack_stream, words_for, FieldRange};

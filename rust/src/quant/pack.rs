@@ -21,6 +21,27 @@ pub const fn words_for(n: usize, bits: u8) -> usize {
     n.div_ceil(per)
 }
 
+/// Byte-repeating SWAR spread mask for a sub-lane of width `bits`
+/// (1/2/4/8): the low `bits` of every byte set.  Shifting a packed
+/// 64-bit wide-word right by `bits*l` and AND-ing with this mask spreads
+/// fields `l, l+R, l+2R, …` (R = `8/bits`) into the bytes of one lane,
+/// so all fields of the word are extracted with R shift/mask pairs
+/// instead of `64/bits` (DESIGN.md §Quantized-Kernels).
+#[inline]
+pub const fn swar_mask(bits: u8) -> u64 {
+    ((1u64 << bits) - 1) * 0x0101_0101_0101_0101
+}
+
+/// Extract field `f` (0..11) of an Eq. 12 3-bit packed word.
+#[inline]
+pub fn eq12_field(w: u32, f: usize) -> u32 {
+    if f == 10 {
+        (w >> 30) & 0x3
+    } else {
+        (w >> (3 * f)) & 0x7
+    }
+}
+
 /// Max quantized value for element index `i` within its pack-block
 /// (only 3-bit is index-dependent — paper Eq. 12).
 #[inline]
@@ -124,13 +145,7 @@ pub fn unpack_stream(words: &[u32], bits: u8, n: usize, out: &mut [u32]) {
 #[inline]
 pub fn get_at(words: &[u32], bits: u8, idx: usize) -> u32 {
     match bits {
-        3 => {
-            let w = words[idx / 11];
-            match idx % 11 {
-                10 => (w >> 30) & 0x3,
-                i => (w >> (3 * i)) & 0x7,
-            }
-        }
+        3 => eq12_field(words[idx / 11], idx % 11),
         b => {
             let per = elems_per_word(b);
             (words[idx / per] >> (b as usize * (idx % per))) & ((1u32 << b) - 1)
@@ -256,6 +271,42 @@ mod tests {
                 }
                 assert_eq!(got, q[start..start + len], "bits={bits} start={start} len={len}");
             }
+        }
+    }
+
+    #[test]
+    fn swar_mask_spreads_every_field() {
+        // fusing two words and applying the R shift/mask lanes must
+        // recover exactly the per-field shift/mask extraction
+        let mut rng = Rng::new(4);
+        for bits in [1u8, 2, 4, 8] {
+            let per = elems_per_word(bits);
+            let q: Vec<u32> =
+                (0..2 * per).map(|_| rng.below(qmax(bits) as usize + 1) as u32).collect();
+            let mut words = Vec::new();
+            pack_stream(&q, bits, &mut words);
+            let wide = words[0] as u64 | (words[1] as u64) << 32;
+            let r = 8 / bits as usize;
+            let mask = swar_mask(bits);
+            for l in 0..r {
+                let lane = (wide >> (bits as usize * l)) & mask;
+                for j in 0..8 {
+                    let field = j * r + l; // byte j of lane l
+                    assert_eq!(((lane >> (8 * j)) & 0xFF) as u32, q[field],
+                               "bits={bits} lane={l} byte={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eq12_field_matches_get_at() {
+        let mut rng = Rng::new(5);
+        let q: Vec<u32> = (0..33).map(|i| rng.below(qmax_at(3, i) as usize + 1) as u32).collect();
+        let mut words = Vec::new();
+        pack_stream(&q, 3, &mut words);
+        for i in 0..33 {
+            assert_eq!(eq12_field(words[i / 11], i % 11), get_at(&words, 3, i));
         }
     }
 

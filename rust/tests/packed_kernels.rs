@@ -2,14 +2,18 @@
 //! (DESIGN.md §Quantized-Kernels): `key_scores_packed` /
 //! `value_accum_packed` must produce outputs whose f32 bit patterns are
 //! **identical** to the unpack-based fused reference — not merely within
-//! an epsilon — across every supported width, unaligned token counts,
-//! nonzero channel offsets, outlier-carrying blocks and pre-accumulated
-//! outputs.  The same assertions hold with and without the `simd` cargo
-//! feature (the SIMD lanes use strict mul-then-add, never FMA), so
-//! `cargo test` and `cargo +nightly test --features simd` pin the same
-//! contract.  Hand-rolled generator loop as in rust/tests/props.rs.
+//! an epsilon — across every supported width (including 3-bit Eq. 12),
+//! unaligned token counts, nonzero channel offsets, outlier-carrying
+//! blocks, pre-accumulated outputs, and both Key word layouts (linear
+//! and channel-interleaved).  The three-way wall additionally pins the
+//! default backend (SWAR on stable, `std::simd` under the `simd`
+//! feature) against the word-scalar reference leg, so `cargo test` and
+//! `cargo +nightly test --features simd` enforce the same contract —
+//! every backend uses strict mul-then-add, never FMA.  Hand-rolled
+//! generator loop as in rust/tests/props.rs.
 
-use kvmix::quant::{fused, packed_dot_supported, FusedScratch, PackedBlock};
+use kvmix::quant::{fused, interleave_supported, packed_dot_supported, FusedScratch,
+                   PackedBlock, TileScratch};
 use kvmix::util::Rng;
 
 fn for_cases(n: usize, seed0: u64, mut f: impl FnMut(u64, &mut Rng)) {
@@ -22,10 +26,11 @@ fn for_cases(n: usize, seed0: u64, mut f: impl FnMut(u64, &mut Rng)) {
 
 /// Channel-major Key block (stream `c*tokens + t`, group = tokens).
 fn key_block(rng: &mut Rng, kv_dim: usize, tokens: usize, bits: u8,
-             outlier_frac: f32) -> PackedBlock {
+             outlier_frac: f32, interleave: bool) -> PackedBlock {
     let data = rng.normal_vec(kv_dim * tokens);
     let mut block = PackedBlock::default();
-    block.quantize_outliers_into(&data, bits, tokens, outlier_frac, &mut Vec::new());
+    block.quantize_outliers_into_layout(&data, bits, tokens, outlier_frac,
+                                        interleave, &mut Vec::new());
     block
 }
 
@@ -44,23 +49,26 @@ fn value_block(rng: &mut Rng, kv_dim: usize, tokens: usize, group: usize,
 fn assert_bit_identical(a: &[f32], b: &[f32], ctx: &str) {
     for (i, (x, y)) in a.iter().zip(b).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(),
-                   "{ctx}: out[{i}] packed {x:?} != fused {y:?}");
+                   "{ctx}: out[{i}] {x:?} != {y:?}");
     }
 }
 
 #[test]
 fn packed_key_bit_exact_across_shapes() {
-    // every supported width x unaligned/word-aligned token counts x
-    // zero and nonzero chan_offset x with/without outliers
+    // every supported width x word/group-boundary-straddling token counts
+    // x zero and nonzero chan_offset x with/without outliers x both word
+    // layouts (interleave drawn whenever the (bits, group) shape admits it)
     let kv_dim = 64;
-    for_cases(60, 101, |seed, rng| {
-        let bits = [1u8, 2, 4, 8][rng.below(4)];
-        let tokens = [32usize, 33, 40, 352][rng.below(4)];
+    for_cases(80, 101, |seed, rng| {
+        let bits = [1u8, 2, 3, 4, 8][rng.below(5)];
+        let tokens = [22usize, 32, 33, 40, 352][rng.below(5)];
         let chan_offset = [0usize, 32][rng.below(2)];
         let head_dim = 32;
         let frac = [0.0f32, 0.05][rng.below(2)];
+        let inter = rng.below(2) == 1 && interleave_supported(bits, tokens);
         assert!(packed_dot_supported(bits));
-        let block = key_block(rng, kv_dim, tokens, bits, frac);
+        let block = key_block(rng, kv_dim, tokens, bits, frac, inter);
+        assert_eq!(block.interleaved, inter);
         let q = rng.normal_vec(head_dim);
         let seeded: Vec<f32> = (0..tokens).map(|_| rng.normal_f32()).collect();
 
@@ -73,7 +81,7 @@ fn packed_key_bit_exact_across_shapes() {
 
         assert_bit_identical(&out_p, &out_f,
             &format!("seed {seed} key bits {bits} tokens {tokens} \
-                      off {chan_offset} frac {frac}"));
+                      off {chan_offset} frac {frac} inter {inter}"));
     });
 }
 
@@ -81,8 +89,8 @@ fn packed_key_bit_exact_across_shapes() {
 fn packed_value_bit_exact_across_shapes() {
     // configs include group-unaligned widths (group 12 is not a multiple
     // of any elems-per-word) and partial last tokens via p.len() < tokens
-    for_cases(60, 202, |seed, rng| {
-        let bits = [1u8, 2, 4, 8][rng.below(4)];
+    for_cases(80, 202, |seed, rng| {
+        let bits = [1u8, 2, 3, 4, 8][rng.below(5)];
         // (kv_dim, group, head_dim, chan_offset)
         let (kv_dim, group, head_dim, chan_offset) =
             [(64usize, 32usize, 32usize, 0usize), (64, 32, 32, 32),
@@ -90,7 +98,8 @@ fn packed_value_bit_exact_across_shapes() {
         let tokens = [32usize, 33][rng.below(2)];
         let frac = [0.0f32, 0.05][rng.below(2)];
         let block = value_block(rng, kv_dim, tokens, group, bits, frac);
-        let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+        let mut p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+        p[tokens / 2] = 0.0; // exact-zero weight: pins the skip-row guard
         let seeded: Vec<f32> = (0..head_dim).map(|_| rng.normal_f32()).collect();
 
         let mut out_p = seeded.clone();
@@ -108,13 +117,157 @@ fn packed_value_bit_exact_across_shapes() {
 }
 
 #[test]
+fn three_way_backends_bit_identical() {
+    // SWAR/simd default leg == word-scalar reference leg == unpack-based
+    // fused oracle, bit for bit.  Without `--features simd` this pins
+    // SWAR == scalar; with it, the identical assertions pin the
+    // `std::simd` backend against the same scalar reference.
+    let kv_dim = 64;
+    for_cases(60, 404, |seed, rng| {
+        let bits = [1u8, 2, 3, 4, 8][rng.below(5)];
+        let tokens = [32usize, 33, 40, 352][rng.below(4)];
+        let inter = rng.below(2) == 1 && interleave_supported(bits, tokens);
+        let frac = 0.03;
+        let ctx = format!("seed {seed} bits {bits} tokens {tokens} inter {inter}");
+
+        let kblock = key_block(rng, kv_dim, tokens, bits, frac, inter);
+        let q = rng.normal_vec(32);
+        let seeded: Vec<f32> = (0..tokens).map(|_| rng.normal_f32()).collect();
+        let mut out_default = seeded.clone();
+        fused::key_scores_packed(&q, &kblock, tokens, 0, &mut out_default);
+        let mut out_ref = seeded.clone();
+        fused::key_scores_packed_ref(&q, &kblock, tokens, 0, &mut out_ref);
+        let mut out_fused = seeded.clone();
+        let mut s = FusedScratch::default();
+        fused::key_scores_fused(&q, &kblock, tokens, 0, &mut s, &mut out_fused);
+        assert_bit_identical(&out_default, &out_ref, &format!("{ctx} key default/ref"));
+        assert_bit_identical(&out_ref, &out_fused, &format!("{ctx} key ref/fused"));
+
+        let vblock = value_block(rng, kv_dim, tokens, 32, bits, frac);
+        let mut p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
+        p[0] = 0.0;
+        let vseed: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let mut v_default = vseed.clone();
+        fused::value_accum_packed(&p, &vblock, kv_dim, 32, 32, &mut v_default);
+        let mut v_ref = vseed.clone();
+        fused::value_accum_packed_ref(&p, &vblock, kv_dim, 32, 32, &mut v_ref);
+        let mut v_fused = vseed.clone();
+        let mut s = FusedScratch::default();
+        fused::value_accum_fused(&p, &vblock, kv_dim, 32, 32, &mut s, &mut v_fused);
+        assert_bit_identical(&v_default, &v_ref, &format!("{ctx} value default/ref"));
+        assert_bit_identical(&v_ref, &v_fused, &format!("{ctx} value ref/fused"));
+    });
+}
+
+#[test]
+fn tiled_group_kernels_match_per_head_calls() {
+    // head tiling (decode each packed field once per KV group) must be a
+    // pure reassociation of the loop nest: rep per-head kernel calls and
+    // one group call produce identical bit patterns, both layouts
+    let (kv_dim, head_dim, tokens) = (64usize, 32usize, 40usize);
+    for_cases(60, 505, |seed, rng| {
+        let bits = [1u8, 2, 3, 4, 8][rng.below(5)];
+        let rep = [1usize, 2, 4][rng.below(3)];
+        let inter = rng.below(2) == 1 && interleave_supported(bits, tokens);
+        let chan_offset = [0usize, head_dim][rng.below(2)];
+        let stride = tokens + 3; // rows deliberately non-contiguous
+        let ctx = format!("seed {seed} bits {bits} rep {rep} inter {inter} \
+                           off {chan_offset}");
+
+        let kblock = key_block(rng, kv_dim, tokens, bits, 0.04, inter);
+        let q = rng.normal_vec(rep * head_dim);
+        let seeded: Vec<f32> = (0..rep * stride).map(|_| rng.normal_f32()).collect();
+        let mut out_g = seeded.clone();
+        let mut tile = TileScratch::default();
+        fused::key_scores_group_packed(&q, rep, &kblock, tokens, chan_offset,
+                                       &mut out_g, stride, &mut tile);
+        let mut out_h = seeded.clone();
+        for r in 0..rep {
+            fused::key_scores_packed(&q[r * head_dim..(r + 1) * head_dim], &kblock,
+                                     tokens, chan_offset,
+                                     &mut out_h[r * stride..r * stride + tokens]);
+        }
+        assert_bit_identical(&out_g, &out_h, &format!("{ctx} key group/per-head"));
+
+        // the reference leg of the group kernel must agree too
+        let mut out_r = seeded.clone();
+        fused::key_scores_group_ref(&q, rep, &kblock, tokens, chan_offset,
+                                    &mut out_r, stride, &mut tile);
+        assert_bit_identical(&out_r, &out_g, &format!("{ctx} key group ref"));
+
+        let vblock = value_block(rng, kv_dim, tokens, 32, bits, 0.04);
+        let mut p: Vec<f32> = (0..rep * stride).map(|_| rng.f32()).collect();
+        p[stride / 2] = 0.0; // one head skips a token the others keep
+        let vseed: Vec<f32> = (0..rep * head_dim).map(|_| rng.normal_f32()).collect();
+        let mut v_g = vseed.clone();
+        fused::value_accum_group_packed(&p, stride, rep, &vblock, kv_dim, chan_offset,
+                                        head_dim, &mut v_g, &mut tile);
+        let mut v_h = vseed.clone();
+        for r in 0..rep {
+            fused::value_accum_packed(&p[r * stride..r * stride + tokens], &vblock,
+                                      kv_dim, chan_offset, head_dim,
+                                      &mut v_h[r * head_dim..(r + 1) * head_dim]);
+        }
+        assert_bit_identical(&v_g, &v_h, &format!("{ctx} value group/per-head"));
+
+        let mut v_r = vseed.clone();
+        fused::value_accum_group_ref(&p, stride, rep, &vblock, kv_dim, chan_offset,
+                                     head_dim, &mut v_r, &mut tile);
+        assert_bit_identical(&v_r, &v_g, &format!("{ctx} value group ref"));
+    });
+}
+
+#[test]
+fn interleaved_key_layout_bit_identical_to_linear() {
+    // the channel-interleaved word order is a pure permutation: same
+    // data quantized under both layouts must score identically, bit for
+    // bit, through single-head and group kernels alike
+    let (kv_dim, head_dim) = (64usize, 16usize);
+    for_cases(40, 606, |seed, rng| {
+        let bits = [1u8, 2, 4, 8][rng.below(4)];
+        let tokens = [32usize, 64, 352][rng.below(3)];
+        assert!(interleave_supported(bits, tokens));
+        let data = rng.normal_vec(kv_dim * tokens);
+        let mut lin = PackedBlock::default();
+        lin.quantize_outliers_into_layout(&data, bits, tokens, 0.02, false,
+                                          &mut Vec::new());
+        let mut ilv = PackedBlock::default();
+        ilv.quantize_outliers_into_layout(&data, bits, tokens, 0.02, true,
+                                          &mut Vec::new());
+        assert!(!lin.interleaved && ilv.interleaved);
+        assert_eq!(lin.scales, ilv.scales, "layout must not change quantization");
+
+        let q = rng.normal_vec(head_dim);
+        let mut out_lin = vec![0f32; tokens];
+        fused::key_scores_packed(&q, &lin, tokens, 16, &mut out_lin);
+        let mut out_ilv = vec![0f32; tokens];
+        fused::key_scores_packed(&q, &ilv, tokens, 16, &mut out_ilv);
+        assert_bit_identical(&out_lin, &out_ilv,
+                             &format!("seed {seed} bits {bits} tokens {tokens}"));
+
+        let rep = 2;
+        let qg = rng.normal_vec(rep * head_dim);
+        let mut tile = TileScratch::default();
+        let mut g_lin = vec![0f32; rep * tokens];
+        fused::key_scores_group_packed(&qg, rep, &lin, tokens, 0, &mut g_lin,
+                                       tokens, &mut tile);
+        let mut g_ilv = vec![0f32; rep * tokens];
+        fused::key_scores_group_packed(&qg, rep, &ilv, tokens, 0, &mut g_ilv,
+                                       tokens, &mut tile);
+        assert_bit_identical(&g_lin, &g_ilv,
+                             &format!("seed {seed} group bits {bits} tokens {tokens}"));
+    });
+}
+
+#[test]
 fn dispatch_bit_exact_at_every_ladder_width() {
-    // the dispatcher must be a pure router: packed where supported,
-    // fused at 3-bit (Eq. 12's 11-per-word layout has no aligned words)
+    // the dispatcher must be a pure router: every ladder width — 3-bit
+    // Eq. 12 included since its cursor-walking packed rows landed — goes
+    // packed and must never touch the unpack scratch
     let (kv_dim, tokens, head_dim) = (64usize, 33usize, 32usize);
     for_cases(40, 303, |seed, rng| {
-        let bits = [1u8, 2, 3, 4][rng.below(4)];
-        let kblock = key_block(rng, kv_dim, tokens, bits, 0.05);
+        let bits = [1u8, 2, 3, 4, 8][rng.below(5)];
+        let kblock = key_block(rng, kv_dim, tokens, bits, 0.05, false);
         let q = rng.normal_vec(head_dim);
 
         let mut out_d = vec![0f32; tokens];
@@ -124,10 +277,9 @@ fn dispatch_bit_exact_at_every_ladder_width() {
         let mut sf = FusedScratch::default();
         fused::key_scores_fused(&q, &kblock, tokens, 0, &mut sf, &mut out_f);
         assert_bit_identical(&out_d, &out_f, &format!("seed {seed} key bits {bits}"));
-        if packed_dot_supported(bits) {
-            assert!(sd.ints.is_empty(),
-                    "packed dispatch must not touch the unpack scratch");
-        }
+        assert!(packed_dot_supported(bits));
+        assert!(sd.ints.is_empty(),
+                "packed dispatch must not touch the unpack scratch");
 
         let vblock = value_block(rng, kv_dim, tokens, 32, bits, 0.05);
         let p: Vec<f32> = (0..tokens).map(|_| rng.f32()).collect();
@@ -138,6 +290,8 @@ fn dispatch_bit_exact_at_every_ladder_width() {
         let mut sf = FusedScratch::default();
         fused::value_accum_fused(&p, &vblock, kv_dim, 0, head_dim, &mut sf, &mut out_f);
         assert_bit_identical(&out_d, &out_f, &format!("seed {seed} value bits {bits}"));
+        assert!(sd.ints.is_empty(),
+                "packed value dispatch must not touch the unpack scratch");
     });
 }
 
@@ -147,7 +301,7 @@ fn packed_key_repeated_calls_keep_accumulating() {
     // the decode loop relies on += across heads sharing an out row
     let (kv_dim, tokens) = (64usize, 40usize);
     let mut rng = Rng::new(7);
-    let block = key_block(&mut rng, kv_dim, tokens, 2, 0.0);
+    let block = key_block(&mut rng, kv_dim, tokens, 2, 0.0, false);
     let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(32)).collect();
     let mut out_p = vec![0f32; tokens];
     let mut out_f = vec![0f32; tokens];

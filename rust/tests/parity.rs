@@ -129,6 +129,7 @@ fn attention_golden() {
         k_window: WindowPolicy::FixedResidual { tokens: t - boundary },
         v_window: WindowPolicy::FixedResidual { tokens: t - boundary },
         outlier_frac: 0.0,
+        k_interleave: false,
     });
     cache.append(&k, &v, t);
     assert_eq!(cache.k_hist, boundary, "history boundary");

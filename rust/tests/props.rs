@@ -122,6 +122,7 @@ fn prop_cache_token_accounting() {
             k_window: WindowPolicy::Rpc { ratio: rng.f64() * 0.5 },
             v_window: WindowPolicy::Rpc { ratio: rng.f64() * 0.5 },
             outlier_frac: 0.0,
+            k_interleave: rng.below(2) == 1,
         };
         let mut cache = LayerKvCache::new(cfg);
         let mut total = 0usize;
@@ -153,6 +154,7 @@ fn prop_cache_bytes_bounded_by_fp16_equivalent() {
             k_window: WindowPolicy::Rpc { ratio: 0.1 },
             v_window: WindowPolicy::Rpc { ratio: 0.1 },
             outlier_frac: 0.0,
+            k_interleave: rng.below(2) == 1,
         };
         let mut cache = LayerKvCache::new(cfg);
         let mut total = 0usize;
@@ -184,6 +186,7 @@ fn prop_attend_probability_simplex() {
             k_window: WindowPolicy::Rpc { ratio: 0.2 },
             v_window: WindowPolicy::Rpc { ratio: 0.2 },
             outlier_frac: 0.0,
+            k_interleave: rng.below(2) == 1,
         };
         let mut cache = LayerKvCache::new(cfg);
         let k = rng.normal_vec(n * kv_dim);

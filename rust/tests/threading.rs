@@ -43,6 +43,7 @@ fn pooled_lane_attend_bit_identical_no_runtime() {
                 let mut c = LayerKvCache::new(LayerCacheCfg {
                     kv_dim, head_dim: hd, group: 32, key, value,
                     k_window: window, v_window: window, outlier_frac: 0.0,
+                    k_interleave: false,
                 });
                 let mut rng = Rng::new(100 + b as u64);
                 c.append(&rng.normal_vec(80 * kv_dim), &rng.normal_vec(80 * kv_dim), 80);

@@ -16,17 +16,31 @@ This script folds those files into the committed baseline and checks it:
 
     # additionally gate the packed-vs-fused speedup (CI bench-smoke)
     python3 scripts/bench_to_json.py --check BENCH_kernels.json \
-        --require-speedup 1.5
+        --require-speedup 2.0
+
+    # fail if rows measured in both files regressed past a tolerance
+    python3 scripts/bench_to_json.py --compare OLD.json NEW.json --tolerance 25
 
 The speedup gate compares, inside the `quant_kernels` bench, the
 cold-cache fused reference against the integer-domain packed kernel:
 `mean_ns(key_scores_fused/{w}bit) / mean_ns(key_scores_packed/{w}bit)`
 and the same for `value_accum_*`, at w in {2, 4} (the pressure ladder's
-sub-byte widths with word-aligned layouts; 3-bit dispatches to the fused
-fallback by design — DESIGN.md §Quantized-Kernels).  Plain `--check`
-reports the ratios when both sides are measured but only fails on
-structural problems; `--require-speedup` turns unmeasured or missing
-pairs, and ratios below the threshold, into failures.
+sub-byte widths; 3-bit also dispatches packed via the Eq. 12 cursor rows
+but is ungated — its 11-field words leave less SWAR headroom, see
+DESIGN.md §Quantized-Kernels).  Plain `--check` reports the ratios when
+both sides are measured but only fails on structural problems;
+`--require-speedup` turns unmeasured or missing pairs, and ratios below
+the threshold, into failures.  `--require-measured SECTION:SUBSTR`
+(repeatable, with --check) fails when no row of SECTION whose name
+contains SUBSTR carries a measured mean — the guard CI uses to insist
+the merged bench output actually measured the packed rows.
+
+`--compare` is the regression mode: every row measured in BOTH files is
+compared by mean_ns, and any row slower in NEW by more than
+`--tolerance` percent (default 10) fails the run.  Rows missing or
+unmeasured on either side are skipped (the committed baseline may be
+all-null placeholders; comparing against it passes with a notice
+rather than inventing a gate).
 
 The committed baseline may carry `null` means (placeholder rows written
 in an environment without a Rust toolchain); CI's bench-smoke step
@@ -145,7 +159,73 @@ def check_speedups(doc, threshold, required):
     return errors
 
 
-def cmd_check(path, threshold, required):
+def check_measured(doc, specs):
+    """Each spec is SECTION:SUBSTR; every matching row must be measured."""
+    errors = []
+    for spec in specs:
+        section_name, _, substr = spec.partition(":")
+        if not substr:
+            errors.append(f"--require-measured {spec!r}: want SECTION:SUBSTR")
+            continue
+        section = doc.get("benches", {}).get(section_name)
+        if section is None:
+            errors.append(f"require-measured: bench section {section_name!r} missing")
+            continue
+        rows = [e for e in section.get("entries", [])
+                if isinstance(e, dict) and substr in str(e.get("name"))]
+        if not rows:
+            errors.append(f"require-measured: no {section_name} row matches {substr!r}")
+            continue
+        for e in rows:
+            v = e.get("mean_ns")
+            if not isinstance(v, (int, float)) or v <= 0:
+                errors.append(f"require-measured: {section_name}:{e.get('name')} "
+                              f"is unmeasured (mean_ns={v!r})")
+    return errors
+
+
+def cmd_compare(old_path, new_path, tolerance):
+    old = load_baseline(old_path)
+    new = load_baseline(new_path)
+    for doc, path in ((old, old_path), (new, new_path)):
+        errors = validate(doc, path)
+        if errors:
+            for e in errors:
+                print(f"bench_to_json: {path}: {e}", file=sys.stderr)
+            fail("compare inputs must be structurally valid")
+    compared = 0
+    skipped = 0
+    regressions = []
+    for bench, section in sorted(new.get("benches", {}).items()):
+        for e in section.get("entries", []):
+            name = e.get("name")
+            nv = e.get("mean_ns")
+            ov, _ = mean_ns(old, bench, name)
+            if ov is None or not isinstance(nv, (int, float)) or nv <= 0:
+                skipped += 1
+                continue
+            compared += 1
+            delta = (nv - ov) / ov * 100.0
+            marker = " REGRESSED" if delta > tolerance else ""
+            print(f"  {bench}:{name}: {ov:.0f} -> {nv:.0f} ns "
+                  f"({delta:+.1f}%){marker}")
+            if delta > tolerance:
+                regressions.append(
+                    f"regression: {bench}:{name} {delta:+.1f}% "
+                    f"(tolerance {tolerance:.0f}%)")
+    print(f"compare: {compared} row(s) compared, {skipped} skipped "
+          f"(missing/unmeasured on one side)")
+    if compared == 0:
+        print("compare: nothing comparable — passing with notice "
+              "(baseline likely carries placeholder nulls)")
+    if regressions:
+        for r in regressions:
+            print(f"bench_to_json: {r}", file=sys.stderr)
+        sys.exit(1)
+    print("compare: ok")
+
+
+def cmd_check(path, threshold, required, require_measured):
     doc = load_baseline(path)
     errors = validate(doc, path)
     text = path.read_text()
@@ -155,6 +235,7 @@ def cmd_check(path, threshold, required):
             f"`python3 scripts/bench_to_json.py merge --out {path.name}`")
     print(f"{path}: {sum(len(s.get('entries', [])) for s in doc.get('benches', {}).values() if isinstance(s, dict))} entries")
     errors += check_speedups(doc, threshold, required)
+    errors += check_measured(doc, require_measured)
     if errors:
         for e in errors:
             print(f"bench_to_json: {e}", file=sys.stderr)
@@ -209,6 +290,16 @@ def main():
                     help="with --check: fail unless packed kernels beat the "
                          "cold fused reference by Xx at 2/4-bit (missing or "
                          "unmeasured rows also fail)")
+    ap.add_argument("--require-measured", action="append", default=[],
+                    metavar="SECTION:SUBSTR",
+                    help="with --check: fail unless every SECTION row whose "
+                         "name contains SUBSTR has a measured mean (repeatable)")
+    ap.add_argument("--compare", nargs=2, type=Path, metavar=("OLD", "NEW"),
+                    help="regression mode: fail if a row measured in both "
+                         "files is slower in NEW by more than --tolerance %%")
+    ap.add_argument("--tolerance", type=float, default=10.0, metavar="PCT",
+                    help="--compare: allowed mean_ns growth in percent "
+                         "(default 10)")
     ap.add_argument("--json-dir", type=Path,
                     help="merge: directory of JsonSink emissions "
                          "(the KVMIX_BENCH_JSON dir)")
@@ -224,11 +315,14 @@ def main():
         if not args.json_dir.is_dir():
             fail(f"{args.json_dir}: not a directory")
         cmd_merge(args.json_dir, args.out, args.note)
+    elif args.compare is not None:
+        cmd_compare(args.compare[0], args.compare[1], args.tolerance)
     elif args.check is not None:
-        threshold = args.require_speedup if args.require_speedup is not None else 1.5
-        cmd_check(args.check, threshold, args.require_speedup is not None)
+        threshold = args.require_speedup if args.require_speedup is not None else 2.0
+        cmd_check(args.check, threshold, args.require_speedup is not None,
+                  args.require_measured)
     else:
-        ap.error("nothing to do: pass `merge` or --check")
+        ap.error("nothing to do: pass `merge`, --check or --compare")
 
 
 if __name__ == "__main__":
